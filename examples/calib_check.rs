@@ -1,0 +1,20 @@
+// throwaway calibration probe
+use specreason::coordinator::{Combo, Scheme, SpecConfig, AcceptancePolicy};
+use specreason::eval::{run_cell_sim, Cell};
+use specreason::semantics::{Dataset, Oracle};
+
+fn main() {
+    let oracle = Oracle::default();
+    for ds in Dataset::all() {
+        for scheme in Scheme::all() {
+            let cell = Cell { dataset: ds, scheme, combo: Combo::new("qwq-sim", "r1-sim"),
+                cfg: SpecConfig { scheme, policy: AcceptancePolicy::Static { threshold: 7 }, ..Default::default() } };
+            let r = run_cell_sim(&oracle, &cell, 40, 4, 1234).unwrap();
+            println!("{:8} {:20} acc={:.3} gpu={:7.2}s tok={:6.0} offload={:.2} accept={:.2} draft={:.2}",
+                ds.name(), scheme.name(), r.accuracy(), r.mean_gpu(), r.mean_tokens(),
+                r.mean_offload(), r.mean_acceptance(),
+                r.agg.queries.iter().map(|q| q.draft_acceptance_rate()).sum::<f64>()/r.agg.n() as f64);
+        }
+        println!();
+    }
+}

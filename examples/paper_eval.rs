@@ -1,0 +1,353 @@
+//! paper_eval — regenerate every figure of the paper's evaluation.
+//!
+//!     cargo run --release --example paper_eval -- --fig 3 --sim
+//!     cargo run --release --example paper_eval -- --fig all --sim
+//!     cargo run --release --example paper_eval -- --fig 5            # real engine
+//!
+//! `--sim` uses the calibrated GPU-clock simulator (fast, exact same
+//! decisions as the real path — parity-tested); without it the cells run
+//! on the real PJRT engine and additionally report measured wall-clock.
+//! `--queries/--samples` trade time for tightness (paper: k=16 samples).
+//!
+//! The printed tables correspond 1:1 to the paper's figures; the
+//! paper-vs-measured comparison lives in EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+use specreason::engine::{Engine, EngineConfig};
+use specreason::eval::{main_combos, run_cell_real, run_cell_sim, Cell, CellResult};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::util::bench::Table;
+use specreason::util::cli::Command;
+use specreason::util::stats::{pearson, Histogram};
+
+struct Ctx {
+    oracle: Oracle,
+    sim: bool,
+    queries: usize,
+    samples: usize,
+    seed: u64,
+    engines: std::cell::RefCell<std::collections::BTreeMap<String, std::rc::Rc<Engine>>>,
+}
+
+impl Ctx {
+    fn engine_for(&self, combo: &Combo) -> Result<std::rc::Rc<Engine>> {
+        let key = combo.label();
+        if let Some(e) = self.engines.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        eprintln!("[engine] loading {key}...");
+        let e = std::rc::Rc::new(Engine::new(&EngineConfig {
+            models: vec![combo.base.clone(), combo.small.clone()],
+            testbed: specreason::eval::testbed_for(combo),
+            ..Default::default()
+        })?);
+        self.engines.borrow_mut().insert(key, e.clone());
+        Ok(e)
+    }
+
+    fn run(&self, cell: &Cell) -> Result<CellResult> {
+        if self.sim {
+            run_cell_sim(&self.oracle, cell, self.queries, self.samples, self.seed)
+        } else {
+            let engine = self.engine_for(&cell.combo)?;
+            run_cell_real(&engine, &self.oracle, cell, self.queries, self.samples, self.seed)
+        }
+    }
+}
+
+fn cfg_for(scheme: Scheme, threshold: u8) -> SpecConfig {
+    SpecConfig {
+        scheme,
+        policy: AcceptancePolicy::Static { threshold },
+        ..Default::default()
+    }
+}
+
+fn main() -> Result<()> {
+    let cmd = Command::new("paper_eval", "regenerate the paper's figures")
+        .opt("fig", "3|4|5|6|7|8|9|all", Some("all"))
+        .opt("queries", "queries per cell", Some("24"))
+        .opt("samples", "pass@1 samples per query (paper: 16)", Some("4"))
+        .opt("seed", "workload seed", Some("1234"))
+        .flag("sim", "run on the calibrated simulator (fast)");
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = cmd.parse(&raw)?;
+    let ctx = Ctx {
+        oracle: Oracle::default(),
+        sim: args.flag("sim"),
+        queries: args.usize("queries", 24)?,
+        samples: args.usize("samples", 4)?,
+        seed: args.u64("seed", 1234)?,
+        engines: Default::default(),
+    };
+    let fig = args.get_or("fig", "all").to_string();
+    let want = |f: &str| fig == "all" || fig == f;
+
+    if want("3") {
+        fig3(&ctx)?;
+    }
+    if want("4") {
+        fig4(&ctx)?;
+    }
+    if want("5") {
+        fig5(&ctx)?;
+    }
+    if want("6") {
+        fig6(&ctx)?;
+    }
+    if want("7") {
+        fig7(&ctx)?;
+    }
+    if want("8") {
+        fig8(&ctx)?;
+    }
+    if want("9") {
+        fig9(&ctx)?;
+    }
+    Ok(())
+}
+
+/// Fig. 3: accuracy & latency, 5 schemes × 3 datasets × 4 combos, plus
+/// the §5.2 text statistics (acceptance ranges, +Decode-vs-Decode cuts).
+fn fig3(ctx: &Ctx) -> Result<()> {
+    for combo in main_combos() {
+        let mut t = Table::new(
+            &format!("Fig. 3 — {} (latency = calibrated GPU clock)", combo.label()),
+            &["dataset", "scheme", "pass@1", "latency (s)", "speedup", "offload", "wall (s)"],
+        );
+        for ds in Dataset::all() {
+            let mut base_latency = None;
+            for scheme in Scheme::all() {
+                let cell = Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: cfg_for(scheme, 7),
+                };
+                let r = ctx.run(&cell)?;
+                let lat = r.mean_gpu();
+                if scheme == Scheme::VanillaBase {
+                    base_latency = Some(lat);
+                }
+                let speedup = base_latency
+                    .map(|b| format!("{:.2}x", b / lat))
+                    .unwrap_or_default();
+                t.row(vec![
+                    ds.name().into(),
+                    scheme.name().into(),
+                    format!("{:.3}", r.accuracy()),
+                    format!("{:.1}", lat),
+                    speedup,
+                    format!("{:.2}", r.mean_offload()),
+                    format!("{:.1}", r.mean_wall()),
+                ]);
+            }
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 4a: thinking-token counts; Fig. 4b: accuracy gap vs token budget
+/// (QwQ + Zyphra combo, AIME for 4b — §5.2).
+fn fig4(ctx: &Ctx) -> Result<()> {
+    let combo = Combo::new("qwq-sim", "zr1-sim");
+    let mut t = Table::new(
+        "Fig. 4a — thinking-token counts (qwq-sim + zr1-sim)",
+        &["dataset", "base tokens", "small tokens", "specreason tokens", "reduction"],
+    );
+    for ds in Dataset::all() {
+        let base = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaBase, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaBase, 7) })?;
+        let small = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaSmall, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaSmall, 7) })?;
+        let spec = ctx.run(&Cell { dataset: ds, scheme: Scheme::SpecReason, combo: combo.clone(), cfg: cfg_for(Scheme::SpecReason, 7) })?;
+        t.row(vec![
+            ds.name().into(),
+            format!("{:.0}", base.mean_tokens()),
+            format!("{:.0}", small.mean_tokens()),
+            format!("{:.0}", spec.mean_tokens()),
+            format!("{:.2}x", base.mean_tokens() / spec.mean_tokens()),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Fig. 4b — [AIME] accuracy vs thinking-token budget (qwq-sim + zr1-sim)",
+        &["budget", "base pass@1", "specreason pass@1", "gap"],
+    );
+    for budget in [192usize, 320, 448, 576, 704] {
+        let mk = |scheme| {
+            let mut cfg = cfg_for(scheme, 7);
+            cfg.token_budget = budget;
+            Cell { dataset: Dataset::Aime, scheme, combo: combo.clone(), cfg }
+        };
+        let base = ctx.run(&mk(Scheme::VanillaBase))?;
+        let spec = ctx.run(&mk(Scheme::SpecReason))?;
+        t.row(vec![
+            budget.to_string(),
+            format!("{:.3}", base.accuracy()),
+            format!("{:.3}", spec.accuracy()),
+            format!("{:+.1}%", 100.0 * (spec.accuracy() - base.accuracy())),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Fig. 5: the acceptance-threshold knob (QwQ + R1-1.5B, §5.3).
+fn fig5(ctx: &Ctx) -> Result<()> {
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    for ds in Dataset::all() {
+        let mut t = Table::new(
+            &format!("Fig. 5 — [{}] threshold sweep (qwq-sim + r1-sim)", ds.name()),
+            &["threshold", "scheme", "pass@1", "latency (s)", "acceptance"],
+        );
+        for threshold in [3u8, 5, 7, 9] {
+            for scheme in [Scheme::SpecReason, Scheme::SpecReasonPlusDecode] {
+                let cell = Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: cfg_for(scheme, threshold),
+                };
+                let r = ctx.run(&cell)?;
+                t.row(vec![
+                    threshold.to_string(),
+                    scheme.name().into(),
+                    format!("{:.3}", r.accuracy()),
+                    format!("{:.1}", r.mean_gpu()),
+                    format!("{:.2}", r.mean_acceptance()),
+                ]);
+            }
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 6: forcing the first n steps onto the base model (AIME, §5.3).
+fn fig6(ctx: &Ctx) -> Result<()> {
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let mut t = Table::new(
+        "Fig. 6 — [AIME] first-n-base knob (qwq-sim + r1-sim)",
+        &["first n", "pass@1", "latency (s)", "offload"],
+    );
+    for n in [0usize, 4, 8, 12, 16] {
+        let mut cfg = cfg_for(Scheme::SpecReason, 7);
+        cfg.first_n_base = n;
+        let cell = Cell { dataset: Dataset::Aime, scheme: Scheme::SpecReason, combo: combo.clone(), cfg };
+        let r = ctx.run(&cell)?;
+        t.row(vec![
+            n.to_string(),
+            format!("{:.3}", r.accuracy()),
+            format!("{:.1}", r.mean_gpu()),
+            format!("{:.2}", r.mean_offload()),
+        ]);
+    }
+    t.print();
+    println!("(paper sweeps n in 0..40 on ~30-step plans at budget 8192; ours scale to ~24-step plans)");
+    Ok(())
+}
+
+/// Fig. 7: base-model utility score vs PRM score, ten bins (§5.4).
+fn fig7(ctx: &Ctx) -> Result<()> {
+    let oracle = &ctx.oracle;
+    let gen = TraceGenerator::new(Dataset::Aime, ctx.seed);
+    let mut hist = Histogram::new(0.0, 1.0, 10);
+    let mut prm_scores = Vec::new();
+    let mut util_scores = Vec::new();
+    for q in gen.queries(ctx.queries.max(30)) {
+        for step in 0..q.plan_len() {
+            let quality = oracle.step_quality(&q, step, 0, "r1-sim");
+            let prm = oracle.prm_score(&q, step, 0, quality);
+            let util = oracle.verifier_score(&q, step, 0, quality, "qwq-sim");
+            hist.record(prm, util as f64);
+            prm_scores.push(prm);
+            util_scores.push(util as f64);
+        }
+    }
+    let mut t = Table::new(
+        "Fig. 7 — base-model utility score vs PRM score (AIME, r1-sim steps)",
+        &["PRM bin", "n steps", "mean utility score"],
+    );
+    for b in 0..hist.bins() {
+        let (lo, hi) = hist.bin_bounds(b);
+        t.row(vec![
+            format!("[{lo:.1}, {hi:.1})"),
+            hist.count(b).to_string(),
+            hist.bin_mean(b).map(|m| format!("{m:.2}")).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
+    println!("pearson r = {:.3}", pearson(&prm_scores, &util_scores));
+    Ok(())
+}
+
+/// Fig. 8: the R1-70B base model on the A100 testbed (App. A.1).
+fn fig8(ctx: &Ctx) -> Result<()> {
+    let combo = Combo::new("r1-70b-sim", "r1-sim");
+    let mut t = Table::new(
+        "Fig. 8 — [AIME] r1-70b-sim + r1-sim on the 4xA100 clock (App. A.1)",
+        &["threshold", "scheme", "pass@1", "latency (s)", "offload"],
+    );
+    // §A.1: a stricter threshold (8) preserves accuracy with the weaker
+    // judge; compare against vanilla.
+    let base = ctx.run(&Cell {
+        dataset: Dataset::Aime,
+        scheme: Scheme::VanillaBase,
+        combo: combo.clone(),
+        cfg: cfg_for(Scheme::VanillaBase, 8),
+    })?;
+    t.row(vec![
+        "-".into(),
+        "vanilla-base".into(),
+        format!("{:.3}", base.accuracy()),
+        format!("{:.1}", base.mean_gpu()),
+        "0.00".into(),
+    ]);
+    for threshold in [5u8, 7, 8, 9] {
+        let cell = Cell {
+            dataset: Dataset::Aime,
+            scheme: Scheme::SpecReason,
+            combo: combo.clone(),
+            cfg: cfg_for(Scheme::SpecReason, threshold),
+        };
+        let r = ctx.run(&cell)?;
+        t.row(vec![
+            threshold.to_string(),
+            "spec-reason".into(),
+            format!("{:.3}", r.accuracy()),
+            format!("{:.1}", r.mean_gpu()),
+            format!("{:.2}", r.mean_offload()),
+        ]);
+    }
+    t.print();
+    println!("(expect a smaller speedup than Fig. 3: the 70B/1.5B TPT gap is narrower on A100s\n and the weaker judge needs a stricter threshold — §A.1)");
+    Ok(())
+}
+
+/// Fig. 9: token counts across all datasets × combos (App. A.2).
+fn fig9(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 9 — thinking-token counts, all datasets x combos",
+        &["combo", "dataset", "base", "small", "specreason", "reduction"],
+    );
+    for combo in main_combos() {
+        for ds in Dataset::all() {
+            let base = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaBase, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaBase, 7) })?;
+            let small = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaSmall, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaSmall, 7) })?;
+            let spec = ctx.run(&Cell { dataset: ds, scheme: Scheme::SpecReason, combo: combo.clone(), cfg: cfg_for(Scheme::SpecReason, 7) })?;
+            t.row(vec![
+                combo.label(),
+                ds.name().into(),
+                format!("{:.0}", base.mean_tokens()),
+                format!("{:.0}", small.mean_tokens()),
+                format!("{:.0}", spec.mean_tokens()),
+                format!("{:.2}x", base.mean_tokens() / spec.mean_tokens()),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

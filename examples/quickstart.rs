@@ -1,0 +1,77 @@
+//! Quickstart: load the two-model stack and run one query with
+//! SpecReason vs vanilla base-model inference.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Shows the basic public API: Engine -> RealBackend -> run_query.
+
+use anyhow::Result;
+
+use specreason::coordinator::{run_query, Combo, RealBackend, Scheme, SpecConfig};
+use specreason::engine::{Engine, EngineConfig};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+
+fn main() -> Result<()> {
+    // 1. Load the serving engine: base LRM proxy + small speculator,
+    //    colocated with a statically partitioned KV cache (paper §4.1).
+    println!("loading engine (compiling AOT artifacts)...");
+    let engine = Engine::new(&EngineConfig {
+        models: vec!["qwq-sim".into(), "r1-sim".into()],
+        ..Default::default()
+    })?;
+    println!(
+        "engine up on PJRT '{}': models {:?}",
+        engine.device.platform(),
+        engine.model_names()
+    );
+
+    // 2. A workload: one AIME-profile query (synthetic trace; DESIGN.md §3).
+    let oracle = Oracle::default();
+    let query = TraceGenerator::new(Dataset::Math500, 42).query(0);
+    println!(
+        "\nquery: dataset=math500 difficulty={:.2} plan={} steps prompt={} tokens",
+        query.difficulty,
+        query.plan_len(),
+        query.prompt.len()
+    );
+
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    // Keep the budget small so the demo finishes in ~a minute of CPU time.
+    let budget = 192;
+
+    // 3. Vanilla base-model inference (the latency baseline).
+    let cfg = SpecConfig { scheme: Scheme::VanillaBase, token_budget: budget, ..Default::default() };
+    let mut backend = RealBackend::new(&engine, "r1-sim", "qwq-sim");
+    let vanilla = run_query(&oracle, &query, &combo, &cfg, &mut backend, 0)?;
+    backend.release()?;
+
+    // 4. SpecReason: small model speculates steps, base model verifies.
+    let cfg = SpecConfig { scheme: Scheme::SpecReason, token_budget: budget, ..Default::default() };
+    let mut backend = RealBackend::new(&engine, "r1-sim", "qwq-sim");
+    let spec = run_query(&oracle, &query, &combo, &cfg, &mut backend, 0)?;
+    backend.release()?;
+
+    // 5. Compare.
+    println!("\n{:<22} {:>10} {:>10} {:>8} {:>9}", "scheme", "wall (s)", "gpu (s)", "tokens", "accepted");
+    for (name, out) in [("vanilla-base", &vanilla), ("spec-reason", &spec)] {
+        println!(
+            "{:<22} {:>10.2} {:>10.2} {:>8} {:>6}/{}",
+            name,
+            out.metrics.wall_secs,
+            out.metrics.gpu_secs,
+            out.metrics.thinking_tokens,
+            out.metrics.steps_accepted,
+            out.metrics.steps_total,
+        );
+    }
+    println!(
+        "\nspeedup (gpu clock): {:.2}x   speedup (wall): {:.2}x",
+        vanilla.metrics.gpu_secs / spec.metrics.gpu_secs,
+        vanilla.metrics.wall_secs / spec.metrics.wall_secs,
+    );
+    println!(
+        "verify scores given by the base model: {:?}",
+        spec.metrics.verify_scores
+    );
+    Ok(())
+}

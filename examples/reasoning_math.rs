@@ -1,0 +1,104 @@
+//! Step-by-step SpecReason walkthrough on a competition-math workload
+//! (the Fig. 1 scenario): watch the small model speculate each reasoning
+//! step, the base model score it 0–9, and the coordinator accept /
+//! reject-and-regenerate — all on real PJRT compute.
+//!
+//!     make artifacts && cargo run --release --example reasoning_math
+//!
+//! The transcript shows real decoded bytes (the proxy models' tokens are
+//! not semantic — see DESIGN.md §3 — so the *text* is noise while the
+//! *mechanics* are real).
+
+use anyhow::Result;
+
+use specreason::coordinator::{Combo, Role, Backend, RealBackend};
+use specreason::coordinator::policy::{AcceptancePolicy, StepContext};
+use specreason::engine::{Engine, EngineConfig};
+use specreason::metrics::Phase;
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+
+fn main() -> Result<()> {
+    println!("loading engine...");
+    let engine = Engine::new(&EngineConfig {
+        models: vec!["qwq-sim".into(), "r1-sim".into()],
+        ..Default::default()
+    })?;
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let policy = AcceptancePolicy::Static { threshold: 7 };
+    let q = TraceGenerator::new(Dataset::Math500, 7).query(1);
+    println!(
+        "MATH500-profile query #{}: difficulty {:.2}, plan of {} steps\n",
+        q.index,
+        q.difficulty,
+        q.plan_len()
+    );
+
+    let mut b = RealBackend::new(&engine, &combo.small, &combo.base);
+    b.begin(&q)?;
+
+    let budget = 256usize;
+    let n_steps = q.plan_len().min(8); // walk the first few steps verbosely
+    let mut accepted = 0;
+    for step in 0..n_steps {
+        if b.thinking_tokens() + 4 > budget {
+            println!("[budget] thinking-token budget exhausted");
+            break;
+        }
+        let remaining = budget - b.thinking_tokens();
+        let len = oracle.step_tokens(&q, step, 0, &combo.small).min(remaining);
+        let spec = &q.plan[step];
+        println!(
+            "── step {step} {} (difficulty {:.2}, {} tokens) ──",
+            if spec.critical { "[critical]" } else { "[routine]" },
+            spec.difficulty,
+            len
+        );
+
+        // 1. small model speculates
+        let before = b.thinking_tokens();
+        b.decode(Role::Small, len, Phase::Speculate)?;
+        let seq = b.sequence().unwrap();
+        let text = engine.tokenizer.decode(&seq.tokens[seq.prompt_len + before..]);
+        let preview: String = text.chars().take(48).collect();
+        println!("  speculated: {preview:?}…");
+
+        // 2. base model verifies in one prefill-only pass
+        let quality = oracle.step_quality(&q, step, 0, &combo.small);
+        b.verify_pass(70, Phase::Verify)?;
+        let score = oracle.verifier_score(&q, step, 0, quality, &combo.base);
+        let ctx = StepContext {
+            step_index: step,
+            plan_len: q.plan_len(),
+            budget_left: remaining as f64 / budget as f64,
+        };
+        let ok = policy.accepts(score, ctx);
+        println!(
+            "  base model utility score: {score}/9 (latent quality {quality:.2}) → {}",
+            if ok { "ACCEPT" } else { "REJECT" }
+        );
+
+        // 3. accept or regenerate
+        if ok {
+            accepted += 1;
+        } else {
+            b.rollback(len)?;
+            let regen = oracle
+                .step_tokens(&q, step, 1, &combo.base)
+                .min(budget - b.thinking_tokens());
+            b.decode(Role::Base, regen, Phase::Fallback)?;
+            println!("  base model regenerated the step ({regen} tokens)");
+        }
+    }
+
+    let m = b.metrics_mut().clone();
+    println!("\n── summary ──");
+    println!("steps walked: {n_steps}, accepted from speculator: {accepted}");
+    println!("thinking tokens: {}", b.thinking_tokens());
+    println!("wall time: {:.2}s   gpu-clock: {:.2}s", m.wall_secs, m.gpu_secs);
+    for (phase, secs) in &m.phase_wall {
+        println!("  {phase:<16} {secs:.2}s wall");
+    }
+    b.release()?;
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end serving driver (the required E2E validation example):
+//! boots the full TCP serving stack — router, bounded admission queue,
+//! engine worker running real PJRT compute — then drives it with a
+//! multi-client workload of batched requests and reports
+//! latency/throughput percentiles per scheme.
+//!
+//!     make artifacts && cargo run --release --example serve_requests
+//!
+//! Options (env): SPECREASON_E2E_REQUESTS (default 12),
+//! SPECREASON_E2E_CLIENTS (default 3), SPECREASON_E2E_BUDGET (default 128).
+//! Results of a full run are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use specreason::config::DeployConfig;
+use specreason::server::{Client, Server};
+use specreason::util::bench::Table;
+use specreason::util::json::Json;
+use specreason::util::stats::Sample;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let n_requests = env_usize("SPECREASON_E2E_REQUESTS", 12);
+    let n_clients = env_usize("SPECREASON_E2E_CLIENTS", 3);
+    let budget = env_usize("SPECREASON_E2E_BUDGET", 128);
+
+    // --- boot the full stack on an ephemeral port ---
+    println!("booting serving stack (loading + compiling artifacts)...");
+    let cfg = DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: budget,
+        answer_tokens: 8,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let server = Server::bind(cfg)?;
+    let addr = server.addr.to_string();
+    println!("server up on {addr} in {:.1}s", t0.elapsed().as_secs_f64());
+    let server_thread = thread::spawn(move || server.run().unwrap());
+
+    let mut table = Table::new(
+        &format!("end-to-end serving: {n_requests} requests × {n_clients} clients, budget {budget}"),
+        &["scheme", "p50 (s)", "p95 (s)", "mean (s)", "throughput (req/s)", "accuracy"],
+    );
+
+    for scheme in ["vanilla-base", "spec-reason", "spec-reason+decode"] {
+        let started = Instant::now();
+        let (tx, rx) = mpsc::channel::<(f64, bool)>();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            let tx = tx.clone();
+            let scheme = scheme.to_string();
+            handles.push(thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                // Stripe the request ids round-robin across clients.
+                let mut i = c;
+                while i < n_requests {
+                    let t = Instant::now();
+                    let r = client
+                        .call(Json::obj(vec![
+                            ("op", Json::str("query")),
+                            ("dataset", Json::str("math500")),
+                            ("query_index", Json::num(i as f64)),
+                            ("scheme", Json::str(scheme.as_str())),
+                            ("sample", Json::num(0.0)),
+                        ]))
+                        .expect("query");
+                    let correct = r.get("correct").as_bool().unwrap_or(false);
+                    tx.send((t.elapsed().as_secs_f64(), correct)).unwrap();
+                    i += n_clients;
+                }
+            }));
+        }
+        drop(tx);
+        let mut latencies = Sample::new();
+        let mut correct = 0usize;
+        let mut served = 0usize;
+        while let Ok((lat, ok)) = rx.recv() {
+            latencies.push(lat);
+            served += 1;
+            if ok {
+                correct += 1;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let elapsed = started.elapsed().as_secs_f64();
+        table.row(vec![
+            scheme.to_string(),
+            format!("{:.2}", latencies.median()),
+            format!("{:.2}", latencies.percentile(95.0)),
+            format!("{:.2}", latencies.mean()),
+            format!("{:.3}", served as f64 / elapsed),
+            format!("{:.2}", correct as f64 / served.max(1) as f64),
+        ]);
+    }
+    table.print();
+
+    // --- graceful shutdown ---
+    let mut client = Client::connect(&addr)?;
+    let stats = client.call(Json::obj(vec![("op", Json::str("stats"))]))?;
+    println!("router stats: {stats}");
+    client.call(Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    server_thread.join().unwrap();
+    println!("server shut down cleanly");
+    Ok(())
+}

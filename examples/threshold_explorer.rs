@@ -1,0 +1,69 @@
+//! Acceptance-policy ablation: the paper ships a static threshold (§4.1)
+//! and sketches richer strategies as future work.  This example compares
+//! the three policies implemented in `coordinator::policy` across the
+//! accuracy/latency plane on all datasets (simulator backend: the policy
+//! decision logic is identical on the real engine — parity-tested).
+//!
+//!     cargo run --release --example threshold_explorer
+
+use anyhow::Result;
+
+use specreason::coordinator::{
+    run_query, AcceptancePolicy, Combo, Scheme, SimBackend, SpecConfig,
+};
+use specreason::eval::testbed_for;
+use specreason::metrics::{Aggregate, GpuClock};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::util::bench::Table;
+
+fn main() -> Result<()> {
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let clock = GpuClock::new(testbed_for(&combo));
+    let n_queries = 48;
+    let samples = 4;
+
+    let policies: Vec<(String, AcceptancePolicy)> = vec![
+        ("static(3)".into(), AcceptancePolicy::Static { threshold: 3 }),
+        ("static(5)".into(), AcceptancePolicy::Static { threshold: 5 }),
+        ("static(7)".into(), AcceptancePolicy::Static { threshold: 7 }),
+        ("static(9)".into(), AcceptancePolicy::Static { threshold: 9 }),
+        ("progressive(9→5)".into(), AcceptancePolicy::Progressive { start: 9, end: 5 }),
+        ("progressive(8→6)".into(), AcceptancePolicy::Progressive { start: 8, end: 6 }),
+        ("budget-aware(7,<25%)".into(), AcceptancePolicy::BudgetAware { threshold: 7, relax_below: 0.25 }),
+    ];
+
+    for ds in Dataset::all() {
+        let gen = TraceGenerator::new(ds, 1234);
+        let queries = gen.queries(n_queries);
+        let mut t = Table::new(
+            &format!("policy ablation — {} (qwq-sim + r1-sim, GPU clock)", ds.name()),
+            &["policy", "pass@1", "latency (s)", "acceptance", "tokens"],
+        );
+        for (name, policy) in &policies {
+            let cfg = SpecConfig {
+                scheme: Scheme::SpecReason,
+                policy: *policy,
+                ..Default::default()
+            };
+            let mut agg = Aggregate::default();
+            for q in &queries {
+                for s in 0..samples {
+                    let mut b = SimBackend::new(clock, "small", "base");
+                    let out = run_query(&oracle, q, &combo, &cfg, &mut b, s)?;
+                    agg.push(out.metrics);
+                }
+            }
+            t.row(vec![
+                name.clone(),
+                format!("{:.3}", agg.accuracy()),
+                format!("{:.1}", agg.mean_gpu()),
+                format!("{:.2}", agg.mean_acceptance()),
+                format!("{:.0}", agg.mean_thinking_tokens()),
+            ]);
+        }
+        t.print();
+    }
+    println!("reading: progressive protects early (planning) steps like the first-n knob\nbut without a hard switch; budget-aware trades late-step strictness for completion.");
+    Ok(())
+}

@@ -1,0 +1,212 @@
+"""AOT compile path: lower the L2 model to HLO *text* + pack weights.
+
+Outputs (all under artifacts/):
+
+  <arch>_step_c<C>.hlo.txt   one per (arch in {small, base, large},
+                             C in CHUNK_BUCKETS) — the `step` entry point
+  <model>.weights.srw        one per *logical* model (qwq-sim, skywork-sim,
+                             r1-sim, zr1-sim, r1-70b-sim); .srw is a tiny
+                             self-describing binary (JSON header + raw f32)
+  manifest.json              shapes, buckets, parameter order, seeds —
+                             the contract consumed by rust/src/runtime/
+
+HLO **text** (not ``lowered.compile()`` artifacts, not serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import sys
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ARCHS,
+    CHUNK_BUCKETS,
+    DECODE_BUCKETS,
+    ModelConfig,
+    decode_example_args,
+    example_args,
+    init_weights,
+    make_decode_fn,
+    make_step_fn,
+    weight_names,
+    weight_shapes,
+    SPECIAL_TOKENS,
+    VOCAB_SIZE,
+)
+
+# Logical models: (name, arch, seed). Two base-arch variants mirror the
+# paper's two 32B base LRMs; two small-arch variants mirror R1-1.5B/ZR1.
+LOGICAL_MODELS = (
+    ("qwq-sim", "base", 1001),
+    ("skywork-sim", "base", 1002),
+    ("r1-sim", "small", 2001),
+    ("zr1-sim", "small", 2002),
+    ("r1-70b-sim", "large", 3001),
+)
+
+SRW_MAGIC = b"SRW1"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_srw(path: str, name: str, arch: str, seed: int,
+              weights: Dict[str, np.ndarray]) -> str:
+    """Write a .srw weight bundle; returns its sha256 (of the data blob)."""
+    arrays = []
+    offset = 0
+    blobs = []
+    for wname in sorted(weights):
+        arr = np.ascontiguousarray(weights[wname], dtype=np.float32)
+        raw = arr.tobytes()
+        arrays.append({
+            "name": wname,
+            "shape": list(arr.shape),
+            "dtype": "f32",
+            "offset": offset,
+            "nbytes": len(raw),
+        })
+        blobs.append(raw)
+        offset += len(raw)
+    header = json.dumps({
+        "name": name, "arch": arch, "seed": seed, "arrays": arrays,
+    }).encode()
+    h = hashlib.sha256()
+    with open(path, "wb") as f:
+        f.write(SRW_MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for raw in blobs:
+            f.write(raw)
+            h.update(raw)
+    return h.hexdigest()
+
+
+def lower_arch(cfg: ModelConfig, chunk: int, *, use_pallas: bool,
+               block_k: int) -> str:
+    fn = make_step_fn(cfg, use_pallas=use_pallas, block_k=block_k)
+    lowered = jax.jit(fn).lower(*example_args(cfg, chunk))
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; other artifacts go next to it")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the jnp reference attention instead of "
+                         "the Pallas kernel (debugging escape hatch)")
+    ap.add_argument("--block-k", type=int, default=256,
+                    help="L1 kernel KV tile size (perf knob, see §Perf)")
+    ap.add_argument("--archs", default="small,base,large")
+    ap.add_argument("--chunks", default=",".join(map(str, CHUNK_BUCKETS)))
+    ap.add_argument("--decodes", default=",".join(map(str, DECODE_BUCKETS)))
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    use_pallas = not args.no_pallas
+    archs = args.archs.split(",")
+    chunks = [int(c) for c in args.chunks.split(",")]
+    decodes = [int(c) for c in args.decodes.split(",")]
+
+    manifest = {
+        "format": 1,
+        "created_unix": int(time.time()),
+        "use_pallas": use_pallas,
+        "block_k": args.block_k,
+        "vocab": VOCAB_SIZE,
+        "special_tokens": list(SPECIAL_TOKENS),
+        "chunk_buckets": chunks,
+        "decode_buckets": decodes,
+        "archs": {},
+        "models": {},
+    }
+
+    for arch in archs:
+        cfg = ARCHS[arch]
+        manifest["archs"][arch] = {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "vocab": cfg.vocab,
+            "rope_theta": cfg.rope_theta,
+            "param_count": cfg.param_count,
+            # HLO parameter contract: tokens, cur_len, k, v, then these.
+            "weight_order": weight_names(cfg),
+            "weight_shapes": {k: list(v) for k, v in weight_shapes(cfg).items()},
+            "hlo": {},
+            "decode_hlo": {},
+        }
+        for c in chunks:
+            t0 = time.time()
+            text = lower_arch(cfg, c, use_pallas=use_pallas,
+                              block_k=args.block_k)
+            fname = f"{arch}_step_c{c}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["archs"][arch]["hlo"][str(c)] = fname
+            print(f"[aot] {fname}: {len(text)/1e3:.0f} kB "
+                  f"({time.time()-t0:.1f}s)", file=sys.stderr)
+        for n in decodes:
+            t0 = time.time()
+            fn = make_decode_fn(cfg, n, use_pallas=use_pallas,
+                                block_k=args.block_k)
+            lowered = jax.jit(fn).lower(*decode_example_args(cfg, n))
+            text = to_hlo_text(lowered)
+            fname = f"{arch}_decode_n{n}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["archs"][arch]["decode_hlo"][str(n)] = fname
+            print(f"[aot] {fname}: {len(text)/1e3:.0f} kB "
+                  f"({time.time()-t0:.1f}s)", file=sys.stderr)
+
+    for name, arch, seed in LOGICAL_MODELS:
+        if arch not in archs:
+            continue
+        cfg = ARCHS[arch]
+        t0 = time.time()
+        weights = init_weights(cfg, seed)
+        fname = f"{name}.weights.srw"
+        digest = write_srw(os.path.join(out_dir, fname), name, arch, seed,
+                           weights)
+        manifest["models"][name] = {
+            "arch": arch, "seed": seed, "weights": fname, "sha256": digest,
+        }
+        print(f"[aot] {fname}: {cfg.param_count/1e6:.1f}M params "
+              f"({time.time()-t0:.1f}s)", file=sys.stderr)
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

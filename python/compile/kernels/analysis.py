@@ -1,0 +1,122 @@
+"""L1 kernel roofline analysis for real-TPU targets (DESIGN.md §7/§9).
+
+`interpret=True` gives CPU-numpy semantics only, so TPU performance is
+*estimated* analytically from the tiling: VMEM residency, HBM traffic,
+MXU work, and the resulting arithmetic intensity / roofline utilization
+per (arch, chunk, block_k).  Run as a module for the §Perf table:
+
+    python -m compile.kernels.analysis
+
+Assumed TPU-v4-like core: 16 MiB VMEM, 1.2 TB/s HBM, 137.5 TFLOP/s
+bf16 MXU (we run f32 ⇒ ~1/4 of that through the MXU pathway).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+VMEM_BYTES = 16 * 2**20
+HBM_BPS = 1.2e12
+MXU_F32_FLOPS = 137.5e12 / 4
+
+
+@dataclasses.dataclass
+class KernelShape:
+    """One chunked-attention invocation."""
+
+    c: int        # chunk (query) length
+    h: int        # heads
+    d: int        # head dim
+    s: int        # max_seq (cache slots)
+    block_k: int  # KV tile
+    live: int     # live prefix length actually attended to
+
+    @property
+    def grid(self) -> int:
+        return self.s // self.block_k
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks actually computed thanks to the `pl.when` skip."""
+        last = self.live + self.c - 1
+        return min(self.grid, last // self.block_k + 1)
+
+    def vmem_bytes(self) -> int:
+        """Peak VMEM residency of one grid step (f32)."""
+        f = 4
+        q = self.c * self.h * self.d * f
+        kv = 2 * self.block_k * self.h * self.d * f
+        scratch = (2 * self.c * self.h + self.c * self.h * self.d) * f
+        out = self.c * self.h * self.d * f
+        return q + kv + scratch + out
+
+    def hbm_bytes(self) -> int:
+        """HBM traffic: Q once, live K/V tiles once, output once."""
+        f = 4
+        q = self.c * self.h * self.d * f
+        kv = 2 * self.live_blocks * self.block_k * self.h * self.d * f
+        out = self.c * self.h * self.d * f
+        return q + kv + out
+
+    def flops(self) -> int:
+        """2 matmuls per live tile: QK^T and PV."""
+        per_tile = 2 * (self.c * self.h * self.block_k * self.d) * 2
+        return self.live_blocks * per_tile
+
+    def intensity(self) -> float:
+        return self.flops() / self.hbm_bytes()
+
+    def time_bound_s(self) -> tuple[float, float]:
+        """(memory-bound, compute-bound) time estimates."""
+        return self.hbm_bytes() / HBM_BPS, self.flops() / MXU_F32_FLOPS
+
+    def roofline_utilization(self) -> float:
+        """Achievable fraction of MXU peak under the roofline."""
+        mem, comp = self.time_bound_s()
+        t = max(mem, comp)
+        return comp / t
+
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes() <= VMEM_BYTES
+
+
+ARCHS = {
+    "small": dict(h=4, d=32),
+    "base": dict(h=8, d=64),
+    "large": dict(h=12, d=64),
+}
+
+
+def sweep(live: int = 512, s: int = 1024):
+    rows = []
+    for arch, hd in ARCHS.items():
+        for c in (1, 32, 128):
+            for block_k in (64, 128, 256, 512):
+                k = KernelShape(c=c, s=s, live=live, block_k=block_k, **hd)
+                rows.append((arch, c, block_k, k))
+    return rows
+
+
+def main() -> int:
+    print(f"{'arch':6} {'C':>4} {'block_k':>8} {'VMEM':>9} {'fits':>5} "
+          f"{'HBM kB':>8} {'kFLOP':>9} {'AI':>6} {'MXU util':>9}")
+    for arch, c, block_k, k in sweep():
+        print(
+            f"{arch:6} {c:>4} {block_k:>8} {k.vmem_bytes()/1024:>7.0f}kB "
+            f"{str(k.fits_vmem()):>5} {k.hbm_bytes()/1e3:>8.1f} "
+            f"{k.flops()/1e3:>9.1f} {k.intensity():>6.2f} "
+            f"{k.roofline_utilization():>8.1%}"
+        )
+    print(
+        "\nreading: decode (C=1) is HBM-bound at every tile size (AI ≈ 2 "
+        "FLOP/byte),\nso block_k only trades grid overhead vs tile reuse; "
+        "prefill (C=128) approaches\ncompute-bound with ≥128-wide tiles. "
+        "block_k=128 fits VMEM for every arch\nwith ≥4x headroom — chosen "
+        "default."
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

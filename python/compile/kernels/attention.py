@@ -1,0 +1,176 @@
+"""L1 — Pallas chunked-attention decode kernel.
+
+This is the compute hot-spot of SpecReason's serving stack: every decode
+step (chunk size C == 1) and every chunked prefill (C in {8, 32, 128}) of
+both the speculator and the base model runs causal attention of a C-token
+chunk against a dense per-sequence KV cache of ``max_seq`` slots, of which
+only the first ``cur_len + C`` are live.
+
+Hardware adaptation (paper targets CUDA/vLLM; we target a TPU-shaped
+memory hierarchy — see DESIGN.md §7):
+
+* The KV cache lives in HBM and is streamed through VMEM in
+  ``(block_k, heads, head_dim)`` tiles expressed with ``BlockSpec`` — this
+  is the role CUDA threadblock tiling plays in FlashAttention/vLLM's
+  paged-attention kernel.
+* A streaming-softmax (FlashAttention-style) accumulator — running max
+  ``m``, running normalizer ``l``, weighted-value accumulator ``acc`` —
+  lives in VMEM scratch across grid iterations (TPU grid iterations are
+  sequential, which interpret mode reproduces).
+* The two contractions (Q·Kᵀ over ``head_dim`` and P·V over ``block_k``)
+  are laid out so the MXU sees contraction widths of 64 and ``block_k``
+  (>= 128 by default).
+* Out-of-range KV blocks (entirely beyond ``cur_len + C``) are skipped
+  with ``pl.when`` so prefix-length growth, not ``max_seq``, drives cost.
+
+The kernel MUST be lowered with ``interpret=True``: CPU PJRT cannot run
+Mosaic custom-calls.  Real-TPU performance is estimated from the VMEM
+footprint / MXU-utilization analysis in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # softmax mask value; avoids NaN from (-inf) - (-inf)
+
+
+def _attention_kernel(
+    # scalar-prefetch-style operands (kept tiny; SMEM on real TPU)
+    cur_len_ref,  # (1,)  int32 — live prefix length *before* this chunk
+    # tensor operands
+    q_ref,        # (C, H, D)        — queries for the chunk
+    k_ref,        # (block_k, H, D)  — current KV block (auto-sliced)
+    v_ref,        # (block_k, H, D)
+    # output
+    o_ref,        # (C, H, D)
+    # VMEM scratch, carried across the sequential grid
+    m_ref,        # (C, H)    running max
+    l_ref,        # (C, H)    running sum of exp
+    acc_ref,      # (C, H, D) running weighted values
+    *,
+    block_k: int,
+    scale: float,
+):
+    """One grid step: fold KV block ``b`` into the streaming softmax."""
+    b = pl.program_id(0)
+    num_blocks = pl.num_programs(0)
+    cur_len = cur_len_ref[0]
+
+    @pl.when(b == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = q_ref.shape[0]
+    # Absolute key positions covered by this block.
+    kpos = b * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    # Absolute query positions: cur_len + i for chunk-local i.
+    qpos = cur_len + jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)
+
+    # Skip blocks that start beyond the last live position. The causal
+    # frontier for the chunk is position cur_len + C - 1.
+    @pl.when(b * block_k <= cur_len + c - 1)
+    def _fold():
+        q = q_ref[...]  # (C, H, D)
+        k = k_ref[...]  # (block_k, H, D)
+        v = v_ref[...]
+
+        # s[c, h, k] = sum_d q[c,h,d] * k[k,h,d]   (MXU: contraction D=64)
+        s = jnp.einsum("chd,khd->chk", q, k, preferred_element_type=jnp.float32)
+        s = s * scale
+
+        # Causal + liveness mask: key j visible to query i iff j <= cur_len+i.
+        mask = kpos <= qpos  # (C, block_k) via broadcasting
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+
+        m_prev = m_ref[...]                     # (C, H)
+        m_blk = jnp.max(s, axis=-1)             # (C, H)
+        m_new = jnp.maximum(m_prev, m_blk)
+
+        p = jnp.exp(s - m_new[..., None])       # (C, H, block_k)
+        # Fully-masked rows (can't happen for valid chunks, but keep the
+        # algebra safe): exp(NEG_INF - NEG_INF) would be 1; zero them.
+        p = jnp.where(mask[:, None, :], p, 0.0)
+
+        alpha = jnp.exp(m_prev - m_new)         # rescale of old partials
+        l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+        # pv[c, h, d] = sum_k p[c,h,k] * v[k,h,d]  (MXU: contraction block_k)
+        pv = jnp.einsum("chk,khd->chd", p, v, preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    # Final grid step: normalize and emit.
+    @pl.when(b == num_blocks - 1)
+    def _emit():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # guard (fully masked ⇒ output 0)
+        o_ref[...] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def chunked_attention(q, k_cache, v_cache, cur_len, *, block_k: int = 128):
+    """FlashAttention-style causal attention of a chunk against a KV cache.
+
+    Args:
+      q:        (C, H, D) chunk queries (RoPE already applied).
+      k_cache:  (S, H, D) key cache; positions [0, cur_len + C) are live
+                (the chunk's keys are written at [cur_len, cur_len + C)
+                *before* this call).
+      v_cache:  (S, H, D) value cache, same layout.
+      cur_len:  () or (1,) int32 — live prefix length before the chunk.
+      block_k:  KV tile size streamed through VMEM.
+
+    Returns:
+      (C, H, D) attention output for the chunk.
+    """
+    c, h, d = q.shape
+    s, _, _ = k_cache.shape
+    if s % block_k != 0:
+        raise ValueError(f"max_seq {s} must be a multiple of block_k {block_k}")
+    num_blocks = s // block_k
+    cur_len = jnp.asarray(cur_len, jnp.int32).reshape((1,))
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_attention_kernel, block_k=block_k, scale=scale)
+    grid = (num_blocks,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),                  # cur_len
+            pl.BlockSpec((c, h, d), lambda b: (0, 0, 0)),        # q — whole chunk
+            pl.BlockSpec((block_k, h, d), lambda b: (b, 0, 0)),  # K tile
+            pl.BlockSpec((block_k, h, d), lambda b: (b, 0, 0)),  # V tile
+        ],
+        out_specs=pl.BlockSpec((c, h, d), lambda b: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, d), q.dtype),
+        scratch_shapes=[
+            # VMEM accumulators, carried across the sequential grid
+            # (interpret mode allocates plain arrays for these).
+            pl.MemorySpace.ANY((c, h), jnp.float32),
+            pl.MemorySpace.ANY((c, h), jnp.float32),
+            pl.MemorySpace.ANY((c, h, d), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(cur_len, q, k_cache, v_cache)
+
+
+def vmem_footprint_bytes(c: int, h: int, d: int, block_k: int) -> int:
+    """Estimated per-core VMEM residency of one grid step (f32).
+
+    q + K tile + V tile + scratch(m, l, acc) + output tile. Used by the
+    §Perf analysis to check the tiling fits a ~16 MiB VMEM budget.
+    """
+    f = 4
+    q = c * h * d * f
+    kv = 2 * block_k * h * d * f
+    scratch = (2 * c * h + c * h * d) * f
+    out = c * h * d * f
+    return q + kv + scratch + out

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernel and the L2 model.
+
+These references are deliberately written in the most direct way possible
+(materialize the full score matrix, no streaming softmax, no tiling) so
+that any disagreement with the Pallas kernel points at the kernel, not at
+the oracle.  pytest compares the two across a hypothesis-driven sweep of
+shapes, dtypes, chunk sizes and prefix lengths (python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention_ref(q, k_cache, v_cache, cur_len):
+    """Oracle for kernels.attention.chunked_attention.
+
+    q: (C, H, D); k_cache/v_cache: (S, H, D); cur_len: int — live prefix
+    length before the chunk.  Query i (absolute position cur_len + i)
+    attends to key positions j <= cur_len + i.
+    """
+    c, _, d = q.shape
+    s_len = k_cache.shape[0]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("chd,khd->chk", q, k_cache) * scale
+    kpos = jnp.arange(s_len)[None, :]
+    qpos = jnp.asarray(cur_len, jnp.int32) + jnp.arange(c)[:, None]
+    mask = kpos <= qpos  # (C, S)
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("chk,khd->chd", probs, v_cache).astype(q.dtype)
+
+
+def full_causal_attention_ref(q, k, v):
+    """Plain causal self-attention over a full sequence (no cache).
+
+    q/k/v: (T, H, D).  Used to check that running the chunked kernel
+    chunk-by-chunk against a growing cache reproduces ordinary causal
+    attention — the end-to-end invariant the serving engine relies on.
+    """
+    t, _, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("qhd,khd->qhk", q, k) * scale
+    mask = jnp.arange(t)[None, :] <= jnp.arange(t)[:, None]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("qhk,khd->qhd", probs, v).astype(q.dtype)

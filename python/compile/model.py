@@ -1,0 +1,401 @@
+"""L2 — the JAX model: a decoder-only transformer with a KV cache.
+
+SpecReason serves two (three, counting Appendix A.1) model sizes from the
+same architecture; the Rust coordinator drives both through a single
+``step`` entry point that covers *chunked prefill* (C in {8, 32, 128}) and
+*decode* (C == 1) uniformly:
+
+    step(tokens[1, C], cur_len[1], k_cache[L, S, H, D], v_cache[...],
+         **weights)  ->  (logits[1, C, V], k_cache', v_cache')
+
+Notes on the design (see DESIGN.md §2/§9):
+
+* One fused function for prefill and decode: no separate "prefill graph"
+  to keep in sync, and XLA fuses norm→proj→RoPE→kernel→proj→MLP per layer.
+* The attention hot-spot is the L1 Pallas kernel
+  (``kernels.attention.chunked_attention``); a ``use_pallas=False`` escape
+  hatch swaps in the pure-jnp oracle so pytest can diff full model outputs
+  kernel-vs-reference.
+* The KV caches are inputs *and* outputs: the Rust runtime keeps them on
+  device as PjRtBuffers and threads them between calls, so the host never
+  touches KV bytes on the request path.
+* Layers are unrolled (not ``lax.scan``) — at 4–10 layers unrolling lets
+  XLA fuse across the layer boundary and keeps the HLO free of loop
+  overhead; measured in EXPERIMENTS.md §Perf.
+* Weights are ordinary parameters (not baked constants) so one HLO
+  artifact per (arch, chunk) serves every logical model ("qwq-sim" vs
+  "skywork-sim" differ only in their ``.srw`` weight file).
+
+This module is build-time only: it is lowered by ``aot.py`` to HLO text
+and never imported at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import chunked_attention
+from .kernels.ref import chunked_attention_ref
+
+# Vocabulary layout shared with rust/src/runtime/tokenizer.rs:
+#   0..255   raw bytes
+#   256..    special tokens (order below)
+SPECIAL_TOKENS = (
+    "<pad>",
+    "<bos>",
+    "<eos>",
+    "<think>",
+    "</think>",
+    "<step>",
+    "<answer>",
+    "<verify>",
+)
+VOCAB_SIZE = 384  # 256 bytes + 8 specials, padded up to 3 * 128 for the MXU
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one model size ("arch"). All shapes static."""
+
+    arch: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    max_seq: int = 1024
+    vocab: int = VOCAB_SIZE
+    rope_theta: float = 10000.0
+
+    @property
+    def param_count(self) -> int:
+        d, f, hh = self.d_model, self.d_ff, self.n_heads * self.d_head
+        per_layer = 3 * d * hh + hh * d + d * f + f * d + 2 * d
+        return self.vocab * d + self.n_layers * per_layer + d
+
+    def kv_bytes_per_seq(self) -> int:
+        return 2 * 4 * self.n_layers * self.max_seq * self.n_heads * self.d_head
+
+
+# The three archs: parameter ratios mirror the paper's 32B:1.5B (~21x) and
+# 70B:1.5B (~47x) gaps; see DESIGN.md §3 for the substitution argument.
+ARCHS: Dict[str, ModelConfig] = {
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4, d_head=32, d_ff=512),
+    "base": ModelConfig("base", d_model=512, n_layers=8, n_heads=8, d_head=64, d_ff=2048),
+    "large": ModelConfig("large", d_model=768, n_layers=10, n_heads=12, d_head=64, d_ff=3072),
+}
+
+CHUNK_BUCKETS = (1, 8, 32, 128)
+
+
+def weight_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic weight ordering — the HLO parameter contract.
+
+    aot.py records this list in the artifact manifest; the Rust runtime
+    feeds weight buffers in exactly this order after (tokens, cur_len,
+    k_cache, v_cache).
+    """
+    names = ["tok_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.ln2",
+            f"l{i}.w1",
+            f"l{i}.w2",
+        ]
+    names.append("ln_f")
+    return names
+
+
+def weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hh, f = cfg.d_model, cfg.n_heads * cfg.d_head, cfg.d_ff
+    shapes: Dict[str, Tuple[int, ...]] = {"tok_emb": (cfg.vocab, d)}
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.ln1"] = (d,)
+        shapes[f"l{i}.wq"] = (d, hh)
+        shapes[f"l{i}.wk"] = (d, hh)
+        shapes[f"l{i}.wv"] = (d, hh)
+        shapes[f"l{i}.wo"] = (hh, d)
+        shapes[f"l{i}.ln2"] = (d,)
+        shapes[f"l{i}.w1"] = (d, f)
+        shapes[f"l{i}.w2"] = (f, d)
+    shapes["ln_f"] = (d,)
+    return shapes
+
+
+def init_weights(cfg: ModelConfig, seed: int) -> Dict[str, np.ndarray]:
+    """Deterministic random init (numpy, so aot.py is fast and portable).
+
+    Scaled normal init; the LM head is tied to ``tok_emb``.  Different
+    logical models ("qwq-sim", "skywork-sim", ...) use different seeds.
+    """
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for name, shape in weight_shapes(cfg).items():
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            out[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            std = 0.02 if name == "tok_emb" else 1.0 / np.sqrt(fan_in)
+            out[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+    return out
+
+
+def _rms_norm(x, gain, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope(x, positions, theta: float):
+    """Rotary position embedding. x: (C, H, D); positions: (C,) int32."""
+    c, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (C, half)
+    cos = jnp.cos(angles)[:, None, :]  # (C, 1, half)
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _forward_layers(
+    cfg: ModelConfig,
+    toks,  # (C,) int32
+    clen,  # () int32
+    k_layers,  # tuple of L × (S, H, D)
+    v_layers,
+    weights: Dict[str, jax.Array],
+    *,
+    use_pallas: bool,
+    block_k: int,
+):
+    """Transformer forward over per-layer KV caches.
+
+    Keeping the caches as a TUPLE of per-layer (S, H, D) arrays — rather
+    than one stacked (L, S, H, D) array — is the key §Perf optimization
+    of the L2 graph: a stacked cache forces `cache.at[i].set(...)` per
+    layer, which XLA materializes as a full-cache copy per layer per
+    step (≈ 2·L·|cache| bytes of memcpy per decoded token).  With the
+    tuple layout each layer updates only its own 1/L slice in place, and
+    `decode_n` carries the tuple through `lax.scan` so no re-stacking
+    happens per token.  Measured: base-model decode TPT 77.6 → see
+    EXPERIMENTS.md §Perf.
+    """
+    c = toks.shape[0]
+    positions = clen + jnp.arange(c, dtype=jnp.int32)
+    x = weights["tok_emb"][toks]  # (C, d) gather
+    attend = chunked_attention if use_pallas else chunked_attention_ref
+
+    k_out = []
+    v_out = []
+    for i in range(cfg.n_layers):
+        h = _rms_norm(x, weights[f"l{i}.ln1"])
+        q = (h @ weights[f"l{i}.wq"]).reshape(c, cfg.n_heads, cfg.d_head)
+        k = (h @ weights[f"l{i}.wk"]).reshape(c, cfg.n_heads, cfg.d_head)
+        v = (h @ weights[f"l{i}.wv"]).reshape(c, cfg.n_heads, cfg.d_head)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        # Write the chunk's K/V into this layer's cache at
+        # [cur_len, cur_len + C) — touches only 1/L of the KV bytes.
+        k_layer = jax.lax.dynamic_update_slice(k_layers[i], k, (clen, 0, 0))
+        v_layer = jax.lax.dynamic_update_slice(v_layers[i], v, (clen, 0, 0))
+        k_out.append(k_layer)
+        v_out.append(v_layer)
+
+        if use_pallas:
+            attn = attend(q, k_layer, v_layer, clen, block_k=block_k)
+        else:
+            attn = attend(q, k_layer, v_layer, clen)
+        x = x + attn.reshape(c, -1) @ weights[f"l{i}.wo"]
+
+        h = _rms_norm(x, weights[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(h @ weights[f"l{i}.w1"]) @ weights[f"l{i}.w2"]
+
+    x = _rms_norm(x, weights["ln_f"])
+    logits = x @ weights["tok_emb"].T  # tied LM head: (C, V)
+    return logits, tuple(k_out), tuple(v_out)
+
+
+def step(
+    cfg: ModelConfig,
+    tokens,  # (1, C) int32
+    cur_len,  # (1,) int32 — live prefix length before this chunk
+    k_cache,  # (L, S, H, D) f32
+    v_cache,  # (L, S, H, D) f32
+    weights: Dict[str, jax.Array],
+    *,
+    use_pallas: bool = True,
+    block_k: int = 128,
+):
+    """Run one chunk (prefill if C > 1, decode if C == 1).
+
+    Returns (logits[1, C, V], k_cache', v_cache') where the caches have the
+    chunk's keys/values written at positions [cur_len, cur_len + C).
+    The (L, S, H, D) interface is unstacked to per-layer tuples internally
+    and re-stacked ONCE per call (see `_forward_layers`).
+    """
+    toks = tokens[0]
+    clen = cur_len[0]
+    k_layers = tuple(k_cache[i] for i in range(cfg.n_layers))
+    v_layers = tuple(v_cache[i] for i in range(cfg.n_layers))
+    logits, k_layers, v_layers = _forward_layers(
+        cfg, toks, clen, k_layers, v_layers, weights,
+        use_pallas=use_pallas, block_k=block_k,
+    )
+    return logits[None, ...], jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+def decode_n(
+    cfg: ModelConfig,
+    n: int,
+    token,  # (1, 1) int32 — last context token (prompt tail or last sampled)
+    cur_len,  # (1,) int32
+    k_cache,  # (L, S, H, D)
+    v_cache,
+    key_bits,  # (2,) uint32 — threefry key material from the Rust sampler
+    temp,  # (1,) f32 — sampling temperature (<= 1e-3 ~ greedy)
+    weights: Dict[str, jax.Array],
+    *,
+    use_pallas: bool = True,
+    block_k: int = 128,
+):
+    """Autoregressively decode ``n`` tokens entirely on-device.
+
+    This is the key AOT design decision (DESIGN.md §2, EXPERIMENTS.md
+    §Perf): the PJRT boundary we use returns multi-output results as ONE
+    tuple buffer which cannot be re-fed as (flattened) parameters, so KV
+    caches necessarily round-trip through the host once per executable
+    call.  Decoding a whole reasoning-step's worth of tokens per call
+    (buckets of 4/8/16/32) amortizes that copy to ~1/n per token — and
+    maps one-to-one onto SpecReason's unit of work, the reasoning step.
+
+    Sampling (temperature categorical, the paper uses T=0.6) happens
+    in-graph via threefry so no logits leave the device mid-step.
+
+    Returns (tokens[1, n] int32, k_cache', v_cache').
+    """
+
+    def body(carry, _):
+        tok, clen, k_layers, v_layers = carry
+        logits, k_layers, v_layers = _forward_layers(
+            cfg, tok, clen, k_layers, v_layers, weights,
+            use_pallas=use_pallas, block_k=block_k,
+        )
+        last = logits[-1]  # (V,)
+        # Temperature-scaled categorical sampling with a per-position key.
+        t = jnp.maximum(temp[0], 1e-4)
+        key = jax.random.wrap_key_data(
+            key_bits + clen.astype(jnp.uint32), impl="threefry2x32"
+        )
+        nxt = jax.random.categorical(key, last / t).astype(jnp.int32)
+        return (nxt[None], clen + 1, k_layers, v_layers), nxt
+
+    # Per-layer KV tuples as the scan carry (see `_forward_layers` §Perf
+    # note); stack back to the (L, S, H, D) interface once, per call.
+    carry0 = (
+        token[0],
+        cur_len[0],
+        tuple(k_cache[i] for i in range(cfg.n_layers)),
+        tuple(v_cache[i] for i in range(cfg.n_layers)),
+    )
+    (_, _, k_layers, v_layers), toks = jax.lax.scan(
+        body, carry0, None, length=n
+    )
+    return toks[None, :], jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+DECODE_BUCKETS = (4, 8, 16, 32)
+
+
+def make_decode_fn(cfg: ModelConfig, n: int, *, use_pallas: bool = True,
+                   block_k: int = 128):
+    """Positional wrapper for AOT lowering of ``decode_n``.
+
+    HLO parameter order: token, cur_len, k_cache, v_cache, key_bits, temp,
+    then weights in weight_names() order.
+    """
+    names = weight_names(cfg)
+
+    def fn(token, cur_len, k_cache, v_cache, key_bits, temp, *weight_list):
+        weights = dict(zip(names, weight_list))
+        return decode_n(
+            cfg, n, token, cur_len, k_cache, v_cache, key_bits, temp,
+            weights, use_pallas=use_pallas, block_k=block_k,
+        )
+
+    return fn
+
+
+def decode_example_args(cfg: ModelConfig, n: int):
+    """ShapeDtypeStructs matching make_decode_fn's signature."""
+    sds = jax.ShapeDtypeStruct
+    args = [
+        sds((1, 1), jnp.int32),
+        sds((1,), jnp.int32),
+        sds((cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32),
+        sds((cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32),
+        sds((2,), jnp.uint32),
+        sds((1,), jnp.float32),
+    ]
+    shapes = weight_shapes(cfg)
+    for name in weight_names(cfg):
+        args.append(sds(shapes[name], jnp.float32))
+    return args
+
+
+def make_step_fn(cfg: ModelConfig, *, use_pallas: bool = True, block_k: int = 128):
+    """Positional-signature wrapper used for AOT lowering.
+
+    The lowered HLO's parameter order is exactly:
+      tokens, cur_len, k_cache, v_cache, *[weights in weight_names() order]
+    """
+    names = weight_names(cfg)
+
+    def fn(tokens, cur_len, k_cache, v_cache, *weight_list):
+        weights = dict(zip(names, weight_list))
+        return step(
+            cfg, tokens, cur_len, k_cache, v_cache, weights,
+            use_pallas=use_pallas, block_k=block_k,
+        )
+
+    return fn
+
+
+def example_args(cfg: ModelConfig, chunk: int):
+    """ShapeDtypeStructs matching make_step_fn's signature."""
+    sds = jax.ShapeDtypeStruct
+    args = [
+        sds((1, chunk), jnp.int32),
+        sds((1,), jnp.int32),
+        sds((cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32),
+        sds((cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32),
+    ]
+    shapes = weight_shapes(cfg)
+    for name in weight_names(cfg):
+        args.append(sds(shapes[name], jnp.float32))
+    return args
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(arch: str, chunk: int, use_pallas: bool, block_k: int):
+    cfg = ARCHS[arch]
+    return jax.jit(make_step_fn(cfg, use_pallas=use_pallas, block_k=block_k))
+
+
+def run_step(cfg, tokens, cur_len, k_cache, v_cache, weights,
+             *, use_pallas=True, block_k=128):
+    """Convenience eager entry point for the python tests."""
+    fn = _jitted(cfg.arch, int(tokens.shape[1]), use_pallas, block_k)
+    wlist = [weights[n] for n in weight_names(cfg)]
+    return fn(tokens, cur_len, k_cache, v_cache, *wlist)

@@ -1,0 +1,56 @@
+"""Tests for the L1 roofline-analysis model (kernels/analysis.py)."""
+
+from compile.kernels.analysis import KernelShape, VMEM_BYTES, sweep
+
+
+def shape(**kw):
+    base = dict(c=1, h=8, d=64, s=1024, block_k=128, live=512)
+    base.update(kw)
+    return KernelShape(**base)
+
+
+class TestKernelShape:
+    def test_grid_and_live_blocks(self):
+        k = shape(live=512, block_k=128)
+        assert k.grid == 8
+        assert k.live_blocks == 5  # blocks 0..4 cover position 512
+
+    def test_live_blocks_clamped_to_grid(self):
+        k = shape(live=1023, c=1)
+        assert k.live_blocks == k.grid
+
+    def test_pl_when_skip_reduces_traffic(self):
+        full = shape(live=1023)
+        short = shape(live=64)
+        assert short.hbm_bytes() < full.hbm_bytes()
+        assert short.flops() < full.flops()
+
+    def test_vmem_within_budget_for_defaults(self):
+        for arch_kw in (dict(h=4, d=32), dict(h=8, d=64), dict(h=12, d=64)):
+            for c in (1, 32, 128):
+                k = shape(c=c, block_k=128, **arch_kw)
+                assert k.fits_vmem(), f"{arch_kw} c={c}"
+                assert k.vmem_bytes() < VMEM_BYTES / 4  # ≥4x headroom
+
+    def test_decode_is_memory_bound(self):
+        k = shape(c=1)
+        mem, comp = k.time_bound_s()
+        assert mem > comp
+        assert k.roofline_utilization() < 0.2
+
+    def test_prefill_has_higher_intensity(self):
+        dec = shape(c=1)
+        pre = shape(c=128)
+        assert pre.intensity() > 10 * dec.intensity()
+
+    def test_intensity_independent_of_block_k_for_decode(self):
+        # KV is read once either way; block_k only changes scheduling.
+        a = shape(block_k=64).intensity()
+        b = shape(block_k=256).intensity()
+        assert abs(a - b) / a < 0.30
+
+    def test_sweep_covers_all_archs(self):
+        rows = sweep()
+        archs = {r[0] for r in rows}
+        assert archs == {"small", "base", "large"}
+        assert all(r[3].flops() > 0 for r in rows)

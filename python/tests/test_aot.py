@@ -1,0 +1,114 @@
+"""AOT contract tests: the artifacts consumed by the Rust runtime.
+
+These lower a tiny arch in-process (not the shipped artifacts, to stay
+fast) and validate the interchange invariants: HLO text parses, has the
+right parameter arity/order, carries no custom-calls, and the .srw
+writer/loader roundtrip preserves bytes.
+"""
+
+import json
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+TINY = M.ModelConfig("small", d_model=128, n_layers=4, n_heads=4,
+                     d_head=32, d_ff=512)
+
+
+class TestHloText:
+    def test_step_lowering_is_custom_call_free(self):
+        text = aot.lower_arch(TINY, 8, use_pallas=True, block_k=256)
+        assert "custom-call" not in text, "CPU PJRT cannot run custom-calls"
+        assert text.startswith("HloModule")
+
+    def test_step_parameter_arity(self):
+        text = aot.lower_arch(TINY, 1, use_pallas=True, block_k=256)
+        # tokens, cur_len, k, v + weights
+        expected = 4 + len(M.weight_names(TINY))
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count(" parameter(")
+        assert n_params == expected, f"{n_params} != {expected}"
+
+    def test_decode_parameter_arity(self):
+        fn = M.make_decode_fn(TINY, 4)
+        lowered = jax.jit(fn).lower(*M.decode_example_args(TINY, 4))
+        text = aot.to_hlo_text(lowered)
+        # token, cur_len, k, v, key_bits, temp + weights
+        expected = 6 + len(M.weight_names(TINY))
+        entry = text[text.index("ENTRY"):]
+        assert entry.count(" parameter(") == expected
+
+    def test_root_is_three_tuple(self):
+        text = aot.lower_arch(TINY, 8, use_pallas=True, block_k=256)
+        entry = text[text.index("ENTRY"):]
+        root = [l for l in entry.splitlines() if "ROOT" in l][0]
+        # (logits, k, v) — three leaves
+        assert root.count("f32[") >= 3 or root.count("(") >= 1
+
+
+class TestSrw:
+    def test_roundtrip(self, tmp_path):
+        w = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+             "b": np.asarray([-1.5, 2.5], np.float32)}
+        p = tmp_path / "t.srw"
+        digest = aot.write_srw(str(p), "t", "small", 5, w)
+        raw = p.read_bytes()
+        assert raw[:4] == b"SRW1"
+        hlen = struct.unpack("<I", raw[4:8])[0]
+        header = json.loads(raw[8:8 + hlen])
+        assert header["name"] == "t"
+        assert {a["name"] for a in header["arrays"]} == {"a", "b"}
+        data = raw[8 + hlen:]
+        for a in header["arrays"]:
+            got = np.frombuffer(
+                data[a["offset"]:a["offset"] + a["nbytes"]], np.float32
+            ).reshape(a["shape"])
+            np.testing.assert_array_equal(got, w[a["name"]])
+        assert len(digest) == 64
+
+    def test_offsets_are_contiguous(self, tmp_path):
+        w = {"x": np.zeros(5, np.float32), "y": np.ones((2, 2), np.float32)}
+        p = tmp_path / "u.srw"
+        aot.write_srw(str(p), "u", "small", 1, w)
+        raw = p.read_bytes()
+        hlen = struct.unpack("<I", raw[4:8])[0]
+        header = json.loads(raw[8:8 + hlen])
+        arrays = sorted(header["arrays"], key=lambda a: a["offset"])
+        pos = 0
+        for a in arrays:
+            assert a["offset"] == pos
+            pos += a["nbytes"]
+        assert len(raw) == 8 + hlen + pos
+
+
+class TestManifestContract:
+    def test_weight_order_is_stable(self):
+        # The Rust runtime feeds buffers in this exact order; it must be
+        # deterministic across processes.
+        a = M.weight_names(M.ARCHS["base"])
+        b = M.weight_names(M.ARCHS["base"])
+        assert a == b
+        assert a[0] == "tok_emb" and a[-1] == "ln_f"
+
+    def test_example_args_match_weight_shapes(self):
+        cfg = M.ARCHS["small"]
+        args = M.example_args(cfg, 8)
+        shapes = M.weight_shapes(cfg)
+        names = M.weight_names(cfg)
+        for name, arg in zip(names, args[4:]):
+            assert tuple(shapes[name]) == arg.shape, name
+
+    def test_logical_models_cover_all_archs(self):
+        archs = {a for (_, a, _) in aot.LOGICAL_MODELS}
+        assert archs == {"small", "base", "large"}
+        names = [n for (n, _, _) in aot.LOGICAL_MODELS]
+        assert len(names) == len(set(names))
+
+    def test_seeds_are_distinct(self):
+        seeds = [s for (_, _, s) in aot.LOGICAL_MODELS]
+        assert len(seeds) == len(set(seeds))

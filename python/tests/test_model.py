@@ -1,0 +1,198 @@
+"""L2 correctness: the transformer step/decode functions.
+
+Checks: pallas-vs-ref full-model agreement, chunked-prefill consistency,
+decode_n vs manual loop, weight packing/ordering, and hypothesis sweeps
+over chunk decompositions.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+CFG = M.ARCHS["small"]
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return {k: jnp.asarray(v) for k, v in M.init_weights(CFG, 7).items()}
+
+
+def empty_cache(cfg=CFG):
+    shape = (cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def toks(xs):
+    return jnp.asarray([xs], jnp.int32)
+
+
+def cur(n):
+    return jnp.asarray([n], jnp.int32)
+
+
+class TestStep:
+    def test_pallas_matches_ref(self, weights):
+        kc, vc = empty_cache()
+        t = toks([1, 50, 60, 70, 80, 90, 100, 110])
+        lp, kp, vp = M.run_step(CFG, t, cur(0), kc, vc, weights, use_pallas=True)
+        lr, kr, vr = M.run_step(CFG, t, cur(0), kc, vc, weights, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(kp), np.asarray(kr), atol=2e-5, rtol=2e-5)
+
+    def test_logits_shape_and_finite(self, weights):
+        kc, vc = empty_cache()
+        lp, _, _ = M.run_step(CFG, toks([1, 2, 3, 4, 5, 6, 7, 8]), cur(0), kc, vc, weights)
+        assert lp.shape == (1, 8, CFG.vocab)
+        assert bool(jnp.isfinite(lp).all())
+
+    def test_cache_written_only_in_window(self, weights):
+        kc, vc = empty_cache()
+        t = toks([5, 6, 7, 8, 9, 10, 11, 12])
+        _, k1, _ = M.run_step(CFG, t, cur(16), kc, vc, weights)
+        k1 = np.asarray(k1)
+        # untouched outside [16, 24)
+        assert np.all(k1[:, :16] == 0)
+        assert np.all(k1[:, 24:] == 0)
+        assert np.any(k1[:, 16:24] != 0)
+
+    def test_chunked_prefill_equals_one_shot(self, weights):
+        """prefill(32) == prefill(8) x 4 — the chunk scheduler invariant."""
+        rng = np.random.default_rng(0)
+        ids = rng.integers(0, 256, size=32).tolist()
+        kc, vc = empty_cache()
+        l_full, k_full, v_full = M.run_step(CFG, toks(ids), cur(0), kc, vc, weights)
+        kc2, vc2 = empty_cache()
+        logits_last = None
+        for i in range(0, 32, 8):
+            logits_last, kc2, vc2 = M.run_step(
+                CFG, toks(ids[i:i + 8]), cur(i), kc2, vc2, weights)
+        np.testing.assert_allclose(
+            np.asarray(l_full[0, -1]), np.asarray(logits_last[0, -1]),
+            atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(np.asarray(k_full), np.asarray(kc2),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_rollback_then_redecode_is_clean(self, weights):
+        """Writing a step, rolling back cur_len, and writing a different
+        step must give the same result as never writing the first step —
+        KV rollback soundness for rejected speculations."""
+        kc, vc = empty_cache()
+        _, kc, vc = M.run_step(CFG, toks([1, 2, 3, 4, 5, 6, 7, 8]), cur(0), kc, vc, weights)
+        # speculated (rejected) step:
+        _, k_rej, v_rej = M.run_step(CFG, toks([50, 51, 52, 53, 54, 55, 56, 57]),
+                                     cur(8), kc, vc, weights)
+        # regenerate different step on the *rolled-back* cache (same cur_len)
+        l1, k1, _ = M.run_step(CFG, toks([90, 91, 92, 93, 94, 95, 96, 97]),
+                               cur(8), k_rej, v_rej, weights)
+        l2, k2, _ = M.run_step(CFG, toks([90, 91, 92, 93, 94, 95, 96, 97]),
+                               cur(8), kc, vc, weights)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), atol=2e-5, rtol=2e-5)
+
+
+class TestDecodeN:
+    def test_greedy_matches_manual_loop(self, weights):
+        kc, vc = empty_cache()
+        _, k1, v1 = M.run_step(CFG, toks([1, 50, 60, 70, 80, 90, 100, 110]),
+                               cur(0), kc, vc, weights)
+        fn = jax.jit(M.make_decode_fn(CFG, 8))
+        wl = [weights[n] for n in M.weight_names(CFG)]
+        out, _, _ = fn(toks([110]), cur(8), k1, v1,
+                       jnp.asarray([3, 4], jnp.uint32),
+                       jnp.asarray([1e-4], jnp.float32), *wl)
+        ks, vs = k1, v1
+        tok, c0, manual = 110, 8, []
+        for _ in range(8):
+            lg, ks, vs = M.run_step(CFG, toks([tok]), cur(c0), ks, vs, weights)
+            tok = int(jnp.argmax(lg[0, -1]))
+            manual.append(tok)
+            c0 += 1
+        assert np.asarray(out)[0].tolist() == manual
+
+    def test_sampling_is_key_deterministic(self, weights):
+        kc, vc = empty_cache()
+        _, k1, v1 = M.run_step(CFG, toks([1, 2, 3, 4, 5, 6, 7, 8]), cur(0), kc, vc, weights)
+        fn = jax.jit(M.make_decode_fn(CFG, 4))
+        wl = [weights[n] for n in M.weight_names(CFG)]
+        args = (toks([8]), cur(8), k1, v1)
+        t = jnp.asarray([0.6], jnp.float32)
+        a, _, _ = fn(*args, jnp.asarray([11, 22], jnp.uint32), t, *wl)
+        b, _, _ = fn(*args, jnp.asarray([11, 22], jnp.uint32), t, *wl)
+        c, _, _ = fn(*args, jnp.asarray([99, 22], jnp.uint32), t, *wl)
+        assert (np.asarray(a) == np.asarray(b)).all()
+        assert not (np.asarray(a) == np.asarray(c)).all()  # overwhelmingly
+
+    def test_tokens_in_vocab(self, weights):
+        kc, vc = empty_cache()
+        _, k1, v1 = M.run_step(CFG, toks([1, 2, 3, 4, 5, 6, 7, 8]), cur(0), kc, vc, weights)
+        fn = jax.jit(M.make_decode_fn(CFG, 16))
+        wl = [weights[n] for n in M.weight_names(CFG)]
+        out, _, _ = fn(toks([8]), cur(8), k1, v1,
+                       jnp.asarray([0, 1], jnp.uint32),
+                       jnp.asarray([1.0], jnp.float32), *wl)
+        out = np.asarray(out)[0]
+        assert ((0 <= out) & (out < CFG.vocab)).all()
+
+    def test_decode_advances_cache(self, weights):
+        kc, vc = empty_cache()
+        _, k1, v1 = M.run_step(CFG, toks([1, 2, 3, 4, 5, 6, 7, 8]), cur(0), kc, vc, weights)
+        fn = jax.jit(M.make_decode_fn(CFG, 4))
+        wl = [weights[n] for n in M.weight_names(CFG)]
+        _, k2, _ = fn(toks([8]), cur(8), k1, v1,
+                      jnp.asarray([0, 1], jnp.uint32),
+                      jnp.asarray([0.6], jnp.float32), *wl)
+        k2 = np.asarray(k2)
+        assert np.any(k2[:, 8:12] != 0)
+        assert np.all(k2[:, 12:] == 0)
+
+
+class TestWeights:
+    def test_weight_order_matches_shapes(self):
+        names = M.weight_names(CFG)
+        shapes = M.weight_shapes(CFG)
+        assert set(names) == set(shapes)
+        assert names[0] == "tok_emb"
+        assert names[-1] == "ln_f"
+        assert len(names) == 2 + 8 * CFG.n_layers
+
+    def test_param_count_matches_arrays(self):
+        w = M.init_weights(CFG, 0)
+        total = sum(int(np.prod(a.shape)) for a in w.values())
+        assert total == CFG.param_count
+
+    def test_seeds_differ(self):
+        a = M.init_weights(CFG, 1)["tok_emb"]
+        b = M.init_weights(CFG, 2)["tok_emb"]
+        assert not np.allclose(a, b)
+
+    def test_init_deterministic(self):
+        a = M.init_weights(CFG, 5)["l0.wq"]
+        b = M.init_weights(CFG, 5)["l0.wq"]
+        assert (a == b).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    split=st.sampled_from([(8, 8), (8, 8, 8, 8), (32,), (8, 32)]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prefill_decomposition_property(split, seed, ):
+    """Any bucket decomposition of the same prompt yields the same cache."""
+    weights = {k: jnp.asarray(v) for k, v in M.init_weights(CFG, 7).items()}
+    total = sum(split)
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, 256, size=total).tolist()
+    kc, vc = empty_cache()
+    _, k_ref, _ = M.run_step(CFG, toks(ids), cur(0), kc, vc, weights)
+    kc2, vc2 = empty_cache()
+    pos = 0
+    for c_sz in split:
+        _, kc2, vc2 = M.run_step(CFG, toks(ids[pos:pos + c_sz]), cur(pos), kc2, vc2, weights)
+        pos += c_sz
+    np.testing.assert_allclose(np.asarray(k_ref)[:, :total],
+                               np.asarray(kc2)[:, :total], atol=3e-4, rtol=3e-4)

@@ -1,0 +1,95 @@
+//! Fig. 3 — main results: accuracy vs latency for the five schemes on
+//! three datasets × four model combinations, plus the §5.2 text stats
+//! (speedups, +Decode-over-Decode cuts, offload ratios).
+//!
+//!   cargo bench --bench fig3_main_results
+//!   SPECREASON_BENCH_QUERIES=40 SPECREASON_BENCH_SAMPLES=8 cargo bench ...
+//!
+//! Uses the calibrated GPU-clock simulator by default (decision-parity
+//! with the real engine is covered by coordinator_integration tests);
+//! SPECREASON_BENCH_REAL=1 re-runs the qwq+r1 combo on real PJRT.
+
+use specreason::coordinator::{AcceptancePolicy, Scheme, SpecConfig};
+use specreason::engine::{Engine, EngineConfig};
+use specreason::eval::{bench_real, main_combos, run_cell_bench, Cell};
+use specreason::semantics::{Dataset, Oracle};
+use specreason::util::bench::{bench, BenchConfig, Table};
+
+fn main() {
+    let oracle = Oracle::default();
+    let engine = if bench_real() {
+        eprintln!("[fig3] loading real engine (qwq-sim + r1-sim)...");
+        Some(Engine::new(&EngineConfig::default()).expect("engine"))
+    } else {
+        None
+    };
+    let combos = if bench_real() {
+        vec![main_combos()[0].clone()]
+    } else {
+        main_combos()
+    };
+
+    let mut timing = Vec::new();
+    for combo in combos {
+        let mut t = Table::new(
+            &format!("Fig. 3 — {}", combo.label()),
+            &["dataset", "scheme", "pass@1", "latency (s)", "speedup", "offload"],
+        );
+        for ds in Dataset::all() {
+            let mut base_lat = None;
+            let mut sd_lat = None;
+            for scheme in Scheme::all() {
+                let cell = Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: SpecConfig {
+                        scheme,
+                        policy: AcceptancePolicy::Static { threshold: 7 },
+                        ..Default::default()
+                    },
+                };
+                let r = run_cell_bench(&oracle, &cell, engine.as_ref(), 1234).expect("cell");
+                let lat = r.mean_gpu();
+                match scheme {
+                    Scheme::VanillaBase => base_lat = Some(lat),
+                    Scheme::SpecDecode => sd_lat = Some(lat),
+                    _ => {}
+                }
+                let speedup = base_lat.map(|b| format!("{:.2}x", b / lat)).unwrap_or_default();
+                t.row(vec![
+                    ds.name().into(),
+                    scheme.name().into(),
+                    format!("{:.3}", r.accuracy()),
+                    format!("{:.1}", lat),
+                    speedup,
+                    format!("{:.2}", r.mean_offload()),
+                ]);
+                if scheme == Scheme::SpecReasonPlusDecode {
+                    if let Some(sd) = sd_lat {
+                        timing.push(format!(
+                            "{}/{}: SpecReason+Decode cuts {:.1}% off SpecDecode",
+                            combo.label(), ds.name(), 100.0 * (1.0 - lat / sd)
+                        ));
+                    }
+                }
+            }
+        }
+        t.print();
+    }
+    for line in timing {
+        println!("{line}");
+    }
+
+    // Criterion-style timing of one representative cell end-to-end.
+    let cfg = BenchConfig::default();
+    let cell = Cell {
+        dataset: Dataset::Math500,
+        scheme: Scheme::SpecReason,
+        combo: main_combos()[0].clone(),
+        cfg: SpecConfig::default(),
+    };
+    bench(&cfg, "fig3/cell(math500,spec-reason,sim)", || {
+        run_cell_bench(&oracle, &cell, None, 1234).unwrap();
+    });
+}

@@ -1,0 +1,61 @@
+//! Fig. 7 — the base model's judgment vs a process reward model (§5.4):
+//! bin Math-Shepherd-style PRM scores into ten [x, x+0.1) buckets and
+//! report the mean 0–9 utility score the base model gave the same steps.
+//! A strong correlation validates using the base model as the critic.
+
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::util::bench::{bench, BenchConfig, Table};
+use specreason::util::stats::{pearson, Histogram};
+
+fn main() {
+    let oracle = Oracle::default();
+    let gen = TraceGenerator::new(Dataset::Aime, 1234);
+    let n_queries = specreason::eval::bench_queries().max(40);
+
+    let mut hist = Histogram::new(0.0, 1.0, 10);
+    let mut prm = Vec::new();
+    let mut util = Vec::new();
+    for q in gen.queries(n_queries) {
+        for step in 0..q.plan_len() {
+            // The speculated steps come from the small model, as in §5.4.
+            let quality = oracle.step_quality(&q, step, 0, "r1-sim");
+            let p = oracle.prm_score(&q, step, 0, quality);
+            let u = oracle.verifier_score(&q, step, 0, quality, "qwq-sim");
+            hist.record(p, u as f64);
+            prm.push(p);
+            util.push(u as f64);
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 7 — utility score vs PRM score (AIME, r1-sim steps, qwq-sim judge)",
+        &["PRM bin", "steps", "mean utility"],
+    );
+    for b in 0..hist.bins() {
+        let (lo, hi) = hist.bin_bounds(b);
+        t.row(vec![
+            format!("[{lo:.1},{hi:.1})"),
+            hist.count(b).to_string(),
+            hist.bin_mean(b).map(|m| format!("{m:.2}")).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
+    let r = pearson(&prm, &util);
+    println!("pearson r = {r:.3} over {} steps", prm.len());
+    assert!(r > 0.6, "verifier must track the PRM (Fig. 7)");
+
+    // The §5.4 shape check: monotone bin means (low bins score low).
+    let lo_mean = hist.bin_mean(0).or(hist.bin_mean(1)).unwrap_or(0.0);
+    let hi_mean = hist.bin_mean(9).or(hist.bin_mean(8)).unwrap_or(9.0);
+    assert!(lo_mean < hi_mean, "bin means must increase: {lo_mean} vs {hi_mean}");
+
+    let cfg = BenchConfig::default();
+    let q = gen.query(0);
+    bench(&cfg, "fig7/score-1000-steps", || {
+        for step in 0..q.plan_len() {
+            let quality = oracle.step_quality(&q, step, 0, "r1-sim");
+            std::hint::black_box(oracle.verifier_score(&q, step, 0, quality, "qwq-sim"));
+            std::hint::black_box(oracle.prm_score(&q, step, 0, quality));
+        }
+    });
+}

@@ -1,0 +1,65 @@
+//! Fig. 9 / App. A.2 — thinking-token counts for all datasets × the four
+//! main model combinations: the small model is less verbose, so
+//! SpecReason cuts token consumption by ~1.0–2.3× depending on how many
+//! steps it adopts.
+
+use specreason::coordinator::{Scheme, SpecConfig};
+use specreason::eval::{main_combos, run_cell_bench, Cell};
+use specreason::semantics::{Dataset, Oracle};
+use specreason::util::bench::{bench, BenchConfig, Table};
+
+fn main() {
+    let oracle = Oracle::default();
+    let mut t = Table::new(
+        "Fig. 9 — thinking-token counts, all datasets x combos",
+        &["combo", "dataset", "base", "small", "specreason", "reduction"],
+    );
+    let mut reductions = Vec::new();
+    for combo in main_combos() {
+        let mut combo_reductions: Vec<f64> = Vec::new();
+        for ds in Dataset::all() {
+            let mk = |scheme| Cell {
+                dataset: ds,
+                scheme,
+                combo: combo.clone(),
+                cfg: SpecConfig { scheme, ..Default::default() },
+            };
+            let base = run_cell_bench(&oracle, &mk(Scheme::VanillaBase), None, 1234).unwrap();
+            let small = run_cell_bench(&oracle, &mk(Scheme::VanillaSmall), None, 1234).unwrap();
+            let spec = run_cell_bench(&oracle, &mk(Scheme::SpecReason), None, 1234).unwrap();
+            let reduction = base.mean_tokens() / spec.mean_tokens();
+            combo_reductions.push(reduction);
+            t.row(vec![
+                combo.label(),
+                ds.name().into(),
+                format!("{:.0}", base.mean_tokens()),
+                format!("{:.0}", small.mean_tokens()),
+                format!("{:.0}", spec.mean_tokens()),
+                format!("{reduction:.2}x"),
+            ]);
+            // Fig. 9 shape: small <= specreason <= base on average.
+            assert!(small.mean_tokens() <= spec.mean_tokens() + 30.0);
+            assert!(spec.mean_tokens() <= base.mean_tokens() + 1.0);
+        }
+        reductions.push((combo.label(), combo_reductions));
+    }
+    t.print();
+    for (label, rs) in &reductions {
+        let lo = rs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rs.iter().cloned().fold(0.0, f64::max);
+        println!("{label}: token reduction {lo:.1}-{hi:.1}x (paper: 1.0-2.3x)");
+        assert!(*rs.iter().max_by(|a, b| a.partial_cmp(b).unwrap()).unwrap() <= 2.6);
+        assert!(*rs.iter().min_by(|a, b| a.partial_cmp(b).unwrap()).unwrap() >= 0.95);
+    }
+
+    let cfg = BenchConfig::default();
+    let cell = Cell {
+        dataset: Dataset::Gpqa,
+        scheme: Scheme::SpecReason,
+        combo: main_combos()[3].clone(),
+        cfg: SpecConfig::default(),
+    };
+    bench(&cfg, "fig9/token-count-cell(gpqa,skywork+zr1)", || {
+        run_cell_bench(&oracle, &cell, None, 1).unwrap();
+    });
+}

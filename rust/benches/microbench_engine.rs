@@ -1,0 +1,134 @@
+//! Engine microbenchmarks on the REAL PJRT stack — the perf anchors for
+//! EXPERIMENTS.md §Perf and the §4.1 cost-model claims:
+//!
+//! * decode time-per-token for each model size (the base:small TPT gap
+//!   that makes speculation profitable);
+//! * chunked-prefill cost per bucket (1/8/32/128);
+//! * the verification pass (CoT suffix + ~70-token template) versus the
+//!   cost of decoding 1–2 base tokens (§4.1's "efficient verification");
+//! * rollback cost (must be O(1) — it is a frontier rewind);
+//! * a full speculate→verify→accept cycle.
+//!
+//!   cargo bench --bench microbench_engine
+//!
+//! SPECREASON_BENCH_ITERS / _WARMUP control the sample counts.
+
+use std::time::Instant;
+
+use specreason::coordinator::{Combo, Role, Backend, RealBackend};
+use specreason::engine::{Engine, EngineConfig};
+use specreason::metrics::{Phase, QueryMetrics};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::util::bench::{bench, fmt_time, BenchConfig, Table};
+
+fn main() {
+    eprintln!("[microbench] loading engine (qwq-sim + r1-sim)...");
+    let t0 = Instant::now();
+    let engine = Engine::new(&EngineConfig::default()).expect("run `make artifacts` first");
+    eprintln!("[microbench] engine up in {:.1}s", t0.elapsed().as_secs_f64());
+    let cfg = BenchConfig::default();
+    let q = TraceGenerator::new(Dataset::Aime, 1).query(0);
+    let mut qm = QueryMetrics::default();
+
+    // ---- decode TPT per model ----
+    let mut tpt_rows = Vec::new();
+    for model in ["r1-sim", "qwq-sim"] {
+        let mut seq = engine.new_sequence(&q.prompt).unwrap();
+        engine.decode(&mut seq, model, 1, 0, Phase::Speculate, &mut qm).unwrap(); // warm ctx
+        let n = 32;
+        let r = bench(&cfg, &format!("decode/{model}/32tok"), || {
+            engine
+                .decode(&mut seq, model, n, 1, Phase::Speculate, &mut qm)
+                .unwrap();
+            // rollback so the sequence never overflows across iterations
+            let to = seq.len() - n;
+            engine.rollback(&mut seq, to).unwrap();
+        });
+        tpt_rows.push((model, r.mean_s() / n as f64));
+        engine.release(&seq).unwrap();
+    }
+
+    // ---- chunked prefill per bucket ----
+    for chunk in [8usize, 32, 128] {
+        let mut seq = engine.new_sequence(&q.prompt).unwrap();
+        engine.prefill_through(&mut seq, "qwq-sim", q.prompt.len(), Phase::PromptPrefill, &mut qm).unwrap();
+        let extra: Vec<i32> = (0..chunk as i32).map(|i| 65 + (i % 26)).collect();
+        bench(&cfg, &format!("prefill/qwq-sim/c{chunk}"), || {
+            seq.tokens.extend_from_slice(&extra);
+            let upto = seq.len();
+            engine.prefill_through(&mut seq, "qwq-sim", upto, Phase::CatchUp, &mut qm).unwrap();
+            let to = upto - chunk;
+            engine.rollback(&mut seq, to).unwrap();
+        });
+        engine.release(&seq).unwrap();
+    }
+
+    // ---- verification pass vs decode tokens (§4.1) ----
+    let mut seq = engine.new_sequence(&q.prompt).unwrap();
+    engine.decode(&mut seq, "r1-sim", 24, 3, Phase::Speculate, &mut qm).unwrap();
+    let upto = seq.len();
+    engine.prefill_through(&mut seq, "qwq-sim", upto, Phase::CatchUp, &mut qm).unwrap();
+    let template = vec![263i32; 70];
+    let verify = bench(&cfg, "verify/suffix+70tok-template", || {
+        engine
+            .scored_prefill(&mut seq, "qwq-sim", &template, Phase::Verify, &mut qm)
+            .unwrap();
+    });
+    let mut seq2 = engine.new_sequence(&q.prompt).unwrap();
+    engine.decode(&mut seq2, "qwq-sim", 1, 0, Phase::Fallback, &mut qm).unwrap();
+    let decode2 = bench(&cfg, "decode/qwq-sim/2tok", || {
+        engine.decode(&mut seq2, "qwq-sim", 2, 1, Phase::Fallback, &mut qm).unwrap();
+        let to = seq2.len() - 2;
+        engine.rollback(&mut seq2, to).unwrap();
+    });
+
+    // ---- rollback is O(1) ----
+    let mut seq3 = engine.new_sequence(&q.prompt).unwrap();
+    engine.decode(&mut seq3, "r1-sim", 64, 5, Phase::Speculate, &mut qm).unwrap();
+    let base_len = seq3.len();
+    bench(&cfg, "rollback/64tok", || {
+        seq3.tokens.extend(std::iter::repeat(65).take(64));
+        let mgr_len = seq3.len() - 64;
+        // grow bookkeeping is what decode would do; here we only measure
+        // the rollback path itself
+        engine.rollback(&mut seq3, mgr_len).unwrap();
+    });
+    assert_eq!(seq3.len(), base_len);
+
+    // ---- full speculate→verify cycle ----
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    bench(&cfg, "cycle/speculate24+verify70", || {
+        let mut b = RealBackend::new(&engine, &combo.small, &combo.base);
+        b.begin(&q).unwrap();
+        b.decode(Role::Small, 24, Phase::Speculate).unwrap();
+        b.verify_pass(70, Phase::Verify).unwrap();
+        let quality = oracle.step_quality(&q, 0, 0, &combo.small);
+        std::hint::black_box(oracle.verifier_score(&q, 0, 0, quality, &combo.base));
+        b.release().unwrap();
+    });
+
+    // ---- summary table ----
+    let mut t = Table::new(
+        "engine microbench summary (real PJRT wall-clock)",
+        &["metric", "value"],
+    );
+    for (model, tpt) in &tpt_rows {
+        t.row(vec![format!("TPT {model}"), fmt_time(*tpt)]);
+    }
+    let gap = tpt_rows[1].1 / tpt_rows[0].1;
+    t.row(vec!["base:small TPT gap".into(), format!("{gap:.1}x")]);
+    let verify_in_tokens = verify.mean_s() / (tpt_rows[1].1);
+    t.row(vec![
+        "verify pass in base-decode-token units".into(),
+        format!("{verify_in_tokens:.1} tokens"),
+    ]);
+    t.row(vec!["decode 2 base tokens".into(), fmt_time(decode2.mean_s())]);
+    t.print();
+    println!(
+        "(§4.1 claims the verify pass ≈ 1–2 decode tokens on GPU; on the CPU\n substrate a forward pass is compute-bound, so expect a higher ratio here —\n the calibrated GPU clock models the paper's memory-bound regime.)"
+    );
+    engine.release(&seq).unwrap();
+    engine.release(&seq2).unwrap();
+    engine.release(&seq3).unwrap();
+}

@@ -1,0 +1,211 @@
+//! Deployment configuration: JSON config file + programmatic defaults.
+//!
+//! A deployment names the colocated models (base + speculator), the KV
+//! partition sizes, the serving address, and default SpecReason knobs.
+//! `specreason serve --config deploy.json` loads one; every field can be
+//! overridden on the CLI.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{AcceptancePolicy, Scheme, SpecConfig};
+use crate::engine::EngineConfig;
+use crate::metrics::Testbed;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    pub artifacts_dir: String,
+    pub base_model: String,
+    pub small_model: String,
+    pub addr: String,
+    pub kv_block_size: usize,
+    pub kv_seqs_per_model: usize,
+    pub temperature: f32,
+    /// Default request knobs (overridable per request).
+    pub scheme: Scheme,
+    pub threshold: u8,
+    pub first_n_base: usize,
+    pub token_budget: usize,
+    pub answer_tokens: usize,
+    pub verify_template_len: usize,
+    pub draft_k: usize,
+    /// Admission queue bound (backpressure beyond this).
+    pub max_queue: usize,
+    /// Connection-handler threads.
+    pub io_threads: usize,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        let spec = SpecConfig::default();
+        DeployConfig {
+            artifacts_dir: "artifacts".into(),
+            base_model: "qwq-sim".into(),
+            small_model: "r1-sim".into(),
+            addr: "127.0.0.1:7878".into(),
+            kv_block_size: 32,
+            kv_seqs_per_model: 8,
+            temperature: 0.6,
+            scheme: Scheme::SpecReason,
+            threshold: 7,
+            first_n_base: 0,
+            token_budget: spec.token_budget,
+            answer_tokens: spec.answer_tokens,
+            verify_template_len: spec.verify_template_len,
+            draft_k: spec.draft_k,
+            max_queue: 64,
+            io_threads: 4,
+        }
+    }
+}
+
+impl DeployConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<DeployConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<DeployConfig> {
+        let j = Json::parse(text).context("parsing deploy config JSON")?;
+        let mut c = DeployConfig::default();
+        if let Some(v) = j.get("artifacts_dir").as_str() {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("base_model").as_str() {
+            c.base_model = v.to_string();
+        }
+        if let Some(v) = j.get("small_model").as_str() {
+            c.small_model = v.to_string();
+        }
+        if let Some(v) = j.get("addr").as_str() {
+            c.addr = v.to_string();
+        }
+        if let Some(v) = j.get("kv_block_size").as_usize() {
+            c.kv_block_size = v;
+        }
+        if let Some(v) = j.get("kv_seqs_per_model").as_usize() {
+            c.kv_seqs_per_model = v;
+        }
+        if let Some(v) = j.get("temperature").as_f64() {
+            c.temperature = v as f32;
+        }
+        if let Some(v) = j.get("scheme").as_str() {
+            c.scheme = Scheme::parse(v)?;
+        }
+        if let Some(v) = j.get("threshold").as_usize() {
+            anyhow::ensure!(v <= 9, "threshold must be 0..=9");
+            c.threshold = v as u8;
+        }
+        if let Some(v) = j.get("first_n_base").as_usize() {
+            c.first_n_base = v;
+        }
+        if let Some(v) = j.get("token_budget").as_usize() {
+            c.token_budget = v;
+        }
+        if let Some(v) = j.get("answer_tokens").as_usize() {
+            c.answer_tokens = v;
+        }
+        if let Some(v) = j.get("verify_template_len").as_usize() {
+            c.verify_template_len = v;
+        }
+        if let Some(v) = j.get("draft_k").as_usize() {
+            anyhow::ensure!(v >= 1, "draft_k must be >= 1");
+            c.draft_k = v;
+        }
+        if let Some(v) = j.get("max_queue").as_usize() {
+            c.max_queue = v;
+        }
+        if let Some(v) = j.get("io_threads").as_usize() {
+            anyhow::ensure!(v >= 1, "io_threads must be >= 1");
+            c.io_threads = v;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.token_budget >= 16, "token_budget too small");
+        anyhow::ensure!(self.kv_block_size >= 1, "kv_block_size must be >= 1");
+        anyhow::ensure!(
+            self.base_model != self.small_model,
+            "base and small model must differ"
+        );
+        Ok(())
+    }
+
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            artifacts_dir: self.artifacts_dir.clone(),
+            models: vec![self.base_model.clone(), self.small_model.clone()],
+            testbed: if crate::semantics::ModelClass::of(&self.base_model)
+                == crate::semantics::ModelClass::Large
+            {
+                Testbed::A100x4
+            } else {
+                Testbed::A6000x2
+            },
+            kv_block_size: self.kv_block_size,
+            kv_seqs_per_model: self.kv_seqs_per_model,
+            temperature: self.temperature,
+        }
+    }
+
+    pub fn spec_config(&self) -> SpecConfig {
+        SpecConfig {
+            scheme: self.scheme,
+            policy: AcceptancePolicy::Static { threshold: self.threshold },
+            first_n_base: self.first_n_base,
+            token_budget: self.token_budget,
+            answer_tokens: self.answer_tokens,
+            verify_template_len: self.verify_template_len,
+            draft_k: self.draft_k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        DeployConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let c = DeployConfig::from_json_str(
+            r#"{"base_model": "skywork-sim", "small_model": "zr1-sim",
+                "scheme": "spec-reason+decode", "threshold": 5,
+                "token_budget": 512, "temperature": 0.8}"#,
+        )
+        .unwrap();
+        assert_eq!(c.base_model, "skywork-sim");
+        assert_eq!(c.scheme, Scheme::SpecReasonPlusDecode);
+        assert_eq!(c.threshold, 5);
+        assert_eq!(c.token_budget, 512);
+        assert!((c.temperature - 0.8).abs() < 1e-6);
+        // untouched fields keep defaults
+        assert_eq!(c.addr, "127.0.0.1:7878");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(DeployConfig::from_json_str(r#"{"threshold": 12}"#).is_err());
+        assert!(DeployConfig::from_json_str(r#"{"scheme": "warp"}"#).is_err());
+        assert!(DeployConfig::from_json_str(
+            r#"{"base_model": "x", "small_model": "x"}"#
+        )
+        .is_err());
+        assert!(DeployConfig::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn large_base_selects_a100_testbed() {
+        let c = DeployConfig::from_json_str(r#"{"base_model": "r1-70b-sim"}"#).unwrap();
+        assert_eq!(c.engine_config().testbed, Testbed::A100x4);
+    }
+}

@@ -1,0 +1,105 @@
+//! Acceptance policies for speculated reasoning steps.
+//!
+//! The paper's implementation uses a *static* utility-score threshold
+//! (§4.1): the base model emits a 0–9 score and the step is accepted iff
+//! `score >= threshold`.  The paper explicitly frames richer strategies
+//! (dynamic thresholds, logprob confidence) as future work; we ship the
+//! static policy as the default plus two of those extensions behind the
+//! same trait, with an ablation bench (`examples/threshold_explorer`).
+
+/// A decision context for one speculated step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepContext {
+    /// Index of the step in the CoT so far.
+    pub step_index: usize,
+    /// Estimated plan length (for progress-relative policies).
+    pub plan_len: usize,
+    /// Thinking-token budget remaining (fraction).
+    pub budget_left: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AcceptancePolicy {
+    /// §4.1: accept iff score >= threshold (0–9).
+    Static { threshold: u8 },
+    /// Extension: stricter early (planning steps steer the trajectory),
+    /// relaxing linearly to `end` by the end of the plan.
+    Progressive { start: u8, end: u8 },
+    /// Extension: start from `threshold` but relax by one point when less
+    /// than `relax_below` of the budget remains (prefer *finishing* a CoT
+    /// over perfecting it — late truncation costs more accuracy than a
+    /// mediocre late step).
+    BudgetAware { threshold: u8, relax_below: f64 },
+}
+
+impl AcceptancePolicy {
+    pub fn accepts(&self, score: u8, ctx: StepContext) -> bool {
+        score >= self.effective_threshold(ctx)
+    }
+
+    /// The threshold in effect for this step (exposed for logging).
+    pub fn effective_threshold(&self, ctx: StepContext) -> u8 {
+        match *self {
+            AcceptancePolicy::Static { threshold } => threshold,
+            AcceptancePolicy::Progressive { start, end } => {
+                let frac = if ctx.plan_len <= 1 {
+                    1.0
+                } else {
+                    (ctx.step_index as f64 / (ctx.plan_len - 1) as f64).clamp(0.0, 1.0)
+                };
+                let t = start as f64 + (end as f64 - start as f64) * frac;
+                t.round().clamp(0.0, 9.0) as u8
+            }
+            AcceptancePolicy::BudgetAware { threshold, relax_below } => {
+                if ctx.budget_left < relax_below {
+                    threshold.saturating_sub(1)
+                } else {
+                    threshold
+                }
+            }
+        }
+    }
+}
+
+impl Default for AcceptancePolicy {
+    fn default() -> Self {
+        // Paper default: score >= 7 (§4.1's example).
+        AcceptancePolicy::Static { threshold: 7 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(step: usize, plan: usize, budget: f64) -> StepContext {
+        StepContext { step_index: step, plan_len: plan, budget_left: budget }
+    }
+
+    #[test]
+    fn static_threshold() {
+        let p = AcceptancePolicy::Static { threshold: 7 };
+        assert!(p.accepts(7, ctx(0, 10, 1.0)));
+        assert!(p.accepts(9, ctx(0, 10, 1.0)));
+        assert!(!p.accepts(6, ctx(0, 10, 1.0)));
+    }
+
+    #[test]
+    fn progressive_relaxes_over_plan() {
+        let p = AcceptancePolicy::Progressive { start: 9, end: 5 };
+        assert_eq!(p.effective_threshold(ctx(0, 11, 1.0)), 9);
+        assert_eq!(p.effective_threshold(ctx(10, 11, 1.0)), 5);
+        assert_eq!(p.effective_threshold(ctx(5, 11, 1.0)), 7);
+        // degenerate plan
+        assert_eq!(p.effective_threshold(ctx(0, 1, 1.0)), 5);
+    }
+
+    #[test]
+    fn budget_aware_relaxes_late() {
+        let p = AcceptancePolicy::BudgetAware { threshold: 7, relax_below: 0.25 };
+        assert_eq!(p.effective_threshold(ctx(0, 10, 0.9)), 7);
+        assert_eq!(p.effective_threshold(ctx(0, 10, 0.2)), 6);
+        assert!(p.accepts(6, ctx(0, 10, 0.1)));
+        assert!(!p.accepts(6, ctx(0, 10, 0.9)));
+    }
+}

@@ -1,0 +1,157 @@
+//! RealBackend: the coordinator's backend over the PJRT engine.
+//!
+//! Every operation issues real compute (the proxy transformers running on
+//! the CPU PJRT client) and records both measured wall-clock and the
+//! calibrated GPU clock.  Decisions (accept/reject, step lengths) are
+//! still oracle-driven — identical to SimBackend given the same seeds —
+//! so sim-vs-real parity tests can diff the decision stream while the
+//! real path additionally validates all KV/rollback mechanics.
+
+use anyhow::Result;
+
+use super::backend::{Backend, Role};
+use crate::engine::{Engine, Sequence};
+use crate::metrics::{Phase, QueryMetrics};
+use crate::semantics::trace::Query;
+
+pub struct RealBackend<'e> {
+    engine: &'e Engine,
+    small: String,
+    base: String,
+    seq: Option<Sequence>,
+    qm: QueryMetrics,
+    /// Per-query RNG stream for decode seeds (content is oracle-driven;
+    /// token bytes just need to be deterministic).
+    seed_ctr: u64,
+    query_seed: u64,
+}
+
+impl<'e> RealBackend<'e> {
+    pub fn new(engine: &'e Engine, small: &str, base: &str) -> Self {
+        RealBackend {
+            engine,
+            small: small.to_string(),
+            base: base.to_string(),
+            seq: None,
+            qm: QueryMetrics::default(),
+            seed_ctr: 0,
+            query_seed: 0,
+        }
+    }
+
+    fn model_name(&self, role: Role) -> &str {
+        match role {
+            Role::Small => &self.small,
+            Role::Base => &self.base,
+        }
+    }
+
+
+    /// The sequence (for tests / server detail output).
+    pub fn sequence(&self) -> Option<&Sequence> {
+        self.seq.as_ref()
+    }
+
+    pub fn release(&mut self) -> Result<()> {
+        if let Some(seq) = self.seq.take() {
+            self.engine.release(&seq)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for RealBackend<'_> {
+    fn drop(&mut self) {
+        let _ = self.release();
+    }
+}
+
+impl Backend for RealBackend<'_> {
+    fn begin(&mut self, q: &Query) -> Result<()> {
+        self.query_seed = q.seed;
+        self.seed_ctr = 0;
+        self.seq = Some(self.engine.new_sequence(&q.prompt)?);
+        Ok(())
+    }
+
+    fn decode(&mut self, role: Role, n: usize, phase: Phase) -> Result<()> {
+        let model = self.model_name(role).to_string();
+        self.seed_ctr += 1;
+        let seed = self
+            .query_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(self.seed_ctr);
+        let engine = self.engine;
+        let mut seq = self.seq.take().expect("begin() not called");
+        let r = engine.decode(&mut seq, &model, n, seed, phase, &mut self.qm);
+        self.seq = Some(seq);
+        r?;
+        Ok(())
+    }
+
+    fn verify_pass(&mut self, template_len: usize, phase: Phase) -> Result<()> {
+        let base = self.base.clone();
+        let engine = self.engine;
+        let mut seq = self.seq.take().expect("begin() not called");
+        let r = if template_len == 0 {
+            // Token-level spec-decode verification: one base forward pass
+            // over the pending draft tokens (no scoring template).
+            let upto = seq.len();
+            engine.prefill_through(&mut seq, &base, upto, phase, &mut self.qm)
+        } else {
+            // Templated verification prompt (§4.1): "<verify>" +
+            // instruction bytes, padded to template_len.
+            let tok = &engine.tokenizer;
+            let mut template = vec![tok.special.verify];
+            template
+                .extend(tok.encode("Evaluate the reasoning step above. Rate its utility 0-9:"));
+            template.resize(template_len, tok.special.pad);
+            engine
+                .scored_prefill(&mut seq, &base, &template, phase, &mut self.qm)
+                .map(|_| ())
+        };
+        self.seq = Some(seq);
+        r
+    }
+
+    fn bonus_token(&mut self) -> Result<()> {
+        // Physically produce the bonus token (one base decode call), but
+        // charge zero GPU-clock cost: on the paper's stack its logits come
+        // free with the verification pass.
+        let gpu_before = self.qm.gpu_secs;
+        self.decode(Role::Base, 1, Phase::SpecVerify)?;
+        let delta = self.qm.gpu_secs - gpu_before;
+        self.qm.gpu_secs -= delta;
+        if let Some(v) = self.qm.phase_gpu.get_mut(Phase::SpecVerify.name()) {
+            *v -= delta;
+        }
+        Ok(())
+    }
+
+    fn rollback(&mut self, n: usize) -> Result<()> {
+        let engine = self.engine;
+        let mut seq = self.seq.take().expect("begin() not called");
+        let to = seq.len() - n;
+        let r = engine.rollback(&mut seq, to);
+        self.seq = Some(seq);
+        r
+    }
+
+    fn finish(&mut self, role: Role, n: usize) -> Result<()> {
+        self.decode(role, n, Phase::Answer)
+    }
+
+    fn thinking_tokens(&self) -> usize {
+        let seq = self.seq.as_ref().expect("begin() not called");
+        seq.len() - seq.prompt_len
+    }
+
+    fn metrics_mut(&mut self) -> &mut QueryMetrics {
+        &mut self.qm
+    }
+
+    fn into_metrics(mut self: Box<Self>) -> QueryMetrics {
+        let _ = self.release();
+        std::mem::take(&mut self.qm)
+    }
+}

@@ -1,0 +1,312 @@
+//! The inference engine: model runtimes + paged KV accounting + dual-clock
+//! metrics behind a sequence-oriented API.
+//!
+//! This is the substrate the SpecReason coordinator drives.  It exposes
+//! exactly the operations the paper's loop needs:
+//!
+//! * [`Engine::decode`] — generate `n` tokens with one model (speculation,
+//!   fallback regeneration, answer decoding);
+//! * [`Engine::prefill_through`] — catch a lagging model's KV up to the
+//!   shared frontier (the paper's "only token IDs are shared");
+//! * [`Engine::scored_prefill`] — the single prefill-only verification
+//!   pass: pending CoT suffix + ~70-token template in one bucketed chunk,
+//!   returning next-token logits, with the template's KV discarded but the
+//!   CoT suffix kept (prefix-reuse semantics, §4.1 "efficient verification");
+//! * [`Engine::rollback`] — discard a rejected step in O(1) by rewinding
+//!   the KV frontier (stale entries are causally masked by the L1 kernel).
+//!
+//! Engine ops are deterministic given seeds; all randomness comes from the
+//! caller's RNG stream.
+
+pub mod sequence;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kvcache::{KvManager, PoolConfig};
+use crate::metrics::{GpuClock, Phase, QueryMetrics, Testbed};
+use crate::runtime::{Device, Manifest, ModelRuntime, Tokenizer};
+pub use sequence::Sequence;
+
+/// Engine deployment configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: String,
+    /// Logical models to colocate (e.g. ["qwq-sim", "r1-sim"]).
+    pub models: Vec<String>,
+    pub testbed: Testbed,
+    /// KV block size (tokens) for the paged accounting.
+    pub kv_block_size: usize,
+    /// Per-model KV partition, in sequences' worth of max_seq.
+    pub kv_seqs_per_model: usize,
+    /// Sampling temperature for generation (paper: 0.6).
+    pub temperature: f32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".to_string(),
+            models: vec!["qwq-sim".to_string(), "r1-sim".to_string()],
+            testbed: Testbed::A6000x2,
+            kv_block_size: 32,
+            kv_seqs_per_model: 8,
+            temperature: 0.6,
+        }
+    }
+}
+
+// SAFETY: the TFRT CPU PJRT client is internally synchronized (PJRT
+// requires clients to support concurrent compile/execute dispatch), and
+// all crate-side mutable state in Engine is behind Mutex/atomics.  The
+// raw pointers inside the xla wrapper types are what block the auto
+// impls.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+// SAFETY: a Sequence owns its Literals exclusively; moving them between
+// threads is moving ownership of plain (C++-heap) data.
+unsafe impl Send for Sequence {}
+
+pub struct Engine {
+    pub device: Device,
+    pub manifest: Manifest,
+    pub tokenizer: Tokenizer,
+    pub clock: GpuClock,
+    pub temperature: f32,
+    models: BTreeMap<String, ModelRuntime>,
+    kv_mgr: Mutex<KvManager>,
+    next_seq: AtomicU64,
+}
+
+impl Engine {
+    /// Load artifacts and colocate the configured models.
+    pub fn new(cfg: &EngineConfig) -> Result<Engine> {
+        let device = Device::cpu()?;
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let tokenizer = Tokenizer::new(manifest.vocab, &manifest.special_tokens)?;
+        let mut models = BTreeMap::new();
+        let mut kv_mgr = KvManager::new();
+        for name in &cfg.models {
+            let rt = ModelRuntime::load(&device, &manifest, name)
+                .with_context(|| format!("loading model {name}"))?;
+            // Static partition (§4.1): each model gets its own block pool.
+            let blocks_per_seq = rt.arch.max_seq.div_ceil(cfg.kv_block_size);
+            kv_mgr.add_partition(
+                name,
+                PoolConfig {
+                    block_size: cfg.kv_block_size,
+                    total_blocks: blocks_per_seq * cfg.kv_seqs_per_model,
+                },
+            );
+            models.insert(name.clone(), rt);
+        }
+        Ok(Engine {
+            device,
+            manifest,
+            tokenizer,
+            clock: GpuClock::new(cfg.testbed),
+            temperature: cfg.temperature,
+            models,
+            kv_mgr: Mutex::new(kv_mgr),
+            next_seq: AtomicU64::new(1),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelRuntime> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not loaded"))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// KV pool utilization for a model (telemetry).
+    pub fn kv_utilization(&self, model: &str) -> f64 {
+        self.kv_mgr
+            .lock()
+            .unwrap()
+            .pool(model)
+            .map(|p| p.utilization())
+            .unwrap_or(0.0)
+    }
+
+    /// Admit a new sequence with the given prompt tokens (not yet
+    /// prefilled — materialization is lazy and per-model).
+    pub fn new_sequence(&self, prompt: &[i32]) -> Result<Sequence> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let id = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let mut kvs = BTreeMap::new();
+        {
+            let mut mgr = self.kv_mgr.lock().unwrap();
+            mgr.register_seq(id)?;
+        }
+        for (name, rt) in &self.models {
+            kvs.insert(name.clone(), rt.fresh_kv()?);
+        }
+        Ok(Sequence {
+            id,
+            tokens: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            kvs,
+            admitted_at: Instant::now(),
+        })
+    }
+
+    /// Release a finished sequence's KV accounting.
+    pub fn release(&self, seq: &Sequence) -> Result<()> {
+        self.kv_mgr.lock().unwrap().release_seq(seq.id)
+    }
+
+    fn grow_accounting(&self, model: &str, seq_id: u64, tokens: usize) -> Result<()> {
+        let mut mgr = self.kv_mgr.lock().unwrap();
+        let pool = mgr.pool_mut(model)?;
+        // grow_to is monotonic; ignore if accounting is already ahead
+        // (transient verify growth is rolled back explicitly).
+        if tokens > pool.seq_tokens(seq_id) {
+            pool.grow_to(seq_id, tokens)?;
+        }
+        Ok(())
+    }
+
+    fn shrink_accounting(&self, model: &str, seq_id: u64, tokens: usize) -> Result<()> {
+        let mut mgr = self.kv_mgr.lock().unwrap();
+        let pool = mgr.pool_mut(model)?;
+        if tokens < pool.seq_tokens(seq_id) {
+            pool.rollback_to(seq_id, tokens)?;
+        }
+        Ok(())
+    }
+
+    /// Materialize `model`'s KV for tokens [cache_len, upto).
+    pub fn prefill_through(
+        &self,
+        seq: &mut Sequence,
+        model: &str,
+        upto: usize,
+        phase: Phase,
+        qm: &mut QueryMetrics,
+    ) -> Result<()> {
+        anyhow::ensure!(upto <= seq.len(), "prefill_through beyond sequence");
+        let rt = self.model(model)?;
+        let from = seq.cache_len(model);
+        if from >= upto {
+            return Ok(());
+        }
+        self.grow_accounting(model, seq.id, upto)?;
+        let t0 = Instant::now();
+        let span = seq.tokens[from..upto].to_vec();
+        rt.prefill(seq.kv_mut(model), &span)?;
+        let gpu = self.clock.prefill_cost(&rt.arch.name, upto - from);
+        qm.record(phase, t0.elapsed().as_secs_f64(), gpu);
+        Ok(())
+    }
+
+    /// Generate `n` tokens with `model`, appending them to the shared CoT.
+    /// Deterministic given `seed`. Returns the new tokens.
+    pub fn decode(
+        &self,
+        seq: &mut Sequence,
+        model: &str,
+        n: usize,
+        seed: u64,
+        phase: Phase,
+        qm: &mut QueryMetrics,
+    ) -> Result<Vec<i32>> {
+        anyhow::ensure!(n > 0, "decode of 0 tokens");
+        let rt = self.model(model)?;
+        let len = seq.len();
+        let max_seq = rt.arch.max_seq;
+        if len + n > max_seq {
+            bail!(
+                "sequence {} would exceed {model} context ({} + {n} > {max_seq})",
+                seq.id, len
+            );
+        }
+        self.grow_accounting(model, seq.id, len + n)?;
+
+        // Re-derive the frontier: the last token must be the decode input.
+        if seq.cache_len(model) >= len {
+            seq.kv_mut(model).rollback_to(len - 1);
+        }
+        self.prefill_through(seq, model, len - 1, Phase::CatchUp, qm)?;
+
+        let t0 = Instant::now();
+        let first = seq.tokens[len - 1];
+        let out = rt.decode(seq.kv_mut(model), first, n, seed, self.temperature)?;
+        let gpu = self.clock.decode_cost(&rt.arch.name, n);
+        qm.record(phase, t0.elapsed().as_secs_f64(), gpu);
+        seq.tokens.extend_from_slice(&out);
+        Ok(out)
+    }
+
+    /// One prefill-only verification pass (§4.1 "efficient verification"):
+    /// materialize the pending CoT suffix *and* the templated verification
+    /// prompt in a single bucketed chunk, return the final-position logits,
+    /// then discard the template's KV (the CoT suffix stays — prefix
+    /// reuse).  `extra` never enters the shared token list.
+    pub fn scored_prefill(
+        &self,
+        seq: &mut Sequence,
+        model: &str,
+        extra: &[i32],
+        phase: Phase,
+        qm: &mut QueryMetrics,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(!extra.is_empty(), "empty verification template");
+        let rt = self.model(model)?;
+        let len = seq.len();
+        let from = seq.cache_len(model);
+        let total = len - from + extra.len();
+        if len + extra.len() > rt.arch.max_seq {
+            bail!(
+                "verify pass would exceed {model} context ({} + {} > {})",
+                len, extra.len(), rt.arch.max_seq
+            );
+        }
+        // Transient accounting growth for the template tokens.
+        self.grow_accounting(model, seq.id, len + extra.len())?;
+
+        let t0 = Instant::now();
+        let mut span = seq.tokens[from..len].to_vec();
+        span.extend_from_slice(extra);
+        let logits = rt.prefill(seq.kv_mut(model), &span)?;
+        // Keep the CoT suffix (its KV is now correct at its positions);
+        // discard only the template tokens.
+        seq.kv_mut(model).rollback_to(len);
+        self.shrink_accounting(model, seq.id, len)?;
+        let gpu = self.clock.prefill_cost(&rt.arch.name, total);
+        qm.record(phase, t0.elapsed().as_secs_f64(), gpu);
+        Ok(logits)
+    }
+
+    /// Discard tokens (and their KV, in O(1)) beyond `to_len`.
+    pub fn rollback(&self, seq: &mut Sequence, to_len: usize) -> Result<()> {
+        anyhow::ensure!(to_len >= seq.prompt_len, "cannot roll back into the prompt");
+        anyhow::ensure!(to_len <= seq.len(), "rollback beyond frontier");
+        seq.tokens.truncate(to_len);
+        let models: Vec<String> = self.models.keys().cloned().collect();
+        for m in models {
+            let cl = seq.cache_len(&m);
+            if cl > to_len {
+                seq.kv_mut(&m).rollback_to(to_len);
+            }
+            self.shrink_accounting(&m, seq.id, to_len)?;
+        }
+        Ok(())
+    }
+
+    /// Per-model aggregate runtime stats (telemetry / perf analysis).
+    pub fn runtime_stats(&self) -> BTreeMap<String, crate::runtime::RuntimeStats> {
+        self.models
+            .iter()
+            .map(|(k, v)| (k.clone(), v.stats()))
+            .collect()
+    }
+}

@@ -1,0 +1,51 @@
+//! A served sequence: the shared chain-of-thought plus one KV view per
+//! colocated model.
+//!
+//! Paper §4.1: "They do not share any internal model states — only the
+//! token IDs of the generated reasoning steps are managed and shared by
+//! SpecReason."  `tokens` is that shared ID list; each model lazily
+//! materializes its own KV up to (at most) the current frontier.
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::SeqId;
+use crate::runtime::KvState;
+
+pub struct Sequence {
+    pub id: SeqId,
+    /// Shared token IDs: prompt + accepted thinking tokens (+ answer).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Per-model KV cache view (keyed by logical model name).
+    pub(crate) kvs: BTreeMap<String, KvState>,
+    /// Wall-clock at admission (for end-to-end latency).
+    pub admitted_at: std::time::Instant,
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Thinking tokens generated so far (everything past the prompt).
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    pub fn kv(&self, model: &str) -> &KvState {
+        &self.kvs[model]
+    }
+
+    pub(crate) fn kv_mut(&mut self, model: &str) -> &mut KvState {
+        self.kvs.get_mut(model).expect("model kv")
+    }
+
+    /// How far `model`'s KV is materialized.
+    pub fn cache_len(&self, model: &str) -> usize {
+        self.kvs[model].cache_len
+    }
+}

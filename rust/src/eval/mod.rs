@@ -1,0 +1,199 @@
+//! Evaluation harness: run (scheme × dataset × combo) cells and aggregate
+//! pass@1 / latency / token statistics the way the paper reports them.
+//!
+//! Used by every `cargo bench` figure target, by `examples/paper_eval`,
+//! and by the calibration self-checks.  Cells can run on the cost-model
+//! simulator (fast, exact GPU clock) or the real PJRT engine (adds
+//! measured wall-clock); both share [`coordinator::run_query`].
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    run_query, Combo, QueryOutcome, RealBackend, Scheme, SimBackend, SpecConfig,
+};
+use crate::engine::Engine;
+use crate::metrics::{Aggregate, GpuClock, Testbed};
+use crate::semantics::{Dataset, ModelClass, Oracle, TraceGenerator};
+
+/// One evaluation cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: Dataset,
+    pub scheme: Scheme,
+    pub combo: Combo,
+    pub cfg: SpecConfig,
+}
+
+/// Aggregated result of a cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell_label: String,
+    pub agg: Aggregate,
+    pub outcomes: Vec<QueryOutcome>,
+}
+
+impl CellResult {
+    pub fn accuracy(&self) -> f64 {
+        self.agg.accuracy()
+    }
+    pub fn mean_gpu(&self) -> f64 {
+        self.agg.mean_gpu()
+    }
+    pub fn mean_wall(&self) -> f64 {
+        self.agg.mean_wall()
+    }
+    pub fn mean_tokens(&self) -> f64 {
+        self.agg.mean_thinking_tokens()
+    }
+    pub fn mean_offload(&self) -> f64 {
+        self.agg.mean_offload_ratio()
+    }
+    pub fn mean_acceptance(&self) -> f64 {
+        self.agg.mean_acceptance()
+    }
+}
+
+/// Which testbed a combo's GPU clock should emulate (App. A.1 moves the
+/// 70B combo to 4×A100).
+pub fn testbed_for(combo: &Combo) -> Testbed {
+    if ModelClass::of(&combo.base) == ModelClass::Large {
+        Testbed::A100x4
+    } else {
+        Testbed::A6000x2
+    }
+}
+
+fn arch_name(class: ModelClass) -> &'static str {
+    match class {
+        ModelClass::Small => "small",
+        ModelClass::Base => "base",
+        ModelClass::Large => "large",
+    }
+}
+
+/// Run a cell on the simulator: `n_queries` queries × `samples` pass@1
+/// samples each.
+pub fn run_cell_sim(
+    oracle: &Oracle,
+    cell: &Cell,
+    n_queries: usize,
+    samples: usize,
+    seed: u64,
+) -> Result<CellResult> {
+    let gen = TraceGenerator::new(cell.dataset, seed);
+    let clock = GpuClock::new(testbed_for(&cell.combo));
+    let small_arch = arch_name(ModelClass::of(&cell.combo.small));
+    let base_arch = arch_name(ModelClass::of(&cell.combo.base));
+    let mut agg = Aggregate::default();
+    let mut outcomes = Vec::new();
+    for q in gen.queries(n_queries) {
+        for s in 0..samples {
+            let mut b = SimBackend::new(clock, small_arch, base_arch);
+            let out = run_query(oracle, &q, &cell.combo, &cell.cfg, &mut b, s)?;
+            agg.push(out.metrics.clone());
+            outcomes.push(out);
+        }
+    }
+    Ok(CellResult { cell_label: label(cell), agg, outcomes })
+}
+
+/// Run a cell on the real engine (the engine must have the combo's models
+/// loaded).
+pub fn run_cell_real(
+    engine: &Engine,
+    oracle: &Oracle,
+    cell: &Cell,
+    n_queries: usize,
+    samples: usize,
+    seed: u64,
+) -> Result<CellResult> {
+    let gen = TraceGenerator::new(cell.dataset, seed);
+    let mut agg = Aggregate::default();
+    let mut outcomes = Vec::new();
+    for q in gen.queries(n_queries) {
+        for s in 0..samples {
+            let mut b = RealBackend::new(engine, &cell.combo.small, &cell.combo.base);
+            let out = run_query(oracle, &q, &cell.combo, &cell.cfg, &mut b, s)?;
+            b.release()?;
+            agg.push(out.metrics.clone());
+            outcomes.push(out);
+        }
+    }
+    Ok(CellResult { cell_label: label(cell), agg, outcomes })
+}
+
+fn label(cell: &Cell) -> String {
+    format!(
+        "{}/{}/{}",
+        cell.dataset.name(),
+        cell.combo.label(),
+        cell.scheme.name()
+    )
+}
+
+/// Bench-environment knobs shared by the `cargo bench` figure targets.
+/// `SPECREASON_BENCH_QUERIES` / `SPECREASON_BENCH_SAMPLES` trade time for
+/// tightness; `SPECREASON_BENCH_REAL=1` runs cells on the PJRT engine
+/// instead of the calibrated simulator.
+pub fn bench_queries() -> usize {
+    std::env::var("SPECREASON_BENCH_QUERIES").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
+}
+pub fn bench_samples() -> usize {
+    std::env::var("SPECREASON_BENCH_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(2)
+}
+pub fn bench_real() -> bool {
+    std::env::var("SPECREASON_BENCH_REAL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Run a cell honoring the bench env (sim by default, real with
+/// SPECREASON_BENCH_REAL=1 and a caller-provided engine loader).
+pub fn run_cell_bench(
+    oracle: &Oracle,
+    cell: &Cell,
+    engine: Option<&Engine>,
+    seed: u64,
+) -> Result<CellResult> {
+    match engine {
+        Some(e) if bench_real() => {
+            run_cell_real(e, oracle, cell, bench_queries(), bench_samples(), seed)
+        }
+        _ => run_cell_sim(oracle, cell, bench_queries(), bench_samples(), seed),
+    }
+}
+
+/// The four main-results model combinations (§5.1).
+pub fn main_combos() -> Vec<Combo> {
+    vec![
+        Combo::new("qwq-sim", "r1-sim"),
+        Combo::new("qwq-sim", "zr1-sim"),
+        Combo::new("skywork-sim", "r1-sim"),
+        Combo::new("skywork-sim", "zr1-sim"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_cell_runs_and_aggregates() {
+        let oracle = Oracle::default();
+        let cell = Cell {
+            dataset: Dataset::Math500,
+            scheme: Scheme::SpecReason,
+            combo: Combo::new("qwq-sim", "r1-sim"),
+            cfg: SpecConfig::default(),
+        };
+        let r = run_cell_sim(&oracle, &cell, 10, 2, 1).unwrap();
+        assert_eq!(r.agg.n(), 20);
+        assert!(r.mean_gpu() > 0.0);
+        assert!((0.0..=1.0).contains(&r.accuracy()));
+        assert!(r.cell_label.contains("math500"));
+    }
+
+    #[test]
+    fn testbed_routing() {
+        assert_eq!(testbed_for(&Combo::new("qwq-sim", "r1-sim")), Testbed::A6000x2);
+        assert_eq!(testbed_for(&Combo::new("r1-70b-sim", "r1-sim")), Testbed::A100x4);
+    }
+}

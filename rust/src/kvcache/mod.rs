@@ -1,0 +1,348 @@
+//! Paged KV-cache accounting with a static partition between models.
+//!
+//! The paper (§4.1, *Implementation details*): "The memory reserved for
+//! Key-Value caches is statically partitioned between the two models. ...
+//! If a speculative step is rejected, the corresponding KV cache entries
+//! are discarded."
+//!
+//! This module is the vLLM-style block manager for that design: each
+//! colocated model gets a fixed pool of fixed-size blocks; sequences
+//! allocate blocks as their KV frontier grows and release them on
+//! rollback or completion.  The physical KV bytes live in per-sequence
+//! dense buffers managed by `runtime::KvState`; this layer provides the
+//! *admission* and *capacity* semantics (a grow that would exceed the
+//! partition fails before any compute is issued), plus utilization
+//! telemetry for the metrics endpoint.
+//!
+//! Invariants (enforced, and property-tested in rust/tests/properties.rs):
+//! * a block belongs to at most one sequence at a time;
+//! * `free + Σ allocated == total` per pool at all times;
+//! * rollback never frees blocks still covering live tokens.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub type SeqId = u64;
+
+/// Static description of one model's KV pool.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Tokens per block (vLLM uses 16; we default to 32 to match the
+    /// decode buckets).
+    pub block_size: usize,
+    /// Total blocks in this model's partition.
+    pub total_blocks: usize,
+}
+
+impl PoolConfig {
+    pub fn capacity_tokens(&self) -> usize {
+        self.block_size * self.total_blocks
+    }
+}
+
+/// Block pool for a single model.
+#[derive(Debug)]
+pub struct BlockPool {
+    cfg: PoolConfig,
+    free: Vec<u32>,
+    /// seq -> (blocks, live token count)
+    seqs: BTreeMap<SeqId, (Vec<u32>, usize)>,
+    peak_used_blocks: usize,
+}
+
+impl BlockPool {
+    pub fn new(cfg: PoolConfig) -> Self {
+        BlockPool {
+            cfg,
+            free: (0..cfg.total_blocks as u32).rev().collect(),
+            seqs: BTreeMap::new(),
+            peak_used_blocks: 0,
+        }
+    }
+
+    pub fn config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_size)
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.total_blocks - self.free.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used_blocks
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.cfg.total_blocks.max(1) as f64
+    }
+
+    /// Tokens currently accounted to `seq`.
+    pub fn seq_tokens(&self, seq: SeqId) -> usize {
+        self.seqs.get(&seq).map(|(_, t)| *t).unwrap_or(0)
+    }
+
+    /// Register a new sequence (zero tokens).
+    pub fn register(&mut self, seq: SeqId) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already registered");
+        }
+        self.seqs.insert(seq, (Vec::new(), 0));
+        Ok(())
+    }
+
+    /// Would a grow to `new_tokens` succeed?
+    pub fn can_grow_to(&self, seq: SeqId, new_tokens: usize) -> bool {
+        match self.seqs.get(&seq) {
+            None => false,
+            Some((blocks, _)) => {
+                let need = self.blocks_for(new_tokens);
+                need <= blocks.len() + self.free.len()
+            }
+        }
+    }
+
+    /// Grow `seq`'s accounting to `new_tokens` (monotonic within a step;
+    /// use `rollback_to` to shrink). Allocates blocks; fails atomically
+    /// (no partial allocation) if the partition is exhausted.
+    pub fn grow_to(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
+        let need = self.blocks_for(new_tokens);
+        let (blocks, tokens) = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+        if new_tokens < *tokens {
+            bail!("grow_to({new_tokens}) below current {tokens}; use rollback_to");
+        }
+        if need > blocks.len() {
+            let extra = need - blocks.len();
+            if extra > self.free.len() {
+                bail!(
+                    "KV partition exhausted: sequence {seq} needs {extra} more blocks, {} free",
+                    self.free.len()
+                );
+            }
+            for _ in 0..extra {
+                blocks.push(self.free.pop().unwrap());
+            }
+        }
+        *tokens = new_tokens;
+        self.peak_used_blocks = self.peak_used_blocks.max(self.cfg.total_blocks - self.free.len());
+        Ok(())
+    }
+
+    /// Discard KV accounting beyond `new_tokens` (speculation rollback).
+    pub fn rollback_to(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
+        let bs = self.cfg.block_size;
+        let (blocks, tokens) = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+        if new_tokens > *tokens {
+            bail!("rollback_to({new_tokens}) above current {tokens}");
+        }
+        let keep = new_tokens.div_ceil(bs);
+        while blocks.len() > keep {
+            self.free.push(blocks.pop().unwrap());
+        }
+        *tokens = new_tokens;
+        Ok(())
+    }
+
+    /// Release a finished sequence.
+    pub fn release(&mut self, seq: SeqId) -> Result<()> {
+        let (blocks, _) = self
+            .seqs
+            .remove(&seq)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+        self.free.extend(blocks);
+        Ok(())
+    }
+
+    /// Internal-consistency check (used by property tests).
+    pub fn check_invariants(&self) {
+        let allocated: usize = self.seqs.values().map(|(b, _)| b.len()).sum();
+        assert_eq!(
+            allocated + self.free.len(),
+            self.cfg.total_blocks,
+            "block conservation violated"
+        );
+        let mut seen = std::collections::HashSet::new();
+        for b in self.free.iter().chain(self.seqs.values().flat_map(|(b, _)| b)) {
+            assert!(seen.insert(*b), "block {b} owned twice");
+        }
+        for (seq, (blocks, tokens)) in &self.seqs {
+            assert!(
+                blocks.len() == tokens.div_ceil(self.cfg.block_size),
+                "seq {seq}: {} blocks for {tokens} tokens", blocks.len()
+            );
+        }
+    }
+}
+
+/// The statically partitioned manager: one pool per colocated model.
+#[derive(Debug, Default)]
+pub struct KvManager {
+    pools: BTreeMap<String, BlockPool>,
+}
+
+impl KvManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Carve out a static partition for `model`.
+    pub fn add_partition(&mut self, model: &str, cfg: PoolConfig) {
+        self.pools.insert(model.to_string(), BlockPool::new(cfg));
+    }
+
+    pub fn pool(&self, model: &str) -> Result<&BlockPool> {
+        self.pools
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("no KV partition for model '{model}'"))
+    }
+
+    pub fn pool_mut(&mut self, model: &str) -> Result<&mut BlockPool> {
+        self.pools
+            .get_mut(model)
+            .ok_or_else(|| anyhow::anyhow!("no KV partition for model '{model}'"))
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.pools.keys().map(|s| s.as_str())
+    }
+
+    /// Register a sequence in all partitions (the shared-CoT design keeps
+    /// one KV view per model).
+    pub fn register_seq(&mut self, seq: SeqId) -> Result<()> {
+        for pool in self.pools.values_mut() {
+            pool.register(seq)?;
+        }
+        Ok(())
+    }
+
+    pub fn release_seq(&mut self, seq: SeqId) -> Result<()> {
+        for pool in self.pools.values_mut() {
+            pool.release(seq)?;
+        }
+        Ok(())
+    }
+
+    pub fn check_invariants(&self) {
+        for pool in self.pools.values() {
+            pool.check_invariants();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(block: usize, total: usize) -> BlockPool {
+        BlockPool::new(PoolConfig { block_size: block, total_blocks: total })
+    }
+
+    #[test]
+    fn grow_allocates_by_block() {
+        let mut p = pool(16, 8);
+        p.register(1).unwrap();
+        p.grow_to(1, 1).unwrap();
+        assert_eq!(p.used_blocks(), 1);
+        p.grow_to(1, 16).unwrap();
+        assert_eq!(p.used_blocks(), 1);
+        p.grow_to(1, 17).unwrap();
+        assert_eq!(p.used_blocks(), 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn rollback_frees_whole_blocks_only() {
+        let mut p = pool(16, 8);
+        p.register(1).unwrap();
+        p.grow_to(1, 40).unwrap(); // 3 blocks
+        assert_eq!(p.used_blocks(), 3);
+        p.rollback_to(1, 33).unwrap(); // still needs 3 blocks
+        assert_eq!(p.used_blocks(), 3);
+        p.rollback_to(1, 32).unwrap(); // exactly 2 blocks
+        assert_eq!(p.used_blocks(), 2);
+        p.rollback_to(1, 0).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn exhaustion_fails_atomically() {
+        let mut p = pool(16, 4);
+        p.register(1).unwrap();
+        p.register(2).unwrap();
+        p.grow_to(1, 48).unwrap(); // 3 of 4 blocks
+        let before = p.seq_tokens(2);
+        assert!(p.grow_to(2, 64).is_err()); // needs 4, only 1 free
+        assert_eq!(p.seq_tokens(2), before);
+        assert_eq!(p.free_blocks(), 1);
+        assert!(p.can_grow_to(2, 16));
+        assert!(!p.can_grow_to(2, 17));
+        p.check_invariants();
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut p = pool(16, 4);
+        p.register(1).unwrap();
+        p.grow_to(1, 64).unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 4);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn grow_below_current_is_rejected() {
+        let mut p = pool(16, 4);
+        p.register(1).unwrap();
+        p.grow_to(1, 20).unwrap();
+        assert!(p.grow_to(1, 10).is_err());
+    }
+
+    #[test]
+    fn double_register_rejected() {
+        let mut p = pool(16, 4);
+        p.register(1).unwrap();
+        assert!(p.register(1).is_err());
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut p = pool(16, 8);
+        p.register(1).unwrap();
+        p.grow_to(1, 100).unwrap(); // 7 blocks
+        p.rollback_to(1, 0).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.peak_used_blocks(), 7);
+    }
+
+    #[test]
+    fn manager_static_partition() {
+        let mut m = KvManager::new();
+        m.add_partition("base", PoolConfig { block_size: 32, total_blocks: 32 });
+        m.add_partition("small", PoolConfig { block_size: 32, total_blocks: 8 });
+        m.register_seq(7).unwrap();
+        m.pool_mut("base").unwrap().grow_to(7, 1024).unwrap();
+        // base exhaustion does not affect small's partition (static split)
+        assert_eq!(m.pool("small").unwrap().free_blocks(), 8);
+        m.pool_mut("small").unwrap().grow_to(7, 256).unwrap();
+        m.check_invariants();
+        m.release_seq(7).unwrap();
+        assert_eq!(m.pool("base").unwrap().free_blocks(), 32);
+        assert!(m.pool("missing").is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! # SpecReason — fast and accurate inference-time compute via
+//! # speculative reasoning
+//!
+//! Reproduction of Pan et al., *SpecReason* (2025) as a three-layer
+//! Rust + JAX + Pallas serving stack (see DESIGN.md):
+//!
+//! - **L3 (this crate)** — the SpecReason coordinator: step-level
+//!   speculation, base-model verification, token-level speculative
+//!   decoding, hierarchical combination, paged KV accounting, serving
+//!   front end, metrics, workload generators and the semantic oracle.
+//! - **L2** — a JAX transformer lowered AOT to HLO text artifacts.
+//! - **L1** — a Pallas chunked flash-attention kernel inside L2.
+//!
+//! Python runs only at `make artifacts` time; the serving path is pure
+//! Rust on PJRT.
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod semantics;
+pub mod server;
+pub mod util;

@@ -1,0 +1,195 @@
+//! `specreason` — CLI launcher for the SpecReason serving stack.
+//!
+//! Subcommands:
+//!   serve   start the TCP serving front end
+//!   run     run an evaluation cell and print a results table
+//!   query   run a single query and print its metrics JSON
+//!   info    summarize the artifact manifest
+//!   help    this text
+
+use anyhow::Result;
+
+use specreason::config::DeployConfig;
+use specreason::coordinator::{
+    run_query, AcceptancePolicy, Combo, RealBackend, Scheme, SpecConfig,
+};
+use specreason::engine::Engine;
+use specreason::eval::{run_cell_real, run_cell_sim, Cell};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::server::Server;
+use specreason::util::bench::Table;
+use specreason::util::cli::Command;
+
+fn main() {
+    if let Err(e) = dispatch() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "specreason — speculative reasoning serving stack
+
+USAGE: specreason <serve|run|query|info|help> [options]
+
+  serve   start the TCP JSON-line server (see --help)
+  run     run an eval cell (dataset × scheme × combo), print a table
+  query   run one query end-to-end, print metrics JSON
+  info    summarize artifacts/manifest.json
+
+Run `specreason <cmd> --help` for per-command options.";
+
+fn dispatch() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("run") => cmd_run(&argv[1..]),
+        Some("query") => cmd_query(&argv[1..]),
+        Some("info") => cmd_info(&argv[1..]),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn common_opts(cmd: Command) -> Command {
+    cmd.opt("config", "deploy config JSON file", None)
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .opt("base", "base model name", Some("qwq-sim"))
+        .opt("small", "speculator model name", Some("r1-sim"))
+        .opt("scheme", "vanilla-base|vanilla-small|spec-decode|spec-reason|spec-reason+decode", Some("spec-reason"))
+        .opt("threshold", "acceptance threshold 0-9", Some("7"))
+        .opt("first-n-base", "force first n steps onto the base model", Some("0"))
+        .opt("budget", "thinking-token budget", Some("704"))
+}
+
+fn deploy_from(args: &specreason::util::cli::Args) -> Result<DeployConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => DeployConfig::from_file(path)?,
+        None => DeployConfig::default(),
+    };
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir.clone()).to_string();
+    cfg.base_model = args.get_or("base", &cfg.base_model.clone()).to_string();
+    cfg.small_model = args.get_or("small", &cfg.small_model.clone()).to_string();
+    cfg.scheme = Scheme::parse(args.get_or("scheme", cfg.scheme.name()))?;
+    cfg.threshold = args.usize("threshold", cfg.threshold as usize)? as u8;
+    cfg.first_n_base = args.usize("first-n-base", cfg.first_n_base)?;
+    cfg.token_budget = args.usize("budget", cfg.token_budget)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("specreason serve", "start the TCP server"))
+        .opt("addr", "listen address", Some("127.0.0.1:7878"));
+    let args = cmd.parse(raw)?;
+    let mut cfg = deploy_from(&args)?;
+    cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
+    eprintln!(
+        "[serve] loading {} + {} from {} ...",
+        cfg.base_model, cfg.small_model, cfg.artifacts_dir
+    );
+    let server = Server::bind(cfg)?;
+    eprintln!("[serve] listening on {}", server.addr);
+    server.run()
+}
+
+fn cmd_run(raw: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("specreason run", "run an eval cell"))
+        .opt("dataset", "aime|math500|gpqa", Some("aime"))
+        .opt("queries", "number of queries", Some("8"))
+        .opt("samples", "pass@1 samples per query", Some("2"))
+        .opt("seed", "workload seed", Some("1234"))
+        .flag("sim", "use the cost-model simulator instead of the engine");
+    let args = cmd.parse(raw)?;
+    let cfg = deploy_from(&args)?;
+    let dataset = Dataset::parse(args.get_or("dataset", "aime"))?;
+    let queries = args.usize("queries", 8)?;
+    let samples = args.usize("samples", 2)?;
+    let seed = args.u64("seed", 1234)?;
+
+    let cell = Cell {
+        dataset,
+        scheme: cfg.scheme,
+        combo: Combo::new(&cfg.base_model, &cfg.small_model),
+        cfg: cfg.spec_config(),
+    };
+    let oracle = Oracle::default();
+    let result = if args.flag("sim") {
+        run_cell_sim(&oracle, &cell, queries, samples, seed)?
+    } else {
+        eprintln!("[run] loading engine ...");
+        let engine = Engine::new(&cfg.engine_config())?;
+        run_cell_real(&engine, &oracle, &cell, queries, samples, seed)?
+    };
+
+    let mut t = Table::new(
+        &format!("{} ({} queries × {} samples)", result.cell_label, queries, samples),
+        &["metric", "value"],
+    );
+    t.row(vec!["pass@1".into(), format!("{:.3}", result.accuracy())]);
+    t.row(vec!["mean latency (gpu clock, s)".into(), format!("{:.2}", result.mean_gpu())]);
+    t.row(vec!["mean latency (wall, s)".into(), format!("{:.2}", result.mean_wall())]);
+    t.row(vec!["mean thinking tokens".into(), format!("{:.0}", result.mean_tokens())]);
+    t.row(vec!["offload ratio".into(), format!("{:.2}", result.mean_offload())]);
+    t.row(vec!["acceptance rate".into(), format!("{:.2}", result.mean_acceptance())]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_query(raw: &[String]) -> Result<()> {
+    let cmd = common_opts(Command::new("specreason query", "run one query"))
+        .opt("dataset", "aime|math500|gpqa", Some("aime"))
+        .opt("index", "query index", Some("0"))
+        .opt("sample", "pass@1 sample index", Some("0"))
+        .opt("seed", "workload seed", Some("1234"));
+    let args = cmd.parse(raw)?;
+    let cfg = deploy_from(&args)?;
+    let dataset = Dataset::parse(args.get_or("dataset", "aime"))?;
+    let index = args.usize("index", 0)?;
+    let sample = args.usize("sample", 0)?;
+    let seed = args.u64("seed", 1234)?;
+
+    eprintln!("[query] loading engine ...");
+    let engine = Engine::new(&cfg.engine_config())?;
+    let oracle = Oracle::default();
+    let combo = Combo::new(&cfg.base_model, &cfg.small_model);
+    let spec: SpecConfig = SpecConfig {
+        policy: AcceptancePolicy::Static { threshold: cfg.threshold },
+        ..cfg.spec_config()
+    };
+    let q = TraceGenerator::new(dataset, seed).query(index);
+    let mut backend = RealBackend::new(&engine, &combo.small, &combo.base);
+    let out = run_query(&oracle, &q, &combo, &spec, &mut backend, sample)?;
+    backend.release()?;
+    println!(
+        "{}",
+        specreason::server::protocol::metrics_to_json(&out.metrics, spec.scheme)
+            .to_string_pretty()
+    );
+    Ok(())
+}
+
+fn cmd_info(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("specreason info", "summarize the artifact manifest")
+        .opt("artifacts", "artifacts directory", Some("artifacts"));
+    let args = cmd.parse(raw)?;
+    let manifest = specreason::runtime::Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    let mut t = Table::new("artifact manifest", &["model", "arch", "params", "hlo files"]);
+    for (name, entry) in &manifest.models {
+        let arch = manifest.arch(&entry.arch)?;
+        t.row(vec![
+            name.clone(),
+            entry.arch.clone(),
+            format!("{:.1}M", arch.param_count as f64 / 1e6),
+            format!("{} step + {} decode", arch.step_hlo.len(), arch.decode_hlo.len()),
+        ]);
+    }
+    t.print();
+    println!(
+        "vocab={} block_k={} pallas={}",
+        manifest.vocab, manifest.block_k, manifest.use_pallas
+    );
+    Ok(())
+}

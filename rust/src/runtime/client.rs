@@ -1,0 +1,125 @@
+//! PJRT client wrapper: compile HLO-text artifacts, create device buffers.
+//!
+//! Follows the /opt/xla-example recipe: HLO *text* → `HloModuleProto`
+//! (the text parser reassigns instruction ids, avoiding the 64-bit-id
+//! proto incompatibility) → `XlaComputation` → `PjRtClient::compile`.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Wraps the PJRT CPU client. One per process; cheap to clone (the
+/// underlying client is reference-counted in the xla crate).
+pub struct Device {
+    pub(crate) client: xla::PjRtClient,
+}
+
+impl Device {
+    pub fn cpu() -> Result<Device> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Device { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>) -> Result<CompiledHlo> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(CompiledHlo { exe, compile_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Compile an HLO text string (used for hand-authored helper modules
+    /// and tests).
+    pub fn compile_hlo_text(&self, text: &str) -> Result<CompiledHlo> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
+            .context("parsing inline HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling inline HLO")?;
+        Ok(CompiledHlo { exe, compile_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<u32>(data, dims, None)
+            .context("uploading u32 buffer")
+    }
+
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading literal")
+    }
+}
+
+/// A compiled executable plus its compile-time (reported at startup).
+pub struct CompiledHlo {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub compile_secs: f64,
+}
+
+impl CompiledHlo {
+    /// Execute with on-device buffers; returns the root tuple as a single
+    /// host literal (this PJRT build returns tuple roots as one buffer —
+    /// see DESIGN.md §2 note on the AOT boundary).
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+        let out = self.exe.execute_b(args).context("PJRT execute")?;
+        out[0][0]
+            .to_literal_sync()
+            .context("downloading result tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Inline HLO smoke: the full text→compile→execute→download path
+    /// without requiring artifacts.
+    #[test]
+    fn inline_hlo_roundtrip() {
+        let dev = Device::cpu().unwrap();
+        let hlo = "HloModule smoke\n\nENTRY main {\n  x = f32[4]{0} parameter(0)\n  y = f32[4]{0} parameter(1)\n  a = f32[4]{0} add(x, y)\n  m = f32[4]{0} multiply(x, y)\n  ROOT t = (f32[4]{0}, f32[4]{0}) tuple(a, m)\n}\n";
+        let exe = dev.compile_hlo_text(hlo).unwrap();
+        let x = dev.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let y = dev.upload_f32(&[10.0, 20.0, 30.0, 40.0], &[4]).unwrap();
+        let out = exe.run(&[&x, &y]).unwrap();
+        let parts = out.to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![10.0, 40.0, 90.0, 160.0]);
+    }
+
+    #[test]
+    fn i32_uploads_roundtrip() {
+        let dev = Device::cpu().unwrap();
+        let hlo = "HloModule addi\n\nENTRY main {\n  x = s32[2]{0} parameter(0)\n  y = s32[2]{0} parameter(1)\n  a = s32[2]{0} add(x, y)\n  ROOT t = (s32[2]{0}) tuple(a)\n}\n";
+        let exe = dev.compile_hlo_text(hlo).unwrap();
+        let x = dev.upload_i32(&[5, -3], &[2]).unwrap();
+        let y = dev.upload_i32(&[1, 2], &[2]).unwrap();
+        let out = exe.run(&[&x, &y]).unwrap().to_tuple1().unwrap();
+        assert_eq!(out.to_vec::<i32>().unwrap(), vec![6, -1]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One model architecture ("small" / "base" / "large"): static shapes plus
+/// the list of lowered HLO files and the HLO weight-parameter order.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+    /// HLO parameter order after (tokens, cur_len, k, v[, key, temp]).
+    pub weight_order: Vec<String>,
+    pub weight_shapes: BTreeMap<String, Vec<usize>>,
+    /// chunk size -> HLO filename for the `step` entry point
+    pub step_hlo: BTreeMap<usize, String>,
+    /// n -> HLO filename for the `decode_n` entry point
+    pub decode_hlo: BTreeMap<usize, String>,
+}
+
+impl ArchSpec {
+    /// f32 elements in one KV tensor (k or v).
+    pub fn kv_elems(&self) -> usize {
+        self.n_layers * self.max_seq * self.n_heads * self.d_head
+    }
+    pub fn kv_dims(&self) -> [usize; 4] {
+        [self.n_layers, self.max_seq, self.n_heads, self.d_head]
+    }
+    /// Bytes of KV cache (k + v) for one sequence.
+    pub fn kv_bytes(&self) -> usize {
+        2 * 4 * self.kv_elems()
+    }
+    pub fn chunk_buckets(&self) -> Vec<usize> {
+        self.step_hlo.keys().copied().collect()
+    }
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        self.decode_hlo.keys().copied().collect()
+    }
+}
+
+/// One logical model ("qwq-sim", "r1-sim", ...): an arch + a weight file.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: String,
+    pub seed: u64,
+    pub weights_file: String,
+    pub sha256: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub special_tokens: Vec<String>,
+    pub use_pallas: bool,
+    pub block_k: usize,
+    pub archs: BTreeMap<String, ArchSpec>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut archs = BTreeMap::new();
+        for (name, a) in j.get("archs").as_obj().context("manifest: archs")? {
+            let mut step_hlo = BTreeMap::new();
+            for (c, f) in a.get("hlo").as_obj().context("archs.hlo")? {
+                step_hlo.insert(c.parse::<usize>()?, f.as_str().unwrap().to_string());
+            }
+            let mut decode_hlo = BTreeMap::new();
+            for (n, f) in a.get("decode_hlo").as_obj().context("archs.decode_hlo")? {
+                decode_hlo.insert(n.parse::<usize>()?, f.as_str().unwrap().to_string());
+            }
+            let weight_order = a
+                .get("weight_order")
+                .as_arr()
+                .context("weight_order")?
+                .iter()
+                .map(|v| v.as_str().unwrap().to_string())
+                .collect();
+            let mut weight_shapes = BTreeMap::new();
+            for (w, dims) in a.get("weight_shapes").as_obj().context("weight_shapes")? {
+                weight_shapes.insert(
+                    w.clone(),
+                    dims.as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                );
+            }
+            archs.insert(
+                name.clone(),
+                ArchSpec {
+                    name: name.clone(),
+                    d_model: a.req_usize("d_model")?,
+                    n_layers: a.req_usize("n_layers")?,
+                    n_heads: a.req_usize("n_heads")?,
+                    d_head: a.req_usize("d_head")?,
+                    d_ff: a.req_usize("d_ff")?,
+                    max_seq: a.req_usize("max_seq")?,
+                    vocab: a.req_usize("vocab")?,
+                    param_count: a.req_usize("param_count")?,
+                    weight_order,
+                    weight_shapes,
+                    step_hlo,
+                    decode_hlo,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").as_obj().context("manifest: models")? {
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    arch: m.req_str("arch")?.to_string(),
+                    seed: m.req_usize("seed")? as u64,
+                    weights_file: m.req_str("weights")?.to_string(),
+                    sha256: m.req_str("sha256")?.to_string(),
+                },
+            );
+        }
+
+        let special_tokens = j
+            .get("special_tokens")
+            .as_arr()
+            .context("special_tokens")?
+            .iter()
+            .map(|v| v.as_str().unwrap().to_string())
+            .collect();
+
+        Ok(Manifest {
+            dir,
+            vocab: j.req_usize("vocab")?,
+            special_tokens,
+            use_pallas: j.get("use_pallas").as_bool().unwrap_or(true),
+            block_k: j.req_usize("block_k")?,
+            archs,
+            models,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown arch '{name}' in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown model '{name}'; available: {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            ))
+    }
+
+    pub fn hlo_path(&self, fname: &str) -> PathBuf {
+        self.dir.join(fname)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "format": 1, "vocab": 384, "block_k": 128, "use_pallas": true,
+          "special_tokens": ["<pad>", "<bos>"],
+          "chunk_buckets": [1, 8], "decode_buckets": [4],
+          "archs": {
+            "tiny": {
+              "d_model": 8, "n_layers": 1, "n_heads": 2, "d_head": 4,
+              "d_ff": 16, "max_seq": 64, "vocab": 384, "param_count": 100,
+              "rope_theta": 10000.0,
+              "weight_order": ["tok_emb", "ln_f"],
+              "weight_shapes": {"tok_emb": [384, 8], "ln_f": [8]},
+              "hlo": {"1": "tiny_step_c1.hlo.txt"},
+              "decode_hlo": {"4": "tiny_decode_n4.hlo.txt"}
+            }
+          },
+          "models": {
+            "t1": {"arch": "tiny", "seed": 5, "weights": "t1.srw",
+                    "sha256": "ab"}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let dir = std::env::temp_dir().join(format!("srw-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab, 384);
+        let a = m.arch("tiny").unwrap();
+        assert_eq!(a.kv_dims(), [1, 64, 2, 4]);
+        assert_eq!(a.kv_bytes(), 2 * 4 * 64 * 2 * 4);
+        assert_eq!(a.step_hlo[&1], "tiny_step_c1.hlo.txt");
+        assert_eq!(a.weight_order, vec!["tok_emb", "ln_f"]);
+        let e = m.model("t1").unwrap();
+        assert_eq!(e.arch, "tiny");
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/surely").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Runtime layer: the `xla` crate (PJRT C API) wrapped for serving.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute_b`, with model weights resident on device and per-sequence KV
+//! caches threaded between calls (see model.rs for the AOT-boundary
+//! design notes).  Python never runs at serving time; everything here
+//! consumes only `artifacts/`.
+
+pub mod client;
+pub mod manifest;
+pub mod model;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use client::Device;
+pub use manifest::{ArchSpec, Manifest, ModelEntry};
+pub use model::{KvState, ModelRuntime, RuntimeStats};
+pub use sampler::{Sampler, SamplerConfig};
+pub use tokenizer::Tokenizer;
+pub use weights::WeightSet;

@@ -1,0 +1,332 @@
+//! ModelRuntime: one loaded logical model (weights on device + compiled
+//! step/decode executables) and KvState, the per-sequence KV cache.
+//!
+//! ## The AOT boundary and why decode is batched per step
+//!
+//! The `xla` crate's PJRT build returns a multi-output root as ONE tuple
+//! buffer which cannot be re-fed as parameters (parameters are passed as
+//! flattened leaves).  KV caches therefore round-trip through the host
+//! once per executable call.  Two mitigations, both visible in the
+//! artifact set:
+//!
+//! * `decode_n` executables decode 4/8/16/32 tokens per call with
+//!   in-graph sampling, amortizing the copy to ~1/n per token;
+//! * prefill is bucketed (1/8/32/128) and padded, with logical rollback
+//!   (positions past `cache_len` are causally masked by the L1 kernel, so
+//!   a pad or an overshoot costs nothing semantically — proven by
+//!   `test_garbage_beyond_frontier_is_masked` in python/tests).
+//!
+//! ## Rollback
+//!
+//! Rejected speculative steps are "discarded from the KV cache" (§4.1 of
+//! the paper) by rewinding `cache_len` — stale entries beyond the
+//! frontier are never attended to.  This makes rollback O(1).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{CompiledHlo, Device};
+use super::manifest::{ArchSpec, Manifest};
+use super::weights::WeightSet;
+
+/// Per-sequence KV cache state held on the host between calls.
+pub struct KvState {
+    k: xla::Literal,
+    v: xla::Literal,
+    /// Number of materialized positions (tokens whose K/V are live).
+    pub cache_len: usize,
+    /// Capacity (arch max_seq).
+    pub max_seq: usize,
+}
+
+impl KvState {
+    /// Remaining capacity in positions.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.cache_len
+    }
+
+    /// Rewind the frontier (speculation rollback / overshoot trim).
+    pub fn rollback_to(&mut self, len: usize) {
+        assert!(len <= self.cache_len, "rollback_to({len}) beyond frontier {}", self.cache_len);
+        self.cache_len = len;
+    }
+}
+
+/// Aggregate runtime counters (per model).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub step_calls: u64,
+    pub decode_calls: u64,
+    pub tokens_prefilled: u64,
+    pub tokens_decoded: u64,
+    pub padded_tokens: u64,
+    pub step_secs: f64,
+    pub decode_secs: f64,
+}
+
+impl RuntimeStats {
+    pub fn total_secs(&self) -> f64 {
+        self.step_secs + self.decode_secs
+    }
+}
+
+/// One loaded logical model.
+pub struct ModelRuntime {
+    pub name: String,
+    pub arch: ArchSpec,
+    step_exes: BTreeMap<usize, CompiledHlo>,
+    decode_exes: BTreeMap<usize, CompiledHlo>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    device: Device,
+    pub pad_id: i32,
+    stats: Mutex<RuntimeStats>,
+    /// Total artifact compile time (reported at startup).
+    pub compile_secs: f64,
+}
+
+impl ModelRuntime {
+    /// Load a logical model by manifest name (e.g. "qwq-sim").
+    pub fn load(device: &Device, manifest: &Manifest, model_name: &str) -> Result<ModelRuntime> {
+        let entry = manifest.model(model_name)?;
+        let arch = manifest.arch(&entry.arch)?.clone();
+
+        let mut compile_secs = 0.0;
+        let mut step_exes = BTreeMap::new();
+        for (&c, fname) in &arch.step_hlo {
+            let exe = device.compile_hlo_file(manifest.hlo_path(fname))?;
+            compile_secs += exe.compile_secs;
+            step_exes.insert(c, exe);
+        }
+        let mut decode_exes = BTreeMap::new();
+        for (&n, fname) in &arch.decode_hlo {
+            let exe = device.compile_hlo_file(manifest.hlo_path(fname))?;
+            compile_secs += exe.compile_secs;
+            decode_exes.insert(n, exe);
+        }
+
+        let weights = WeightSet::load(manifest.dir.join(&entry.weights_file))?;
+        if weights.arch != arch.name {
+            bail!("weight bundle arch {} != manifest arch {}", weights.arch, arch.name);
+        }
+        let mut weight_bufs = Vec::with_capacity(arch.weight_order.len());
+        for wname in &arch.weight_order {
+            let arr = weights.get(wname)?;
+            let expect = &arch.weight_shapes[wname];
+            if &arr.shape != expect {
+                bail!("weight {wname}: shape {:?} != manifest {:?}", arr.shape, expect);
+            }
+            weight_bufs.push(device.upload_f32(&arr.data, &arr.shape)?);
+        }
+
+        Ok(ModelRuntime {
+            name: model_name.to_string(),
+            arch,
+            step_exes,
+            decode_exes,
+            weight_bufs,
+            device: Device { client: device.client.clone() },
+            pad_id: 256, // <pad> is the first special (see tokenizer.rs)
+            stats: Mutex::new(RuntimeStats::default()),
+            compile_secs,
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = RuntimeStats::default();
+    }
+
+    /// Fresh zeroed KV cache for one sequence.
+    pub fn fresh_kv(&self) -> Result<KvState> {
+        let dims = self.arch.kv_dims().to_vec();
+        let nbytes = self.arch.kv_elems() * 4;
+        let zeros = vec![0u8; nbytes];
+        let mk = || {
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &dims,
+                &zeros,
+            )
+            .context("creating zero KV literal")
+        };
+        Ok(KvState { k: mk()?, v: mk()?, cache_len: 0, max_seq: self.arch.max_seq })
+    }
+
+    /// Pick the chunk bucket for a prefill of `len` tokens: the smallest
+    /// bucket >= len, else the largest bucket.
+    pub fn chunk_bucket(&self, len: usize) -> usize {
+        for (&c, _) in &self.step_exes {
+            if c >= len {
+                return c;
+            }
+        }
+        *self.step_exes.keys().last().unwrap()
+    }
+
+    /// Pick the decode bucket for `n` remaining tokens.
+    pub fn decode_bucket(&self, n: usize) -> usize {
+        for (&b, _) in &self.decode_exes {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.decode_exes.keys().last().unwrap()
+    }
+
+    /// Run one `step` call on up to one bucket of tokens.
+    ///
+    /// Returns the full logits matrix (bucket × vocab, row-major); rows
+    /// past `tokens.len() - 1` correspond to padding.  Advances
+    /// `kv.cache_len` by `tokens.len()` (pads stay beyond the frontier).
+    pub fn step_chunk(&self, kv: &mut KvState, tokens: &[i32]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let bucket = self.chunk_bucket(tokens.len());
+        anyhow::ensure!(!tokens.is_empty(), "empty chunk");
+        anyhow::ensure!(tokens.len() <= bucket, "chunk larger than bucket");
+        anyhow::ensure!(
+            kv.cache_len + bucket <= kv.max_seq,
+            "KV overflow: {} + {} > {} (model {})",
+            kv.cache_len, bucket, kv.max_seq, self.name
+        );
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, self.pad_id);
+
+        let toks = self.device.upload_i32(&padded, &[1, bucket])?;
+        let cur = self.device.upload_i32(&[kv.cache_len as i32], &[1])?;
+        let kb = self.device.upload_literal(&kv.k)?;
+        let vb = self.device.upload_literal(&kv.v)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&toks, &cur, &kb, &vb];
+        args.extend(self.weight_bufs.iter());
+
+        let exe = &self.step_exes[&bucket];
+        let out = exe.run(&args)?;
+        let mut parts = out.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "step output arity {}", parts.len());
+        let v_lit = parts.pop().unwrap();
+        let k_lit = parts.pop().unwrap();
+        let logits = parts.pop().unwrap().to_vec::<f32>()?;
+
+        kv.k = k_lit;
+        kv.v = v_lit;
+        kv.cache_len += tokens.len();
+
+        let mut s = self.stats.lock().unwrap();
+        s.step_calls += 1;
+        s.tokens_prefilled += tokens.len() as u64;
+        s.padded_tokens += (bucket - tokens.len()) as u64;
+        s.step_secs += t0.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// Prefill an arbitrary-length token span (chunked + padded).
+    ///
+    /// Returns the logits row of the *last real token* — the distribution
+    /// over the next token.
+    pub fn prefill(&self, kv: &mut KvState, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill of empty span");
+        let max_bucket = *self.step_exes.keys().last().unwrap();
+        let mut pos = 0;
+        let mut last: Option<Vec<f32>> = None;
+        while pos < tokens.len() {
+            let remaining = tokens.len() - pos;
+            let take = remaining.min(max_bucket);
+            let chunk = &tokens[pos..pos + take];
+            let logits = self.step_chunk(kv, chunk)?;
+            pos += take;
+            if pos == tokens.len() {
+                let v = self.arch.vocab;
+                let row = (take - 1) * v;
+                last = Some(logits[row..row + v].to_vec());
+            }
+        }
+        Ok(last.unwrap())
+    }
+
+    /// Decode exactly `n` tokens starting from `first_token` (which must
+    /// be the sequence's newest, not-yet-materialized token; its position
+    /// must equal `kv.cache_len`).
+    ///
+    /// Returns the sampled tokens.  On return, `kv.cache_len` has advanced
+    /// by `n`: the cache holds everything before the last returned token.
+    pub fn decode(
+        &self,
+        kv: &mut KvState,
+        first_token: i32,
+        n: usize,
+        seed: u64,
+        temperature: f32,
+    ) -> Result<Vec<i32>> {
+        let t0 = Instant::now();
+        anyhow::ensure!(n > 0, "decode of zero tokens");
+        let mut out: Vec<i32> = Vec::with_capacity(n);
+        let mut tok = first_token;
+        let mut call_idx = 0u64;
+        while out.len() < n {
+            let rem = n - out.len();
+            let bucket = self.decode_bucket(rem);
+            anyhow::ensure!(
+                kv.cache_len + bucket <= kv.max_seq,
+                "KV overflow in decode: {} + {} > {} (model {})",
+                kv.cache_len, bucket, kv.max_seq, self.name
+            );
+            let toks = self.run_decode_bucket(kv, tok, bucket, seed ^ call_idx, temperature)?;
+            call_idx += 1;
+            let take = rem.min(toks.len());
+            out.extend(&toks[..take]);
+            if take < toks.len() {
+                // Overshoot: trim the frontier back so the cache ends just
+                // before the last kept token.
+                kv.cache_len -= toks.len() - take;
+            }
+            tok = *out.last().unwrap();
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.decode_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn run_decode_bucket(
+        &self,
+        kv: &mut KvState,
+        token: i32,
+        bucket: usize,
+        seed: u64,
+        temperature: f32,
+    ) -> Result<Vec<i32>> {
+        let tok = self.device.upload_i32(&[token], &[1, 1])?;
+        let cur = self.device.upload_i32(&[kv.cache_len as i32], &[1])?;
+        let kb = self.device.upload_literal(&kv.k)?;
+        let vb = self.device.upload_literal(&kv.v)?;
+        let key = self
+            .device
+            .upload_u32(&[(seed & 0xFFFF_FFFF) as u32, (seed >> 32) as u32], &[2])?;
+        let temp = self.device.upload_f32(&[temperature], &[1])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok, &cur, &kb, &vb, &key, &temp];
+        args.extend(self.weight_bufs.iter());
+
+        let exe = &self.decode_exes[&bucket];
+        let out = exe.run(&args)?;
+        let mut parts = out.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "decode output arity {}", parts.len());
+        let v_lit = parts.pop().unwrap();
+        let k_lit = parts.pop().unwrap();
+        let sampled = parts.pop().unwrap().to_vec::<i32>()?;
+
+        kv.k = k_lit;
+        kv.v = v_lit;
+        kv.cache_len += bucket;
+
+        let mut s = self.stats.lock().unwrap();
+        s.decode_calls += 1;
+        s.tokens_decoded += bucket as u64;
+        Ok(sampled)
+    }
+}

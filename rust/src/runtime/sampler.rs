@@ -1,0 +1,159 @@
+//! Host-side token sampler.
+//!
+//! Most sampling happens *in-graph* (`decode_n` draws with threefry on
+//! device), but two places need host sampling from a logits row:
+//! the "bridge" token right after a prefill (the chunk's last-position
+//! logits predict the next token), and the token-level acceptance test in
+//! speculative decoding.  Implements temperature + top-k via the Gumbel
+//! trick with zero allocations in the hot path (scratch reused).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    /// Softmax temperature; <= 1e-3 means greedy argmax.
+    pub temperature: f32,
+    /// 0 disables top-k filtering.
+    pub top_k: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        // The paper evaluates at temperature 0.6 (§5.1).
+        SamplerConfig { temperature: 0.6, top_k: 0 }
+    }
+}
+
+#[derive(Debug)]
+pub struct Sampler {
+    cfg: SamplerConfig,
+    scratch: Vec<(f32, usize)>,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplerConfig) -> Self {
+        Sampler { cfg, scratch: Vec::new() }
+    }
+
+    pub fn config(&self) -> SamplerConfig {
+        self.cfg
+    }
+
+    /// Sample a token id from a logits row.
+    pub fn sample(&mut self, logits: &[f32], rng: &mut Rng) -> i32 {
+        debug_assert!(!logits.is_empty());
+        if self.cfg.temperature <= 1e-3 {
+            return argmax(logits) as i32;
+        }
+        let inv_t = 1.0 / self.cfg.temperature;
+        self.scratch.clear();
+        self.scratch
+            .extend(logits.iter().enumerate().map(|(i, &l)| (l, i)));
+        if self.cfg.top_k > 0 && self.cfg.top_k < logits.len() {
+            // Partial select of the k largest logits.
+            let k = self.cfg.top_k;
+            self.scratch
+                .select_nth_unstable_by(k - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+            self.scratch.truncate(k);
+        }
+        // Gumbel-max: argmax(logit/T + G_i) ~ Categorical(softmax(logit/T)).
+        let mut best = f32::NEG_INFINITY;
+        let mut best_id = self.scratch[0].1;
+        for &(l, i) in &self.scratch {
+            let u = rng.f64().max(f64::MIN_POSITIVE) as f32;
+            let g = -(-(u.ln())).ln();
+            let score = l * inv_t + g;
+            if score > best {
+                best = score;
+                best_id = i;
+            }
+        }
+        best_id as i32
+    }
+
+    /// Log-softmax probability of `token` under the logits row — used by
+    /// metrics and by speculative decoding's acceptance bookkeeping.
+    pub fn logprob(&self, logits: &[f32], token: i32) -> f32 {
+        let t = self.cfg.temperature.max(1e-3);
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = logits.iter().map(|&l| ((l - m) / t).exp()).sum();
+        (logits[token as usize] - m) / t - z.ln()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplerConfig { temperature: 0.0, top_k: 0 });
+        let mut rng = Rng::new(1);
+        let logits = vec![0.1, 5.0, -2.0, 4.9];
+        for _ in 0..10 {
+            assert_eq!(s.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_matches_softmax_frequencies() {
+        let mut s = Sampler::new(SamplerConfig { temperature: 1.0, top_k: 0 });
+        let mut rng = Rng::new(2);
+        let logits = vec![0.0, 1.0, 2.0];
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            counts[s.sample(&logits, &mut rng) as usize] += 1;
+        }
+        let z: f32 = logits.iter().map(|l| l.exp()).sum();
+        for i in 0..3 {
+            let expect = (logits[i].exp() / z) as f64;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - expect).abs() < 0.01, "i={i} got {got} want {expect}");
+        }
+    }
+
+    #[test]
+    fn top_k_excludes_tail() {
+        let mut s = Sampler::new(SamplerConfig { temperature: 1.0, top_k: 2 });
+        let mut rng = Rng::new(3);
+        let logits = vec![10.0, 9.0, -50.0, -60.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 0 || t == 1, "sampled excluded token {t}");
+        }
+    }
+
+    #[test]
+    fn logprob_normalizes() {
+        let s = Sampler::new(SamplerConfig { temperature: 1.0, top_k: 0 });
+        let logits = vec![0.5, -0.5, 2.0, 1.0];
+        let total: f32 = (0..4).map(|t| s.logprob(&logits, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5, "sum {total}");
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let mut s = Sampler::new(SamplerConfig::default());
+        let logits: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a: Vec<i32> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

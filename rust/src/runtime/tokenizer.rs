@@ -1,0 +1,172 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! Vocabulary layout (shared with `python/compile/model.py`):
+//! ids 0..=255 are raw bytes; ids 256.. are special tokens in manifest
+//! order (`<pad>`, `<bos>`, `<eos>`, `<think>`, `</think>`, `<step>`,
+//! `<answer>`, `<verify>`).  Byte-level means no OOV is possible and
+//! decode(encode(s)) == s for any UTF-8 input.
+
+use std::collections::BTreeMap;
+
+/// Names of special tokens in id order (must match model.SPECIAL_TOKENS).
+pub const SPECIAL_TOKENS: [&str; 8] = [
+    "<pad>", "<bos>", "<eos>", "<think>", "</think>", "<step>", "<answer>",
+    "<verify>",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Special {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub think: i32,
+    pub end_think: i32,
+    pub step: i32,
+    pub answer: i32,
+    pub verify: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: usize,
+    special_by_name: BTreeMap<String, i32>,
+    special_by_id: BTreeMap<i32, String>,
+    pub special: Special,
+}
+
+impl Tokenizer {
+    /// Build from the manifest's special-token list.
+    pub fn new(vocab: usize, special_tokens: &[String]) -> anyhow::Result<Self> {
+        anyhow::ensure!(vocab >= 256 + special_tokens.len(),
+            "vocab {vocab} too small for 256 bytes + {} specials", special_tokens.len());
+        let mut special_by_name = BTreeMap::new();
+        let mut special_by_id = BTreeMap::new();
+        for (i, name) in special_tokens.iter().enumerate() {
+            let id = 256 + i as i32;
+            special_by_name.insert(name.clone(), id);
+            special_by_id.insert(id, name.clone());
+        }
+        let get = |n: &str| -> anyhow::Result<i32> {
+            special_by_name
+                .get(n)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("manifest lacks special token {n}"))
+        };
+        let special = Special {
+            pad: get("<pad>")?,
+            bos: get("<bos>")?,
+            eos: get("<eos>")?,
+            think: get("<think>")?,
+            end_think: get("</think>")?,
+            step: get("<step>")?,
+            answer: get("<answer>")?,
+            verify: get("<verify>")?,
+        };
+        Ok(Tokenizer { vocab, special_by_name, special_by_id, special })
+    }
+
+    /// Default tokenizer matching the aot.py constants (for tests).
+    pub fn default_layout() -> Self {
+        let names: Vec<String> = SPECIAL_TOKENS.iter().map(|s| s.to_string()).collect();
+        Tokenizer::new(384, &names).unwrap()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Encode text as raw bytes (no specials).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Encode with BOS prefix.
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![self.special.bos];
+        out.extend(self.encode(text));
+        out
+    }
+
+    pub fn special_id(&self, name: &str) -> Option<i32> {
+        self.special_by_name.get(name).copied()
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        id >= 256
+    }
+
+    /// Decode ids to text; specials render as their names, invalid bytes
+    /// via U+FFFD replacement.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        let mut bytes: Vec<u8> = Vec::new();
+        let flush = |bytes: &mut Vec<u8>, out: &mut String| {
+            if !bytes.is_empty() {
+                out.push_str(&String::from_utf8_lossy(bytes));
+                bytes.clear();
+            }
+        };
+        for &id in ids {
+            if (0..256).contains(&id) {
+                bytes.push(id as u8);
+            } else {
+                flush(&mut bytes, &mut out);
+                match self.special_by_id.get(&id) {
+                    Some(name) => out.push_str(name),
+                    None => out.push_str(&format!("<unk:{id}>")),
+                }
+            }
+        }
+        flush(&mut bytes, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::default_layout();
+        for s in ["hello", "héllo wörld", "数学 123", ""] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn special_ids_match_python_layout() {
+        let t = Tokenizer::default_layout();
+        assert_eq!(t.special.pad, 256);
+        assert_eq!(t.special.bos, 257);
+        assert_eq!(t.special.eos, 258);
+        assert_eq!(t.special.think, 259);
+        assert_eq!(t.special.end_think, 260);
+        assert_eq!(t.special.step, 261);
+        assert_eq!(t.special.answer, 262);
+        assert_eq!(t.special.verify, 263);
+    }
+
+    #[test]
+    fn decode_renders_specials() {
+        let t = Tokenizer::default_layout();
+        let mut ids = t.encode("x");
+        ids.push(t.special.step);
+        ids.extend(t.encode("y"));
+        assert_eq!(t.decode(&ids), "x<step>y");
+        assert_eq!(t.decode(&[999]), "<unk:999>");
+    }
+
+    #[test]
+    fn bos_prefix() {
+        let t = Tokenizer::default_layout();
+        let ids = t.encode_with_bos("a");
+        assert_eq!(ids, vec![257, 'a' as i32]);
+    }
+
+    #[test]
+    fn rejects_tiny_vocab() {
+        let names: Vec<String> = SPECIAL_TOKENS.iter().map(|s| s.to_string()).collect();
+        assert!(Tokenizer::new(100, &names).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! `.srw` weight-bundle loader.
+//!
+//! Format (written by `python/compile/aot.py::write_srw`):
+//! ```text
+//!   magic   b"SRW1"
+//!   u32le   header length
+//!   bytes   header JSON: {name, arch, seed, arrays: [{name, shape,
+//!           dtype, offset, nbytes}]}   (offsets relative to data start)
+//!   bytes   raw little-endian f32 data
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named weight array on the host.
+#[derive(Debug, Clone)]
+pub struct WeightArray {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightArray {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A loaded weight bundle.
+#[derive(Debug)]
+pub struct WeightSet {
+    pub model_name: String,
+    pub arch: String,
+    pub seed: u64,
+    pub arrays: BTreeMap<String, WeightArray>,
+}
+
+impl WeightSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightSet> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weight file {path:?}"))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic).context("srw magic")?;
+        if &magic != b"SRW1" {
+            bail!("{path:?}: bad magic {magic:?}, expected SRW1");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4).context("srw header length")?;
+        let header_len = u32::from_le_bytes(len4) as usize;
+        let mut header = vec![0u8; header_len];
+        f.read_exact(&mut header).context("srw header")?;
+        let header = std::str::from_utf8(&header).context("srw header utf-8")?;
+        let j = Json::parse(header).context("srw header json")?;
+
+        let mut data = Vec::new();
+        f.read_to_end(&mut data).context("srw data")?;
+
+        let mut arrays = BTreeMap::new();
+        for a in j.get("arrays").as_arr().context("srw arrays")? {
+            let name = a.req_str("name")?.to_string();
+            let dtype = a.req_str("dtype")?;
+            if dtype != "f32" {
+                bail!("{path:?}: array {name}: unsupported dtype {dtype}");
+            }
+            let shape: Vec<usize> = a
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect();
+            let offset = a.req_usize("offset")?;
+            let nbytes = a.req_usize("nbytes")?;
+            let elems: usize = shape.iter().product();
+            if nbytes != elems * 4 {
+                bail!("{path:?}: array {name}: nbytes {nbytes} != 4 * {elems}");
+            }
+            if offset + nbytes > data.len() {
+                bail!("{path:?}: array {name}: extends past end of file");
+            }
+            let mut vals = vec![0f32; elems];
+            for (i, chunk) in data[offset..offset + nbytes].chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            arrays.insert(name.clone(), WeightArray { name, shape, data: vals });
+        }
+
+        Ok(WeightSet {
+            model_name: j.req_str("name")?.to_string(),
+            arch: j.req_str("arch")?.to_string(),
+            seed: j.req_usize("seed")? as u64,
+            arrays,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&WeightArray> {
+        self.arrays
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight '{name}' missing from {}", self.model_name))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.arrays.values().map(|a| a.elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Write a tiny .srw by hand, mirroring aot.py's layout.
+    fn write_fake_srw(path: &Path) {
+        let a0: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let a1: Vec<f32> = vec![-1.0, 0.5];
+        let header = format!(
+            r#"{{"name": "t1", "arch": "tiny", "seed": 5, "arrays": [
+              {{"name": "emb", "shape": [2, 3], "dtype": "f32", "offset": 0, "nbytes": 24}},
+              {{"name": "ln", "shape": [2], "dtype": "f32", "offset": 24, "nbytes": 8}}
+            ]}}"#
+        );
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"SRW1").unwrap();
+        f.write_all(&(header.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        for v in a0.iter().chain(&a1) {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_fake_bundle() {
+        let dir = std::env::temp_dir().join(format!("srw-w-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t1.srw");
+        write_fake_srw(&p);
+        let w = WeightSet::load(&p).unwrap();
+        assert_eq!(w.model_name, "t1");
+        assert_eq!(w.arch, "tiny");
+        assert_eq!(w.total_params(), 8);
+        let emb = w.get("emb").unwrap();
+        assert_eq!(emb.shape, vec![2, 3]);
+        assert_eq!(emb.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(w.get("ln").unwrap().data, vec![-1.0, 0.5]);
+        assert!(w.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("srw-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.srw");
+        std::fs::write(&p, b"NOPE0000").unwrap();
+        assert!(WeightSet::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Calibration constants for the semantic oracle.
+//!
+//! Random-weight proxy models cannot reason, so step quality, verifier
+//! judgment and final-answer correctness are supplied by a calibrated
+//! stochastic oracle (DESIGN.md §3).  Every constant here is anchored to
+//! a specific paper quantity; the anchors are validated by statistical
+//! tests in `semantics::sim` (abstract executor) and by the benches.
+//!
+//! Anchors:
+//! * vanilla pass@1 per (model, dataset) at the full token budget —
+//!   Fig. 3's端 points;
+//! * acceptance rates at threshold 7 — §5.2 reports 38.1%–80.0% across
+//!   datasets, highest where the capability gap is smallest (MATH);
+//! * verbosity ratio small:base ≈ 1.2–2.0× fewer thinking tokens —
+//!   Fig. 4a / Fig. 9;
+//! * base-vs-PRM score correlation — Fig. 7;
+//! * SpecDecode draft acceptance — tuned so SpecDecode alone gives a
+//!   ~1.4–1.8× speedup (Fig. 3's SpecDecode points).
+
+/// Model "class": which arch plays which role.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelClass {
+    Small,
+    Base,
+    Large,
+}
+
+impl ModelClass {
+    /// Map a logical model name to its class.
+    pub fn of(model_name: &str) -> ModelClass {
+        match model_name {
+            "qwq-sim" | "skywork-sim" => ModelClass::Base,
+            "r1-70b-sim" => ModelClass::Large,
+            _ => ModelClass::Small,
+        }
+    }
+}
+
+/// Per-(dataset, class) capability scalar in [0, 1]: the probability-ish
+/// scale the oracle maps through quality/correctness.
+#[derive(Debug, Clone, Copy)]
+pub struct Capability {
+    /// Ability to produce a good individual reasoning step.
+    pub step: f64,
+    /// Ability to land the final answer given a healthy trajectory and a
+    /// complete plan (anchored to the vanilla pass@1 targets).
+    pub answer: f64,
+}
+
+/// Everything the oracle needs, in one audited place.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Quality-noise std for a generated step.
+    pub sigma_quality: f64,
+    /// Judgment-noise std of the base model acting as critic.  Skywork is
+    /// "slightly inferior at instruction following" (§5.2), so its
+    /// variant multiplier is > 1.
+    pub sigma_verify: f64,
+    /// Judgment-noise std of the Math-Shepherd PRM (Fig. 7 comparator).
+    pub sigma_prm: f64,
+    /// Slope of quality -> score mapping (both verifier and PRM).
+    pub score_slope: f64,
+    /// Quality value mapping to the scale midpoint (score 4.5 / PRM 0.5).
+    pub score_center: f64,
+    /// Quality below which a step damages trajectory health (the paper's
+    /// Fig. 5 shows accuracy falling as the threshold admits mediocre
+    /// steps — not only outright-wrong ones).
+    pub quality_bar: f64,
+    /// Trajectory-health penalty scale for an accepted bad step.
+    pub health_penalty: f64,
+    /// Extra penalty multiplier when the bad step is a *critical* one.
+    pub critical_multiplier: f64,
+    /// Probability that the next step's generator notices and repairs an
+    /// earlier bad step ("Wait," self-reflection), by class.
+    pub reflection: [f64; 3],
+    /// Fraction of the health penalty refunded on reflection.
+    pub reflection_refund: f64,
+    /// Extra tokens a reflection costs (scaled by verbosity).
+    pub reflection_extra_tokens: usize,
+    /// Verbosity multiplier by class (tokens per step vs canonical).
+    pub verbosity: [f64; 3],
+    /// Exponent shaping the budget-truncation accuracy penalty
+    /// (completion^kappa; Fig. 4b's tight-budget gap).
+    pub completion_kappa: f64,
+    /// Trajectory health is normalized by the answering model's *own*
+    /// expected health (a model's end-to-end capability anchor already
+    /// prices in its own typical mistakes; only degradation *relative to
+    /// its own baseline* — e.g. accepted bad speculations — should cost
+    /// accuracy).  Ratio clamp ceiling:
+    pub health_ratio_cap: f64,
+    /// Token-level agreement probability of draft tokens in SpecDecode,
+    /// by dataset index [aime, math500, gpqa].  Drives the Leviathan-style
+    /// expected accepted-prefix length.
+    pub draft_agreement: [f64; 3],
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            sigma_quality: 0.16,
+            sigma_verify: 0.13,
+            sigma_prm: 0.08,
+            score_slope: 7.0,
+            score_center: 0.66,
+            quality_bar: 0.62,
+            health_penalty: 0.40,
+            critical_multiplier: 2.2,
+            // small, base, large
+            reflection: [0.35, 0.72, 0.68],
+            reflection_refund: 0.65,
+            reflection_extra_tokens: 10,
+            verbosity: [0.70, 1.15, 1.10],
+            completion_kappa: 1.2,
+            health_ratio_cap: 1.03,
+            // aime, math500, gpqa — higher on MATH (narrow capability gap)
+            draft_agreement: [0.68, 0.80, 0.66],
+        }
+    }
+}
+
+impl Calibration {
+    pub fn verbosity_of(&self, c: ModelClass) -> f64 {
+        self.verbosity[c as usize]
+    }
+    pub fn reflection_of(&self, c: ModelClass) -> f64 {
+        self.reflection[c as usize]
+    }
+}
+
+/// Variant-level tweaks: the two base LRMs and the two speculators are
+/// not identical (§5.2 discusses QwQ vs Skywork; ZR1 is a math/code
+/// specialist).
+#[derive(Debug, Clone, Copy)]
+pub struct VariantTweak {
+    /// Added to `Capability::step` and `Capability::answer`.
+    pub capability_delta: f64,
+    /// Multiplies `sigma_verify` when this model is the judge.
+    pub verify_noise_mult: f64,
+}
+
+pub fn variant_tweak(model_name: &str) -> VariantTweak {
+    match model_name {
+        // QwQ-32B: the stronger judge (reference point).
+        "qwq-sim" => VariantTweak { capability_delta: 0.0, verify_noise_mult: 1.0 },
+        // Skywork-OR1: "slightly inferior at instruction following" ⇒
+        // noisier utility scores, slightly lower accuracy.
+        "skywork-sim" => VariantTweak { capability_delta: -0.02, verify_noise_mult: 1.45 },
+        // R1-70B: weaker judge than QwQ-32B despite more params (§A.1).
+        "r1-70b-sim" => VariantTweak { capability_delta: -0.03, verify_noise_mult: 1.30 },
+        // R1-1.5B reference speculator.
+        "r1-sim" => VariantTweak { capability_delta: 0.0, verify_noise_mult: 1.0 },
+        // ZR1-1.5B: stronger on math, similar elsewhere.
+        "zr1-sim" => VariantTweak { capability_delta: 0.03, verify_noise_mult: 1.0 },
+        _ => VariantTweak { capability_delta: 0.0, verify_noise_mult: 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_resolve() {
+        assert_eq!(ModelClass::of("qwq-sim"), ModelClass::Base);
+        assert_eq!(ModelClass::of("skywork-sim"), ModelClass::Base);
+        assert_eq!(ModelClass::of("r1-sim"), ModelClass::Small);
+        assert_eq!(ModelClass::of("zr1-sim"), ModelClass::Small);
+        assert_eq!(ModelClass::of("r1-70b-sim"), ModelClass::Large);
+    }
+
+    #[test]
+    fn verbosity_ratio_in_paper_band() {
+        // Fig. 4a / Fig. 9: small models need 1.2–2.0× fewer tokens.
+        let c = Calibration::default();
+        let ratio = c.verbosity_of(ModelClass::Base) / c.verbosity_of(ModelClass::Small);
+        assert!((1.2..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn base_reflects_more_than_small() {
+        let c = Calibration::default();
+        assert!(c.reflection_of(ModelClass::Base) > c.reflection_of(ModelClass::Small));
+    }
+
+    #[test]
+    fn skywork_is_the_noisier_judge() {
+        assert!(variant_tweak("skywork-sim").verify_noise_mult > variant_tweak("qwq-sim").verify_noise_mult);
+        assert!(variant_tweak("r1-70b-sim").verify_noise_mult > 1.0);
+    }
+
+    #[test]
+    fn math_has_highest_draft_agreement() {
+        let c = Calibration::default();
+        assert!(c.draft_agreement[1] > c.draft_agreement[0]);
+        assert!(c.draft_agreement[1] > c.draft_agreement[2]);
+    }
+}

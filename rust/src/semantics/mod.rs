@@ -1,0 +1,18 @@
+//! Semantic-oracle substrate: synthetic reasoning workloads + calibrated
+//! outcome models (the DESIGN.md §3 substitution for real LRM semantics).
+//!
+//! - [`datasets`]    — AIME / MATH500 / GPQA statistical profiles
+//! - [`trace`]       — deterministic query/plan generator
+//! - [`calibration`] — every constant, each anchored to a paper number
+//! - [`oracle`]      — step quality, 0–9 utility scores, PRM scores,
+//!                     trajectory health with self-reflection, pass@1
+
+pub mod calibration;
+pub mod datasets;
+pub mod oracle;
+pub mod trace;
+
+pub use calibration::{Calibration, ModelClass};
+pub use datasets::{Dataset, DatasetProfile};
+pub use oracle::{Oracle, Trajectory};
+pub use trace::{Query, StepSpec, TraceGenerator};

@@ -1,0 +1,480 @@
+//! The semantic oracle: step quality, judge scores, trajectory health,
+//! final-answer correctness.
+//!
+//! Substitution rationale (DESIGN.md §3): the proxy models execute *real*
+//! compute — every latency number is measured — but random weights carry
+//! no semantics, so the oracle supplies the quantities that, on the
+//! paper's testbed, emerge from the LRMs themselves:
+//!
+//! * `step_quality` — how good a (model, step, attempt) outcome is, as a
+//!   function of model capability vs step difficulty (§3: "intermediate
+//!   steps are easier than end-to-end reasoning");
+//! * `verifier_score` — the base model's single-token 0–9 utility score
+//!   (§4.1), a *noisy view* of quality (§5.4 shows it tracks a PRM);
+//! * `prm_score` — Math-Shepherd's score for the same step (Fig. 7's
+//!   comparator), an independently-noisy view of the same quality;
+//! * `Trajectory` — health dynamics with self-reflection (§3: "occasional
+//!   mistakes can be corrected via self-reflection");
+//! * `final_answer_correct` — pass@1 outcome given capability, health and
+//!   budget-completion pressure (Fig. 4b's mechanism).
+//!
+//! Everything is a deterministic function of (query seed, step, attempt,
+//! purpose) so schemes can be compared on identical randomness.
+
+use crate::semantics::calibration::{variant_tweak, Calibration, ModelClass};
+use crate::semantics::datasets::capability;
+use crate::semantics::trace::{Query, StepSpec};
+
+/// RNG purposes (keep streams independent).
+const P_QUALITY: u64 = 1;
+const P_VERIFY: u64 = 2;
+const P_PRM: u64 = 3;
+const P_TOKENS: u64 = 4;
+const P_ANSWER: u64 = 5;
+const P_REFLECT: u64 = 6;
+const P_DRAFT: u64 = 7;
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[derive(Debug, Default)]
+pub struct Oracle {
+    pub calib: Calibration,
+    /// Cache of a model's expected own-trajectory health per dataset
+    /// (Monte-Carlo; see `own_health`).
+    own_health_cache: std::sync::Mutex<std::collections::BTreeMap<(crate::semantics::datasets::Dataset, String), f64>>,
+}
+
+impl Clone for Oracle {
+    fn clone(&self) -> Self {
+        Oracle {
+            calib: self.calib.clone(),
+            own_health_cache: std::sync::Mutex::new(
+                self.own_health_cache.lock().unwrap().clone(),
+            ),
+        }
+    }
+}
+
+impl Oracle {
+    pub fn new(calib: Calibration) -> Self {
+        Oracle { calib, own_health_cache: Default::default() }
+    }
+
+    /// Latent quality of `model`'s attempt at plan step `step` ∈ [0, 1].
+    /// Deterministic per (query, step, attempt, model class+variant).
+    pub fn step_quality(&self, q: &Query, step: usize, attempt: usize, model: &str) -> f64 {
+        let spec = &q.plan[step];
+        let class = ModelClass::of(model);
+        let cap = capability(q.dataset, class).step + variant_tweak(model).capability_delta;
+        let mut rng = q.rng_for(step, attempt, P_QUALITY ^ model_tag(model));
+        let noise = rng.normal_with(0.0, 6.0 * self.calib.sigma_quality);
+        sigmoid(6.0 * (cap - spec.difficulty) + noise)
+    }
+
+    /// The base model's 0–9 utility score for a speculated step (§4.1).
+    /// A noisy, judge-dependent view of the latent quality.
+    pub fn verifier_score(
+        &self,
+        q: &Query,
+        step: usize,
+        attempt: usize,
+        quality: f64,
+        judge: &str,
+    ) -> u8 {
+        let noise_mult = variant_tweak(judge).verify_noise_mult;
+        let mut rng = q.rng_for(step, attempt, P_VERIFY ^ model_tag(judge));
+        let noise = rng.normal_with(0.0, self.calib.score_slope * self.calib.sigma_verify * noise_mult);
+        let z = sigmoid(self.calib.score_slope * (quality - self.calib.score_center) + noise);
+        (z * 9.0).round().clamp(0.0, 9.0) as u8
+    }
+
+    /// Math-Shepherd-style PRM score ∈ [0, 1] for the same step (Fig. 7).
+    pub fn prm_score(&self, q: &Query, step: usize, attempt: usize, quality: f64) -> f64 {
+        let mut rng = q.rng_for(step, attempt, P_PRM);
+        let noise = rng.normal_with(0.0, self.calib.score_slope * self.calib.sigma_prm);
+        sigmoid(self.calib.score_slope * (quality - self.calib.score_center) + noise)
+    }
+
+    /// Token length of `model`'s rendering of plan step `step`
+    /// (canonical length × class verbosity × jitter).  Fig. 4a/9's
+    /// mechanism: small models are less verbose.
+    pub fn step_tokens(&self, q: &Query, step: usize, attempt: usize, model: &str) -> usize {
+        let spec = &q.plan[step];
+        let class = ModelClass::of(model);
+        let mut rng = q.rng_for(step, attempt, P_TOKENS ^ model_tag(model));
+        let jitter = rng.normal_with(1.0, 0.15).clamp(0.55, 1.6);
+        ((spec.canonical_tokens as f64) * self.calib.verbosity_of(class) * jitter)
+            .round()
+            .max(4.0) as usize
+    }
+
+    /// Per-token agreement probability for SpecDecode drafts.
+    pub fn draft_agreement(&self, q: &Query, small: &str) -> f64 {
+        let base = self.calib.draft_agreement[q.dataset.index()];
+        // ZR1's capability edge nudges agreement up a touch.
+        (base + variant_tweak(small).capability_delta * 0.5).clamp(0.0, 0.98)
+    }
+
+    /// Sample the accepted-prefix length of a k-token draft (Leviathan
+    /// verification: accept until first disagreement).
+    pub fn draft_accepted_prefix(
+        &self,
+        q: &Query,
+        round: usize,
+        k: usize,
+        small: &str,
+    ) -> usize {
+        let p = self.draft_agreement(q, small);
+        let mut rng = q.rng_for(round, 0, P_DRAFT ^ model_tag(small));
+        let mut n = 0;
+        while n < k && rng.bernoulli(p) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Whether self-reflection fires at step `step` (generator `model`
+    /// noticing an earlier flawed step).
+    pub fn reflects(&self, q: &Query, step: usize, attempt: usize, model: &str) -> bool {
+        let class = ModelClass::of(model);
+        let mut rng = q.rng_for(step, attempt, P_REFLECT ^ model_tag(model));
+        rng.bernoulli(self.calib.reflection_of(class))
+    }
+
+    /// Expected final health of a trajectory executed entirely by
+    /// `model` on `dataset` (Monte-Carlo over synthetic plans, cached).
+    /// Used to normalize health in `final_answer_correct`: a model's
+    /// end-to-end capability anchor already prices in its own typical
+    /// step errors, so only degradation *relative to its own baseline*
+    /// (e.g. accepted bad speculations) should cost accuracy.
+    pub fn own_health(&self, dataset: crate::semantics::datasets::Dataset, model: &str) -> f64 {
+        let key = (dataset, model.to_string());
+        if let Some(&h) = self.own_health_cache.lock().unwrap().get(&key) {
+            return h;
+        }
+        let gen = crate::semantics::trace::TraceGenerator::new(dataset, 0xCA11B8A7E);
+        let n = 64;
+        let mut acc = 0.0;
+        for q in gen.queries(n) {
+            let mut t = Trajectory::default();
+            for (s, spec) in q.plan.iter().enumerate() {
+                let quality = self.step_quality(&q, s, 9999, model);
+                t.apply_step(self, &q, spec, s, 9999, quality, model);
+            }
+            t.finalize();
+            acc += t.health;
+        }
+        let h = acc / n as f64;
+        self.own_health_cache.lock().unwrap().insert(key, h);
+        h
+    }
+
+    /// Final pass@1 outcome. `sample` differentiates the k pass@1 samples.
+    pub fn final_answer_correct(
+        &self,
+        q: &Query,
+        answer_model: &str,
+        health: f64,
+        completion: f64,
+        sample: usize,
+    ) -> bool {
+        let class = ModelClass::of(answer_model);
+        let cap = (capability(q.dataset, class).answer
+            + variant_tweak(answer_model).capability_delta)
+            .clamp(0.0, 1.0);
+        // Difficulty tilt: inside one dataset, harder queries are less
+        // likely to be solved (keeps per-query correlation realistic).
+        let tilt = 0.85 + 0.3 * sigmoid(3.0 * (0.5 - q.difficulty)); // ∈ (0.85, 1.15)
+        // Health relative to the answering model's own baseline.
+        let health_ratio = (health / self.own_health(q.dataset, answer_model).max(1e-6))
+            .clamp(0.0, self.calib.health_ratio_cap);
+        let p = (cap * tilt).clamp(0.0, 1.0)
+            * health_ratio
+            * completion.clamp(0.0, 1.0).powf(self.calib.completion_kappa);
+        let mut rng = q.rng_for(sample, 0, P_ANSWER ^ model_tag(answer_model));
+        rng.bernoulli(p.clamp(0.0, 1.0))
+    }
+}
+
+fn model_tag(model: &str) -> u64 {
+    // FNV-1a over the name: stable stream separation per logical model.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in model.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Trajectory health dynamics across a chain of thought.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub health: f64,
+    /// Penalty from the most recent bad step, pending possible reflection
+    /// by the *next* step's generator.
+    pending_penalty: f64,
+    pub steps_done: usize,
+    pub reflections: usize,
+    pub bad_steps: usize,
+}
+
+impl Default for Trajectory {
+    fn default() -> Self {
+        Trajectory {
+            health: 1.0,
+            pending_penalty: 0.0,
+            steps_done: 0,
+            reflections: 0,
+            bad_steps: 0,
+        }
+    }
+}
+
+impl Trajectory {
+    /// Record the outcome of executing plan step `step` with `quality` by
+    /// `model`.  Returns extra reflection tokens to charge (if the
+    /// generator paused to repair an earlier mistake).
+    pub fn apply_step(
+        &mut self,
+        oracle: &Oracle,
+        q: &Query,
+        spec: &StepSpec,
+        step: usize,
+        attempt: usize,
+        quality: f64,
+        model: &str,
+    ) -> usize {
+        let mut extra_tokens = 0;
+        // Resolve any pending penalty: the current generator may reflect.
+        if self.pending_penalty > 0.0 {
+            if oracle.reflects(q, step, attempt, model) {
+                self.health -= self.pending_penalty * (1.0 - oracle.calib.reflection_refund);
+                self.reflections += 1;
+                extra_tokens = (oracle.calib.reflection_extra_tokens as f64
+                    * oracle.calib.verbosity_of(ModelClass::of(model)))
+                    .round() as usize;
+            } else {
+                self.health -= self.pending_penalty;
+            }
+            self.pending_penalty = 0.0;
+        }
+        // A sub-par step stages a new penalty, growing linearly as
+        // quality falls below the bar (Fig. 5: even mediocre accepted
+        // steps cost accuracy, not only outright-wrong ones).
+        let bar = oracle.calib.quality_bar;
+        if quality < bar {
+            self.bad_steps += 1;
+            let mut p = oracle.calib.health_penalty * (bar - quality) / bar;
+            if spec.critical {
+                p *= oracle.calib.critical_multiplier;
+            }
+            self.pending_penalty = p;
+        }
+        self.steps_done += 1;
+        self.health = self.health.clamp(0.05, 1.0);
+        extra_tokens
+    }
+
+    /// Close out the trajectory (unresolved penalties land in full).
+    pub fn finalize(&mut self) {
+        self.health = (self.health - self.pending_penalty).clamp(0.05, 1.0);
+        self.pending_penalty = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::semantics::datasets::Dataset;
+    use crate::semantics::trace::TraceGenerator;
+
+    fn q() -> Query {
+        TraceGenerator::new(Dataset::Aime, 42).query(0)
+    }
+
+    #[test]
+    fn quality_is_deterministic_and_model_dependent() {
+        let o = Oracle::default();
+        let q = q();
+        let a = o.step_quality(&q, 0, 0, "r1-sim");
+        let b = o.step_quality(&q, 0, 0, "r1-sim");
+        assert_eq!(a, b);
+        let c = o.step_quality(&q, 0, 0, "qwq-sim");
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn base_beats_small_on_average_quality() {
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Aime, 1);
+        let (mut qb, mut qs, mut n) = (0.0, 0.0, 0);
+        for qi in g.queries(40) {
+            for s in 0..qi.plan_len() {
+                qb += o.step_quality(&qi, s, 0, "qwq-sim");
+                qs += o.step_quality(&qi, s, 0, "r1-sim");
+                n += 1;
+            }
+        }
+        assert!(qb / n as f64 > qs / n as f64 + 0.08);
+    }
+
+    #[test]
+    fn routine_steps_are_speculable_critical_less_so() {
+        // §3's heterogeneity claim, quantified: the small model's quality
+        // on routine steps is high; on critical steps it drops.
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Aime, 2);
+        let (mut qr, mut nr, mut qc, mut nc) = (0.0, 0, 0.0, 0);
+        for qi in g.queries(60) {
+            for (s, spec) in qi.plan.iter().enumerate() {
+                let ql = o.step_quality(&qi, s, 0, "r1-sim");
+                if spec.critical {
+                    qc += ql;
+                    nc += 1;
+                } else {
+                    qr += ql;
+                    nr += 1;
+                }
+            }
+        }
+        let (qr, qc) = (qr / nr as f64, qc / nc as f64);
+        assert!(qr > 0.75, "routine quality {qr}");
+        assert!(qc < qr - 0.2, "critical {qc} vs routine {qr}");
+    }
+
+    #[test]
+    fn verifier_score_tracks_quality() {
+        let o = Oracle::default();
+        let q = q();
+        let lo: f64 = (0..200)
+            .map(|a| o.verifier_score(&q, 1, a, 0.2, "qwq-sim") as f64)
+            .sum::<f64>()
+            / 200.0;
+        let hi: f64 = (0..200)
+            .map(|a| o.verifier_score(&q, 1, a, 0.9, "qwq-sim") as f64)
+            .sum::<f64>()
+            / 200.0;
+        assert!(lo < 3.0, "low-quality mean score {lo}");
+        assert!(hi > 7.0, "high-quality mean score {hi}");
+    }
+
+    #[test]
+    fn prm_and_verifier_correlate() {
+        // Fig. 7's premise as a property of the oracle.
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Aime, 3);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for qi in g.queries(30) {
+            for s in 0..qi.plan_len() {
+                let ql = o.step_quality(&qi, s, 0, "r1-sim");
+                xs.push(o.prm_score(&qi, s, 0, ql));
+                ys.push(o.verifier_score(&qi, s, 0, ql, "qwq-sim") as f64);
+            }
+        }
+        let r = crate::util::stats::pearson(&xs, &ys);
+        assert!(r > 0.75, "pearson {r}");
+    }
+
+    #[test]
+    fn small_is_less_verbose() {
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Math500, 4);
+        let (mut tb, mut ts) = (0usize, 0usize);
+        for qi in g.queries(40) {
+            for s in 0..qi.plan_len() {
+                tb += o.step_tokens(&qi, s, 0, "qwq-sim");
+                ts += o.step_tokens(&qi, s, 0, "r1-sim");
+            }
+        }
+        let ratio = tb as f64 / ts as f64;
+        assert!((1.2..=2.0).contains(&ratio), "verbosity ratio {ratio}");
+    }
+
+    #[test]
+    fn trajectory_health_dynamics() {
+        let o = Oracle::default();
+        let q = q();
+        let spec_routine = StepSpec { difficulty: 0.2, critical: false, canonical_tokens: 20 };
+        let spec_crit = StepSpec { difficulty: 0.8, critical: true, canonical_tokens: 20 };
+
+        // All-good trajectory keeps full health.
+        let mut t = Trajectory::default();
+        for i in 0..10 {
+            t.apply_step(&o, &q, &spec_routine, i, 0, 0.9, "qwq-sim");
+        }
+        t.finalize();
+        assert!((t.health - 1.0).abs() < 1e-9);
+        assert_eq!(t.bad_steps, 0);
+
+        // A bad critical step hurts more than a bad routine step.
+        let mut tr = Trajectory::default();
+        tr.apply_step(&o, &q, &spec_routine, 0, 0, 0.1, "qwq-sim");
+        tr.finalize();
+        let mut tc = Trajectory::default();
+        tc.apply_step(&o, &q, &spec_crit, 0, 0, 0.1, "qwq-sim");
+        tc.finalize();
+        assert!(tc.health < tr.health);
+        assert!(tr.health < 1.0);
+    }
+
+    #[test]
+    fn reflection_softens_damage_on_average() {
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Aime, 5);
+        let spec_bad = StepSpec { difficulty: 0.9, critical: false, canonical_tokens: 20 };
+        let spec_ok = StepSpec { difficulty: 0.1, critical: false, canonical_tokens: 20 };
+        let run = |model: &str| -> f64 {
+            let mut acc = 0.0;
+            for (i, qi) in g.queries(120).into_iter().enumerate() {
+                let mut t = Trajectory::default();
+                t.apply_step(&o, &qi, &spec_bad, 0, i, 0.1, model);
+                t.apply_step(&o, &qi, &spec_ok, 1, i, 0.9, model);
+                t.finalize();
+                acc += t.health;
+            }
+            acc / 120.0
+        };
+        // Base reflects more often than small ⇒ retains more health.
+        assert!(run("qwq-sim") > run("r1-sim") + 0.01);
+    }
+
+    #[test]
+    fn final_answer_rates_anchor_to_capabilities() {
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Math500, 6);
+        let acc = |model: &str| -> f64 {
+            let mut c = 0;
+            let n = 400;
+            for (i, qi) in g.queries(n).into_iter().enumerate() {
+                if o.final_answer_correct(&qi, model, 1.0, 1.0, i) {
+                    c += 1;
+                }
+            }
+            c as f64 / n as f64
+        };
+        let base = acc("qwq-sim");
+        let small = acc("r1-sim");
+        assert!(base > 0.85, "base MATH ceiling {base}");
+        assert!(small < base, "small {small} < base {base}");
+        assert!(small > 0.6, "small MATH ceiling {small}");
+    }
+
+    #[test]
+    fn draft_prefix_distribution() {
+        let o = Oracle::default();
+        let g = TraceGenerator::new(Dataset::Math500, 7);
+        let mut total = 0usize;
+        let n = 300;
+        for (i, qi) in g.queries(30).into_iter().enumerate() {
+            for r in 0..10 {
+                total += o.draft_accepted_prefix(&qi, i * 10 + r, 5, "r1-sim");
+            }
+        }
+        let mean = total as f64 / n as f64;
+        // p=0.8, k=5 ⇒ E ≈ p(1-p^5)/(1-p) ≈ 2.7
+        assert!((2.2..=3.2).contains(&mean), "mean accepted prefix {mean}");
+    }
+}

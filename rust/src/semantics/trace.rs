@@ -1,0 +1,232 @@
+//! Synthetic reasoning-trace (workload) generator.
+//!
+//! A `Query` is one benchmark question: a difficulty scalar, a prompt
+//! (real tokens fed to the real models), and a latent *plan* — the
+//! sequence of reasoning steps an ideal solver would take, each with its
+//! own difficulty and canonical length.  The coordinator walks the plan,
+//! letting the configured scheme decide which model executes each step;
+//! the oracle scores the outcomes.
+//!
+//! All draws are made from a per-query forked RNG, so a (dataset, query
+//! index, seed) triple is fully reproducible across schemes — exactly
+//! what an accuracy-vs-latency comparison requires (every scheme sees the
+//! *same* questions).
+
+use crate::semantics::datasets::{Dataset, DatasetProfile};
+use crate::util::rng::Rng;
+
+/// One latent reasoning step in the plan.
+#[derive(Debug, Clone)]
+pub struct StepSpec {
+    /// Difficulty in [0, 1].
+    pub difficulty: f64,
+    /// Critical steps (problem decomposition / high-level planning) hurt
+    /// more when botched; LRMs put them early (§3, Fig. 6 knob).
+    pub critical: bool,
+    /// Canonical token length at verbosity 1.0.
+    pub canonical_tokens: usize,
+}
+
+/// One benchmark question.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub dataset: Dataset,
+    /// Index within the (synthetic) dataset.
+    pub index: usize,
+    /// Root seed for all per-query randomness.
+    pub seed: u64,
+    /// Overall difficulty in [0, 1].
+    pub difficulty: f64,
+    /// The latent plan.
+    pub plan: Vec<StepSpec>,
+    /// Prompt token ids (<bos> + synthetic question bytes).
+    pub prompt: Vec<i32>,
+}
+
+impl Query {
+    pub fn plan_len(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Canonical total thinking tokens (verbosity 1.0).
+    pub fn canonical_tokens(&self) -> usize {
+        self.plan.iter().map(|s| s.canonical_tokens).sum()
+    }
+
+    /// Deterministic sub-stream for (step, attempt, purpose).
+    pub fn rng_for(&self, step: usize, attempt: usize, purpose: u64) -> Rng {
+        let tag = (step as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(attempt as u64)
+            .wrapping_mul(0xD1B54A32D192ED03)
+            .wrapping_add(purpose);
+        Rng::new(self.seed ^ tag)
+    }
+}
+
+/// Generates the synthetic dataset deterministically from a root seed.
+pub struct TraceGenerator {
+    profile: DatasetProfile,
+    root_seed: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(dataset: Dataset, root_seed: u64) -> Self {
+        TraceGenerator { profile: DatasetProfile::of(dataset), root_seed }
+    }
+
+    pub fn profile(&self) -> &DatasetProfile {
+        &self.profile
+    }
+
+    /// Generate query `index` (stable under out-of-order access).
+    pub fn query(&self, index: usize) -> Query {
+        let p = &self.profile;
+        let seed = self
+            .root_seed
+            .wrapping_add(0x51_7E_C0DE)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(index as u64);
+        let mut rng = Rng::new(seed);
+
+        let difficulty = rng.beta(p.difficulty_beta.0, p.difficulty_beta.1);
+        let plan_len = (rng.normal_with(p.plan_len_mean, p.plan_len_std))
+            .round()
+            .clamp(4.0, 64.0) as usize;
+
+        // Critical steps concentrate early: LRMs "use the initial steps to
+        // analyze the problem and formulate a high-level plan" (§4.1).
+        let n_critical = ((plan_len as f64) * p.critical_frac).round().max(1.0) as usize;
+        let mut plan = Vec::with_capacity(plan_len);
+        for i in 0..plan_len {
+            let early_bias = 1.0 - (i as f64 / plan_len as f64); // 1 → 0
+            let critical = i < 2
+                || (plan.iter().filter(|s: &&StepSpec| s.critical).count() < n_critical
+                    && rng.bernoulli(p.critical_frac * (0.5 + early_bias)));
+            // Critical steps skew harder; routine steps are easy cases of
+            // the query's overall difficulty.
+            let d = if critical {
+                (difficulty * rng.beta(5.0, 1.8)).clamp(0.0, 1.0)
+            } else {
+                (difficulty * rng.beta(1.8, 4.0)).clamp(0.0, 1.0)
+            };
+            let toks = (rng.gamma(p.step_tokens_shape) * p.step_tokens_scale)
+                .round()
+                .clamp(6.0, 64.0) as usize;
+            plan.push(StepSpec { difficulty: d, critical, canonical_tokens: toks });
+        }
+
+        // Synthetic prompt: <bos> + pseudo-question bytes of realistic
+        // length (the models are real; the bytes carry no semantics).
+        let plen = rng.range(p.prompt_len.0, p.prompt_len.1);
+        let mut prompt = Vec::with_capacity(plen);
+        prompt.push(257); // <bos>
+        for _ in 1..plen {
+            // printable ASCII region keeps decoded transcripts readable
+            prompt.push(rng.range(32, 126) as i32);
+        }
+
+        Query { dataset: p.dataset, index, seed, difficulty, plan, prompt }
+    }
+
+    /// A batch of queries [0, n).
+    pub fn queries(&self, n: usize) -> Vec<Query> {
+        (0..n).map(|i| self.query(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let g = TraceGenerator::new(Dataset::Aime, 7);
+        let a = g.query(3);
+        let b = g.query(3);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.plan.len(), b.plan.len());
+        assert_eq!(a.difficulty, b.difficulty);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let g = TraceGenerator::new(Dataset::Aime, 7);
+        assert_ne!(g.query(0).prompt, g.query(1).prompt);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = TraceGenerator::new(Dataset::Aime, 1).query(0);
+        let b = TraceGenerator::new(Dataset::Aime, 2).query(0);
+        assert_ne!(a.prompt, b.prompt);
+    }
+
+    #[test]
+    fn plans_are_sane() {
+        let g = TraceGenerator::new(Dataset::Gpqa, 11);
+        for q in g.queries(50) {
+            assert!((4..=64).contains(&q.plan_len()));
+            assert!(q.plan.iter().any(|s| s.critical));
+            assert!(q.plan[0].critical, "first step should be planning");
+            for s in &q.plan {
+                assert!((0.0..=1.0).contains(&s.difficulty));
+                assert!((6..=64).contains(&s.canonical_tokens));
+            }
+            let (lo, hi) = DatasetProfile::of(Dataset::Gpqa).prompt_len;
+            assert!((lo..=hi).contains(&q.prompt.len()));
+            assert_eq!(q.prompt[0], 257);
+        }
+    }
+
+    #[test]
+    fn critical_steps_are_harder_on_average() {
+        let g = TraceGenerator::new(Dataset::Aime, 3);
+        let (mut dc, mut nc, mut dr, mut nr) = (0.0, 0, 0.0, 0);
+        for q in g.queries(100) {
+            for s in &q.plan {
+                if s.critical {
+                    dc += s.difficulty;
+                    nc += 1;
+                } else {
+                    dr += s.difficulty;
+                    nr += 1;
+                }
+            }
+        }
+        assert!(dc / nc as f64 > dr / nr as f64 + 0.1);
+    }
+
+    #[test]
+    fn rng_streams_are_independent() {
+        let g = TraceGenerator::new(Dataset::Math500, 5);
+        let q = g.query(0);
+        let mut a = q.rng_for(0, 0, 1);
+        let mut b = q.rng_for(0, 1, 1);
+        let mut c = q.rng_for(1, 0, 1);
+        let mut a2 = q.rng_for(0, 0, 1);
+        assert_eq!(a.next_u64(), a2.next_u64());
+        assert_ne!(b.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn canonical_token_budget_scale() {
+        // AIME plans at verbosity ~1.15 should pressure a 640-token budget
+        // (that's the Fig. 4b mechanism); MATH should mostly fit.
+        let aime: f64 = TraceGenerator::new(Dataset::Aime, 9)
+            .queries(100)
+            .iter()
+            .map(|q| q.canonical_tokens() as f64)
+            .sum::<f64>()
+            / 100.0;
+        let math: f64 = TraceGenerator::new(Dataset::Math500, 9)
+            .queries(100)
+            .iter()
+            .map(|q| q.canonical_tokens() as f64)
+            .sum::<f64>()
+            / 100.0;
+        assert!(aime * 1.15 > 640.0, "aime canonical {aime}");
+        assert!(math * 1.15 < 640.0, "math canonical {math}");
+    }
+}

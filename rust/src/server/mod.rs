@@ -1,0 +1,164 @@
+//! TCP serving front end: newline-delimited JSON requests routed through
+//! a bounded queue to the engine worker (see router.rs).
+//!
+//! Threading model (tokio is unavailable offline — DESIGN.md §3):
+//! one accept loop + a fixed [`ThreadPool`](crate::util::threadpool) of
+//! connection handlers + one engine worker thread.  This matches the
+//! paper's deployment: a single engine serializes the two colocated
+//! models; concurrency above it is I/O only.
+
+pub mod protocol;
+pub mod router;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::DeployConfig;
+use crate::util::threadpool::ThreadPool;
+pub use protocol::{Op, QueryRequest, Request};
+pub use router::{Router, RouterStats};
+
+pub struct Server {
+    listener: TcpListener,
+    router: Arc<Router>,
+    pool: ThreadPool,
+    shutdown: Arc<AtomicBool>,
+    pub addr: std::net::SocketAddr,
+}
+
+impl Server {
+    /// Bind and start the engine. Use `addr = "127.0.0.1:0"` for an
+    /// ephemeral port (tests).
+    pub fn bind(cfg: DeployConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let io_threads = cfg.io_threads;
+        let router = Arc::new(Router::start(cfg)?);
+        Ok(Server {
+            listener,
+            router,
+            pool: ThreadPool::new(io_threads),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            addr,
+        })
+    }
+
+    /// Serve until a `shutdown` op arrives. Blocks.
+    pub fn run(self) -> Result<()> {
+        // Accept-loop wakeups for shutdown: set a small timeout via
+        // nonblocking accept + sleep (portable without mio).
+        self.listener.set_nonblocking(true)?;
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let router = Arc::clone(&self.router);
+                    let shutdown = Arc::clone(&self.shutdown);
+                    self.pool.execute(move || {
+                        if let Err(e) = handle_connection(stream, &router, &shutdown) {
+                            eprintln!("[server] connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Err(e) => protocol::error_response(0, &format!("{e:#}")),
+            Ok(req) => match req.op {
+                Op::Ping => protocol::ok_response(req.id, crate::util::json::Json::str("pong")),
+                Op::Stats => protocol::ok_response(req.id, router.stats_json()),
+                Op::Shutdown => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    protocol::ok_response(req.id, crate::util::json::Json::str("bye"))
+                }
+                Op::Query(q) => match router.submit(q) {
+                    Err(e) => protocol::error_response(req.id, &format!("{e:#}")),
+                    Ok(rx) => match rx.recv() {
+                        Ok(Ok(result)) => protocol::ok_response(req.id, result),
+                        Ok(Err(e)) => protocol::error_response(req.id, &format!("{e:#}")),
+                        Err(_) => protocol::error_response(req.id, "engine worker dropped"),
+                    },
+                },
+            },
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: i64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    /// Send a raw op object (fields besides id) and return the response.
+    pub fn call(&mut self, mut body: crate::util::json::Json) -> Result<crate::util::json::Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        body.set("id", crate::util::json::Json::num(id as f64));
+        self.writer.write_all(body.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = crate::util::json::Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        if resp.get("ok").as_bool() != Some(true) {
+            anyhow::bail!(
+                "server error: {}",
+                resp.get("error").as_str().unwrap_or("unknown")
+            );
+        }
+        Ok(resp.get("result").clone())
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        use crate::util::json::Json;
+        let r = self.call(Json::obj(vec![("op", Json::str("ping"))]))?;
+        anyhow::ensure!(r.as_str() == Some("pong"), "unexpected ping reply");
+        Ok(())
+    }
+}

@@ -1,0 +1,191 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Requests:
+//! ```json
+//! {"id": 1, "op": "query", "dataset": "aime", "query_index": 3,
+//!  "scheme": "spec-reason", "threshold": 7, "first_n_base": 0,
+//!  "budget": 704, "sample": 0}
+//! {"id": 2, "op": "stats"}
+//! {"id": 3, "op": "ping"}
+//! {"id": 4, "op": "shutdown"}
+//! ```
+//! Responses: `{"id": 1, "ok": true, "result": {...}}` or
+//! `{"id": 1, "ok": false, "error": "..."}`.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Scheme;
+use crate::metrics::QueryMetrics;
+use crate::semantics::Dataset;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub enum Op {
+    Ping,
+    Stats,
+    Shutdown,
+    Query(QueryRequest),
+}
+
+#[derive(Debug, Clone)]
+pub struct QueryRequest {
+    pub dataset: Dataset,
+    pub query_index: usize,
+    pub sample: usize,
+    pub scheme: Option<Scheme>,
+    pub threshold: Option<u8>,
+    pub first_n_base: Option<usize>,
+    pub budget: Option<usize>,
+    /// Workload seed (defaults to the server's).
+    pub seed: Option<u64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: i64,
+    pub op: Op,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line).context("request is not valid JSON")?;
+        let id = j.get("id").as_i64().unwrap_or(0);
+        let op = match j.req_str("op")? {
+            "ping" => Op::Ping,
+            "stats" => Op::Stats,
+            "shutdown" => Op::Shutdown,
+            "query" => {
+                let dataset = Dataset::parse(j.req_str("dataset")?)?;
+                let scheme = match j.get("scheme").as_str() {
+                    Some(s) => Some(Scheme::parse(s)?),
+                    None => None,
+                };
+                let threshold = match j.get("threshold").as_usize() {
+                    Some(t) => {
+                        anyhow::ensure!(t <= 9, "threshold must be 0..=9");
+                        Some(t as u8)
+                    }
+                    None => None,
+                };
+                Op::Query(QueryRequest {
+                    dataset,
+                    query_index: j.get("query_index").as_usize().unwrap_or(0),
+                    sample: j.get("sample").as_usize().unwrap_or(0),
+                    scheme,
+                    threshold,
+                    first_n_base: j.get("first_n_base").as_usize(),
+                    budget: j.get("budget").as_usize(),
+                    seed: j.get("seed").as_usize().map(|s| s as u64),
+                })
+            }
+            other => anyhow::bail!("unknown op '{other}'"),
+        };
+        Ok(Request { id, op })
+    }
+}
+
+/// Build an error response line.
+pub fn error_response(id: i64, err: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(err)),
+    ])
+    .to_string()
+}
+
+/// Build a success response line.
+pub fn ok_response(id: i64, result: Json) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("result", result),
+    ])
+    .to_string()
+}
+
+/// Serialize query metrics for the wire.
+pub fn metrics_to_json(m: &QueryMetrics, scheme: Scheme) -> Json {
+    let mut phases = Json::Obj(Default::default());
+    for (k, v) in &m.phase_wall {
+        phases.set(k, Json::num(*v));
+    }
+    Json::obj(vec![
+        ("scheme", Json::str(scheme.name())),
+        ("correct", Json::Bool(m.answer_correct)),
+        ("wall_secs", Json::num(m.wall_secs)),
+        ("gpu_secs", Json::num(m.gpu_secs)),
+        ("thinking_tokens", Json::num(m.thinking_tokens as f64)),
+        ("steps_total", Json::num(m.steps_total as f64)),
+        ("steps_speculated", Json::num(m.steps_speculated as f64)),
+        ("steps_accepted", Json::num(m.steps_accepted as f64)),
+        ("acceptance_rate", Json::num(m.acceptance_rate())),
+        ("offload_ratio", Json::num(m.offload_ratio())),
+        ("phase_wall", phases),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_query_request() {
+        let r = Request::parse(
+            r#"{"id": 7, "op": "query", "dataset": "math500", "query_index": 2,
+                "scheme": "spec-reason", "threshold": 5, "budget": 256}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 7);
+        match r.op {
+            Op::Query(q) => {
+                assert_eq!(q.dataset, Dataset::Math500);
+                assert_eq!(q.query_index, 2);
+                assert_eq!(q.scheme, Some(Scheme::SpecReason));
+                assert_eq!(q.threshold, Some(5));
+                assert_eq!(q.budget, Some(256));
+                assert_eq!(q.first_n_base, None);
+            }
+            _ => panic!("wrong op"),
+        }
+    }
+
+    #[test]
+    fn parses_control_ops() {
+        assert!(matches!(Request::parse(r#"{"op":"ping"}"#).unwrap().op, Op::Ping));
+        assert!(matches!(Request::parse(r#"{"op":"stats"}"#).unwrap().op, Op::Stats));
+        assert!(matches!(
+            Request::parse(r#"{"op":"shutdown"}"#).unwrap().op,
+            Op::Shutdown
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Request::parse("nope").is_err());
+        assert!(Request::parse(r#"{"op":"warp"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"query"}"#).is_err()); // no dataset
+        assert!(Request::parse(r#"{"op":"query","dataset":"aime","threshold":11}"#).is_err());
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        let e = error_response(3, "boom \"quoted\"");
+        let j = Json::parse(&e).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        let o = ok_response(4, Json::num(1.5));
+        let j = Json::parse(&o).unwrap();
+        assert_eq!(j.get("result").as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn metrics_serialize() {
+        let mut m = QueryMetrics::default();
+        m.answer_correct = true;
+        m.thinking_tokens = 321;
+        m.steps_total = 9;
+        let j = metrics_to_json(&m, Scheme::SpecReason);
+        assert_eq!(j.get("correct").as_bool(), Some(true));
+        assert_eq!(j.get("thinking_tokens").as_usize(), Some(321));
+    }
+}

@@ -1,0 +1,195 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §3).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use this
+//! module: warmup, timed iterations, bootstrap confidence intervals, and
+//! paper-style table printing. Output format mirrors criterion's
+//! `name  time: [lo mean hi]` lines so downstream tooling/eyeballs work
+//! the same way.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Sample;
+
+/// Configuration for one benchmark group, overridable via env:
+/// `SPECREASON_BENCH_ITERS`, `SPECREASON_BENCH_WARMUP`.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap so an end-to-end eval bench cannot run unbounded.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let iters = std::env::var("SPECREASON_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        let warmup = std::env::var("SPECREASON_BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        BenchConfig {
+            warmup_iters: warmup,
+            measure_iters: iters,
+            max_total: Duration::from_secs(600),
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration wall times.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub times_s: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.times_s.iter().sum::<f64>() / self.times_s.len().max(1) as f64
+    }
+    pub fn report(&self) -> String {
+        let mut s = Sample::new();
+        s.extend_from(&self.times_s);
+        let (lo, hi) = s.bootstrap_ci(300, 0.05, 7);
+        format!(
+            "{:<48} time: [{} {} {}]",
+            self.name,
+            fmt_time(lo),
+            fmt_time(s.mean()),
+            fmt_time(hi)
+        )
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.2} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Run a closure under the harness and print a criterion-style line.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, name: &str, mut f: F) -> BenchResult {
+    let started = Instant::now();
+    for _ in 0..cfg.warmup_iters {
+        if started.elapsed() > cfg.max_total {
+            break;
+        }
+        f();
+    }
+    let mut times = Vec::with_capacity(cfg.measure_iters);
+    for _ in 0..cfg.measure_iters {
+        if started.elapsed() > cfg.max_total && !times.is_empty() {
+            break;
+        }
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult { name: name.to_string(), times_s: times };
+    println!("{}", r.report());
+    r
+}
+
+/// Fixed-width table printer for paper-figure reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("\n=== {} ===\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig { warmup_iters: 1, measure_iters: 5, max_total: Duration::from_secs(5) };
+        let r = bench(&cfg, "noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.times_s.len(), 5);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(3.2e-9).ends_with("ns"));
+        assert!(fmt_time(3.2e-6).ends_with("µs"));
+        assert!(fmt_time(3.2e-3).ends_with("ms"));
+        assert!(fmt_time(3.2).ends_with("s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["scheme", "latency (s)", "acc (%)"]);
+        t.row(vec!["vanilla".into(), "103.2".into(), "61.0".into()]);
+        t.row(vec!["specreason".into(), "51.9".into(), "63.4".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("specreason"));
+        assert_eq!(s.lines().filter(|l| l.contains('|')).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, and generates `--help` text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+    pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+    pub fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+    pub fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+    /// Comma-separated list.
+    pub fn list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+/// Command definition: flags/options with help text.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(ArgSpec { name, help, default, is_flag: false });
+        self
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let default = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{default}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse raw args (not including the command name itself).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let known_flag = |n: &str| self.specs.iter().any(|s| s.name == n && s.is_flag);
+        let known_opt = |n: &str| self.specs.iter().any(|s| s.name == n && !s.is_flag);
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.help_text());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    if !known_opt(k) {
+                        anyhow::bail!("unknown option --{k}\n\n{}", self.help_text());
+                    }
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if known_flag(body) {
+                    out.flags.push(body.to_string());
+                } else if known_opt(body) {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{body} expects a value"))?;
+                    out.values.insert(body.to_string(), v.clone());
+                } else {
+                    anyhow::bail!("unknown option --{body}\n\n{}", self.help_text());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("threshold", "acceptance threshold", Some("7"))
+            .opt("dataset", "dataset name", None)
+            .flag("verbose", "chatty output")
+    }
+
+    fn parse(args: &[&str]) -> anyhow::Result<Args> {
+        cmd().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get("threshold"), Some("7"));
+        assert_eq!(a.get("dataset"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse(&["--threshold", "5", "--dataset=aime"]).unwrap();
+        assert_eq!(a.usize("threshold", 0).unwrap(), 5);
+        assert_eq!(a.get("dataset"), Some("aime"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["--verbose", "query.json"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["query.json"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--dataset"]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--threshold", "3"]).unwrap();
+        assert_eq!(a.usize("threshold", 9).unwrap(), 3);
+        assert!(a.f64("threshold", 0.0).unwrap() == 3.0);
+        let bad = parse(&["--threshold", "abc"]).unwrap();
+        assert!(bad.usize("threshold", 9).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--dataset", "aime,math500, gpqa"]).unwrap();
+        assert_eq!(a.list("dataset", ""), vec!["aime", "math500", "gpqa"]);
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--threshold"));
+        assert!(h.contains("[default: 7]"));
+    }
+}

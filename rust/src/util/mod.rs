@@ -1,0 +1,18 @@
+//! Infrastructure substrates built in-tree because the environment is
+//! offline (no serde/tokio/clap/criterion/proptest/rand — DESIGN.md §3):
+//!
+//! - [`json`]   — RFC 8259 parser/serializer (manifest, configs, wire protocol)
+//! - [`rng`]    — xoshiro256++ PRNG + normal/gamma/beta distributions
+//! - [`stats`]  — Welford, percentiles, histograms, Pearson, bootstrap CIs
+//! - [`cli`]    — argument parser with subcommands and generated help
+//! - [`bench`]  — criterion-style bench harness + table printer
+//! - [`threadpool`] — fixed worker pool for the serving front end
+//! - [`testing`] — mini property-testing harness + allclose assertions
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testing;
+pub mod threadpool;

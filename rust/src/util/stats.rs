@@ -1,0 +1,314 @@
+//! Small statistics toolkit used by metrics and the bench harness:
+//! online mean/variance (Welford), percentile summaries, histograms,
+//! Pearson correlation, and bootstrap confidence intervals.
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * (self.n * other.n) as f64 / n as f64;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.n = n;
+    }
+}
+
+/// A collected sample with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Sample {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+    pub fn extend_from(&mut self, xs: &[f64]) {
+        self.xs.extend_from_slice(xs);
+        self.sorted = false;
+    }
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+    pub fn std(&self) -> f64 {
+        let mut w = Welford::default();
+        for &x in &self.xs {
+            w.push(x);
+        }
+        w.std()
+    }
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = p / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Bootstrap CI of the mean (used by the bench harness to report
+    /// criterion-style intervals without criterion).
+    pub fn bootstrap_ci(&self, iters: usize, alpha: f64, seed: u64) -> (f64, f64) {
+        use super::rng::Rng;
+        if self.xs.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut rng = Rng::new(seed);
+        let mut means = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let mut sum = 0.0;
+            for _ in 0..self.xs.len() {
+                sum += self.xs[rng.below(self.xs.len())];
+            }
+            means.push(sum / self.xs.len() as f64);
+        }
+        let mut s = Sample { xs: means, sorted: false };
+        (
+            s.percentile(100.0 * alpha / 2.0),
+            s.percentile(100.0 * (1.0 - alpha / 2.0)),
+        )
+    }
+}
+
+/// Pearson correlation coefficient (Fig. 7 reports base-vs-PRM score
+/// correlation).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
+/// Fixed-width histogram over [lo, hi); out-of-range values clamp to the
+/// edge bins. Used for Fig. 7's ten PRM-score bins and latency histograms.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    sums: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], sums: vec![0.0; bins] }
+    }
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+    fn bin_of(&self, x: f64) -> usize {
+        let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64)
+            .floor() as i64;
+        b.clamp(0, self.counts.len() as i64 - 1) as usize
+    }
+    /// Record key `x`; `weight` accumulates into the bin's sum (e.g. the
+    /// paired value whose per-bin mean we report).
+    pub fn record(&mut self, x: f64, weight: f64) {
+        let b = self.bin_of(x);
+        self.counts[b] += 1;
+        self.sums[b] += weight;
+    }
+    pub fn count(&self, bin: usize) -> u64 {
+        self.counts[bin]
+    }
+    /// Mean of recorded weights within a bin (None if empty).
+    pub fn bin_mean(&self, bin: usize) -> Option<f64> {
+        if self.counts[bin] == 0 {
+            None
+        } else {
+            Some(self.sums[bin] / self.counts[bin] as f64)
+        }
+    }
+    pub fn bin_bounds(&self, bin: usize) -> (f64, f64) {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (self.lo + w * bin as f64, self.lo + w * (bin + 1) as f64)
+    }
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Welford::default();
+        let mut b = Welford::default();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Sample::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.record(0.05, 2.0);
+        h.record(0.05, 4.0);
+        h.record(0.95, 1.0);
+        h.record(1.5, 1.0); // clamps to last bin
+        assert_eq!(h.count(0), 2);
+        assert_eq!(h.bin_mean(0), Some(3.0));
+        assert_eq!(h.count(9), 2);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.bin_bounds(0), (0.0, 0.1));
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_mean() {
+        let mut s = Sample::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..200 {
+            s.push(10.0 + rng.normal());
+        }
+        let (lo, hi) = s.bootstrap_ci(500, 0.05, 42);
+        assert!(lo < 10.1 && hi > 9.9, "({lo}, {hi})");
+        assert!(hi - lo < 0.5);
+    }
+}

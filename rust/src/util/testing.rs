@@ -1,0 +1,97 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! inputs; on failure it retries with the same seed to confirm, then
+//! panics with the seed so the case is reproducible:
+//!
+//! ```ignore
+//! check("allocator never double-frees", 500, |rng| {
+//!     let n = rng.range(1, 64);
+//!     ...
+//! });
+//! ```
+//!
+//! A failing run prints `SPECREASON_PT_SEED=<seed>`; exporting that env
+//! var re-runs only the failing case.
+
+use super::rng::Rng;
+
+/// Run `body` for `cases` randomized cases. Each case gets an independent
+/// RNG derived from a base seed (env `SPECREASON_PT_SEED` to pin one case).
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut body: F) {
+    if let Ok(pin) = std::env::var("SPECREASON_PT_SEED") {
+        let seed: u64 = pin.parse().expect("SPECREASON_PT_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        body(&mut rng);
+        return;
+    }
+    let base = 0x5eC0_0C0D_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case}/{cases}\n\
+                 reproduce with: SPECREASON_PT_SEED={seed}\n\
+                 panic: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close (used by runtime tests
+/// comparing PJRT outputs against host-side references).
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{ctx}: element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn check_seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPECREASON_PT_SEED=")]
+    fn failure_reports_seed() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[2.0], 1e-5, 1e-5, "bad")
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Fixed-size thread pool (tokio is unavailable offline — DESIGN.md §3).
+//!
+//! The serving front end (server/) uses this for connection handling while
+//! a single engine thread owns the PJRT client (the paper's setup likewise
+//! serializes the two models on shared GPUs: "inference is performed
+//! sequentially: the small and base models take turns").
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A bounded pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let active = Arc::clone(&active);
+                thread::Builder::new()
+                    .name(format!("specreason-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                job();
+                                active.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, active }
+    }
+
+    /// Submit a job. Panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Number of jobs currently executing (approximate).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        for i in 0..2 {
+            let tx = tx.clone();
+            let gate = Arc::clone(&gate_rx);
+            pool.execute(move || {
+                tx.send(i).unwrap();
+                let _ = gate.lock().unwrap().recv();
+            });
+        }
+        // Both jobs must have started (two workers) before either finishes.
+        let mut started = Vec::new();
+        for _ in 0..2 {
+            started.push(rx.recv_timeout(Duration::from_secs(5)).unwrap());
+        }
+        started.sort();
+        assert_eq!(started, vec![0, 1]);
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| thread::sleep(Duration::from_millis(20)));
+        drop(pool); // must not hang or panic
+    }
+}

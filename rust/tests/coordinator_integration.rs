@@ -1,0 +1,109 @@
+//! Coordinator over the REAL PJRT engine: full SpecReason queries with
+//! actual model execution, plus sim-vs-real decision parity.
+
+use std::sync::OnceLock;
+
+use specreason::coordinator::{
+    run_query, Combo, RealBackend, Scheme, SimBackend, SpecConfig,
+};
+use specreason::engine::{Engine, EngineConfig};
+use specreason::eval::testbed_for;
+use specreason::metrics::GpuClock;
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        let cfg = EngineConfig {
+            models: vec!["qwq-sim".into(), "r1-sim".into()],
+            ..Default::default()
+        };
+        Engine::new(&cfg).expect("engine init — run `make artifacts` first")
+    })
+}
+
+fn small_cfg(scheme: Scheme) -> SpecConfig {
+    // Shrink the budget so a real-PJRT query finishes in seconds.
+    SpecConfig { scheme, token_budget: 160, answer_tokens: 8, ..Default::default() }
+}
+
+#[test]
+fn real_specreason_query_end_to_end() {
+    let e = engine();
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let q = TraceGenerator::new(Dataset::Math500, 7).query(0);
+    let cfg = small_cfg(Scheme::SpecReason);
+    let mut b = RealBackend::new(e, &combo.small, &combo.base);
+    let out = run_query(&oracle, &q, &combo, &cfg, &mut b, 0).unwrap();
+    b.release().unwrap();
+    let m = &out.metrics;
+    assert!(m.thinking_tokens > 0 && m.thinking_tokens <= 160);
+    assert!(m.steps_total > 0);
+    assert!(m.wall_secs > 0.0, "real backend must measure wall time");
+    assert!(m.gpu_secs > 0.0);
+    // Both models actually executed.
+    let stats = e.runtime_stats();
+    assert!(stats["r1-sim"].decode_calls > 0 || stats["r1-sim"].step_calls > 0);
+    assert!(stats["qwq-sim"].step_calls > 0);
+}
+
+#[test]
+fn sim_and_real_make_identical_decisions() {
+    // The same (query, scheme, seeds) must accept/reject identically and
+    // produce the same GPU-clock total on both backends — the sim is the
+    // oracle-exact model of the real coordinator.
+    let e = engine();
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let q = TraceGenerator::new(Dataset::Aime, 11).query(1);
+    for scheme in [Scheme::SpecReason, Scheme::SpecReasonPlusDecode, Scheme::SpecDecode] {
+        let cfg = small_cfg(scheme);
+        let mut real = RealBackend::new(e, &combo.small, &combo.base);
+        let out_real = run_query(&oracle, &q, &combo, &cfg, &mut real, 0).unwrap();
+        real.release().unwrap();
+        let clock = GpuClock::new(testbed_for(&combo));
+        let mut sim = SimBackend::new(clock, "small", "base");
+        let out_sim = run_query(&oracle, &q, &combo, &cfg, &mut sim, 0).unwrap();
+
+        assert_eq!(out_real.metrics.steps_total, out_sim.metrics.steps_total, "{scheme:?}");
+        assert_eq!(out_real.metrics.steps_accepted, out_sim.metrics.steps_accepted);
+        assert_eq!(out_real.metrics.verify_scores, out_sim.metrics.verify_scores);
+        assert_eq!(out_real.metrics.thinking_tokens, out_sim.metrics.thinking_tokens);
+        assert_eq!(out_real.metrics.answer_correct, out_sim.metrics.answer_correct);
+        let (g1, g2) = (out_real.metrics.gpu_secs, out_sim.metrics.gpu_secs);
+        assert!((g1 - g2).abs() < 1e-9, "{scheme:?}: gpu clocks diverge: {g1} vs {g2}");
+    }
+}
+
+#[test]
+fn real_vanilla_base_runs() {
+    let e = engine();
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let q = TraceGenerator::new(Dataset::Gpqa, 13).query(0);
+    let cfg = small_cfg(Scheme::VanillaBase);
+    let mut b = RealBackend::new(e, &combo.small, &combo.base);
+    let out = run_query(&oracle, &q, &combo, &cfg, &mut b, 0).unwrap();
+    b.release().unwrap();
+    assert_eq!(out.metrics.steps_speculated, 0);
+    assert!(out.metrics.thinking_tokens > 0);
+}
+
+#[test]
+fn kv_is_released_after_queries() {
+    let e = engine();
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let before = (e.kv_utilization("qwq-sim"), e.kv_utilization("r1-sim"));
+    let q = TraceGenerator::new(Dataset::Math500, 17).query(2);
+    let cfg = small_cfg(Scheme::SpecReason);
+    {
+        let mut b = RealBackend::new(e, &combo.small, &combo.base);
+        run_query(&oracle, &q, &combo, &cfg, &mut b, 0).unwrap();
+        // dropped without explicit release — Drop must clean up
+    }
+    let after = (e.kv_utilization("qwq-sim"), e.kv_utilization("r1-sim"));
+    assert!((before.0 - after.0).abs() < 1e-9, "base pool leaked");
+    assert!((before.1 - after.1).abs() < 1e-9, "small pool leaked");
+}

@@ -1,0 +1,166 @@
+//! Engine-level integration tests over real artifacts: shared-CoT
+//! sequences, lazy per-model KV materialization, verification passes with
+//! prefix reuse, rollback, and KV accounting.
+//!
+//! Loads qwq-sim (base) + r1-sim (small) once for the whole test binary.
+
+use std::sync::OnceLock;
+
+use specreason::engine::{Engine, EngineConfig};
+use specreason::metrics::{Phase, QueryMetrics};
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        let cfg = EngineConfig {
+            models: vec!["qwq-sim".into(), "r1-sim".into()],
+            ..Default::default()
+        };
+        Engine::new(&cfg).expect("engine init — run `make artifacts` first")
+    })
+}
+
+fn prompt(e: &Engine) -> Vec<i32> {
+    e.tokenizer.encode_with_bos("Find the number of minutes the walk takes her.")
+}
+
+#[test]
+fn shared_cot_two_model_speculation_cycle() {
+    let e = engine();
+    let mut qm = QueryMetrics::default();
+    let p = prompt(e);
+    let mut seq = e.new_sequence(&p).unwrap();
+
+    // Small model speculates a 16-token step.
+    let step = e.decode(&mut seq, "r1-sim", 16, 1, Phase::Speculate, &mut qm).unwrap();
+    assert_eq!(step.len(), 16);
+    assert_eq!(seq.len(), p.len() + 16);
+    // Small's cache holds everything except the newest token.
+    assert_eq!(seq.cache_len("r1-sim"), seq.len() - 1);
+    // Base hasn't materialized anything yet (lazy).
+    assert_eq!(seq.cache_len("qwq-sim"), 0);
+
+    // Base verifies: one prefill-only pass over suffix + template.
+    let template: Vec<i32> = e.tokenizer.encode("<verify> rate 0-9:");
+    let logits = e
+        .scored_prefill(&mut seq, "qwq-sim", &template, Phase::Verify, &mut qm)
+        .unwrap();
+    assert_eq!(logits.len(), e.model("qwq-sim").unwrap().arch.vocab);
+    // Prefix reuse: the CoT suffix stayed materialized, template discarded.
+    assert_eq!(seq.cache_len("qwq-sim"), seq.len());
+
+    // Reject: roll the step back; both KV views rewind.
+    e.rollback(&mut seq, p.len()).unwrap();
+    assert_eq!(seq.len(), p.len());
+    assert!(seq.cache_len("qwq-sim") <= p.len());
+    assert!(seq.cache_len("r1-sim") <= p.len());
+
+    // Base regenerates the step (fallback), then small catches up.
+    let regen = e.decode(&mut seq, "qwq-sim", 16, 2, Phase::Fallback, &mut qm).unwrap();
+    assert_eq!(regen.len(), 16);
+    let upto = seq.len() - 1;
+    e.prefill_through(&mut seq, "r1-sim", upto, Phase::CatchUp, &mut qm)
+        .unwrap();
+    assert_eq!(seq.cache_len("r1-sim"), seq.len() - 1);
+
+    // Phase accounting saw every phase we exercised.
+    for phase in ["speculate", "verify", "fallback", "catchup"] {
+        assert!(qm.phase_wall.contains_key(phase), "missing phase {phase}");
+        assert!(qm.phase_gpu[phase] > 0.0);
+    }
+    e.release(&seq).unwrap();
+}
+
+#[test]
+fn decode_is_deterministic_given_seed_and_state() {
+    let e = engine();
+    let mut qm = QueryMetrics::default();
+    let p = prompt(e);
+    let mut s1 = e.new_sequence(&p).unwrap();
+    let mut s2 = e.new_sequence(&p).unwrap();
+    let a = e.decode(&mut s1, "r1-sim", 12, 99, Phase::Speculate, &mut qm).unwrap();
+    let b = e.decode(&mut s2, "r1-sim", 12, 99, Phase::Speculate, &mut qm).unwrap();
+    assert_eq!(a, b);
+    let c = e.decode(&mut s1, "r1-sim", 12, 100, Phase::Speculate, &mut qm).unwrap();
+    let d = e.decode(&mut s2, "r1-sim", 12, 100, Phase::Speculate, &mut qm).unwrap();
+    assert_eq!(c, d);
+    e.release(&s1).unwrap();
+    e.release(&s2).unwrap();
+}
+
+#[test]
+fn rejected_step_leaves_no_trace() {
+    // Generating X, rejecting it, then regenerating Y must produce the
+    // same Y as a run that never generated X (KV rollback soundness at
+    // the engine level).
+    let e = engine();
+    let mut qm = QueryMetrics::default();
+    let p = prompt(e);
+
+    let mut clean = e.new_sequence(&p).unwrap();
+    let y_clean = e.decode(&mut clean, "qwq-sim", 8, 42, Phase::Fallback, &mut qm).unwrap();
+
+    let mut dirty = e.new_sequence(&p).unwrap();
+    let _x = e.decode(&mut dirty, "r1-sim", 24, 7, Phase::Speculate, &mut qm).unwrap();
+    // Base looks at it (materializes KV for the speculated suffix).
+    let template: Vec<i32> = e.tokenizer.encode("<verify> rate:");
+    e.scored_prefill(&mut dirty, "qwq-sim", &template, Phase::Verify, &mut qm).unwrap();
+    e.rollback(&mut dirty, p.len()).unwrap();
+    let y_dirty = e.decode(&mut dirty, "qwq-sim", 8, 42, Phase::Fallback, &mut qm).unwrap();
+
+    assert_eq!(y_clean, y_dirty);
+    e.release(&clean).unwrap();
+    e.release(&dirty).unwrap();
+}
+
+#[test]
+fn verification_is_cheap_on_the_gpu_clock() {
+    // §4.1: a verify pass should cost about 1–2 decode tokens.
+    let e = engine();
+    let p = prompt(e);
+    let mut seq = e.new_sequence(&p).unwrap();
+    let mut qm = QueryMetrics::default();
+    e.decode(&mut seq, "r1-sim", 16, 1, Phase::Speculate, &mut qm).unwrap();
+    // Materialize base KV up to the frontier first so the measured verify
+    // pass covers ONLY suffix+template (the steady-state case).
+    let upto = seq.len();
+    e.prefill_through(&mut seq, "qwq-sim", upto, Phase::CatchUp, &mut qm).unwrap();
+
+    let mut qv = QueryMetrics::default();
+    let template: Vec<i32> = vec![263; 70]; // ~70-token template like the paper
+    e.scored_prefill(&mut seq, "qwq-sim", &template, Phase::Verify, &mut qv).unwrap();
+    let verify_gpu = qv.phase_gpu["verify"];
+    let tpt = e.clock.tpt("base");
+    assert!(
+        verify_gpu <= 2.0 * tpt + 1e-9,
+        "verify {verify_gpu}s > 2 decode tokens ({})", 2.0 * tpt
+    );
+    e.release(&seq).unwrap();
+}
+
+#[test]
+fn kv_accounting_tracks_and_releases() {
+    let e = engine();
+    let p = prompt(e);
+    let mut qm = QueryMetrics::default();
+    let used_before = e.kv_utilization("r1-sim");
+    let mut seq = e.new_sequence(&p).unwrap();
+    e.decode(&mut seq, "r1-sim", 32, 5, Phase::Speculate, &mut qm).unwrap();
+    assert!(e.kv_utilization("r1-sim") > used_before);
+    e.release(&seq).unwrap();
+    assert!((e.kv_utilization("r1-sim") - used_before).abs() < 1e-9);
+}
+
+#[test]
+fn context_overflow_is_graceful() {
+    let e = engine();
+    let p = prompt(e);
+    let mut qm = QueryMetrics::default();
+    let mut seq = e.new_sequence(&p).unwrap();
+    let max = e.model("r1-sim").unwrap().arch.max_seq;
+    let err = e
+        .decode(&mut seq, "r1-sim", max, 1, Phase::Speculate, &mut qm)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("exceed"), "{err:#}");
+    e.release(&seq).unwrap();
+}

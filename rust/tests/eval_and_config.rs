@@ -1,0 +1,150 @@
+//! Fast (simulator-only) integration tests over the eval harness, config
+//! loading from disk, and the figure-shape invariants the benches assert.
+
+use specreason::config::DeployConfig;
+use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+use specreason::eval::{main_combos, run_cell_sim, Cell};
+use specreason::semantics::{Dataset, Oracle};
+
+fn cell(ds: Dataset, scheme: Scheme, combo: Combo, threshold: u8) -> Cell {
+    Cell {
+        dataset: ds,
+        scheme,
+        combo,
+        cfg: SpecConfig {
+            scheme,
+            policy: AcceptancePolicy::Static { threshold },
+            ..Default::default()
+        },
+    }
+}
+
+#[test]
+fn all_cells_of_the_fig3_grid_run() {
+    // 3 datasets × 4 combos × 5 schemes — every Fig. 3 cell must execute.
+    let oracle = Oracle::default();
+    for combo in main_combos() {
+        for ds in Dataset::all() {
+            for scheme in Scheme::all() {
+                let r = run_cell_sim(&oracle, &cell(ds, scheme, combo.clone(), 7), 3, 1, 99)
+                    .unwrap_or_else(|e| panic!("{ds:?}/{scheme:?}/{}: {e:#}", combo.label()));
+                assert_eq!(r.agg.n(), 3);
+                assert!(r.mean_gpu() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn speedup_ordering_holds_on_every_combo() {
+    // Fig. 3 shape on all four combos: SR faster than vanilla; SR+D
+    // faster than both SR and SpecDecode (GPU clock, MATH where the
+    // effect is largest).
+    let oracle = Oracle::default();
+    for combo in main_combos() {
+        let lat = |scheme| {
+            run_cell_sim(&oracle, &cell(Dataset::Math500, scheme, combo.clone(), 7), 16, 2, 1234)
+                .unwrap()
+                .mean_gpu()
+        };
+        let base = lat(Scheme::VanillaBase);
+        let sd = lat(Scheme::SpecDecode);
+        let sr = lat(Scheme::SpecReason);
+        let srd = lat(Scheme::SpecReasonPlusDecode);
+        let label = combo.label();
+        assert!(sr < base, "{label}: SR {sr} !< base {base}");
+        assert!(sd < base, "{label}: SD {sd} !< base {base}");
+        assert!(srd < sr, "{label}: SR+D {srd} !< SR {sr}");
+        assert!(srd < sd, "{label}: SR+D {srd} !< SD {sd}");
+    }
+}
+
+#[test]
+fn skywork_judge_accepts_differently_than_qwq() {
+    // §5.2: skywork is a noisier judge; at the same threshold its
+    // accept/reject stream differs from qwq's on identical queries.
+    let oracle = Oracle::default();
+    let r_qwq = run_cell_sim(
+        &oracle,
+        &cell(Dataset::Aime, Scheme::SpecReason, Combo::new("qwq-sim", "r1-sim"), 7),
+        16, 2, 7,
+    )
+    .unwrap();
+    let r_sky = run_cell_sim(
+        &oracle,
+        &cell(Dataset::Aime, Scheme::SpecReason, Combo::new("skywork-sim", "r1-sim"), 7),
+        16, 2, 7,
+    )
+    .unwrap();
+    let s_qwq: Vec<_> = r_qwq.agg.queries.iter().map(|q| q.steps_accepted).collect();
+    let s_sky: Vec<_> = r_sky.agg.queries.iter().map(|q| q.steps_accepted).collect();
+    assert_ne!(s_qwq, s_sky, "variant judges must differ");
+}
+
+#[test]
+fn zr1_outperforms_r1_on_math() {
+    // ZR1 is the math specialist: its acceptance on MATH should be at
+    // least r1's.
+    let oracle = Oracle::default();
+    let acc = |small: &str| {
+        run_cell_sim(
+            &oracle,
+            &cell(Dataset::Math500, Scheme::SpecReason, Combo::new("qwq-sim", small), 7),
+            24, 2, 11,
+        )
+        .unwrap()
+        .mean_acceptance()
+    };
+    assert!(acc("zr1-sim") >= acc("r1-sim") - 0.02);
+}
+
+#[test]
+fn deploy_config_roundtrips_through_disk() {
+    let dir = std::env::temp_dir().join(format!("sr-cfg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("deploy.json");
+    std::fs::write(
+        &path,
+        r#"{"base_model": "skywork-sim", "small_model": "zr1-sim",
+            "scheme": "spec-reason+decode", "threshold": 5,
+            "token_budget": 512, "kv_seqs_per_model": 4,
+            "addr": "127.0.0.1:9911", "max_queue": 8}"#,
+    )
+    .unwrap();
+    let cfg = DeployConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.base_model, "skywork-sim");
+    assert_eq!(cfg.threshold, 5);
+    assert_eq!(cfg.max_queue, 8);
+    let spec = cfg.spec_config();
+    assert_eq!(spec.scheme, Scheme::SpecReasonPlusDecode);
+    assert_eq!(spec.token_budget, 512);
+    let ecfg = cfg.engine_config();
+    assert_eq!(ecfg.models, vec!["skywork-sim".to_string(), "zr1-sim".to_string()]);
+    assert_eq!(ecfg.kv_seqs_per_model, 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn budget_sweep_gap_shrinks_with_budget() {
+    // Fig. 4b shape at test scale: the SpecReason-vs-base accuracy gap
+    // at a tight budget exceeds the gap at a generous budget.
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "zr1-sim");
+    let gap = |budget: usize| {
+        let mk = |scheme| {
+            let mut c = cell(Dataset::Aime, scheme, combo.clone(), 7);
+            c.cfg.token_budget = budget;
+            c
+        };
+        let base = run_cell_sim(&oracle, &mk(Scheme::VanillaBase), 32, 3, 1234).unwrap();
+        let spec = run_cell_sim(&oracle, &mk(Scheme::SpecReason), 32, 3, 1234).unwrap();
+        spec.accuracy() - base.accuracy()
+    };
+    let tight = gap(224);
+    let generous = gap(704);
+    assert!(
+        tight > generous - 0.01,
+        "gap must shrink with budget: tight {tight:.3} vs generous {generous:.3}"
+    );
+    assert!(tight > 0.02, "tight-budget gap should be clearly positive: {tight:.3}");
+}

@@ -1,0 +1,239 @@
+//! Property-based tests (in-tree mini-proptest harness, see
+//! util::testing) over the coordinator, KV accounting and calibration.
+//!
+//! These run on the simulator backend — no PJRT — so they can afford
+//! hundreds of randomized cases.
+
+use specreason::coordinator::{
+    run_query, AcceptancePolicy, Combo, Scheme, SimBackend, SpecConfig,
+};
+use specreason::eval::{main_combos, run_cell_sim, Cell};
+use specreason::kvcache::{BlockPool, PoolConfig};
+use specreason::metrics::{GpuClock, Testbed};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::util::testing::check;
+
+// ---------------------------------------------------------------------
+// KV block-pool invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_block_pool_conservation_under_random_ops() {
+    check("block conservation", 300, |rng| {
+        let block = [8, 16, 32][rng.below(3)];
+        let total = rng.range(4, 64);
+        let mut pool = BlockPool::new(PoolConfig { block_size: block, total_blocks: total });
+        let nseq = rng.range(1, 6);
+        for s in 0..nseq {
+            pool.register(s as u64).unwrap();
+        }
+        let mut lens = vec![0usize; nseq];
+        for _ in 0..rng.range(5, 60) {
+            let s = rng.below(nseq);
+            match rng.below(4) {
+                0 => {
+                    // grow by a random amount (may fail on exhaustion — fine)
+                    let target = lens[s] + rng.range(1, 64);
+                    if pool.grow_to(s as u64, target).is_ok() {
+                        lens[s] = target;
+                    }
+                }
+                1 => {
+                    // rollback to a random earlier point
+                    let target = if lens[s] == 0 { 0 } else { rng.below(lens[s] + 1) };
+                    pool.rollback_to(s as u64, target).unwrap();
+                    lens[s] = target;
+                }
+                2 => {
+                    // release + re-register
+                    pool.release(s as u64).unwrap();
+                    pool.register(s as u64).unwrap();
+                    lens[s] = 0;
+                }
+                _ => {
+                    // capacity probe must agree with a subsequent grow
+                    let target = lens[s] + rng.range(1, 40);
+                    let can = pool.can_grow_to(s as u64, target);
+                    let did = pool.grow_to(s as u64, target).is_ok();
+                    assert_eq!(can, did, "can_grow_to disagrees with grow_to");
+                    if did {
+                        lens[s] = target;
+                    }
+                }
+            }
+            pool.check_invariants();
+            for (s, &l) in lens.iter().enumerate() {
+                assert_eq!(pool.seq_tokens(s as u64), l);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Coordinator invariants (random schemes, datasets, knobs)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_run_query_respects_budget_and_counters() {
+    let oracle = Oracle::default();
+    check("coordinator budget/counters", 150, |rng| {
+        let dataset = Dataset::all()[rng.below(3)];
+        let scheme = Scheme::all()[rng.below(5)];
+        let combos = main_combos();
+        let combo = combos[rng.below(combos.len())].clone();
+        let budget = rng.range(64, 900);
+        let threshold = rng.range(0, 9) as u8;
+        let first_n = rng.below(12);
+        let cfg = SpecConfig {
+            scheme,
+            policy: AcceptancePolicy::Static { threshold },
+            first_n_base: first_n,
+            token_budget: budget,
+            ..Default::default()
+        };
+        let q = TraceGenerator::new(dataset, rng.next_u64()).query(rng.below(32));
+        let mut b = SimBackend::new(GpuClock::new(Testbed::A6000x2), "small", "base");
+        let out = run_query(&oracle, &q, &combo, &cfg, &mut b, rng.below(4)).unwrap();
+        let m = &out.metrics;
+
+        // Budget: thinking tokens never exceed budget.
+        assert!(m.thinking_tokens <= budget, "{} > {budget}", m.thinking_tokens);
+        // Counter sanity.
+        assert!(m.steps_accepted <= m.steps_speculated);
+        assert!(m.steps_speculated <= m.steps_total);
+        assert_eq!(out.steps_by_small + out.steps_by_base, m.steps_total);
+        assert!(m.steps_total <= q.plan_len());
+        assert!(m.draft_tokens_accepted <= m.draft_tokens_proposed);
+        // Health/completion in range.
+        assert!((0.0..=1.0).contains(&out.completion));
+        assert!((0.0..=1.0).contains(&out.health));
+        // GPU clock advanced (every scheme does *some* work).
+        assert!(m.gpu_secs > 0.0);
+        // Scheme-specific structure.
+        match scheme {
+            Scheme::VanillaBase | Scheme::VanillaSmall => {
+                assert_eq!(m.steps_speculated, 0);
+                assert_eq!(m.draft_tokens_proposed, 0);
+            }
+            Scheme::SpecDecode => {
+                assert_eq!(m.steps_speculated, 0);
+                assert!(m.draft_tokens_proposed > 0);
+            }
+            Scheme::SpecReason => {
+                assert_eq!(m.draft_tokens_proposed, 0);
+            }
+            Scheme::SpecReasonPlusDecode => {}
+        }
+        // First-n knob: the first `first_n` steps are never speculated.
+        if scheme == Scheme::SpecReason && m.steps_total > 0 {
+            let max_spec = m.steps_total.saturating_sub(first_n.min(m.steps_total));
+            assert!(m.steps_speculated <= max_spec,
+                "speculated {} > allowed {max_spec}", m.steps_speculated);
+        }
+    });
+}
+
+#[test]
+fn prop_determinism_across_runs() {
+    let oracle = Oracle::default();
+    check("coordinator determinism", 40, |rng| {
+        let dataset = Dataset::all()[rng.below(3)];
+        let scheme = Scheme::all()[rng.below(5)];
+        let cfg = SpecConfig { scheme, ..Default::default() };
+        let combo = Combo::new("qwq-sim", "r1-sim");
+        let q = TraceGenerator::new(dataset, rng.next_u64()).query(0);
+        let sample = rng.below(4);
+        let run = || {
+            let mut b = SimBackend::new(GpuClock::new(Testbed::A6000x2), "small", "base");
+            run_query(&oracle, &q, &combo, &cfg, &mut b, sample).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.metrics.gpu_secs, b.metrics.gpu_secs);
+        assert_eq!(a.metrics.thinking_tokens, b.metrics.thinking_tokens);
+        assert_eq!(a.metrics.answer_correct, b.metrics.answer_correct);
+        assert_eq!(a.metrics.verify_scores, b.metrics.verify_scores);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Calibration regression: the sim must stay inside the paper's bands.
+// (Seeds fixed; these are statistical but deterministic.)
+// ---------------------------------------------------------------------
+
+fn cell(ds: Dataset, scheme: Scheme) -> Cell {
+    Cell {
+        dataset: ds,
+        scheme,
+        combo: Combo::new("qwq-sim", "r1-sim"),
+        cfg: SpecConfig { scheme, ..Default::default() },
+    }
+}
+
+#[test]
+fn calibration_speedup_and_accuracy_bands() {
+    let oracle = Oracle::default();
+    for ds in Dataset::all() {
+        let base = run_cell_sim(&oracle, &cell(ds, Scheme::VanillaBase), 40, 4, 1234).unwrap();
+        let spec = run_cell_sim(&oracle, &cell(ds, Scheme::SpecReason), 40, 4, 1234).unwrap();
+        let sd = run_cell_sim(&oracle, &cell(ds, Scheme::SpecDecode), 40, 4, 1234).unwrap();
+        let srd =
+            run_cell_sim(&oracle, &cell(ds, Scheme::SpecReasonPlusDecode), 40, 4, 1234).unwrap();
+
+        // §5.2 / abstract: 1.4–3.0× speedup over vanilla (GPU clock).
+        let speedup = base.mean_gpu() / spec.mean_gpu();
+        assert!((1.2..=3.6).contains(&speedup), "{ds:?}: speedup {speedup}");
+
+        // abstract: accuracy improves by 0.4–9.0% (allow 0 at ceiling).
+        let dacc = spec.accuracy() - base.accuracy();
+        assert!((-0.015..=0.12).contains(&dacc), "{ds:?}: Δacc {dacc}");
+
+        // §5.2: SpecReason+Decode cuts 8.8–58% off SpecDecode alone.
+        let cut = 1.0 - srd.mean_gpu() / sd.mean_gpu();
+        assert!((0.05..=0.62).contains(&cut), "{ds:?}: +Decode cut {cut}");
+
+        // §5.2: small-model step ratio 36.5%–80.0% (we allow a bit wider).
+        let offload = spec.mean_offload();
+        assert!((0.30..=0.90).contains(&offload), "{ds:?}: offload {offload}");
+
+        // Fig. 4a/9: SpecReason uses fewer thinking tokens than vanilla.
+        assert!(spec.mean_tokens() < base.mean_tokens(), "{ds:?} token reduction");
+    }
+}
+
+#[test]
+fn calibration_vanilla_anchor_points() {
+    // Fig. 3 anchor accuracies (±0.10 tolerance at n=40×4).
+    let oracle = Oracle::default();
+    let anchors = [
+        (Dataset::Aime, Scheme::VanillaBase, 0.72),
+        (Dataset::Aime, Scheme::VanillaSmall, 0.22),
+        (Dataset::Math500, Scheme::VanillaBase, 0.93),
+        (Dataset::Math500, Scheme::VanillaSmall, 0.80),
+        (Dataset::Gpqa, Scheme::VanillaBase, 0.62),
+        (Dataset::Gpqa, Scheme::VanillaSmall, 0.34),
+    ];
+    for (ds, scheme, target) in anchors {
+        let r = run_cell_sim(&oracle, &cell(ds, scheme), 40, 4, 1234).unwrap();
+        let acc = r.accuracy();
+        assert!(
+            (acc - target).abs() < 0.10,
+            "{ds:?} {scheme:?}: acc {acc} vs anchor {target}"
+        );
+    }
+}
+
+#[test]
+fn calibration_math_has_highest_acceptance() {
+    // §5.2: MATH's narrow capability gap ⇒ highest acceptance rate.
+    let oracle = Oracle::default();
+    let acc = |ds| {
+        run_cell_sim(&oracle, &cell(ds, Scheme::SpecReason), 30, 2, 99)
+            .unwrap()
+            .mean_acceptance()
+    };
+    let aime = acc(Dataset::Aime);
+    let math = acc(Dataset::Math500);
+    let gpqa = acc(Dataset::Gpqa);
+    assert!(math > aime && math > gpqa, "aime {aime} math {math} gpqa {gpqa}");
+}

@@ -1,0 +1,129 @@
+//! Integration tests: the Rust runtime against real AOT artifacts.
+//!
+//! Requires `make artifacts`. These tests exercise the full
+//! python-lowered HLO → PJRT compile → execute path with the small arch
+//! (the base/large arches share the identical code path and are covered
+//! by examples/benches to keep test wall-time sane).
+
+use specreason::runtime::{Device, Manifest, ModelRuntime, Sampler, SamplerConfig, Tokenizer};
+use specreason::util::rng::Rng;
+
+fn load_small() -> (Device, Manifest, ModelRuntime) {
+    let dev = Device::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    let model = ModelRuntime::load(&dev, &manifest, "r1-sim").expect("load r1-sim");
+    (dev, manifest, model)
+}
+
+#[test]
+fn manifest_lists_expected_models_and_buckets() {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    for m in ["qwq-sim", "skywork-sim", "r1-sim", "zr1-sim", "r1-70b-sim"] {
+        assert!(manifest.models.contains_key(m), "missing model {m}");
+    }
+    let small = manifest.arch("small").unwrap();
+    assert_eq!(small.chunk_buckets(), vec![1, 8, 32, 128]);
+    assert_eq!(small.decode_buckets(), vec![4, 8, 16, 32]);
+    assert_eq!(small.vocab, 384);
+}
+
+#[test]
+fn end_to_end_prefill_decode_rollback() {
+    let (_dev, manifest, model) = load_small();
+    let tok = Tokenizer::new(manifest.vocab, &manifest.special_tokens).unwrap();
+
+    // --- prefill a prompt (odd length exercises padding) ---
+    let prompt = tok.encode_with_bos("Every morning Aya goes for a 9-kilometer walk");
+    assert!(prompt.len() > 32 && prompt.len() < 128);
+    let mut kv = model.fresh_kv().unwrap();
+    let logits = model.prefill(&mut kv, &prompt).unwrap();
+    assert_eq!(logits.len(), model.arch.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert_eq!(kv.cache_len, prompt.len());
+
+    // --- chunked prefill must equal one-shot prefill (last-row logits) ---
+    let mut kv2 = model.fresh_kv().unwrap();
+    let mid = 19;
+    model.prefill(&mut kv2, &prompt[..mid]).unwrap();
+    let logits2 = model.prefill(&mut kv2, &prompt[mid..]).unwrap();
+    for (a, b) in logits.iter().zip(&logits2) {
+        assert!((a - b).abs() < 3e-3, "chunked-vs-oneshot logits differ: {a} vs {b}");
+    }
+
+    // --- bridge-sample then decode deterministically (greedy) ---
+    let mut sampler = Sampler::new(SamplerConfig { temperature: 0.0, top_k: 0 });
+    let mut rng = Rng::new(1);
+    let t0 = sampler.sample(&logits, &mut rng);
+    let toks_a = model.decode(&mut kv, t0, 12, 42, 1e-4).unwrap();
+    assert_eq!(toks_a.len(), 12);
+    assert!(toks_a.iter().all(|&t| (0..model.arch.vocab as i32).contains(&t)));
+    assert_eq!(kv.cache_len, prompt.len() + 12);
+
+    // Same decode from the equal-state kv2 must match exactly (greedy).
+    let toks_b = model.decode(&mut kv2, t0, 12, 99, 1e-4).unwrap();
+    assert_eq!(toks_a, toks_b, "greedy decode must be seed-independent");
+
+    // --- rollback soundness: reject the 12-token step, regenerate ---
+    kv.rollback_to(prompt.len());
+    let toks_c = model.decode(&mut kv, t0, 12, 7, 1e-4).unwrap();
+    assert_eq!(toks_a, toks_c, "decode after rollback must be unaffected by stale KV");
+}
+
+#[test]
+fn decode_bucket_decomposition_and_overshoot() {
+    let (_dev, _manifest, model) = load_small();
+    // n = 37 forces 32 + 8 with a 3-token overshoot trim.
+    let mut kv = model.fresh_kv().unwrap();
+    let logits = model.prefill(&mut kv, &[257, 65, 66, 67, 68, 69, 70, 71]).unwrap();
+    let mut sampler = Sampler::new(SamplerConfig::default());
+    let mut rng = Rng::new(5);
+    let t0 = sampler.sample(&logits, &mut rng);
+    let start = kv.cache_len;
+    let toks = model.decode(&mut kv, t0, 37, 11, 0.6).unwrap();
+    assert_eq!(toks.len(), 37);
+    assert_eq!(kv.cache_len, start + 37);
+    let stats = model.stats();
+    assert!(stats.decode_calls >= 2, "expected >= 2 decode calls, got {}", stats.decode_calls);
+}
+
+#[test]
+fn sampled_decode_is_key_deterministic() {
+    let (_dev, _manifest, model) = load_small();
+    let mut kv1 = model.fresh_kv().unwrap();
+    let mut kv2 = model.fresh_kv().unwrap();
+    let prompt = [257, 100, 101, 102];
+    model.prefill(&mut kv1, &prompt).unwrap();
+    model.prefill(&mut kv2, &prompt).unwrap();
+    let a = model.decode(&mut kv1, 103, 8, 1234, 0.6).unwrap();
+    let b = model.decode(&mut kv2, 103, 8, 1234, 0.6).unwrap();
+    assert_eq!(a, b, "same threefry seed must reproduce the same step");
+    let mut kv3 = model.fresh_kv().unwrap();
+    model.prefill(&mut kv3, &prompt).unwrap();
+    let c = model.decode(&mut kv3, 103, 8, 777, 0.6).unwrap();
+    assert_ne!(a, c, "different seed should (overwhelmingly) differ");
+}
+
+#[test]
+fn kv_overflow_is_rejected() {
+    let (_dev, _manifest, model) = load_small();
+    let mut kv = model.fresh_kv().unwrap();
+    kv.cache_len = model.arch.max_seq - 2; // nearly full
+    let err = model.decode(&mut kv, 5, 8, 0, 0.6).unwrap_err();
+    assert!(format!("{err:#}").contains("KV overflow"), "{err:#}");
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let (_dev, _manifest, model) = load_small();
+    model.reset_stats();
+    let mut kv = model.fresh_kv().unwrap();
+    model.prefill(&mut kv, &[257, 1, 2, 3, 4]).unwrap(); // bucket 8, 3 pads
+    model.decode(&mut kv, 5, 4, 0, 0.6).unwrap();
+    let s = model.stats();
+    assert_eq!(s.step_calls, 1);
+    assert_eq!(s.tokens_prefilled, 5);
+    assert_eq!(s.padded_tokens, 3);
+    assert_eq!(s.decode_calls, 1);
+    assert_eq!(s.tokens_decoded, 4);
+    assert!(s.step_secs > 0.0 && s.decode_secs > 0.0);
+}

@@ -1,0 +1,122 @@
+//! Server integration: boot the full serving stack on an ephemeral port,
+//! drive it with the JSON-line client, check responses, backpressure
+//! accounting and shutdown.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use specreason::config::DeployConfig;
+use specreason::server::{Client, Server};
+use specreason::util::json::Json;
+
+fn boot() -> (String, thread::JoinHandle<()>) {
+    let cfg = DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: 128,
+        answer_tokens: 8,
+        ..Default::default()
+    };
+    let server = Server::bind(cfg).expect("server bind — run `make artifacts` first");
+    let addr = server.addr.to_string();
+    let handle = thread::spawn(move || {
+        server.run().expect("server run");
+    });
+    (addr, handle)
+}
+
+#[test]
+fn serve_query_stats_shutdown() {
+    let (addr, handle) = boot();
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+
+    // A real query over the wire.
+    let r = c
+        .call(Json::obj(vec![
+            ("op", Json::str("query")),
+            ("dataset", Json::str("math500")),
+            ("query_index", Json::num(0.0)),
+            ("scheme", Json::str("spec-reason")),
+            ("threshold", Json::num(7.0)),
+            ("budget", Json::num(96.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("scheme").as_str(), Some("spec-reason"));
+    assert!(r.get("thinking_tokens").as_usize().unwrap() > 0);
+    assert!(r.get("wall_secs").as_f64().unwrap() > 0.0);
+    assert!(r.get("steps_total").as_usize().unwrap() > 0);
+
+    // Per-request overrides change behaviour.
+    let r2 = c
+        .call(Json::obj(vec![
+            ("op", Json::str("query")),
+            ("dataset", Json::str("math500")),
+            ("query_index", Json::num(0.0)),
+            ("scheme", Json::str("vanilla-base")),
+            ("budget", Json::num(96.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r2.get("steps_speculated").as_usize(), Some(0));
+
+    // Malformed requests get structured errors, connection survives.
+    let err = c.call(Json::obj(vec![
+        ("op", Json::str("query")),
+        ("dataset", Json::str("mmlu")),
+    ]));
+    assert!(err.is_err());
+    c.ping().unwrap();
+
+    // Budget too large for the context window is rejected up front.
+    let err = c.call(Json::obj(vec![
+        ("op", Json::str("query")),
+        ("dataset", Json::str("aime")),
+        ("budget", Json::num(4096.0)),
+    ]));
+    assert!(format!("{:#}", err.unwrap_err()).contains("context window"));
+
+    // Stats reflect the served traffic.
+    let s = c.call(Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert!(s.get("completed").as_usize().unwrap() >= 2);
+    assert!(s.get("failed").as_usize().unwrap() >= 1);
+
+    // Shutdown.
+    let bye = c.call(Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+    assert_eq!(bye.as_str(), Some("bye"));
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_are_serialized_by_the_router() {
+    let (addr, handle) = boot();
+    let (tx, rx) = mpsc::channel();
+    let n_clients = 3;
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        let tx = tx.clone();
+        thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let r = c
+                .call(Json::obj(vec![
+                    ("op", Json::str("query")),
+                    ("dataset", Json::str("math500")),
+                    ("query_index", Json::num(i as f64)),
+                    ("scheme", Json::str("vanilla-small")),
+                    ("budget", Json::num(64.0)),
+                ]))
+                .unwrap();
+            tx.send(r.get("thinking_tokens").as_usize().unwrap()).unwrap();
+        });
+    }
+    let mut got = 0;
+    while got < n_clients {
+        let tokens = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+        assert!(tokens > 0);
+        got += 1;
+    }
+    let mut c = Client::connect(&addr).unwrap();
+    let s = c.call(Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(s.get("completed").as_usize(), Some(n_clients));
+    c.call(Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+    handle.join().unwrap();
+}
