@@ -11,10 +11,10 @@
 
 use anyhow::Result;
 
-use specreason::coordinator::{run_query, Combo, Scheme, SimBackend, SpecConfig};
-use specreason::eval::testbed_for;
-use specreason::metrics::{Aggregate, GpuClock};
-use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::coordinator::{Combo, Scheme, SpecConfig};
+use specreason::eval::{run_cell_sim, Cell};
+use specreason::metrics::Aggregate;
+use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::Table;
 
 fn run_cell(
@@ -25,16 +25,9 @@ fn run_cell(
     n_queries: usize,
     samples: usize,
 ) -> Result<Aggregate> {
-    let clock = GpuClock::new(testbed_for(combo));
-    let gen = TraceGenerator::new(ds, 1234);
-    let mut agg = Aggregate::default();
-    for q in gen.queries(n_queries) {
-        for s in 0..samples {
-            let mut b = SimBackend::new(clock, "small", "base");
-            agg.push(run_query(oracle, &q, combo, cfg, &mut b, s)?.metrics);
-        }
-    }
-    Ok(agg)
+    // Routed through the parallel sweep engine (eval::sweep).
+    let cell = Cell { dataset: ds, scheme: cfg.scheme, combo: combo.clone(), cfg: cfg.clone() };
+    Ok(run_cell_sim(oracle, &cell, n_queries, samples, 1234)?.agg)
 }
 
 fn main() -> Result<()> {
@@ -50,8 +43,7 @@ fn main() -> Result<()> {
     for k in [2usize, 3, 5, 8, 12] {
         let cfg = SpecConfig { scheme: Scheme::SpecDecode, draft_k: k, ..Default::default() };
         let agg = run_cell(&oracle, &combo, Dataset::Aime, &cfg, n, s)?;
-        let acc_rate: f64 = agg.queries.iter().map(|q| q.draft_acceptance_rate()).sum::<f64>()
-            / agg.n() as f64;
+        let acc_rate = agg.mean_draft_acceptance();
         t.row(vec![
             k.to_string(),
             format!("{:.1}", agg.mean_gpu()),
@@ -70,9 +62,7 @@ fn main() -> Result<()> {
     for tl in [16usize, 40, 70, 128, 256] {
         let cfg = SpecConfig { verify_template_len: tl, ..Default::default() };
         let agg = run_cell(&oracle, &combo, Dataset::Aime, &cfg, n, s)?;
-        let verify: f64 = agg.queries.iter()
-            .map(|q| q.phase_gpu.get("verify").copied().unwrap_or(0.0))
-            .sum::<f64>() / agg.n() as f64;
+        let verify = agg.mean_phase_gpu("verify");
         t.row(vec![
             tl.to_string(),
             format!("{:.1}", agg.mean_gpu()),

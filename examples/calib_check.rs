@@ -13,7 +13,7 @@ fn main() {
             println!("{:8} {:20} acc={:.3} gpu={:7.2}s tok={:6.0} offload={:.2} accept={:.2} draft={:.2}",
                 ds.name(), scheme.name(), r.accuracy(), r.mean_gpu(), r.mean_tokens(),
                 r.mean_offload(), r.mean_acceptance(),
-                r.agg.queries.iter().map(|q| q.draft_acceptance_rate()).sum::<f64>()/r.agg.n() as f64);
+                r.agg.mean_draft_acceptance());
         }
         println!();
     }

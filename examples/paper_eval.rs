@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
 use specreason::engine::{Engine, EngineConfig};
-use specreason::eval::{main_combos, run_cell_real, run_cell_sim, Cell, CellResult};
+use specreason::eval::{bench_threads, main_combos, run_cell_real, Cell, CellResult, Sweep};
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::util::bench::Table;
 use specreason::util::cli::Command;
@@ -47,12 +47,31 @@ impl Ctx {
         Ok(e)
     }
 
-    fn run(&self, cell: &Cell) -> Result<CellResult> {
+    /// Run a batch of cells. In sim mode the whole batch is planned as
+    /// one sweep and fanned out across the shared thread pool (results
+    /// are bit-identical to sequential execution); on the real engine the
+    /// cells run sequentially, each against its combo's engine.
+    fn run_cells(&self, cells: Vec<Cell>) -> Result<Vec<CellResult>> {
         if self.sim {
-            run_cell_sim(&self.oracle, cell, self.queries, self.samples, self.seed)
+            let mut sweep = Sweep::new(self.queries, self.samples, self.seed);
+            for cell in cells {
+                sweep.cell(cell);
+            }
+            eprintln!(
+                "[sweep] {} cells / {} work items on {} threads",
+                sweep.cells().len(),
+                sweep.len(),
+                bench_threads()
+            );
+            sweep.run_sim(&self.oracle)
         } else {
-            let engine = self.engine_for(&cell.combo)?;
-            run_cell_real(&engine, &self.oracle, cell, self.queries, self.samples, self.seed)
+            cells
+                .iter()
+                .map(|cell| {
+                    let engine = self.engine_for(&cell.combo)?;
+                    run_cell_real(&engine, &self.oracle, cell, self.queries, self.samples, self.seed)
+                })
+                .collect()
         }
     }
 }
@@ -113,6 +132,19 @@ fn main() -> Result<()> {
 /// the §5.2 text statistics (acceptance ranges, +Decode-vs-Decode cuts).
 fn fig3(ctx: &Ctx) -> Result<()> {
     for combo in main_combos() {
+        let mut cells = Vec::new();
+        for ds in Dataset::all() {
+            for scheme in Scheme::all() {
+                cells.push(Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: cfg_for(scheme, 7),
+                });
+            }
+        }
+        let results = ctx.run_cells(cells)?;
+        let mut idx = 0;
         let mut t = Table::new(
             &format!("Fig. 3 — {} (latency = calibrated GPU clock)", combo.label()),
             &["dataset", "scheme", "pass@1", "latency (s)", "speedup", "offload", "wall (s)"],
@@ -120,13 +152,10 @@ fn fig3(ctx: &Ctx) -> Result<()> {
         for ds in Dataset::all() {
             let mut base_latency = None;
             for scheme in Scheme::all() {
-                let cell = Cell {
-                    dataset: ds,
-                    scheme,
-                    combo: combo.clone(),
-                    cfg: cfg_for(scheme, 7),
-                };
-                let r = ctx.run(&cell)?;
+                let r = &results[idx];
+                idx += 1;
+                // Guard the idx bookkeeping against build/read loop drift.
+                assert_eq!(r.cell_label, format!("{}/{}/{}", ds.name(), combo.label(), scheme.name()));
                 let lat = r.mean_gpu();
                 if scheme == Scheme::VanillaBase {
                     base_latency = Some(lat);
@@ -154,14 +183,33 @@ fn fig3(ctx: &Ctx) -> Result<()> {
 /// (QwQ + Zyphra combo, AIME for 4b — §5.2).
 fn fig4(ctx: &Ctx) -> Result<()> {
     let combo = Combo::new("qwq-sim", "zr1-sim");
+    // Both panels planned as one batch.
+    let mut cells = Vec::new();
+    for ds in Dataset::all() {
+        for scheme in [Scheme::VanillaBase, Scheme::VanillaSmall, Scheme::SpecReason] {
+            cells.push(Cell { dataset: ds, scheme, combo: combo.clone(), cfg: cfg_for(scheme, 7) });
+        }
+    }
+    let budgets = [192usize, 320, 448, 576, 704];
+    for &budget in &budgets {
+        for scheme in [Scheme::VanillaBase, Scheme::SpecReason] {
+            let mut cfg = cfg_for(scheme, 7);
+            cfg.token_budget = budget;
+            cells.push(Cell { dataset: Dataset::Aime, scheme, combo: combo.clone(), cfg });
+        }
+    }
+    let results = ctx.run_cells(cells)?;
+
     let mut t = Table::new(
         "Fig. 4a — thinking-token counts (qwq-sim + zr1-sim)",
         &["dataset", "base tokens", "small tokens", "specreason tokens", "reduction"],
     );
+    let mut idx = 0;
     for ds in Dataset::all() {
-        let base = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaBase, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaBase, 7) })?;
-        let small = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaSmall, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaSmall, 7) })?;
-        let spec = ctx.run(&Cell { dataset: ds, scheme: Scheme::SpecReason, combo: combo.clone(), cfg: cfg_for(Scheme::SpecReason, 7) })?;
+        let (base, small, spec) = (&results[idx], &results[idx + 1], &results[idx + 2]);
+        idx += 3;
+        // Guard the idx bookkeeping against build/read loop drift.
+        assert_eq!(base.cell_label, format!("{}/{}/vanilla-base", ds.name(), combo.label()));
         t.row(vec![
             ds.name().into(),
             format!("{:.0}", base.mean_tokens()),
@@ -176,14 +224,11 @@ fn fig4(ctx: &Ctx) -> Result<()> {
         "Fig. 4b — [AIME] accuracy vs thinking-token budget (qwq-sim + zr1-sim)",
         &["budget", "base pass@1", "specreason pass@1", "gap"],
     );
-    for budget in [192usize, 320, 448, 576, 704] {
-        let mk = |scheme| {
-            let mut cfg = cfg_for(scheme, 7);
-            cfg.token_budget = budget;
-            Cell { dataset: Dataset::Aime, scheme, combo: combo.clone(), cfg }
-        };
-        let base = ctx.run(&mk(Scheme::VanillaBase))?;
-        let spec = ctx.run(&mk(Scheme::SpecReason))?;
+    for &budget in &budgets {
+        let (base, spec) = (&results[idx], &results[idx + 1]);
+        idx += 2;
+        assert_eq!(base.cell_label, format!("aime/{}/vanilla-base", combo.label()));
+        assert_eq!(spec.cell_label, format!("aime/{}/spec-reason", combo.label()));
         t.row(vec![
             budget.to_string(),
             format!("{:.3}", base.accuracy()),
@@ -198,20 +243,33 @@ fn fig4(ctx: &Ctx) -> Result<()> {
 /// Fig. 5: the acceptance-threshold knob (QwQ + R1-1.5B, §5.3).
 fn fig5(ctx: &Ctx) -> Result<()> {
     let combo = Combo::new("qwq-sim", "r1-sim");
+    let thresholds = [3u8, 5, 7, 9];
+    let schemes = [Scheme::SpecReason, Scheme::SpecReasonPlusDecode];
+    let mut cells = Vec::new();
+    for ds in Dataset::all() {
+        for &threshold in &thresholds {
+            for scheme in schemes {
+                cells.push(Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: cfg_for(scheme, threshold),
+                });
+            }
+        }
+    }
+    let results = ctx.run_cells(cells)?;
+    let mut idx = 0;
     for ds in Dataset::all() {
         let mut t = Table::new(
             &format!("Fig. 5 — [{}] threshold sweep (qwq-sim + r1-sim)", ds.name()),
             &["threshold", "scheme", "pass@1", "latency (s)", "acceptance"],
         );
-        for threshold in [3u8, 5, 7, 9] {
-            for scheme in [Scheme::SpecReason, Scheme::SpecReasonPlusDecode] {
-                let cell = Cell {
-                    dataset: ds,
-                    scheme,
-                    combo: combo.clone(),
-                    cfg: cfg_for(scheme, threshold),
-                };
-                let r = ctx.run(&cell)?;
+        for &threshold in &thresholds {
+            for scheme in schemes {
+                let r = &results[idx];
+                idx += 1;
+                assert_eq!(r.cell_label, format!("{}/{}/{}", ds.name(), combo.label(), scheme.name()));
                 t.row(vec![
                     threshold.to_string(),
                     scheme.name().into(),
@@ -233,11 +291,17 @@ fn fig6(ctx: &Ctx) -> Result<()> {
         "Fig. 6 — [AIME] first-n-base knob (qwq-sim + r1-sim)",
         &["first n", "pass@1", "latency (s)", "offload"],
     );
-    for n in [0usize, 4, 8, 12, 16] {
-        let mut cfg = cfg_for(Scheme::SpecReason, 7);
-        cfg.first_n_base = n;
-        let cell = Cell { dataset: Dataset::Aime, scheme: Scheme::SpecReason, combo: combo.clone(), cfg };
-        let r = ctx.run(&cell)?;
+    let ns = [0usize, 4, 8, 12, 16];
+    let cells = ns
+        .iter()
+        .map(|&n| {
+            let mut cfg = cfg_for(Scheme::SpecReason, 7);
+            cfg.first_n_base = n;
+            Cell { dataset: Dataset::Aime, scheme: Scheme::SpecReason, combo: combo.clone(), cfg }
+        })
+        .collect();
+    let results = ctx.run_cells(cells)?;
+    for (n, r) in ns.iter().zip(&results) {
         t.row(vec![
             n.to_string(),
             format!("{:.3}", r.accuracy()),
@@ -292,13 +356,24 @@ fn fig8(ctx: &Ctx) -> Result<()> {
         &["threshold", "scheme", "pass@1", "latency (s)", "offload"],
     );
     // §A.1: a stricter threshold (8) preserves accuracy with the weaker
-    // judge; compare against vanilla.
-    let base = ctx.run(&Cell {
+    // judge; compare against vanilla.  One batch: vanilla + the ladder.
+    let thresholds = [5u8, 7, 8, 9];
+    let mut cells = vec![Cell {
         dataset: Dataset::Aime,
         scheme: Scheme::VanillaBase,
         combo: combo.clone(),
         cfg: cfg_for(Scheme::VanillaBase, 8),
-    })?;
+    }];
+    for &threshold in &thresholds {
+        cells.push(Cell {
+            dataset: Dataset::Aime,
+            scheme: Scheme::SpecReason,
+            combo: combo.clone(),
+            cfg: cfg_for(Scheme::SpecReason, threshold),
+        });
+    }
+    let results = ctx.run_cells(cells)?;
+    let base = &results[0];
     t.row(vec![
         "-".into(),
         "vanilla-base".into(),
@@ -306,14 +381,7 @@ fn fig8(ctx: &Ctx) -> Result<()> {
         format!("{:.1}", base.mean_gpu()),
         "0.00".into(),
     ]);
-    for threshold in [5u8, 7, 8, 9] {
-        let cell = Cell {
-            dataset: Dataset::Aime,
-            scheme: Scheme::SpecReason,
-            combo: combo.clone(),
-            cfg: cfg_for(Scheme::SpecReason, threshold),
-        };
-        let r = ctx.run(&cell)?;
+    for (threshold, r) in thresholds.iter().zip(&results[1..]) {
         t.row(vec![
             threshold.to_string(),
             "spec-reason".into(),
@@ -333,11 +401,22 @@ fn fig9(ctx: &Ctx) -> Result<()> {
         "Fig. 9 — thinking-token counts, all datasets x combos",
         &["combo", "dataset", "base", "small", "specreason", "reduction"],
     );
+    let mut cells = Vec::new();
     for combo in main_combos() {
         for ds in Dataset::all() {
-            let base = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaBase, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaBase, 7) })?;
-            let small = ctx.run(&Cell { dataset: ds, scheme: Scheme::VanillaSmall, combo: combo.clone(), cfg: cfg_for(Scheme::VanillaSmall, 7) })?;
-            let spec = ctx.run(&Cell { dataset: ds, scheme: Scheme::SpecReason, combo: combo.clone(), cfg: cfg_for(Scheme::SpecReason, 7) })?;
+            for scheme in [Scheme::VanillaBase, Scheme::VanillaSmall, Scheme::SpecReason] {
+                cells.push(Cell { dataset: ds, scheme, combo: combo.clone(), cfg: cfg_for(scheme, 7) });
+            }
+        }
+    }
+    let results = ctx.run_cells(cells)?;
+    let mut idx = 0;
+    for combo in main_combos() {
+        for ds in Dataset::all() {
+            let (base, small, spec) = (&results[idx], &results[idx + 1], &results[idx + 2]);
+            idx += 3;
+            // Guard the idx bookkeeping against build/read loop drift.
+            assert_eq!(base.cell_label, format!("{}/{}/vanilla-base", ds.name(), combo.label()));
             t.row(vec![
                 combo.label(),
                 ds.name().into(),

@@ -8,18 +8,14 @@
 
 use anyhow::Result;
 
-use specreason::coordinator::{
-    run_query, AcceptancePolicy, Combo, Scheme, SimBackend, SpecConfig,
-};
-use specreason::eval::testbed_for;
-use specreason::metrics::{Aggregate, GpuClock};
-use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+use specreason::eval::{bench_threads, Cell, Sweep};
+use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::Table;
 
 fn main() -> Result<()> {
     let oracle = Oracle::default();
     let combo = Combo::new("qwq-sim", "r1-sim");
-    let clock = GpuClock::new(testbed_for(&combo));
     let n_queries = 48;
     let samples = 4;
 
@@ -34,32 +30,38 @@ fn main() -> Result<()> {
     ];
 
     for ds in Dataset::all() {
-        let gen = TraceGenerator::new(ds, 1234);
-        let queries = gen.queries(n_queries);
+        // One parallel sweep per dataset: a cell per policy.
+        let mut sweep = Sweep::new(n_queries, samples, 1234);
+        for (_, policy) in &policies {
+            sweep.cell(Cell {
+                dataset: ds,
+                scheme: Scheme::SpecReason,
+                combo: combo.clone(),
+                cfg: SpecConfig {
+                    scheme: Scheme::SpecReason,
+                    policy: *policy,
+                    ..Default::default()
+                },
+            });
+        }
+        eprintln!(
+            "[sweep] {} policies × {} work items on {} threads",
+            sweep.cells().len(),
+            sweep.items_per_cell(),
+            bench_threads()
+        );
+        let results = sweep.run_sim(&oracle)?;
         let mut t = Table::new(
             &format!("policy ablation — {} (qwq-sim + r1-sim, GPU clock)", ds.name()),
             &["policy", "pass@1", "latency (s)", "acceptance", "tokens"],
         );
-        for (name, policy) in &policies {
-            let cfg = SpecConfig {
-                scheme: Scheme::SpecReason,
-                policy: *policy,
-                ..Default::default()
-            };
-            let mut agg = Aggregate::default();
-            for q in &queries {
-                for s in 0..samples {
-                    let mut b = SimBackend::new(clock, "small", "base");
-                    let out = run_query(&oracle, q, &combo, &cfg, &mut b, s)?;
-                    agg.push(out.metrics);
-                }
-            }
+        for ((name, _), r) in policies.iter().zip(&results) {
             t.row(vec![
                 name.clone(),
-                format!("{:.3}", agg.accuracy()),
-                format!("{:.1}", agg.mean_gpu()),
-                format!("{:.2}", agg.mean_acceptance()),
-                format!("{:.0}", agg.mean_thinking_tokens()),
+                format!("{:.3}", r.accuracy()),
+                format!("{:.1}", r.mean_gpu()),
+                format!("{:.2}", r.mean_acceptance()),
+                format!("{:.0}", r.mean_tokens()),
             ]);
         }
         t.print();

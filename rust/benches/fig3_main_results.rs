@@ -4,14 +4,20 @@
 //!
 //!   cargo bench --bench fig3_main_results
 //!   SPECREASON_BENCH_QUERIES=40 SPECREASON_BENCH_SAMPLES=8 cargo bench ...
+//!   SPECREASON_BENCH_THREADS=4 cargo bench ...
 //!
-//! Uses the calibrated GPU-clock simulator by default (decision-parity
-//! with the real engine is covered by coordinator_integration tests);
-//! SPECREASON_BENCH_REAL=1 re-runs the qwq+r1 combo on real PJRT.
+//! The whole grid is planned as one `eval::Sweep` and fanned out across
+//! the shared thread pool (deterministic merge — identical numbers at any
+//! thread count).  Uses the calibrated GPU-clock simulator by default
+//! (decision-parity with the real engine is covered by
+//! coordinator_integration tests); SPECREASON_BENCH_REAL=1 re-runs the
+//! qwq+r1 combo on real PJRT.
+
+use std::time::Instant;
 
 use specreason::coordinator::{AcceptancePolicy, Scheme, SpecConfig};
 use specreason::engine::{Engine, EngineConfig};
-use specreason::eval::{bench_real, main_combos, run_cell_bench, Cell};
+use specreason::eval::{bench_real, bench_threads, run_cell_bench, main_combos, Cell, Sweep};
 use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::{bench, BenchConfig, Table};
 
@@ -29,17 +35,13 @@ fn main() {
         main_combos()
     };
 
-    let mut timing = Vec::new();
-    for combo in combos {
-        let mut t = Table::new(
-            &format!("Fig. 3 — {}", combo.label()),
-            &["dataset", "scheme", "pass@1", "latency (s)", "speedup", "offload"],
-        );
+    // Plan the full grid up front; one parallel sweep replaces the old
+    // strictly sequential per-cell loop.
+    let mut sweep = Sweep::bench(1234);
+    for combo in &combos {
         for ds in Dataset::all() {
-            let mut base_lat = None;
-            let mut sd_lat = None;
             for scheme in Scheme::all() {
-                let cell = Cell {
+                sweep.cell(Cell {
                     dataset: ds,
                     scheme,
                     combo: combo.clone(),
@@ -48,8 +50,35 @@ fn main() {
                         policy: AcceptancePolicy::Static { threshold: 7 },
                         ..Default::default()
                     },
-                };
-                let r = run_cell_bench(&oracle, &cell, engine.as_ref(), 1234).expect("cell");
+                });
+            }
+        }
+    }
+    eprintln!(
+        "[fig3] sweeping {} cells / {} work items on {} threads",
+        sweep.cells().len(),
+        sweep.len(),
+        bench_threads()
+    );
+    let t0 = Instant::now();
+    let results = sweep.run_bench(&oracle, engine.as_ref()).expect("sweep");
+    eprintln!("[fig3] grid done in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let mut idx = 0;
+    let mut timing = Vec::new();
+    for combo in &combos {
+        let mut t = Table::new(
+            &format!("Fig. 3 — {}", combo.label()),
+            &["dataset", "scheme", "pass@1", "latency (s)", "speedup", "offload"],
+        );
+        for ds in Dataset::all() {
+            let mut base_lat = None;
+            let mut sd_lat = None;
+            for scheme in Scheme::all() {
+                let r = &results[idx];
+                idx += 1;
+                // Guard the idx bookkeeping against build/read loop drift.
+                assert_eq!(r.cell_label, format!("{}/{}/{}", ds.name(), combo.label(), scheme.name()));
                 let lat = r.mean_gpu();
                 match scheme {
                     Scheme::VanillaBase => base_lat = Some(lat),

@@ -1,10 +1,11 @@
 //! Fig. 4 — (a) thinking-token counts per scheme; (b) accuracy gap vs
 //! token budget on AIME (qwq-sim + zr1-sim, the paper's highest-gain
 //! combo).  Budgets are the paper's 2k..10k sweep rescaled to our
-//! context (DESIGN.md §3).
+//! context (DESIGN.md §3).  Both panels are planned as one parallel
+//! sweep over the shared pool.
 
 use specreason::coordinator::{Combo, Scheme, SpecConfig};
-use specreason::eval::{run_cell_bench, Cell};
+use specreason::eval::{bench_threads, run_cell_bench, Cell, Sweep};
 use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::{bench, BenchConfig, Table};
 
@@ -18,14 +19,41 @@ fn main() {
         cfg: SpecConfig { scheme, token_budget: budget, ..Default::default() },
     };
 
+    // One sweep covers both panels: 4a's 3 schemes × 3 datasets and 4b's
+    // budget ladder × 2 schemes.
+    let mut sweep = Sweep::bench(1234);
+    let mut ids_4a = Vec::new();
+    for ds in Dataset::all() {
+        ids_4a.push((
+            ds,
+            sweep.cell(mk(ds, Scheme::VanillaBase, 704)),
+            sweep.cell(mk(ds, Scheme::VanillaSmall, 704)),
+            sweep.cell(mk(ds, Scheme::SpecReason, 704)),
+        ));
+    }
+    let budgets = [192usize, 320, 448, 576, 704];
+    let mut ids_4b = Vec::new();
+    for &budget in &budgets {
+        ids_4b.push((
+            budget,
+            sweep.cell(mk(Dataset::Aime, Scheme::VanillaBase, budget)),
+            sweep.cell(mk(Dataset::Aime, Scheme::SpecReason, budget)),
+        ));
+    }
+    eprintln!(
+        "[fig4] sweeping {} cells / {} work items on {} threads",
+        sweep.cells().len(),
+        sweep.len(),
+        bench_threads()
+    );
+    let results = sweep.run_bench(&oracle, None).expect("sweep");
+
     let mut t = Table::new(
         "Fig. 4a — thinking tokens (qwq-sim + zr1-sim)",
         &["dataset", "base", "small", "specreason", "reduction"],
     );
-    for ds in Dataset::all() {
-        let base = run_cell_bench(&oracle, &mk(ds, Scheme::VanillaBase, 704), None, 1234).unwrap();
-        let small = run_cell_bench(&oracle, &mk(ds, Scheme::VanillaSmall, 704), None, 1234).unwrap();
-        let spec = run_cell_bench(&oracle, &mk(ds, Scheme::SpecReason, 704), None, 1234).unwrap();
+    for (ds, base, small, spec) in &ids_4a {
+        let (base, small, spec) = (&results[*base], &results[*small], &results[*spec]);
         t.row(vec![
             ds.name().into(),
             format!("{:.0}", base.mean_tokens()),
@@ -40,9 +68,8 @@ fn main() {
         "Fig. 4b — [AIME] accuracy gap vs budget (qwq-sim + zr1-sim)",
         &["budget", "base", "specreason", "gap"],
     );
-    for budget in [192usize, 320, 448, 576, 704] {
-        let base = run_cell_bench(&oracle, &mk(Dataset::Aime, Scheme::VanillaBase, budget), None, 1234).unwrap();
-        let spec = run_cell_bench(&oracle, &mk(Dataset::Aime, Scheme::SpecReason, budget), None, 1234).unwrap();
+    for (budget, base, spec) in &ids_4b {
+        let (base, spec) = (&results[*base], &results[*spec]);
         t.row(vec![
             budget.to_string(),
             format!("{:.3}", base.accuracy()),

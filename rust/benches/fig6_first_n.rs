@@ -1,12 +1,13 @@
 //! Fig. 6 — the first-n knob (§5.3): forcing the first n reasoning steps
 //! onto the base model protects the planning phase, improving accuracy
-//! with a mild latency increase.  AIME, qwq-sim + r1-sim.
+//! with a mild latency increase.  AIME, qwq-sim + r1-sim, one parallel
+//! sweep over the n ladder.
 //!
 //! Paper sweeps n ∈ {0,10,20,30,40} on ~30+-step plans at budget 8192;
 //! our plans average ~24 steps, so we sweep n ∈ {0,4,8,12,16}.
 
 use specreason::coordinator::{Combo, Scheme, SpecConfig};
-use specreason::eval::{run_cell_bench, Cell};
+use specreason::eval::{bench_threads, run_cell_bench, Cell, Sweep};
 use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::{bench, BenchConfig, Table};
 
@@ -19,12 +20,24 @@ fn main() {
         combo: combo.clone(),
         cfg: SpecConfig { first_n_base: n, ..Default::default() },
     };
+    let ns = [0usize, 4, 8, 12, 16];
+    let mut sweep = Sweep::bench(1234);
+    for &n in &ns {
+        sweep.cell(mk(n));
+    }
+    eprintln!(
+        "[fig6] sweeping {} cells / {} work items on {} threads",
+        sweep.cells().len(),
+        sweep.len(),
+        bench_threads()
+    );
+    let results = sweep.run_bench(&oracle, None).expect("sweep");
+
     let mut t = Table::new(
         "Fig. 6 — [AIME] first-n-base knob (qwq-sim + r1-sim)",
         &["first n", "pass@1", "latency (s)", "offload", "tokens"],
     );
-    for n in [0usize, 4, 8, 12, 16] {
-        let r = run_cell_bench(&oracle, &mk(n), None, 1234).unwrap();
+    for (n, r) in ns.iter().zip(&results) {
         t.row(vec![
             n.to_string(),
             format!("{:.3}", r.accuracy()),

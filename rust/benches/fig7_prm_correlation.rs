@@ -2,7 +2,14 @@
 //! bin Math-Shepherd-style PRM scores into ten [x, x+0.1) buckets and
 //! report the mean 0–9 utility score the base model gave the same steps.
 //! A strong correlation validates using the base model as the critic.
+//!
+//! Per-query scoring is independent, so the loop fans out across the
+//! shared sweep pool and folds results back in query order
+//! (deterministic at any thread count).
 
+use std::sync::Arc;
+
+use specreason::eval::{bench_threads, shared_pool};
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::util::bench::{bench, BenchConfig, Table};
 use specreason::util::stats::{pearson, Histogram};
@@ -12,18 +19,33 @@ fn main() {
     let gen = TraceGenerator::new(Dataset::Aime, 1234);
     let n_queries = specreason::eval::bench_queries().max(40);
 
+    eprintln!("[fig7] scoring {n_queries} queries on {} threads", bench_threads());
+    let shared_oracle = Arc::new(oracle.clone());
+    let per_query: Vec<Vec<(f64, f64)>> = shared_pool()
+        .map((0..n_queries).collect::<Vec<usize>>(), move |_, qi| {
+            // Queries regenerate deterministically from (dataset, seed,
+            // index); scoring is pure per (query, step).
+            let q = TraceGenerator::new(Dataset::Aime, 1234).query(qi);
+            (0..q.plan_len())
+                .map(|step| {
+                    // The speculated steps come from the small model (§5.4).
+                    let quality = shared_oracle.step_quality(&q, step, 0, "r1-sim");
+                    let p = shared_oracle.prm_score(&q, step, 0, quality);
+                    let u = shared_oracle.verifier_score(&q, step, 0, quality, "qwq-sim");
+                    (p, u as f64)
+                })
+                .collect()
+        })
+        .expect("sweep pool");
+
     let mut hist = Histogram::new(0.0, 1.0, 10);
     let mut prm = Vec::new();
     let mut util = Vec::new();
-    for q in gen.queries(n_queries) {
-        for step in 0..q.plan_len() {
-            // The speculated steps come from the small model, as in §5.4.
-            let quality = oracle.step_quality(&q, step, 0, "r1-sim");
-            let p = oracle.prm_score(&q, step, 0, quality);
-            let u = oracle.verifier_score(&q, step, 0, quality, "qwq-sim");
-            hist.record(p, u as f64);
+    for pairs in &per_query {
+        for &(p, u) in pairs {
+            hist.record(p, u);
             prm.push(p);
-            util.push(u as f64);
+            util.push(u);
         }
     }
 

@@ -2,10 +2,11 @@
 //! the speedup SHRINKS relative to Fig. 3 because (1) the 70B:1.5B TPT
 //! gap is narrower on A100s (37:7.3 vs 55:8 ms/tok) and (2) the weaker
 //! judge needs a stricter threshold, reducing offload (§A.1 reports
-//! 23.2% vs 40.8% of steps offloaded).
+//! 23.2% vs 40.8% of steps offloaded).  All four cells run as one
+//! parallel sweep.
 
 use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
-use specreason::eval::{run_cell_bench, Cell};
+use specreason::eval::{bench_threads, run_cell_bench, Cell, Sweep};
 use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::{bench, BenchConfig, Table};
 
@@ -22,14 +23,29 @@ fn main() {
         },
     };
 
+    // Main-results reference (qwq-sim, A6000 clock, threshold 7) and the
+    // appendix combo (r1-70b-sim, A100 clock, stricter threshold 8).
+    let qwq = Combo::new("qwq-sim", "r1-sim");
+    let big = Combo::new("r1-70b-sim", "r1-sim");
+    let mut sweep = Sweep::bench(1234);
+    let id_base = sweep.cell(mk(&qwq, Scheme::VanillaBase, 7));
+    let id_spec = sweep.cell(mk(&qwq, Scheme::SpecReason, 7));
+    let id_base70 = sweep.cell(mk(&big, Scheme::VanillaBase, 8));
+    let id_spec70 = sweep.cell(mk(&big, Scheme::SpecReason, 8));
+    eprintln!(
+        "[fig8] sweeping {} cells / {} work items on {} threads",
+        sweep.cells().len(),
+        sweep.len(),
+        bench_threads()
+    );
+    let results = sweep.run_bench(&oracle, None).expect("sweep");
+    let (base, spec) = (&results[id_base], &results[id_spec]);
+    let (base70, spec70) = (&results[id_base70], &results[id_spec70]);
+
     let mut t = Table::new(
         "Fig. 8 — [AIME] base-model size/testbed ablation",
         &["combo (testbed)", "scheme", "thr", "pass@1", "latency (s)", "speedup", "offload"],
     );
-    // Main-results reference: qwq-sim on the A6000 clock at threshold 7.
-    let qwq = Combo::new("qwq-sim", "r1-sim");
-    let base = run_cell_bench(&oracle, &mk(&qwq, Scheme::VanillaBase, 7), None, 1234).unwrap();
-    let spec = run_cell_bench(&oracle, &mk(&qwq, Scheme::SpecReason, 7), None, 1234).unwrap();
     let qwq_speedup = base.mean_gpu() / spec.mean_gpu();
     t.row(vec!["qwq-sim (2xA6000)".into(), "vanilla-base".into(), "-".into(),
         format!("{:.3}", base.accuracy()), format!("{:.1}", base.mean_gpu()), String::new(), "0.00".into()]);
@@ -37,10 +53,6 @@ fn main() {
         format!("{:.3}", spec.accuracy()), format!("{:.1}", spec.mean_gpu()),
         format!("{qwq_speedup:.2}x"), format!("{:.2}", spec.mean_offload())]);
 
-    // Appendix combo: r1-70b-sim on the A100 clock; stricter threshold 8.
-    let big = Combo::new("r1-70b-sim", "r1-sim");
-    let base70 = run_cell_bench(&oracle, &mk(&big, Scheme::VanillaBase, 8), None, 1234).unwrap();
-    let spec70 = run_cell_bench(&oracle, &mk(&big, Scheme::SpecReason, 8), None, 1234).unwrap();
     let speedup70 = base70.mean_gpu() / spec70.mean_gpu();
     t.row(vec!["r1-70b-sim (4xA100)".into(), "vanilla-base".into(), "-".into(),
         format!("{:.3}", base70.accuracy()), format!("{:.1}", base70.mean_gpu()), String::new(), "0.00".into()]);

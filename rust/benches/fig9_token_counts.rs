@@ -1,32 +1,55 @@
 //! Fig. 9 / App. A.2 — thinking-token counts for all datasets × the four
 //! main model combinations: the small model is less verbose, so
 //! SpecReason cuts token consumption by ~1.0–2.3× depending on how many
-//! steps it adopts.
+//! steps it adopts.  The 36-cell grid runs as one parallel sweep.
 
 use specreason::coordinator::{Scheme, SpecConfig};
-use specreason::eval::{main_combos, run_cell_bench, Cell};
+use specreason::eval::{bench_threads, run_cell_bench, main_combos, Cell, Sweep};
 use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::{bench, BenchConfig, Table};
 
 fn main() {
     let oracle = Oracle::default();
+    let schemes = [Scheme::VanillaBase, Scheme::VanillaSmall, Scheme::SpecReason];
+    let mut sweep = Sweep::bench(1234);
+    for combo in main_combos() {
+        for ds in Dataset::all() {
+            for scheme in schemes {
+                sweep.cell(Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: SpecConfig { scheme, ..Default::default() },
+                });
+            }
+        }
+    }
+    eprintln!(
+        "[fig9] sweeping {} cells / {} work items on {} threads",
+        sweep.cells().len(),
+        sweep.len(),
+        bench_threads()
+    );
+    let results = sweep.run_bench(&oracle, None).expect("sweep");
+
     let mut t = Table::new(
         "Fig. 9 — thinking-token counts, all datasets x combos",
         &["combo", "dataset", "base", "small", "specreason", "reduction"],
     );
     let mut reductions = Vec::new();
+    let mut idx = 0;
     for combo in main_combos() {
         let mut combo_reductions: Vec<f64> = Vec::new();
         for ds in Dataset::all() {
-            let mk = |scheme| Cell {
-                dataset: ds,
-                scheme,
-                combo: combo.clone(),
-                cfg: SpecConfig { scheme, ..Default::default() },
-            };
-            let base = run_cell_bench(&oracle, &mk(Scheme::VanillaBase), None, 1234).unwrap();
-            let small = run_cell_bench(&oracle, &mk(Scheme::VanillaSmall), None, 1234).unwrap();
-            let spec = run_cell_bench(&oracle, &mk(Scheme::SpecReason), None, 1234).unwrap();
+            let base = &results[idx];
+            let small = &results[idx + 1];
+            let spec = &results[idx + 2];
+            idx += 3;
+            // Guard the idx bookkeeping against build/read loop drift.
+            assert_eq!(
+                base.cell_label,
+                format!("{}/{}/vanilla-base", ds.name(), combo.label())
+            );
             let reduction = base.mean_tokens() / spec.mean_tokens();
             combo_reductions.push(reduction);
             t.row(vec![

@@ -6,14 +6,16 @@
 //! simulator (fast, exact GPU clock) or the real PJRT engine (adds
 //! measured wall-clock); both share [`coordinator::run_query`].
 
+pub mod sweep;
+
 use anyhow::Result;
 
-use crate::coordinator::{
-    run_query, Combo, QueryOutcome, RealBackend, Scheme, SimBackend, SpecConfig,
-};
+use crate::coordinator::{Combo, QueryOutcome, Scheme, SpecConfig};
 use crate::engine::Engine;
-use crate::metrics::{Aggregate, GpuClock, Testbed};
-use crate::semantics::{Dataset, ModelClass, Oracle, TraceGenerator};
+use crate::metrics::{Aggregate, Testbed};
+use crate::semantics::{Dataset, ModelClass, Oracle};
+
+pub use sweep::{bench_threads, shared_pool, Sweep, WorkItem};
 
 /// One evaluation cell.
 #[derive(Debug, Clone)]
@@ -33,6 +35,11 @@ pub struct CellResult {
 }
 
 impl CellResult {
+    /// Per-(query, sample) pass@1 flags in plan order — handy for
+    /// determinism assertions.
+    pub fn answer_flags(&self) -> Vec<bool> {
+        self.outcomes.iter().map(|o| o.metrics.answer_correct).collect()
+    }
     pub fn accuracy(&self) -> f64 {
         self.agg.accuracy()
     }
@@ -63,7 +70,7 @@ pub fn testbed_for(combo: &Combo) -> Testbed {
     }
 }
 
-fn arch_name(class: ModelClass) -> &'static str {
+pub(crate) fn arch_name(class: ModelClass) -> &'static str {
     match class {
         ModelClass::Small => "small",
         ModelClass::Base => "base",
@@ -72,7 +79,9 @@ fn arch_name(class: ModelClass) -> &'static str {
 }
 
 /// Run a cell on the simulator: `n_queries` queries × `samples` pass@1
-/// samples each.
+/// samples each.  Routed through the parallel sweep engine (thread count
+/// from `SPECREASON_BENCH_THREADS`, default = available parallelism);
+/// results are bit-identical to a sequential run — see [`sweep`].
 pub fn run_cell_sim(
     oracle: &Oracle,
     cell: &Cell,
@@ -80,25 +89,14 @@ pub fn run_cell_sim(
     samples: usize,
     seed: u64,
 ) -> Result<CellResult> {
-    let gen = TraceGenerator::new(cell.dataset, seed);
-    let clock = GpuClock::new(testbed_for(&cell.combo));
-    let small_arch = arch_name(ModelClass::of(&cell.combo.small));
-    let base_arch = arch_name(ModelClass::of(&cell.combo.base));
-    let mut agg = Aggregate::default();
-    let mut outcomes = Vec::new();
-    for q in gen.queries(n_queries) {
-        for s in 0..samples {
-            let mut b = SimBackend::new(clock, small_arch, base_arch);
-            let out = run_query(oracle, &q, &cell.combo, &cell.cfg, &mut b, s)?;
-            agg.push(out.metrics.clone());
-            outcomes.push(out);
-        }
-    }
-    Ok(CellResult { cell_label: label(cell), agg, outcomes })
+    let mut sw = Sweep::new(n_queries, samples, seed);
+    sw.cell(cell.clone());
+    Ok(sw.run_sim(oracle)?.remove(0))
 }
 
 /// Run a cell on the real engine (the engine must have the combo's models
-/// loaded).
+/// loaded).  Items execute sequentially — the engine serializes the two
+/// colocated models — via the same sweep planner/merge code.
 pub fn run_cell_real(
     engine: &Engine,
     oracle: &Oracle,
@@ -107,22 +105,12 @@ pub fn run_cell_real(
     samples: usize,
     seed: u64,
 ) -> Result<CellResult> {
-    let gen = TraceGenerator::new(cell.dataset, seed);
-    let mut agg = Aggregate::default();
-    let mut outcomes = Vec::new();
-    for q in gen.queries(n_queries) {
-        for s in 0..samples {
-            let mut b = RealBackend::new(engine, &cell.combo.small, &cell.combo.base);
-            let out = run_query(oracle, &q, &cell.combo, &cell.cfg, &mut b, s)?;
-            b.release()?;
-            agg.push(out.metrics.clone());
-            outcomes.push(out);
-        }
-    }
-    Ok(CellResult { cell_label: label(cell), agg, outcomes })
+    let mut sw = Sweep::new(n_queries, samples, seed);
+    sw.cell(cell.clone());
+    Ok(sw.run_real(engine, oracle)?.remove(0))
 }
 
-fn label(cell: &Cell) -> String {
+pub(crate) fn label(cell: &Cell) -> String {
     format!(
         "{}/{}/{}",
         cell.dataset.name(),

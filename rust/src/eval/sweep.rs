@@ -1,0 +1,377 @@
+//! Parallel sweep engine: fan (cell × query × sample) evaluation across
+//! the shared thread pool with deterministic merging.
+//!
+//! The paper's headline figures are all produced by sweeping
+//! scheme × dataset × combo × threshold grids, and every (query, sample)
+//! unit inside a grid is independent: [`run_query`] is a pure function of
+//! (oracle, query seed, sample), so the grid is embarrassingly parallel.
+//! A [`Sweep`] expands its cells into [`WorkItem`]s, executes them across
+//! the process-wide [`ThreadPool`] (thread count from
+//! `SPECREASON_BENCH_THREADS`, default = available parallelism), and
+//! folds the per-item outcomes back **in plan order**, so the merged
+//! [`Aggregate`]s are bit-identical to a sequential run at any thread
+//! count — `run_sim_seq` exists precisely so tests can assert that.
+//!
+//! The real-engine path reuses the same planner and merge code but
+//! executes items sequentially: the paper's deployment serializes the two
+//! colocated models on shared GPUs, so there is no intra-engine
+//! parallelism to exploit (batched server scheduling is tracked as a
+//! ROADMAP follow-on).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::{run_query, QueryOutcome, RealBackend, SimBackend};
+use crate::engine::Engine;
+use crate::metrics::{Aggregate, GpuClock};
+use crate::semantics::{ModelClass, Oracle, Query, TraceGenerator};
+use crate::util::threadpool::ThreadPool;
+
+use super::{
+    arch_name, bench_queries, bench_real, bench_samples, label, testbed_for, Cell, CellResult,
+};
+
+/// One independent unit of sweep work: run `cell_id`'s scheme on query
+/// `query_idx`, pass@1 repetition `sample`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkItem {
+    pub cell_id: usize,
+    pub query_idx: usize,
+    pub sample: usize,
+}
+
+/// A planned grid of evaluation cells sharing (n_queries, samples, seed).
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    cells: Vec<Cell>,
+    n_queries: usize,
+    samples: usize,
+    seed: u64,
+}
+
+impl Sweep {
+    pub fn new(n_queries: usize, samples: usize, seed: u64) -> Sweep {
+        Sweep { cells: Vec::new(), n_queries, samples, seed }
+    }
+
+    /// Sweep sized from the `SPECREASON_BENCH_QUERIES` /
+    /// `SPECREASON_BENCH_SAMPLES` env knobs (the bench defaults).
+    pub fn bench(seed: u64) -> Sweep {
+        Sweep::new(bench_queries(), bench_samples(), seed)
+    }
+
+    /// Add a cell to the grid; returns its id (the index of its
+    /// [`CellResult`] in every `run_*` output).
+    pub fn cell(&mut self, cell: Cell) -> usize {
+        self.cells.push(cell);
+        self.cells.len() - 1
+    }
+
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.n_queries
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Work items per cell.
+    pub fn items_per_cell(&self) -> usize {
+        self.n_queries * self.samples
+    }
+
+    /// Total work items in the grid.
+    pub fn len(&self) -> usize {
+        self.cells.len() * self.items_per_cell()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the grid into work items, cell-major then query-major then
+    /// sample — exactly the iteration order of the sequential path, which
+    /// is what makes in-order merging bit-identical.
+    pub fn plan(&self) -> Vec<WorkItem> {
+        let mut items = Vec::with_capacity(self.len());
+        for cell_id in 0..self.cells.len() {
+            for query_idx in 0..self.n_queries {
+                for sample in 0..self.samples {
+                    items.push(WorkItem { cell_id, query_idx, sample });
+                }
+            }
+        }
+        items
+    }
+
+    /// Run on the simulator across the shared pool (default thread count).
+    pub fn run_sim(&self, oracle: &Oracle) -> Result<Vec<CellResult>> {
+        self.run_sim_on_pool(oracle, &shared_pool())
+    }
+
+    /// Run on the simulator across a dedicated pool of `threads` workers
+    /// (`0` = the shared pool at the default thread count).
+    pub fn run_sim_threads(&self, oracle: &Oracle, threads: usize) -> Result<Vec<CellResult>> {
+        if threads == 0 {
+            return self.run_sim(oracle);
+        }
+        self.run_sim_on_pool(oracle, &ThreadPool::new(threads))
+    }
+
+    /// Pure-sequential reference path: a plain loop over the plan with no
+    /// pool involved. The parallel paths must match this bit-for-bit.
+    pub fn run_sim_seq(&self, oracle: &Oracle) -> Result<Vec<CellResult>> {
+        let outs = run_items_sim(oracle, &self.cells, self.seed, &self.plan())?;
+        Ok(self.collect(outs))
+    }
+
+    fn run_sim_on_pool(&self, oracle: &Oracle, pool: &ThreadPool) -> Result<Vec<CellResult>> {
+        let items = self.plan();
+        if items.is_empty() {
+            return Ok(self.collect(Vec::new()));
+        }
+        // Chunk items so per-job channel overhead amortizes over many
+        // run_query calls while keeping enough chunks for load balance.
+        let per_chunk = chunk_size(items.len(), pool.size());
+        let chunks: Vec<Vec<WorkItem>> = items.chunks(per_chunk).map(|c| c.to_vec()).collect();
+        let ctx = Arc::new(SimCtx {
+            oracle: oracle.clone(),
+            cells: self.cells.clone(),
+            seed: self.seed,
+        });
+        let results = pool
+            .map(chunks, move |_, chunk: Vec<WorkItem>| {
+                run_items_sim(&ctx.oracle, &ctx.cells, ctx.seed, &chunk)
+            })
+            .map_err(|e| anyhow::anyhow!("sweep pool unavailable: {e}"))?;
+        // map() returned chunk results in submission order; flatten back
+        // into plan order (first error in plan order wins).
+        let mut outs = Vec::with_capacity(self.len());
+        for chunk in results {
+            outs.extend(chunk?);
+        }
+        Ok(self.collect(outs))
+    }
+
+    /// Run on the real engine (must have every cell's models loaded).
+    /// Items execute sequentially — the engine serializes the colocated
+    /// models on the (simulated) GPUs — but planning and merging are the
+    /// same code as the parallel path.
+    pub fn run_real(&self, engine: &Engine, oracle: &Oracle) -> Result<Vec<CellResult>> {
+        let mut outs = Vec::with_capacity(self.len());
+        let mut cached: Option<(usize, usize, Query)> = None;
+        for item in self.plan() {
+            let cell = &self.cells[item.cell_id];
+            let stale = match &cached {
+                Some((c, qi, _)) => *c != item.cell_id || *qi != item.query_idx,
+                None => true,
+            };
+            if stale {
+                let q = TraceGenerator::new(cell.dataset, self.seed).query(item.query_idx);
+                cached = Some((item.cell_id, item.query_idx, q));
+            }
+            let q = &cached.as_ref().expect("query cached").2;
+            let mut b = RealBackend::new(engine, &cell.combo.small, &cell.combo.base);
+            let out = run_query(oracle, q, &cell.combo, &cell.cfg, &mut b, item.sample)?;
+            b.release()?;
+            outs.push(out);
+        }
+        Ok(self.collect(outs))
+    }
+
+    /// Honor the bench env: simulator by default, real engine with
+    /// `SPECREASON_BENCH_REAL=1` and a caller-provided engine.
+    pub fn run_bench(&self, oracle: &Oracle, engine: Option<&Engine>) -> Result<Vec<CellResult>> {
+        match engine {
+            Some(e) if bench_real() => self.run_real(e, oracle),
+            _ => self.run_sim(oracle),
+        }
+    }
+
+    /// Fold per-item outcomes (in plan order) into per-cell results.
+    /// Aggregation borrows each outcome's metrics — nothing is cloned —
+    /// and pushes them in exactly the sequential order, which is what
+    /// makes the parallel path bit-identical to `run_sim_seq`.
+    fn collect(&self, outs: Vec<QueryOutcome>) -> Vec<CellResult> {
+        debug_assert_eq!(outs.len(), self.len());
+        let per_cell = self.items_per_cell();
+        let mut it = outs.into_iter();
+        self.cells
+            .iter()
+            .map(|cell| {
+                let outcomes: Vec<QueryOutcome> = it.by_ref().take(per_cell).collect();
+                let mut agg = Aggregate::default();
+                for o in &outcomes {
+                    agg.push(&o.metrics);
+                }
+                CellResult { cell_label: label(cell), agg, outcomes }
+            })
+            .collect()
+    }
+}
+
+struct SimCtx {
+    oracle: Oracle,
+    cells: Vec<Cell>,
+    seed: u64,
+}
+
+/// Execute a run of work items on the simulator. Pure in (oracle, cells,
+/// seed, items): every call with the same arguments produces the same
+/// outcomes regardless of thread, which the determinism tests assert.
+///
+/// Consecutive items for the same (cell, query) — the plan lays samples
+/// out adjacently — reuse one generated `Query` instead of regenerating
+/// it per sample; `TraceGenerator::query` is pure, so this is purely a
+/// work saving, not a behavior change.
+fn run_items_sim(
+    oracle: &Oracle,
+    cells: &[Cell],
+    seed: u64,
+    items: &[WorkItem],
+) -> Result<Vec<QueryOutcome>> {
+    let mut outs = Vec::with_capacity(items.len());
+    let mut cached: Option<(usize, usize, Query)> = None;
+    for item in items {
+        let cell = &cells[item.cell_id];
+        let stale = match &cached {
+            Some((c, qi, _)) => *c != item.cell_id || *qi != item.query_idx,
+            None => true,
+        };
+        if stale {
+            let q = TraceGenerator::new(cell.dataset, seed).query(item.query_idx);
+            cached = Some((item.cell_id, item.query_idx, q));
+        }
+        let q = &cached.as_ref().expect("query cached").2;
+        let clock = GpuClock::new(testbed_for(&cell.combo));
+        let small_arch = arch_name(ModelClass::of(&cell.combo.small));
+        let base_arch = arch_name(ModelClass::of(&cell.combo.base));
+        let mut b = SimBackend::new(clock, small_arch, base_arch);
+        outs.push(run_query(oracle, q, &cell.combo, &cell.cfg, &mut b, item.sample)?);
+    }
+    Ok(outs)
+}
+
+fn chunk_size(items: usize, workers: usize) -> usize {
+    // ~8 chunks per worker balances channel overhead against stragglers.
+    let target_chunks = workers.max(1) * 8;
+    ((items + target_chunks - 1) / target_chunks).max(1)
+}
+
+/// Worker count for eval sweeps: `SPECREASON_BENCH_THREADS` if set (> 0),
+/// else the machine's available parallelism.
+pub fn bench_threads() -> usize {
+    std::env::var("SPECREASON_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+static SHARED: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+
+/// The process-wide sweep pool, created on first use with
+/// [`bench_threads`] workers and shared by every sweep (and any other
+/// caller that wants parallel helpers, e.g. the fig7 scoring loop).
+pub fn shared_pool() -> Arc<ThreadPool> {
+    let mut guard = SHARED.lock().unwrap();
+    if let Some(pool) = guard.as_ref() {
+        return Arc::clone(pool);
+    }
+    let pool = Arc::new(ThreadPool::new(bench_threads()));
+    *guard = Some(Arc::clone(&pool));
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+    use crate::semantics::Dataset;
+
+    fn grid() -> Sweep {
+        let mut sw = Sweep::new(4, 2, 7);
+        for ds in [Dataset::Aime, Dataset::Math500] {
+            for scheme in [Scheme::SpecReason, Scheme::VanillaBase] {
+                sw.cell(Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: Combo::new("qwq-sim", "r1-sim"),
+                    cfg: SpecConfig {
+                        scheme,
+                        policy: AcceptancePolicy::Static { threshold: 7 },
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+        sw
+    }
+
+    #[test]
+    fn plan_is_cell_major_query_major_sample_minor() {
+        let sw = grid();
+        let plan = sw.plan();
+        assert_eq!(plan.len(), 4 * 4 * 2);
+        assert_eq!(plan[0], WorkItem { cell_id: 0, query_idx: 0, sample: 0 });
+        assert_eq!(plan[1], WorkItem { cell_id: 0, query_idx: 0, sample: 1 });
+        assert_eq!(plan[2], WorkItem { cell_id: 0, query_idx: 1, sample: 0 });
+        assert_eq!(plan[8], WorkItem { cell_id: 1, query_idx: 0, sample: 0 });
+        assert_eq!(
+            plan[31],
+            WorkItem { cell_id: 3, query_idx: 3, sample: 1 }
+        );
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential() {
+        let oracle = Oracle::default();
+        let sw = grid();
+        let seq = sw.run_sim_seq(&oracle).unwrap();
+        let par = sw.run_sim_threads(&oracle, 3).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell_label, b.cell_label);
+            assert_eq!(a.agg, b.agg, "{}: aggregate diverged", a.cell_label);
+            assert_eq!(a.mean_gpu().to_bits(), b.mean_gpu().to_bits());
+            for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(oa.metrics.gpu_secs.to_bits(), ob.metrics.gpu_secs.to_bits());
+                assert_eq!(oa.metrics.answer_correct, ob.metrics.answer_correct);
+                assert_eq!(oa.metrics.steps_accepted, ob.metrics.steps_accepted);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_sweep_returns_no_results() {
+        let oracle = Oracle::default();
+        let sw = Sweep::new(4, 2, 7);
+        assert!(sw.is_empty());
+        assert!(sw.run_sim_threads(&oracle, 2).unwrap().is_empty());
+        assert!(sw.run_sim_seq(&oracle).unwrap().is_empty());
+    }
+
+    #[test]
+    fn chunking_covers_all_items() {
+        for (items, workers) in [(1usize, 4usize), (7, 4), (32, 1), (1920, 8), (3, 16)] {
+            let c = chunk_size(items, workers);
+            assert!(c >= 1);
+            // ceil(items / c) chunks reconstruct exactly `items` items.
+            let chunks = (items + c - 1) / c;
+            assert!(chunks * c >= items);
+            assert!((chunks - 1) * c < items);
+        }
+    }
+
+    #[test]
+    fn bench_threads_is_positive() {
+        assert!(bench_threads() >= 1);
+    }
+}

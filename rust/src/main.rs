@@ -14,7 +14,7 @@ use specreason::coordinator::{
     run_query, AcceptancePolicy, Combo, RealBackend, Scheme, SpecConfig,
 };
 use specreason::engine::Engine;
-use specreason::eval::{run_cell_real, run_cell_sim, Cell};
+use specreason::eval::{bench_threads, Cell, Sweep};
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::server::Server;
 use specreason::util::bench::Table;
@@ -101,6 +101,12 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         .opt("queries", "number of queries", Some("8"))
         .opt("samples", "pass@1 samples per query", Some("2"))
         .opt("seed", "workload seed", Some("1234"))
+        .opt_env(
+            "threads",
+            "sweep worker threads with --sim (0 = auto: available parallelism); the real engine always runs sequentially",
+            "SPECREASON_BENCH_THREADS",
+            Some("0"),
+        )
         .flag("sim", "use the cost-model simulator instead of the engine");
     let args = cmd.parse(raw)?;
     let cfg = deploy_from(&args)?;
@@ -108,6 +114,7 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     let queries = args.usize("queries", 8)?;
     let samples = args.usize("samples", 2)?;
     let seed = args.u64("seed", 1234)?;
+    let threads = args.usize("threads", 0)?;
 
     let cell = Cell {
         dataset,
@@ -116,12 +123,21 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         cfg: cfg.spec_config(),
     };
     let oracle = Oracle::default();
+    let mut sweep = Sweep::new(queries, samples, seed);
+    sweep.cell(cell);
     let result = if args.flag("sim") {
-        run_cell_sim(&oracle, &cell, queries, samples, seed)?
+        let n = if threads == 0 { bench_threads() } else { threads };
+        eprintln!("[run] sweeping {} work items on {n} threads (sim)", sweep.len());
+        sweep.run_sim_threads(&oracle, threads)?.remove(0)
     } else {
+        if threads != 0 {
+            // May come from --threads or SPECREASON_BENCH_THREADS; either
+            // way it has no effect on this path.
+            eprintln!("[run] note: worker threads only affect --sim; the real engine runs items sequentially");
+        }
         eprintln!("[run] loading engine ...");
         let engine = Engine::new(&cfg.engine_config())?;
-        run_cell_real(&engine, &oracle, &cell, queries, samples, seed)?
+        sweep.run_real(&engine, &oracle)?.remove(0)
     };
 
     let mut t = Table::new(

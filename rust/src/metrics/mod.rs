@@ -163,52 +163,119 @@ impl QueryMetrics {
 
 /// Aggregate over a batch of queries (one eval cell, e.g. one scheme on
 /// one dataset).
-#[derive(Debug, Clone, Default)]
+///
+/// Accumulates scalar statistics from *borrowed* [`QueryMetrics`] — the
+/// per-query metrics stay with their owning `QueryOutcome`s instead of
+/// being cloned into the aggregate a second time.  Two aggregates built
+/// by pushing the same metrics in the same order are bit-identical; the
+/// parallel sweep engine (eval::sweep) exploits this by folding per-item
+/// results back in plan order, so its output is bit-identical to the
+/// sequential path at any thread count.  [`Aggregate::merge`] combines
+/// per-worker partials: counts combine exactly; f64 sums combine in
+/// partial order (bit-identical when each partial is a single item or
+/// when there is one partial, and within one float-rounding step of the
+/// sequential sum otherwise).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Aggregate {
-    pub queries: Vec<QueryMetrics>,
+    n: usize,
+    correct: usize,
+    sum_wall: f64,
+    sum_gpu: f64,
+    sum_thinking: f64,
+    sum_offload: f64,
+    sum_acceptance: f64,
+    sum_draft_acceptance: f64,
+    phase_wall: BTreeMap<&'static str, f64>,
+    phase_gpu: BTreeMap<&'static str, f64>,
 }
 
 impl Aggregate {
-    pub fn push(&mut self, q: QueryMetrics) {
-        self.queries.push(q);
+    /// Fold one query's metrics in (by reference — no clone).
+    pub fn push(&mut self, q: &QueryMetrics) {
+        self.n += 1;
+        if q.answer_correct {
+            self.correct += 1;
+        }
+        self.sum_wall += q.wall_secs;
+        self.sum_gpu += q.gpu_secs;
+        self.sum_thinking += q.thinking_tokens as f64;
+        self.sum_offload += q.offload_ratio();
+        self.sum_acceptance += q.acceptance_rate();
+        self.sum_draft_acceptance += q.draft_acceptance_rate();
+        for (k, v) in &q.phase_wall {
+            *self.phase_wall.entry(*k).or_default() += *v;
+        }
+        for (k, v) in &q.phase_gpu {
+            *self.phase_gpu.entry(*k).or_default() += *v;
+        }
     }
+
+    /// Combine another aggregate into this one.  Counts combine exactly;
+    /// f64 sums combine in partial order (see the type-level note on
+    /// bit-identity).
+    pub fn merge(&mut self, other: &Aggregate) {
+        self.n += other.n;
+        self.correct += other.correct;
+        self.sum_wall += other.sum_wall;
+        self.sum_gpu += other.sum_gpu;
+        self.sum_thinking += other.sum_thinking;
+        self.sum_offload += other.sum_offload;
+        self.sum_acceptance += other.sum_acceptance;
+        self.sum_draft_acceptance += other.sum_draft_acceptance;
+        for (k, v) in &other.phase_wall {
+            *self.phase_wall.entry(*k).or_default() += *v;
+        }
+        for (k, v) in &other.phase_gpu {
+            *self.phase_gpu.entry(*k).or_default() += *v;
+        }
+    }
+
     pub fn n(&self) -> usize {
-        self.queries.len()
+        self.n
+    }
+    /// Queries whose final answer was correct.
+    pub fn correct(&self) -> usize {
+        self.correct
     }
     pub fn accuracy(&self) -> f64 {
-        if self.queries.is_empty() {
+        if self.n == 0 {
             return 0.0;
         }
-        self.queries.iter().filter(|q| q.answer_correct).count() as f64
-            / self.queries.len() as f64
+        self.correct as f64 / self.n as f64
     }
     pub fn mean_wall(&self) -> f64 {
-        mean(self.queries.iter().map(|q| q.wall_secs))
+        self.mean(self.sum_wall)
     }
     pub fn mean_gpu(&self) -> f64 {
-        mean(self.queries.iter().map(|q| q.gpu_secs))
+        self.mean(self.sum_gpu)
     }
     pub fn mean_thinking_tokens(&self) -> f64 {
-        mean(self.queries.iter().map(|q| q.thinking_tokens as f64))
+        self.mean(self.sum_thinking)
     }
     pub fn mean_offload_ratio(&self) -> f64 {
-        mean(self.queries.iter().map(|q| q.offload_ratio()))
+        self.mean(self.sum_offload)
     }
     pub fn mean_acceptance(&self) -> f64 {
-        mean(self.queries.iter().map(|q| q.acceptance_rate()))
+        self.mean(self.sum_acceptance)
     }
-}
+    pub fn mean_draft_acceptance(&self) -> f64 {
+        self.mean(self.sum_draft_acceptance)
+    }
+    /// Mean per-query GPU seconds spent in `phase` (0.0 if never seen).
+    pub fn mean_phase_gpu(&self, phase: &str) -> f64 {
+        self.mean(self.phase_gpu.get(phase).copied().unwrap_or(0.0))
+    }
+    /// Mean per-query wall seconds spent in `phase` (0.0 if never seen).
+    pub fn mean_phase_wall(&self, phase: &str) -> f64 {
+        self.mean(self.phase_wall.get(phase).copied().unwrap_or(0.0))
+    }
 
-fn mean(it: impl Iterator<Item = f64>) -> f64 {
-    let (mut s, mut n) = (0.0, 0usize);
-    for x in it {
-        s += x;
-        n += 1;
-    }
-    if n == 0 {
-        0.0
-    } else {
-        s / n as f64
+    fn mean(&self, sum: f64) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            sum / self.n as f64
+        }
     }
 }
 
@@ -261,6 +328,23 @@ mod tests {
         assert_eq!(empty.offload_ratio(), 0.0);
     }
 
+    fn sample_metrics(n: usize) -> Vec<QueryMetrics> {
+        (0..n)
+            .map(|i| {
+                let mut q = QueryMetrics::default();
+                q.record(Phase::Speculate, 0.1 * i as f64, 0.31 * (i + 1) as f64);
+                q.record(Phase::Verify, 0.07, 0.013 * i as f64);
+                q.wall_secs += i as f64;
+                q.answer_correct = i % 2 == 0;
+                q.thinking_tokens = 100 * i;
+                q.steps_total = 10;
+                q.steps_speculated = 8;
+                q.steps_accepted = i % 9;
+                q
+            })
+            .collect()
+    }
+
     #[test]
     fn aggregate_means() {
         let mut agg = Aggregate::default();
@@ -269,11 +353,79 @@ mod tests {
             q.wall_secs = i as f64;
             q.answer_correct = i % 2 == 0;
             q.thinking_tokens = 100 * i;
-            agg.push(q);
+            agg.push(&q);
         }
         assert_eq!(agg.n(), 4);
+        assert_eq!(agg.correct(), 2);
         assert!((agg.accuracy() - 0.5).abs() < 1e-12);
         assert!((agg.mean_wall() - 1.5).abs() < 1e-12);
         assert!((agg.mean_thinking_tokens() - 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_in_order_is_bit_identical_to_sequential_push() {
+        let qs = sample_metrics(13);
+        let mut seq = Aggregate::default();
+        for q in &qs {
+            seq.push(q);
+        }
+        // Partition into partials (as parallel workers would) and merge
+        // them back in work-item order.
+        for chunk in [1usize, 2, 5, 13] {
+            let mut merged = Aggregate::default();
+            for part in qs.chunks(chunk) {
+                let mut partial = Aggregate::default();
+                for q in part {
+                    partial.push(q);
+                }
+                merged.merge(&partial);
+            }
+            // Counts always combine exactly.
+            assert_eq!(merged.n(), seq.n());
+            assert_eq!(merged.correct(), seq.correct());
+            // Singleton partials (and the single-partial case) reproduce
+            // the sequential f64 addition order exactly; coarser partials
+            // land within float-rounding of it.
+            if chunk == 1 || chunk == 13 {
+                assert_eq!(merged, seq, "chunk size {chunk} diverged");
+                assert_eq!(merged.mean_gpu().to_bits(), seq.mean_gpu().to_bits());
+                assert_eq!(
+                    merged.mean_phase_gpu("speculate").to_bits(),
+                    seq.mean_phase_gpu("speculate").to_bits()
+                );
+            } else {
+                assert!((merged.mean_gpu() - seq.mean_gpu()).abs() < 1e-12);
+                assert!((merged.mean_wall() - seq.mean_wall()).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_empty_is_identity() {
+        let qs = sample_metrics(3);
+        let mut a = Aggregate::default();
+        for q in &qs {
+            a.push(q);
+        }
+        let before = a.clone();
+        a.merge(&Aggregate::default());
+        assert_eq!(a, before);
+        let mut b = Aggregate::default();
+        b.merge(&before);
+        assert_eq!(b, before);
+    }
+
+    #[test]
+    fn phase_means_track_recorded_phases() {
+        let mut agg = Aggregate::default();
+        let mut q = QueryMetrics::default();
+        q.record(Phase::Verify, 0.5, 0.25);
+        agg.push(&q);
+        let mut q2 = QueryMetrics::default();
+        q2.record(Phase::Verify, 1.5, 0.75);
+        agg.push(&q2);
+        assert!((agg.mean_phase_wall("verify") - 1.0).abs() < 1e-12);
+        assert!((agg.mean_phase_gpu("verify") - 0.5).abs() < 1e-12);
+        assert_eq!(agg.mean_phase_gpu("fallback"), 0.0);
     }
 }

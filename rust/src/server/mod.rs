@@ -61,11 +61,16 @@ impl Server {
                 Ok((stream, _)) => {
                     let router = Arc::clone(&self.router);
                     let shutdown = Arc::clone(&self.shutdown);
-                    self.pool.execute(move || {
+                    let submitted = self.pool.execute(move || {
                         if let Err(e) = handle_connection(stream, &router, &shutdown) {
                             eprintln!("[server] connection error: {e:#}");
                         }
                     });
+                    if submitted.is_err() {
+                        // Pool closed under us — treat like shutdown.
+                        eprintln!("[server] connection pool closed; stopping accept loop");
+                        break;
+                    }
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(20));

@@ -11,6 +11,9 @@ pub struct ArgSpec {
     pub help: &'static str,
     pub default: Option<&'static str>,
     pub is_flag: bool,
+    /// Environment variable consulted when the option is not given on the
+    /// command line (precedence: CLI value > env var > default).
+    pub env: Option<&'static str>,
 }
 
 /// Parsed arguments for one (sub)command.
@@ -77,11 +80,23 @@ impl Command {
         Command { name, about, specs: Vec::new() }
     }
     pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
-        self.specs.push(ArgSpec { name, help, default, is_flag: false });
+        self.specs.push(ArgSpec { name, help, default, is_flag: false, env: None });
+        self
+    }
+    /// An option that falls back to an environment variable before its
+    /// default (CLI value > env var > default).
+    pub fn opt_env(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        env: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.specs.push(ArgSpec { name, help, default, is_flag: false, env: Some(env) });
         self
     }
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true, env: None });
         self
     }
 
@@ -93,17 +108,35 @@ impl Command {
                 .default
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
-            s.push_str(&format!("  --{}{kind}\n      {}{default}\n", spec.name, spec.help));
+            let env = spec.env.map(|e| format!(" [env: {e}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{default}{env}\n", spec.name, spec.help));
         }
         s
     }
 
     /// Parse raw args (not including the command name itself).
     pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        self.parse_with_env(raw, &|k| std::env::var(k).ok())
+    }
+
+    /// Like [`Command::parse`] with an injectable environment lookup
+    /// (tests use this to avoid mutating process-global env state).
+    pub fn parse_with_env(
+        &self,
+        raw: &[String],
+        env: &dyn Fn(&str) -> Option<String>,
+    ) -> anyhow::Result<Args> {
         let mut out = Args::default();
         for spec in &self.specs {
             if let Some(d) = spec.default {
                 out.values.insert(spec.name.to_string(), d.to_string());
+            }
+            if let Some(var) = spec.env {
+                if let Some(v) = env(var) {
+                    if !v.is_empty() {
+                        out.values.insert(spec.name.to_string(), v);
+                    }
+                }
             }
         }
         let known_flag = |n: &str| self.specs.iter().any(|s| s.name == n && s.is_flag);
@@ -207,5 +240,29 @@ mod tests {
         let h = cmd().help_text();
         assert!(h.contains("--threshold"));
         assert!(h.contains("[default: 7]"));
+    }
+
+    #[test]
+    fn env_fallback_sits_between_default_and_cli() {
+        // Uses the injectable lookup — mutating real process env from a
+        // parallel test harness races concurrent getenv callers.
+        let cmd = Command::new("t", "env test").opt_env(
+            "threads",
+            "worker threads",
+            "SPECREASON_CLI_TEST_THREADS",
+            Some("0"),
+        );
+        let unset = |_: &str| -> Option<String> { None };
+        let set = |k: &str| -> Option<String> {
+            (k == "SPECREASON_CLI_TEST_THREADS").then(|| "5".to_string())
+        };
+        // No env, no CLI: default.
+        assert_eq!(cmd.parse_with_env(&[], &unset).unwrap().get("threads"), Some("0"));
+        // Env set: overrides the default.
+        assert_eq!(cmd.parse_with_env(&[], &set).unwrap().get("threads"), Some("5"));
+        // CLI wins over env.
+        let raw = vec!["--threads".to_string(), "9".to_string()];
+        assert_eq!(cmd.parse_with_env(&raw, &set).unwrap().get("threads"), Some("9"));
+        assert!(cmd.help_text().contains("[env: SPECREASON_CLI_TEST_THREADS]"));
     }
 }

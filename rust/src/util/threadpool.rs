@@ -1,10 +1,25 @@
 //! Fixed-size thread pool (tokio is unavailable offline — DESIGN.md §3).
 //!
-//! The serving front end (server/) uses this for connection handling while
-//! a single engine thread owns the PJRT client (the paper's setup likewise
-//! serializes the two models on shared GPUs: "inference is performed
-//! sequentially: the small and base models take turns").
+//! Two consumers share this pool abstraction:
+//!
+//! * the serving front end (server/) uses fire-and-forget [`ThreadPool::execute`]
+//!   for connection handling while a single engine thread owns the PJRT
+//!   client (the paper's setup likewise serializes the two models on
+//!   shared GPUs: "inference is performed sequentially: the small and
+//!   base models take turns");
+//! * the eval sweep engine (eval/sweep.rs) uses the result-returning
+//!   [`ThreadPool::map`] to fan (cell × query × sample) work items across
+//!   workers and join them back in submission order.
+//!
+//! The sender is kept behind a `Mutex<Option<..>>` so the pool is `Sync`
+//! and can be shared process-wide (eval::sweep holds one in a `OnceLock`).
+//! Worker panics never kill a worker thread: jobs run under
+//! `catch_unwind`, and `map` re-raises the first captured panic on the
+//! submitting thread so a failing work item surfaces exactly like it
+//! would in a sequential loop.
 
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -12,11 +27,24 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Error returned when submitting work to a pool whose queue is closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolClosed;
+
+impl fmt::Display for PoolClosed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "thread pool is shut down")
+    }
+}
+
+impl std::error::Error for PoolClosed {}
+
 /// A bounded pool of worker threads consuming a shared job queue.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
     active: Arc<AtomicUsize>,
+    size: usize,
 }
 
 impl ThreadPool {
@@ -39,7 +67,14 @@ impl ThreadPool {
                         match job {
                             Ok(job) => {
                                 active.fetch_add(1, Ordering::SeqCst);
-                                job();
+                                // A panicking job must not take the worker
+                                // down with it: map() observes panics via
+                                // its result channel, and raw execute()
+                                // jobs are connection handlers that log
+                                // their own errors.
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    eprintln!("[threadpool] job panicked (worker kept alive)");
+                                }
                                 active.fetch_sub(1, Ordering::SeqCst);
                             }
                             Err(_) => break, // channel closed: shut down
@@ -48,16 +83,78 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, active }
+        ThreadPool { tx: Mutex::new(Some(tx)), workers, active, size }
     }
 
-    /// Submit a job. Panics if the pool is shut down.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job. Returns [`PoolClosed`] (instead of
+    /// panicking) if the pool has been shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolClosed> {
+        let guard = self.tx.lock().unwrap();
+        guard
             .as_ref()
-            .expect("pool shut down")
+            .ok_or(PoolClosed)?
             .send(Box::new(f))
-            .expect("worker channel closed");
+            .map_err(|_| PoolClosed)
+    }
+
+    /// Run `f` over every item, in parallel, and return the results in
+    /// input order. Blocks until all items finish.
+    ///
+    /// * Results come back in submission order regardless of which worker
+    ///   ran which item — callers can rely on `out[i] == f(i, items[i])`.
+    /// * If any invocation panics, the first panic (in input order) is
+    ///   re-raised on the calling thread after all other items drain, so
+    ///   no work is silently lost and the panic surfaces like a
+    ///   sequential loop's would.
+    /// * Must not be called from inside a pool job: a saturated pool
+    ///   would deadlock waiting for itself.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>, PoolClosed>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, item)));
+                let _ = tx.send((i, out));
+            })?;
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, Box<dyn std::any::Any + Send>)> = None;
+        for _ in 0..n {
+            let (i, out) = rx.recv().map_err(|_| PoolClosed)?;
+            match out {
+                Ok(r) => slots[i] = Some(r),
+                Err(p) => {
+                    if first_panic.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                        first_panic = Some((i, p));
+                    }
+                }
+            }
+        }
+        if let Some((_, p)) = first_panic {
+            resume_unwind(p);
+        }
+        Ok(slots.into_iter().map(|s| s.expect("map slot filled")).collect())
+    }
+
+    /// Close the job queue: queued jobs still drain, subsequent submits
+    /// return [`PoolClosed`]. Idempotent.
+    pub fn shutdown(&self) {
+        let mut guard = self.tx.lock().unwrap();
+        drop(guard.take());
     }
 
     /// Number of jobs currently executing (approximate).
@@ -68,7 +165,7 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel; workers drain and exit
+        self.shutdown(); // close the channel; workers drain and exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -89,7 +186,8 @@ mod tests {
             let c = Arc::clone(&counter);
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -107,7 +205,8 @@ mod tests {
             pool.execute(move || {
                 tx.send(i).unwrap();
                 let _ = gate.lock().unwrap().recv();
-            });
+            })
+            .unwrap();
         }
         // Both jobs must have started (two workers) before either finishes.
         let mut started = Vec::new();
@@ -123,7 +222,52 @@ mod tests {
     #[test]
     fn drop_joins_cleanly() {
         let pool = ThreadPool::new(1);
-        pool.execute(|| thread::sleep(Duration::from_millis(20)));
+        pool.execute(|| thread::sleep(Duration::from_millis(20))).unwrap();
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn execute_after_shutdown_returns_err_instead_of_panicking() {
+        let pool = ThreadPool::new(1);
+        pool.shutdown();
+        assert_eq!(pool.execute(|| {}), Err(PoolClosed));
+        // map refuses too, without touching the workers.
+        assert!(pool.map(vec![1, 2, 3], |_, x: i32| x).is_err());
+    }
+
+    #[test]
+    fn map_returns_results_in_input_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool
+            .map((0..100).collect::<Vec<usize>>(), |i, x| {
+                assert_eq!(i, x);
+                x * 2
+            })
+            .unwrap();
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn map_on_empty_input() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |_, x| x).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_propagates_worker_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0, 1, 2, 3], |_, x: i32| {
+                if x == 2 {
+                    panic!("boom on {x}");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err(), "panic must reach the submitter");
+        // The workers caught the unwind: the pool still processes jobs.
+        let out = pool.map(vec![10, 20], |_, x: i32| x + 1).unwrap();
+        assert_eq!(out, vec![11, 21]);
     }
 }

@@ -76,8 +76,8 @@ fn skywork_judge_accepts_differently_than_qwq() {
         16, 2, 7,
     )
     .unwrap();
-    let s_qwq: Vec<_> = r_qwq.agg.queries.iter().map(|q| q.steps_accepted).collect();
-    let s_sky: Vec<_> = r_sky.agg.queries.iter().map(|q| q.steps_accepted).collect();
+    let s_qwq: Vec<_> = r_qwq.outcomes.iter().map(|o| o.metrics.steps_accepted).collect();
+    let s_sky: Vec<_> = r_sky.outcomes.iter().map(|o| o.metrics.steps_accepted).collect();
     assert_ne!(s_qwq, s_sky, "variant judges must differ");
 }
 

@@ -1,0 +1,127 @@
+//! Determinism guarantees of the parallel sweep engine (eval::sweep):
+//! parallel execution at any thread count must be *bit-identical* to the
+//! sequential path — same Aggregate stats, same per-item outcomes, same
+//! answer_correct vectors.  This holds because `run_query` is a pure
+//! function of (oracle, query seed, sample) and the sweep folds per-item
+//! results back in plan order.
+
+use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+use specreason::eval::{run_cell_sim, Cell, Sweep};
+use specreason::semantics::{Dataset, Oracle};
+
+fn fig3_subgrid(n_queries: usize, samples: usize, seed: u64) -> Sweep {
+    let mut sweep = Sweep::new(n_queries, samples, seed);
+    for combo in [Combo::new("qwq-sim", "r1-sim"), Combo::new("skywork-sim", "zr1-sim")] {
+        for ds in Dataset::all() {
+            for scheme in Scheme::all() {
+                sweep.cell(Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: SpecConfig {
+                        scheme,
+                        policy: AcceptancePolicy::Static { threshold: 7 },
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+    }
+    sweep
+}
+
+#[test]
+fn parallel_matches_sequential_at_every_thread_count() {
+    let oracle = Oracle::default();
+    let sweep = fig3_subgrid(6, 2, 42);
+    let seq = sweep.run_sim_seq(&oracle).unwrap();
+    assert_eq!(seq.len(), sweep.cells().len());
+
+    for threads in [1usize, 2, 8] {
+        let par = sweep.run_sim_threads(&oracle, threads).unwrap();
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell_label, b.cell_label);
+            // Aggregate stats: exact struct equality (counts + f64 sums).
+            assert_eq!(a.agg, b.agg, "{}: aggregate diverged at {threads} threads", a.cell_label);
+            // Headline means down to the bit.
+            assert_eq!(a.mean_gpu().to_bits(), b.mean_gpu().to_bits());
+            assert_eq!(a.mean_wall().to_bits(), b.mean_wall().to_bits());
+            assert_eq!(a.mean_tokens().to_bits(), b.mean_tokens().to_bits());
+            assert_eq!(a.mean_acceptance().to_bits(), b.mean_acceptance().to_bits());
+            // Per-(query, sample) pass@1 flags, in plan order.
+            assert_eq!(
+                a.answer_flags(),
+                b.answer_flags(),
+                "{}: answer_correct vector diverged at {threads} threads",
+                a.cell_label
+            );
+            // Per-item metrics, bit for bit.
+            assert_eq!(a.outcomes.len(), b.outcomes.len());
+            for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(oa.metrics.gpu_secs.to_bits(), ob.metrics.gpu_secs.to_bits());
+                assert_eq!(oa.metrics.thinking_tokens, ob.metrics.thinking_tokens);
+                assert_eq!(oa.metrics.steps_accepted, ob.metrics.steps_accepted);
+                assert_eq!(oa.metrics.steps_speculated, ob.metrics.steps_speculated);
+                assert_eq!(oa.metrics.verify_scores, ob.metrics.verify_scores);
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_stable() {
+    // Two parallel runs of the same grid (same pool size) are identical:
+    // no hidden run-to-run nondeterminism from scheduling.
+    let oracle = Oracle::default();
+    let sweep = fig3_subgrid(4, 2, 7);
+    let a = sweep.run_sim_threads(&oracle, 4).unwrap();
+    let b = sweep.run_sim_threads(&oracle, 4).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.agg, y.agg);
+        assert_eq!(x.answer_flags(), y.answer_flags());
+    }
+}
+
+#[test]
+fn run_cell_sim_matches_the_sequential_reference() {
+    // The public single-cell API (parallel under the hood) agrees with
+    // the sequential reference path bit for bit.
+    let oracle = Oracle::default();
+    let cell = Cell {
+        dataset: Dataset::Math500,
+        scheme: Scheme::SpecReason,
+        combo: Combo::new("qwq-sim", "r1-sim"),
+        cfg: SpecConfig::default(),
+    };
+    let via_api = run_cell_sim(&oracle, &cell, 8, 2, 1234).unwrap();
+    let mut sweep = Sweep::new(8, 2, 1234);
+    sweep.cell(cell);
+    let reference = sweep.run_sim_seq(&oracle).unwrap().remove(0);
+    assert_eq!(via_api.agg, reference.agg);
+    assert_eq!(via_api.answer_flags(), reference.answer_flags());
+    assert_eq!(via_api.mean_gpu().to_bits(), reference.mean_gpu().to_bits());
+}
+
+#[test]
+fn sweep_results_keep_cell_order() {
+    // CellResults come back in cell-insertion order regardless of which
+    // worker finished first.
+    let oracle = Oracle::default();
+    let mut sweep = Sweep::new(3, 1, 5);
+    let mut labels = Vec::new();
+    for ds in Dataset::all() {
+        for scheme in [Scheme::VanillaSmall, Scheme::SpecReason] {
+            sweep.cell(Cell {
+                dataset: ds,
+                scheme,
+                combo: Combo::new("qwq-sim", "r1-sim"),
+                cfg: SpecConfig { scheme, ..Default::default() },
+            });
+            labels.push(format!("{}/qwq-sim+r1-sim/{}", ds.name(), scheme.name()));
+        }
+    }
+    let results = sweep.run_sim_threads(&oracle, 3).unwrap();
+    let got: Vec<String> = results.iter().map(|r| r.cell_label.clone()).collect();
+    assert_eq!(got, labels);
+}
