@@ -35,6 +35,17 @@ pub struct DeployConfig {
     pub max_queue: usize,
     /// Connection-handler threads.
     pub io_threads: usize,
+    /// In-flight sequences the scheduler batches per engine step.
+    /// `1` reproduces the serial router exactly (bit-identical
+    /// deterministic metrics); raise it to trade per-request latency for
+    /// server throughput.
+    pub max_batch: usize,
+    /// Allow the scheduler to evict a lower-priority in-flight sequence
+    /// when a higher class would otherwise starve.
+    pub preempt: bool,
+    /// End-to-end latency SLO in milliseconds (0 disables the counter);
+    /// completions slower than this increment `slo_violations`.
+    pub slo_ms: u64,
 }
 
 impl Default for DeployConfig {
@@ -57,6 +68,9 @@ impl Default for DeployConfig {
             draft_k: spec.draft_k,
             max_queue: 64,
             io_threads: 4,
+            max_batch: 1,
+            preempt: true,
+            slo_ms: 0,
         }
     }
 }
@@ -122,6 +136,15 @@ impl DeployConfig {
             anyhow::ensure!(v >= 1, "io_threads must be >= 1");
             c.io_threads = v;
         }
+        if let Some(v) = j.get("max_batch").as_usize() {
+            c.max_batch = v;
+        }
+        if let Some(v) = j.get("preempt").as_bool() {
+            c.preempt = v;
+        }
+        if let Some(v) = j.get("slo_ms").as_usize() {
+            c.slo_ms = v as u64;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -133,6 +156,7 @@ impl DeployConfig {
             self.base_model != self.small_model,
             "base and small model must differ"
         );
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
         Ok(())
     }
 
@@ -190,6 +214,22 @@ mod tests {
         assert!((c.temperature - 0.8).abs() < 1e-6);
         // untouched fields keep defaults
         assert_eq!(c.addr, "127.0.0.1:7878");
+        assert_eq!(c.max_batch, 1);
+        assert!(c.preempt);
+        assert_eq!(c.slo_ms, 0);
+    }
+
+    #[test]
+    fn parses_scheduler_knobs() {
+        let c = DeployConfig::from_json_str(
+            r#"{"max_batch": 8, "preempt": false, "slo_ms": 30000, "max_queue": 128}"#,
+        )
+        .unwrap();
+        assert_eq!(c.max_batch, 8);
+        assert!(!c.preempt);
+        assert_eq!(c.slo_ms, 30000);
+        assert_eq!(c.max_queue, 128);
+        assert!(DeployConfig::from_json_str(r#"{"max_batch": 0}"#).is_err());
     }
 
     #[test]

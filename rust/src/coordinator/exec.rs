@@ -1,0 +1,130 @@
+//! Real-engine execution of [`EngineOp`]s — the single implementation
+//! shared by [`RealBackend`](super::RealBackend) (the serial
+//! run-to-completion driver) and the continuous-batching scheduler
+//! (`crate::scheduler`), so the two paths cannot drift: identical op
+//! streams produce identical engine calls, seeds and metrics.
+
+use anyhow::Result;
+
+use super::backend::Role;
+use super::machine::EngineOp;
+use crate::engine::{Engine, Sequence};
+use crate::metrics::{Phase, QueryMetrics};
+
+/// Per-query decode-seed stream.  Content is oracle-driven; token bytes
+/// just need to be deterministic, so seeds derive from a per-query
+/// counter exactly like the original `RealBackend` did.
+#[derive(Debug, Clone)]
+pub struct SeedStream {
+    query_seed: u64,
+    ctr: u64,
+}
+
+impl SeedStream {
+    pub fn new(query_seed: u64) -> SeedStream {
+        SeedStream { query_seed, ctr: 0 }
+    }
+
+    /// The seed for the next decode call.
+    pub fn next(&mut self) -> u64 {
+        self.ctr += 1;
+        self.query_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(self.ctr)
+    }
+}
+
+/// Build the templated verification prompt (§4.1): "<verify>" +
+/// instruction bytes, padded (or truncated) to `template_len`.
+pub fn verify_template(engine: &Engine, template_len: usize) -> Vec<i32> {
+    let tok = &engine.tokenizer;
+    let mut template = vec![tok.special.verify];
+    template.extend(tok.encode("Evaluate the reasoning step above. Rate its utility 0-9:"));
+    template.resize(template_len, tok.special.pad);
+    template
+}
+
+/// Undo a bonus-token decode's GPU-clock charge (its logits come free
+/// with the verification pass).  `gpu_before` is `qm.gpu_secs` sampled
+/// just before the decode.  Shared by the serial executor and the
+/// scheduler's batched commit path so the accounting cannot drift.
+pub fn refund_bonus_gpu(qm: &mut QueryMetrics, gpu_before: f64) {
+    let delta = qm.gpu_secs - gpu_before;
+    qm.gpu_secs -= delta;
+    if let Some(v) = qm.phase_gpu.get_mut(Phase::SpecVerify.name()) {
+        *v -= delta;
+    }
+}
+
+/// Execute one [`EngineOp`] against the engine.
+pub fn execute_op(
+    engine: &Engine,
+    small: &str,
+    base: &str,
+    seq: &mut Sequence,
+    seeds: &mut SeedStream,
+    op: EngineOp,
+    qm: &mut QueryMetrics,
+) -> Result<()> {
+    match op {
+        EngineOp::Decode { role, n, phase } => {
+            let model = match role {
+                Role::Small => small,
+                Role::Base => base,
+            };
+            let seed = seeds.next();
+            engine.decode(seq, model, n, seed, phase, qm)?;
+            Ok(())
+        }
+        EngineOp::VerifyPass { template_len: 0, phase } => {
+            // Token-level spec-decode verification: one base forward pass
+            // over the pending draft tokens (no scoring template).
+            let upto = seq.len();
+            engine.prefill_through(seq, base, upto, phase, qm)
+        }
+        EngineOp::VerifyPass { template_len, phase } => {
+            let template = verify_template(engine, template_len);
+            engine.scored_prefill(seq, base, &template, phase, qm).map(|_| ())
+        }
+        EngineOp::BonusToken => {
+            // Physically produce the bonus token (one base decode call),
+            // but charge zero GPU-clock cost: on the paper's stack its
+            // logits come free with the verification pass.
+            let gpu_before = qm.gpu_secs;
+            let seed = seeds.next();
+            engine.decode(seq, base, 1, seed, Phase::SpecVerify, qm)?;
+            refund_bonus_gpu(qm, gpu_before);
+            Ok(())
+        }
+        EngineOp::Rollback { n } => {
+            let to = seq.len() - n;
+            engine.rollback(seq, to)
+        }
+        EngineOp::Finish { role, n } => {
+            let model = match role {
+                Role::Small => small,
+                Role::Base => base,
+            };
+            let seed = seeds.next();
+            engine.decode(seq, model, n, seed, Phase::Answer, qm)?;
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_stream_matches_legacy_derivation() {
+        // RealBackend used seed_ctr += 1 then
+        // query_seed * GOLDEN + ctr; the stream must reproduce that.
+        let qseed = 0xABCDu64;
+        let mut s = SeedStream::new(qseed);
+        for ctr in 1..=5u64 {
+            let expect = qseed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(ctr);
+            assert_eq!(s.next(), expect);
+        }
+    }
+}

@@ -1,0 +1,598 @@
+//! The per-sequence step state machine — the coordinator loop of
+//! [`run_query`](super::run_query), extracted so it can be driven
+//! *re-entrantly*.
+//!
+//! [`StepMachine`] turns the SpecReason control flow (§4.1/§4.2) into a
+//! stream of primitive [`EngineOp`]s.  Two drivers consume that stream:
+//!
+//! * [`run_query`](super::run_query) executes ops one-by-one against a
+//!   [`Backend`] — the original serial, run-to-completion path;
+//! * the continuous-batching scheduler (`crate::scheduler`) interleaves
+//!   the op streams of many in-flight sequences, grouping same-phase
+//!   front ops into one batched engine pass per step.
+//!
+//! Every decision the machine makes (step lengths, accept/reject,
+//! draft-prefix acceptance, final correctness) is a pure function of
+//! (oracle, query seed, step, attempt) — op *results* never feed back
+//! into control flow — so the op stream for a given (query, config,
+//! sample) is identical no matter how it is interleaved with other
+//! sequences.  That is the determinism contract the scheduler's
+//! `max_batch = 1` mode relies on: bit-identical deterministic
+//! `QueryMetrics` to the serial path.
+
+use std::borrow::Cow;
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::backend::{Backend, Role};
+use super::policy::StepContext;
+use super::{Combo, QueryOutcome, Scheme, SpecConfig};
+use crate::metrics::{Phase, QueryMetrics};
+use crate::semantics::oracle::{Oracle, Trajectory};
+use crate::semantics::trace::Query;
+
+/// Minimum tokens worth starting a step with.
+pub(crate) const MIN_STEP_TOKENS: usize = 4;
+
+/// One primitive engine operation planned by the machine.  Mirrors the
+/// [`Backend`] surface one call at a time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineOp {
+    /// Decode `n` thinking tokens with `role`.
+    Decode { role: Role, n: usize, phase: Phase },
+    /// Base-model prefill pass; `template_len == 0` is the plain
+    /// spec-decode verification pass, `> 0` the templated §4.1 scoring
+    /// pass.
+    VerifyPass { template_len: usize, phase: Phase },
+    /// The "free" bonus token of token-level speculative decoding.
+    BonusToken,
+    /// Discard the last `n` thinking tokens (O(1) KV rewind).
+    Rollback { n: usize },
+    /// Decode the final answer (`n` tokens) after `</think>`.
+    Finish { role: Role, n: usize },
+}
+
+impl EngineOp {
+    /// Execute this op against a [`Backend`] (the serial driver).
+    pub fn apply(&self, backend: &mut dyn Backend) -> Result<()> {
+        match *self {
+            EngineOp::Decode { role, n, phase } => backend.decode(role, n, phase),
+            EngineOp::VerifyPass { template_len, phase } => {
+                backend.verify_pass(template_len, phase)
+            }
+            EngineOp::BonusToken => backend.bonus_token(),
+            EngineOp::Rollback { n } => backend.rollback(n),
+            EngineOp::Finish { role, n } => backend.finish(role, n),
+        }
+    }
+}
+
+/// Scheduling class of a machine's next op — what the batch composer
+/// groups by (speculate / verify / fallback / answer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskPhase {
+    Speculate,
+    Verify,
+    Fallback,
+    Answer,
+    Done,
+}
+
+/// Metric side effects attached to an op, applied by [`StepMachine::commit`]
+/// after the op executed (so counters never run ahead of failed compute,
+/// matching the original inline loop).
+#[derive(Debug, Clone, Copy)]
+enum Effect {
+    Speculated,
+    /// Push a verifier score; `accepted_len = Some(n)` additionally
+    /// counts the accepted speculation.
+    Scored { score: u8, accepted_len: Option<usize> },
+    BaseTokens { len: usize },
+    Draft { proposed: usize, accepted: usize },
+    StepDone,
+    Finalize,
+}
+
+/// Re-entrant per-sequence coordinator state.
+///
+/// Query, combo and config are [`Cow`]s: the serial driver borrows the
+/// caller's values (the sweep hot path pays no clones), while the
+/// scheduler hands each task owned (or worker-lifetime-borrowed) ones.
+pub struct StepMachine<'o> {
+    oracle: &'o Oracle,
+    q: Cow<'o, Query>,
+    combo: Cow<'o, Combo>,
+    cfg: Cow<'o, SpecConfig>,
+    sample: usize,
+    /// Attempt-space base: each pass@1 sample gets a disjoint window.
+    att0: usize,
+    /// RNG round index for spec-decode draft prefixes.
+    spec_round: usize,
+    step: usize,
+    plan_len: usize,
+    /// Mirror of the backend's thinking-token count (every op's effect on
+    /// the CoT length is deterministic, so no backend query is needed).
+    thinking: usize,
+    steps_completed: usize,
+    steps_by_small: usize,
+    steps_by_base: usize,
+    traj: Trajectory,
+    pending: VecDeque<(EngineOp, Vec<Effect>)>,
+    answer_planned: bool,
+    finished: bool,
+    health: f64,
+    completion: f64,
+    answer_correct: bool,
+    thinking_final: usize,
+}
+
+impl<'o> StepMachine<'o> {
+    pub fn new(
+        oracle: &'o Oracle,
+        q: Cow<'o, Query>,
+        combo: Cow<'o, Combo>,
+        cfg: Cow<'o, SpecConfig>,
+        sample: usize,
+    ) -> StepMachine<'o> {
+        let plan_len = q.plan_len();
+        StepMachine {
+            oracle,
+            q,
+            combo,
+            cfg,
+            sample,
+            att0: sample * 4,
+            spec_round: sample * 1000,
+            step: 0,
+            plan_len,
+            thinking: 0,
+            steps_completed: 0,
+            steps_by_small: 0,
+            steps_by_base: 0,
+            traj: Trajectory::default(),
+            pending: VecDeque::new(),
+            answer_planned: false,
+            finished: false,
+            health: 1.0,
+            completion: 0.0,
+            answer_correct: false,
+            thinking_final: 0,
+        }
+    }
+
+    /// The next op to execute, or `None` once the query is complete.
+    /// Plans lazily: ops for the next reasoning step materialize when the
+    /// previous step's ops have all been committed.
+    pub fn peek(&mut self) -> Option<EngineOp> {
+        self.refill();
+        self.pending.front().map(|(op, _)| *op)
+    }
+
+    /// Scheduling class of the next op (for the batch composer).
+    pub fn phase(&mut self) -> TaskPhase {
+        match self.peek() {
+            None => TaskPhase::Done,
+            Some(EngineOp::Decode { phase: Phase::Speculate, .. }) => TaskPhase::Speculate,
+            Some(EngineOp::VerifyPass { phase: Phase::Verify, .. }) => TaskPhase::Verify,
+            Some(EngineOp::Finish { .. }) | Some(EngineOp::Decode { phase: Phase::Answer, .. }) => {
+                TaskPhase::Answer
+            }
+            Some(_) => TaskPhase::Fallback,
+        }
+    }
+
+    pub fn is_done(&mut self) -> bool {
+        self.peek().is_none()
+    }
+
+    /// Commit the front op after it executed successfully, applying its
+    /// metric side effects.  Must be called exactly once per executed op.
+    pub fn commit(&mut self, qm: &mut QueryMetrics) {
+        let (_op, effects) = self.pending.pop_front().expect("commit without a pending op");
+        for e in effects {
+            match e {
+                Effect::Speculated => qm.steps_speculated += 1,
+                Effect::Scored { score, accepted_len } => {
+                    qm.verify_scores.push(score);
+                    if let Some(len) = accepted_len {
+                        qm.steps_accepted += 1;
+                        qm.tokens_small_accepted += len;
+                    }
+                }
+                Effect::BaseTokens { len } => qm.tokens_base += len,
+                Effect::Draft { proposed, accepted } => {
+                    qm.draft_tokens_proposed += proposed;
+                    qm.draft_tokens_accepted += accepted;
+                }
+                Effect::StepDone => qm.steps_total += 1,
+                Effect::Finalize => {
+                    qm.answer_correct = self.answer_correct;
+                    qm.thinking_tokens = self.thinking_final;
+                    self.finished = true;
+                }
+            }
+        }
+    }
+
+    /// Build the [`QueryOutcome`] once the machine is done.
+    pub fn outcome(&self, metrics: QueryMetrics) -> QueryOutcome {
+        QueryOutcome {
+            metrics,
+            health: self.health,
+            completion: self.completion,
+            steps_by_small: self.steps_by_small,
+            steps_by_base: self.steps_by_base,
+        }
+    }
+
+    /// Thinking tokens the plan has produced so far (mirrors the
+    /// backend's count over committed *and* pending ops).
+    pub fn planned_thinking(&self) -> usize {
+        self.thinking
+    }
+
+    fn push(&mut self, op: EngineOp, effect: Option<Effect>) {
+        let effects = match effect {
+            Some(e) => vec![e],
+            None => Vec::new(),
+        };
+        self.pending.push_back((op, effects));
+    }
+
+    /// Attach an effect to the most recently planned op.
+    fn attach(&mut self, effect: Effect) {
+        self.pending
+            .back_mut()
+            .expect("attach with no planned op")
+            .1
+            .push(effect);
+    }
+
+    fn refill(&mut self) {
+        if !self.pending.is_empty() || self.finished || self.answer_planned {
+            return;
+        }
+        if self.step >= self.plan_len
+            || self.thinking + MIN_STEP_TOKENS > self.cfg.token_budget
+        {
+            self.plan_answer();
+            return;
+        }
+        self.plan_step();
+    }
+
+    /// Plan the ops for one reasoning step — the body of the original
+    /// coordinator loop, verbatim in decision order.
+    fn plan_step(&mut self) {
+        let step = self.step;
+        let budget = self.cfg.token_budget;
+        let remaining = budget - self.thinking;
+        let ctx = StepContext {
+            step_index: step,
+            plan_len: self.plan_len,
+            budget_left: remaining as f64 / budget.max(1) as f64,
+        };
+
+        let mut done = false;
+        let speculate = self.cfg.scheme.speculates_steps() && step >= self.cfg.first_n_base;
+
+        if speculate {
+            // --- small model speculates the step (§4.1 stage 1) ---
+            let intended = self.oracle.step_tokens(&self.q, step, self.att0, &self.combo.small);
+            let len = intended.min(remaining);
+            self.push(
+                EngineOp::Decode { role: Role::Small, n: len, phase: Phase::Speculate },
+                Some(Effect::Speculated),
+            );
+            self.thinking += len;
+
+            // --- base model assesses it in one prefill-only pass ---
+            let quality = self.oracle.step_quality(&self.q, step, self.att0, &self.combo.small);
+            let score =
+                self.oracle.verifier_score(&self.q, step, self.att0, quality, &self.combo.base);
+            let accepted = self.cfg.policy.accepts(score, ctx) && len == intended;
+            self.push(
+                EngineOp::VerifyPass {
+                    template_len: self.cfg.verify_template_len,
+                    phase: Phase::Verify,
+                },
+                Some(Effect::Scored {
+                    score,
+                    accepted_len: if accepted { Some(len) } else { None },
+                }),
+            );
+
+            if accepted {
+                // Accepted: the step stands; trajectory absorbs its quality.
+                self.steps_by_small += 1;
+                let extra = self.traj.apply_step(
+                    self.oracle,
+                    &self.q,
+                    &self.q.plan[step],
+                    step,
+                    self.att0,
+                    quality,
+                    &self.combo.small,
+                );
+                if extra > 0 && self.thinking + extra <= budget {
+                    self.push(
+                        EngineOp::Decode { role: Role::Small, n: extra, phase: Phase::Speculate },
+                        None,
+                    );
+                    self.thinking += extra;
+                }
+                self.steps_completed += 1;
+                done = true;
+            } else {
+                // Rejected: discard the speculated step's tokens and KV.
+                self.push(EngineOp::Rollback { n: len }, None);
+                self.thinking -= len;
+            }
+        }
+
+        if !done {
+            // --- the non-speculative generator renders the step ---
+            if self.thinking + MIN_STEP_TOKENS > budget {
+                // Mirror of the original loop's mid-step break: straight
+                // to the answer, without counting this step.
+                self.plan_answer();
+                return;
+            }
+            let att_b = self.att0 + 1;
+            let remaining = budget - self.thinking;
+            let role = if self.cfg.scheme == Scheme::VanillaSmall {
+                Role::Small
+            } else {
+                Role::Base
+            };
+            let (intended, quality) = {
+                let gen_model: &str = match role {
+                    Role::Small => &self.combo.small,
+                    Role::Base => &self.combo.base,
+                };
+                (
+                    self.oracle.step_tokens(&self.q, step, att_b, gen_model),
+                    self.oracle.step_quality(&self.q, step, att_b, gen_model),
+                )
+            };
+            let len = intended.min(remaining);
+
+            let spec_decode = self.cfg.scheme.uses_spec_decode_for_base() && role == Role::Base;
+            if spec_decode {
+                self.plan_spec_decode(len);
+            } else {
+                self.push(EngineOp::Decode { role, n: len, phase: Phase::Fallback }, None);
+                self.thinking += len;
+            }
+            self.attach(Effect::BaseTokens { len });
+            self.steps_by_base += 1;
+            let extra = self.traj.apply_step(
+                self.oracle,
+                &self.q,
+                &self.q.plan[step],
+                step,
+                att_b,
+                quality,
+                match role {
+                    Role::Small => &self.combo.small,
+                    Role::Base => &self.combo.base,
+                },
+            );
+            if extra > 0 && self.thinking + extra <= budget {
+                if spec_decode {
+                    self.plan_spec_decode(extra);
+                } else {
+                    self.push(EngineOp::Decode { role, n: extra, phase: Phase::Fallback }, None);
+                    self.thinking += extra;
+                }
+            }
+            if len == intended {
+                self.steps_completed += 1;
+            }
+        }
+        self.attach(Effect::StepDone);
+        self.step += 1;
+    }
+
+    /// Token-level speculative decoding (§2, §4.2): plan `n` base-quality
+    /// tokens via draft-k/verify rounds.
+    fn plan_spec_decode(&mut self, n: usize) {
+        let mut produced = 0usize;
+        while produced < n {
+            let k = self.cfg.draft_k.min(n - produced).max(1);
+            // Draft k tokens with the small model.
+            self.push(
+                EngineOp::Decode { role: Role::Small, n: k, phase: Phase::SpecDraft },
+                None,
+            );
+            self.thinking += k;
+            // One base forward pass verifies all k drafts.
+            let m = self
+                .oracle
+                .draft_accepted_prefix(&self.q, self.spec_round, k, &self.combo.small);
+            self.spec_round += 1;
+            self.push(
+                EngineOp::VerifyPass { template_len: 0, phase: Phase::SpecVerify },
+                Some(Effect::Draft { proposed: k, accepted: m }),
+            );
+            if m < k {
+                self.push(EngineOp::Rollback { n: k - m }, None);
+                self.thinking -= k - m;
+            }
+            produced += m;
+            // Bonus token from the verification pass (free on the GPU clock).
+            if produced < n {
+                self.push(EngineOp::BonusToken, None);
+                self.thinking += 1;
+                produced += 1;
+            }
+        }
+    }
+
+    fn plan_answer(&mut self) {
+        self.answer_planned = true;
+        self.traj.finalize();
+        self.completion = self.steps_completed as f64 / self.plan_len.max(1) as f64;
+        // Thinking tokens = everything before `</think>` (the answer phase
+        // is excluded, matching the paper's token-budget accounting).
+        self.thinking_final = self.thinking;
+        self.health = self.traj.health;
+        let (role, model) = if self.cfg.scheme == Scheme::VanillaSmall {
+            (Role::Small, self.combo.small.as_str())
+        } else {
+            (Role::Base, self.combo.base.as_str())
+        };
+        self.answer_correct = self.oracle.final_answer_correct(
+            &self.q,
+            model,
+            self.health,
+            self.completion,
+            self.sample,
+        );
+        self.push(
+            EngineOp::Finish { role, n: self.cfg.answer_tokens },
+            Some(Effect::Finalize),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimBackend;
+    use crate::metrics::{GpuClock, Testbed};
+    use crate::semantics::{Dataset, TraceGenerator};
+
+    fn combo() -> Combo {
+        Combo::new("qwq-sim", "r1-sim")
+    }
+
+    fn sim() -> SimBackend {
+        SimBackend::new(GpuClock::new(Testbed::A6000x2), "small", "base")
+    }
+
+    /// Drive a machine the way the scheduler does (peek → execute →
+    /// commit) and collect the op stream.
+    fn drive(scheme: Scheme, seed: u64) -> (Vec<EngineOp>, QueryMetrics, QueryOutcome) {
+        let oracle = Oracle::default();
+        let q = TraceGenerator::new(Dataset::Math500, seed).query(0);
+        let cfg = SpecConfig { scheme, ..Default::default() };
+        let mut b = sim();
+        b.begin(&q).unwrap();
+        let mut m = StepMachine::new(&oracle, Cow::Owned(q), Cow::Owned(combo()), Cow::Owned(cfg), 0);
+        let mut ops = Vec::new();
+        while let Some(op) = m.peek() {
+            op.apply(&mut b).unwrap();
+            m.commit(b.metrics_mut());
+            ops.push(op);
+        }
+        let qm = b.metrics_mut().clone();
+        let out = m.outcome(qm.clone());
+        (ops, qm, out)
+    }
+
+    #[test]
+    fn op_stream_matches_run_query_exactly() {
+        // The scheduler-style driver (peek/commit) and the serial
+        // run_query driver must produce identical metrics.
+        let oracle = Oracle::default();
+        let q = TraceGenerator::new(Dataset::Math500, 11).query(0);
+        for scheme in Scheme::all() {
+            let cfg = SpecConfig { scheme, ..Default::default() };
+            let mut b = sim();
+            let serial =
+                super::super::run_query(&oracle, &q, &combo(), &cfg, &mut b, 0).unwrap();
+            let (_ops, qm, out) = drive(scheme, 11);
+            assert_eq!(qm.gpu_secs.to_bits(), serial.metrics.gpu_secs.to_bits(), "{scheme:?}");
+            assert_eq!(qm.steps_total, serial.metrics.steps_total);
+            assert_eq!(qm.steps_accepted, serial.metrics.steps_accepted);
+            assert_eq!(qm.verify_scores, serial.metrics.verify_scores);
+            assert_eq!(qm.thinking_tokens, serial.metrics.thinking_tokens);
+            assert_eq!(qm.answer_correct, serial.metrics.answer_correct);
+            assert_eq!(out.steps_by_small, serial.steps_by_small);
+            assert_eq!(out.steps_by_base, serial.steps_by_base);
+            assert_eq!(out.health.to_bits(), serial.health.to_bits());
+        }
+    }
+
+    #[test]
+    fn vanilla_base_plans_no_speculation_ops() {
+        let (ops, qm, _) = drive(Scheme::VanillaBase, 3);
+        assert!(ops.iter().all(|op| !matches!(
+            op,
+            EngineOp::VerifyPass { .. } | EngineOp::Rollback { .. } | EngineOp::BonusToken
+        )));
+        assert!(matches!(ops.last(), Some(EngineOp::Finish { role: Role::Base, .. })));
+        assert_eq!(qm.steps_speculated, 0);
+    }
+
+    #[test]
+    fn specreason_plans_speculate_then_verify() {
+        let (ops, qm, _) = drive(Scheme::SpecReason, 4);
+        assert!(matches!(
+            ops[0],
+            EngineOp::Decode { role: Role::Small, phase: Phase::Speculate, .. }
+        ));
+        assert!(matches!(ops[1], EngineOp::VerifyPass { template_len: 70, .. }));
+        let verifies = ops
+            .iter()
+            .filter(|op| matches!(op, EngineOp::VerifyPass { template_len: 70, .. }))
+            .count();
+        assert_eq!(verifies, qm.steps_speculated);
+        assert_eq!(verifies, qm.verify_scores.len());
+        let rollbacks = ops.iter().filter(|op| matches!(op, EngineOp::Rollback { .. })).count();
+        assert_eq!(rollbacks, qm.steps_speculated - qm.steps_accepted);
+    }
+
+    #[test]
+    fn machine_thinking_mirror_matches_backend() {
+        for scheme in Scheme::all() {
+            let oracle = Oracle::default();
+            let q = TraceGenerator::new(Dataset::Aime, 5).query(1);
+            let cfg = SpecConfig { scheme, ..Default::default() };
+            let mut b = sim();
+            b.begin(&q).unwrap();
+            let mut m = StepMachine::new(&oracle, Cow::Owned(q), Cow::Owned(combo()), Cow::Owned(cfg.clone()), 0);
+            while let Some(op) = m.peek() {
+                op.apply(&mut b).unwrap();
+                m.commit(b.metrics_mut());
+            }
+            // After Finish, the backend holds thinking + answer tokens.
+            assert_eq!(
+                b.thinking_tokens(),
+                b.metrics_mut().thinking_tokens + cfg.answer_tokens,
+                "{scheme:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn phase_classification_tracks_front_op() {
+        let oracle = Oracle::default();
+        let q = TraceGenerator::new(Dataset::Math500, 6).query(0);
+        let cfg = SpecConfig { scheme: Scheme::SpecReason, ..Default::default() };
+        let mut b = sim();
+        b.begin(&q).unwrap();
+        let mut m = StepMachine::new(&oracle, Cow::Owned(q), Cow::Owned(combo()), Cow::Owned(cfg), 0);
+        assert_eq!(m.phase(), TaskPhase::Speculate);
+        let mut saw_verify = false;
+        while let Some(op) = m.peek() {
+            match m.phase() {
+                TaskPhase::Verify => {
+                    saw_verify = true;
+                    assert!(matches!(op, EngineOp::VerifyPass { .. }));
+                }
+                TaskPhase::Answer => {
+                    assert!(matches!(op, EngineOp::Finish { .. }));
+                }
+                _ => {}
+            }
+            op.apply(&mut b).unwrap();
+            m.commit(b.metrics_mut());
+        }
+        assert!(saw_verify);
+        assert_eq!(m.phase(), TaskPhase::Done);
+        assert!(m.is_done());
+    }
+}

@@ -6,10 +6,17 @@
 //! still oracle-driven — identical to SimBackend given the same seeds —
 //! so sim-vs-real parity tests can diff the decision stream while the
 //! real path additionally validates all KV/rollback mechanics.
+//!
+//! All op execution delegates to [`exec::execute_op`](super::exec), the
+//! same implementation the continuous-batching scheduler drives — so the
+//! serial and batched serving paths share one engine-call surface and
+//! one decode-seed derivation.
 
 use anyhow::Result;
 
 use super::backend::{Backend, Role};
+use super::exec::{execute_op, SeedStream};
+use super::machine::EngineOp;
 use crate::engine::{Engine, Sequence};
 use crate::metrics::{Phase, QueryMetrics};
 use crate::semantics::trace::Query;
@@ -22,8 +29,7 @@ pub struct RealBackend<'e> {
     qm: QueryMetrics,
     /// Per-query RNG stream for decode seeds (content is oracle-driven;
     /// token bytes just need to be deterministic).
-    seed_ctr: u64,
-    query_seed: u64,
+    seeds: SeedStream,
 }
 
 impl<'e> RealBackend<'e> {
@@ -34,18 +40,9 @@ impl<'e> RealBackend<'e> {
             base: base.to_string(),
             seq: None,
             qm: QueryMetrics::default(),
-            seed_ctr: 0,
-            query_seed: 0,
+            seeds: SeedStream::new(0),
         }
     }
-
-    fn model_name(&self, role: Role) -> &str {
-        match role {
-            Role::Small => &self.small,
-            Role::Base => &self.base,
-        }
-    }
-
 
     /// The sequence (for tests / server detail output).
     pub fn sequence(&self) -> Option<&Sequence> {
@@ -58,6 +55,21 @@ impl<'e> RealBackend<'e> {
         }
         Ok(())
     }
+
+    fn exec(&mut self, op: EngineOp) -> Result<()> {
+        let mut seq = self.seq.take().expect("begin() not called");
+        let r = execute_op(
+            self.engine,
+            &self.small,
+            &self.base,
+            &mut seq,
+            &mut self.seeds,
+            op,
+            &mut self.qm,
+        );
+        self.seq = Some(seq);
+        r
+    }
 }
 
 impl Drop for RealBackend<'_> {
@@ -68,77 +80,29 @@ impl Drop for RealBackend<'_> {
 
 impl Backend for RealBackend<'_> {
     fn begin(&mut self, q: &Query) -> Result<()> {
-        self.query_seed = q.seed;
-        self.seed_ctr = 0;
+        self.seeds = SeedStream::new(q.seed);
         self.seq = Some(self.engine.new_sequence(&q.prompt)?);
         Ok(())
     }
 
     fn decode(&mut self, role: Role, n: usize, phase: Phase) -> Result<()> {
-        let model = self.model_name(role).to_string();
-        self.seed_ctr += 1;
-        let seed = self
-            .query_seed
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add(self.seed_ctr);
-        let engine = self.engine;
-        let mut seq = self.seq.take().expect("begin() not called");
-        let r = engine.decode(&mut seq, &model, n, seed, phase, &mut self.qm);
-        self.seq = Some(seq);
-        r?;
-        Ok(())
+        self.exec(EngineOp::Decode { role, n, phase })
     }
 
     fn verify_pass(&mut self, template_len: usize, phase: Phase) -> Result<()> {
-        let base = self.base.clone();
-        let engine = self.engine;
-        let mut seq = self.seq.take().expect("begin() not called");
-        let r = if template_len == 0 {
-            // Token-level spec-decode verification: one base forward pass
-            // over the pending draft tokens (no scoring template).
-            let upto = seq.len();
-            engine.prefill_through(&mut seq, &base, upto, phase, &mut self.qm)
-        } else {
-            // Templated verification prompt (§4.1): "<verify>" +
-            // instruction bytes, padded to template_len.
-            let tok = &engine.tokenizer;
-            let mut template = vec![tok.special.verify];
-            template
-                .extend(tok.encode("Evaluate the reasoning step above. Rate its utility 0-9:"));
-            template.resize(template_len, tok.special.pad);
-            engine
-                .scored_prefill(&mut seq, &base, &template, phase, &mut self.qm)
-                .map(|_| ())
-        };
-        self.seq = Some(seq);
-        r
+        self.exec(EngineOp::VerifyPass { template_len, phase })
     }
 
     fn bonus_token(&mut self) -> Result<()> {
-        // Physically produce the bonus token (one base decode call), but
-        // charge zero GPU-clock cost: on the paper's stack its logits come
-        // free with the verification pass.
-        let gpu_before = self.qm.gpu_secs;
-        self.decode(Role::Base, 1, Phase::SpecVerify)?;
-        let delta = self.qm.gpu_secs - gpu_before;
-        self.qm.gpu_secs -= delta;
-        if let Some(v) = self.qm.phase_gpu.get_mut(Phase::SpecVerify.name()) {
-            *v -= delta;
-        }
-        Ok(())
+        self.exec(EngineOp::BonusToken)
     }
 
     fn rollback(&mut self, n: usize) -> Result<()> {
-        let engine = self.engine;
-        let mut seq = self.seq.take().expect("begin() not called");
-        let to = seq.len() - n;
-        let r = engine.rollback(&mut seq, to);
-        self.seq = Some(seq);
-        r
+        self.exec(EngineOp::Rollback { n })
     }
 
     fn finish(&mut self, role: Role, n: usize) -> Result<()> {
-        self.decode(role, n, Phase::Answer)
+        self.exec(EngineOp::Finish { role, n })
     }
 
     fn thinking_tokens(&self) -> usize {

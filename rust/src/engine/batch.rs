@@ -1,0 +1,119 @@
+//! Batched engine ops: one engine pass serving many sequences per step.
+//!
+//! The continuous-batching scheduler groups the front ops of its
+//! in-flight sequences by phase and drives these two entry points:
+//!
+//! * [`Engine::decode_batch`] — speculate / fallback / answer decodes;
+//! * [`Engine::scored_prefill_batch`] — templated §4.1 verification
+//!   passes and plain spec-decode catch-up prefills.
+//!
+//! Each request operates on its own [`Sequence`] (own KV views, own
+//! metrics), so requests are mutually independent; the batch fans them
+//! across scoped threads onto the internally-synchronized PJRT client
+//! (see the `Send`/`Sync` notes in mod.rs).  A batch of one executes
+//! inline on the calling thread — the `max_batch = 1` serving mode is
+//! therefore *exactly* the serial path, which is what makes its
+//! `QueryMetrics` bit-identical to the pre-scheduler router.
+//!
+//! Threads are spawned per batch (µs-scale) rather than kept in a
+//! persistent pool: every request is at least one PJRT executable
+//! dispatch (ms-scale), so spawn overhead is noise today.  A pinned
+//! scoped worker pool is tracked as a ROADMAP follow-on for when the
+//! per-op cost shrinks.
+//!
+//! Results come back per-request (a failed request — e.g. a context
+//! overflow — does not poison its batchmates) and in request order.
+//! Because every engine op is deterministic given its seed and sequence
+//! state, a request's result is independent of which batch it rode in.
+
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::{Engine, Sequence};
+use crate::metrics::{Phase, QueryMetrics};
+
+/// One sequence's slot in a batched decode pass.
+pub struct BatchDecode<'a> {
+    pub seq: &'a mut Sequence,
+    pub model: &'a str,
+    pub n: usize,
+    pub seed: u64,
+    pub phase: Phase,
+    pub qm: &'a mut QueryMetrics,
+}
+
+/// One sequence's slot in a batched verification pass.
+pub struct BatchVerify<'a> {
+    pub seq: &'a mut Sequence,
+    pub model: &'a str,
+    /// Scoring-template tokens; empty ⇒ plain catch-up prefill through
+    /// the sequence frontier (token-level spec-decode verification).
+    pub template: Vec<i32>,
+    pub phase: Phase,
+    pub qm: &'a mut QueryMetrics,
+}
+
+fn verify_one(engine: &Engine, r: &mut BatchVerify<'_>) -> Result<Option<Vec<f32>>> {
+    if r.template.is_empty() {
+        let upto = r.seq.len();
+        engine.prefill_through(r.seq, r.model, upto, r.phase, r.qm)?;
+        Ok(None)
+    } else {
+        engine
+            .scored_prefill(r.seq, r.model, &r.template, r.phase, r.qm)
+            .map(Some)
+    }
+}
+
+impl Engine {
+    /// Decode one step for up to `max_batch` sequences in a single
+    /// batched pass.  Returns per-request results in request order.
+    pub fn decode_batch(&self, mut reqs: Vec<BatchDecode<'_>>) -> Vec<Result<Vec<i32>>> {
+        if reqs.len() <= 1 {
+            // Inline: the serial path, no thread overhead.
+            return reqs
+                .iter_mut()
+                .map(|r| self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm))
+                .collect();
+        }
+        thread::scope(|s| {
+            let handles: Vec<_> = reqs
+                .iter_mut()
+                .map(|r| s.spawn(move || self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("decode_batch worker panicked")))
+                })
+                .collect()
+        })
+    }
+
+    /// Run one verification pass for up to `max_batch` sequences in a
+    /// single batched pass.  `Some(logits)` for templated passes, `None`
+    /// for plain catch-up prefills; per-request results in request order.
+    pub fn scored_prefill_batch(
+        &self,
+        mut reqs: Vec<BatchVerify<'_>>,
+    ) -> Vec<Result<Option<Vec<f32>>>> {
+        if reqs.len() <= 1 {
+            return reqs.iter_mut().map(|r| verify_one(self, r)).collect();
+        }
+        thread::scope(|s| {
+            let handles: Vec<_> = reqs
+                .iter_mut()
+                .map(|r| s.spawn(move || verify_one(self, r)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("scored_prefill_batch worker panicked")))
+                })
+                .collect()
+        })
+    }
+}

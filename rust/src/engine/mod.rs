@@ -18,6 +18,7 @@
 //! Engine ops are deterministic given seeds; all randomness comes from the
 //! caller's RNG stream.
 
+pub mod batch;
 pub mod sequence;
 
 use std::collections::BTreeMap;
@@ -30,6 +31,7 @@ use anyhow::{bail, Context, Result};
 use crate::kvcache::{KvManager, PoolConfig};
 use crate::metrics::{GpuClock, Phase, QueryMetrics, Testbed};
 use crate::runtime::{Device, Manifest, ModelRuntime, Tokenizer};
+pub use batch::{BatchDecode, BatchVerify};
 pub use sequence::Sequence;
 
 /// Engine deployment configuration.
@@ -135,6 +137,26 @@ impl Engine {
             .pool(model)
             .map(|p| p.utilization())
             .unwrap_or(0.0)
+    }
+
+    /// KV-aware admission query: could `model`'s partition reserve
+    /// `tokens` more tokens for a fresh sequence right now?  The
+    /// scheduler asks this before admitting a request so a grow can
+    /// never fail mid-flight for a well-sized request.
+    pub fn kv_can_reserve(&self, model: &str, tokens: usize) -> bool {
+        self.kv_mgr
+            .lock()
+            .unwrap()
+            .pool(model)
+            .map(|p| p.can_reserve(tokens))
+            .unwrap_or(false)
+    }
+
+    /// Static pool geometry of `model`'s KV partition (block size / total
+    /// blocks) — lets the scheduler keep a worst-case reservation ledger
+    /// across its in-flight sequences.
+    pub fn kv_pool_config(&self, model: &str) -> Result<crate::kvcache::PoolConfig> {
+        Ok(self.kv_mgr.lock().unwrap().pool(model)?.config())
     }
 
     /// Admit a new sequence with the given prompt tokens (not yet

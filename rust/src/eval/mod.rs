@@ -6,6 +6,7 @@
 //! simulator (fast, exact GPU clock) or the real PJRT engine (adds
 //! measured wall-clock); both share [`coordinator::run_query`].
 
+pub mod qcache;
 pub mod sweep;
 
 use anyhow::Result;

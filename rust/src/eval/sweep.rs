@@ -25,7 +25,7 @@ use anyhow::Result;
 use crate::coordinator::{run_query, QueryOutcome, RealBackend, SimBackend};
 use crate::engine::Engine;
 use crate::metrics::{Aggregate, GpuClock};
-use crate::semantics::{ModelClass, Oracle, Query, TraceGenerator};
+use crate::semantics::{ModelClass, Oracle, Query};
 use crate::util::threadpool::ThreadPool;
 
 use super::{
@@ -164,7 +164,7 @@ impl Sweep {
     /// same code as the parallel path.
     pub fn run_real(&self, engine: &Engine, oracle: &Oracle) -> Result<Vec<CellResult>> {
         let mut outs = Vec::with_capacity(self.len());
-        let mut cached: Option<(usize, usize, Query)> = None;
+        let mut cached: Option<(usize, usize, Arc<Query>)> = None;
         for item in self.plan() {
             let cell = &self.cells[item.cell_id];
             let stale = match &cached {
@@ -172,10 +172,10 @@ impl Sweep {
                 None => true,
             };
             if stale {
-                let q = TraceGenerator::new(cell.dataset, self.seed).query(item.query_idx);
+                let q = super::qcache::cached_query(cell.dataset, self.seed, item.query_idx);
                 cached = Some((item.cell_id, item.query_idx, q));
             }
-            let q = &cached.as_ref().expect("query cached").2;
+            let q: &Query = &cached.as_ref().expect("query cached").2;
             let mut b = RealBackend::new(engine, &cell.combo.small, &cell.combo.base);
             let out = run_query(oracle, q, &cell.combo, &cell.cfg, &mut b, item.sample)?;
             b.release()?;
@@ -225,10 +225,12 @@ struct SimCtx {
 /// seed, items): every call with the same arguments produces the same
 /// outcomes regardless of thread, which the determinism tests assert.
 ///
-/// Consecutive items for the same (cell, query) — the plan lays samples
-/// out adjacently — reuse one generated `Query` instead of regenerating
-/// it per sample; `TraceGenerator::query` is pure, so this is purely a
-/// work saving, not a behavior change.
+/// Queries come from the process-wide cross-cell cache
+/// ([`qcache`](super::qcache)): cells sharing a `(dataset, seed)` reuse
+/// one generated `Query` per index instead of regenerating it, with a
+/// local one-entry memo so adjacent samples skip the cache lock;
+/// `TraceGenerator::query` is pure, so this is purely a work saving, not
+/// a behavior change.
 fn run_items_sim(
     oracle: &Oracle,
     cells: &[Cell],
@@ -236,7 +238,7 @@ fn run_items_sim(
     items: &[WorkItem],
 ) -> Result<Vec<QueryOutcome>> {
     let mut outs = Vec::with_capacity(items.len());
-    let mut cached: Option<(usize, usize, Query)> = None;
+    let mut cached: Option<(usize, usize, Arc<Query>)> = None;
     for item in items {
         let cell = &cells[item.cell_id];
         let stale = match &cached {
@@ -244,10 +246,10 @@ fn run_items_sim(
             None => true,
         };
         if stale {
-            let q = TraceGenerator::new(cell.dataset, seed).query(item.query_idx);
+            let q = super::qcache::cached_query(cell.dataset, seed, item.query_idx);
             cached = Some((item.cell_id, item.query_idx, q));
         }
-        let q = &cached.as_ref().expect("query cached").2;
+        let q: &Query = &cached.as_ref().expect("query cached").2;
         let clock = GpuClock::new(testbed_for(&cell.combo));
         let small_arch = arch_name(ModelClass::of(&cell.combo.small));
         let base_arch = arch_name(ModelClass::of(&cell.combo.base));

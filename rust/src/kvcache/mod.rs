@@ -77,6 +77,18 @@ impl BlockPool {
         self.free.len()
     }
 
+    /// Free capacity in tokens (whole blocks only).
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * self.cfg.block_size
+    }
+
+    /// Could a *fresh* sequence (zero blocks held) grow to `tokens` right
+    /// now?  The admission-side counterpart of [`BlockPool::can_grow_to`]
+    /// for sequences that are not registered yet.
+    pub fn can_reserve(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
     pub fn peak_used_blocks(&self) -> usize {
         self.peak_used_blocks
     }
@@ -292,6 +304,21 @@ mod tests {
         assert!(p.can_grow_to(2, 16));
         assert!(!p.can_grow_to(2, 17));
         p.check_invariants();
+    }
+
+    #[test]
+    fn reservation_queries_track_free_blocks() {
+        let mut p = pool(16, 4);
+        assert_eq!(p.free_tokens(), 64);
+        assert!(p.can_reserve(64));
+        assert!(!p.can_reserve(65));
+        p.register(1).unwrap();
+        p.grow_to(1, 33).unwrap(); // 3 blocks
+        assert_eq!(p.free_tokens(), 16);
+        assert!(p.can_reserve(16));
+        assert!(!p.can_reserve(17));
+        p.release(1).unwrap();
+        assert!(p.can_reserve(64));
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;
+pub mod scheduler;
 pub mod semantics;
 pub mod server;
 pub mod util;

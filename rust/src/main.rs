@@ -82,10 +82,13 @@ fn deploy_from(args: &specreason::util::cli::Args) -> Result<DeployConfig> {
 
 fn cmd_serve(raw: &[String]) -> Result<()> {
     let cmd = common_opts(Command::new("specreason serve", "start the TCP server"))
-        .opt("addr", "listen address", Some("127.0.0.1:7878"));
+        .opt("addr", "listen address", Some("127.0.0.1:7878"))
+        .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"));
     let args = cmd.parse(raw)?;
     let mut cfg = deploy_from(&args)?;
     cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
+    cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
+    cfg.validate()?;
     eprintln!(
         "[serve] loading {} + {} from {} ...",
         cfg.base_model, cfg.small_model, cfg.artifacts_dir

@@ -1,0 +1,730 @@
+//! Continuous-batching scheduler: step-level batched serving with
+//! KV-aware admission and priority preemption.
+//!
+//! Replaces the single-worker FIFO router's execution model.  One
+//! composer thread owns the engine and drives three mechanisms:
+//!
+//! 1. **Admission** — a bounded multi-class queue ([`queue`]); beyond
+//!    `max_queue` outstanding requests new arrivals are rejected with the
+//!    `overloaded` error.  A queued request is admitted into the running
+//!    set only when (a) a batch slot is free (`max_batch`) and (b) both
+//!    model KV partitions can hold its worst-case token need on top of
+//!    every in-flight sequence's reservation (the block-granular ledger
+//!    in [`kv_fits`], backed by the `KvManager` free-block queries) — so
+//!    an admitted request can never hit a KV-exhaustion error mid-flight.
+//! 2. **Step-level batch composition** ([`task::tick`]) — every in-flight
+//!    sequence exposes its next [`EngineOp`](crate::coordinator::EngineOp)
+//!    via its re-entrant [`StepMachine`]; front ops are grouped by
+//!    [`TaskPhase`](crate::coordinator::TaskPhase) (speculate / verify /
+//!    fallback / answer) into one batched engine pass (`decode_batch` /
+//!    `scored_prefill_batch`) per phase per step.
+//! 3. **Preemption** — when the queue head belongs to a strictly higher
+//!    class than some running sequence and no slot/KV is available, the
+//!    lowest-priority (least-progressed on ties) running sequence is
+//!    evicted: its KV is rolled back to the prompt and released, and its
+//!    job re-queued at the front of its class for a from-scratch restart.
+//!    Restarts are free of result skew — the op stream is a pure function
+//!    of the request, so a preempted request's final `QueryMetrics` are
+//!    identical to an undisturbed run (only wall/queue times differ).
+//!
+//! Determinism contract: at `max_batch = 1` the scheduler executes
+//! exactly the serial path (`run_query` + `RealBackend`) — same ops, same
+//! decode seeds, same metric fold order — so per-request deterministic
+//! `QueryMetrics` (GPU clock, token/step counters, verify scores,
+//! correctness) are bit-identical to the pre-scheduler router.  At any
+//! `max_batch`, per-request results are independent of batchmates; only
+//! throughput and wall-clock change.
+
+pub mod queue;
+mod task;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::DeployConfig;
+use crate::coordinator::{Combo, Scheme, SeedStream, SpecConfig, StepMachine};
+use crate::engine::Engine;
+use crate::metrics::QueryMetrics;
+use crate::semantics::{Dataset, DatasetProfile, Oracle, TraceGenerator};
+use crate::util::json::Json;
+
+pub use queue::{AdmissionQueue, Priority};
+use task::SeqTask;
+
+/// A fully-resolved serving request (the router applies per-request
+/// overrides onto the deployment defaults before submitting).
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub dataset: Dataset,
+    pub query_index: usize,
+    pub sample: usize,
+    pub seed: u64,
+    pub spec: SpecConfig,
+    pub priority: Priority,
+}
+
+/// What a completed request reports back.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub metrics: QueryMetrics,
+    pub scheme: Scheme,
+    pub priority: Priority,
+    /// Submit → admission into the running set.
+    pub queue_wait_s: f64,
+    /// Submit → first engine op (time-to-first-step).
+    pub ttfs_s: f64,
+    /// Submit → completion.
+    pub e2e_s: f64,
+    /// Times this request was preempted and restarted.
+    pub preemptions: u32,
+}
+
+/// Internal queue entry.
+pub(crate) struct Job {
+    pub req: JobRequest,
+    pub reply: mpsc::Sender<Result<JobResult>>,
+    pub submitted_at: Instant,
+    /// First engine op *ever* for this request — survives preemption
+    /// restarts so TTFS keeps its submit→first-op meaning.
+    pub first_op_at: Option<Instant>,
+    pub preemptions: u32,
+}
+
+/// Serving statistics (served over the `stats` op).  Extends the old
+/// router counters with queue-wait / time-to-first-step / SLO / batching
+/// telemetry.
+#[derive(Debug, Default, Clone)]
+pub struct RouterStats {
+    pub admitted: u64,
+    pub rejected_overload: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub preempted: u64,
+    pub queue_depth: usize,
+    pub running: usize,
+    /// Queue-wait accounting over engine admissions (re-admissions after
+    /// preemption count again).
+    pub queue_wait_samples: u64,
+    pub queue_wait_s_sum: f64,
+    pub queue_wait_s_max: f64,
+    /// Submit → first engine op, summed over completed requests.
+    pub ttfs_s_sum: f64,
+    /// Completed requests whose end-to-end latency exceeded
+    /// `DeployConfig::slo_ms` (0 disables).
+    pub slo_violations: u64,
+    /// Composed batch steps and the sequences they advanced.
+    pub batch_ticks: u64,
+    pub stepped_seqs: u64,
+}
+
+impl RouterStats {
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.queue_wait_samples == 0 {
+            0.0
+        } else {
+            self.queue_wait_s_sum / self.queue_wait_samples as f64
+        }
+    }
+
+    pub fn mean_ttfs_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.ttfs_s_sum / self.completed as f64
+        }
+    }
+
+    /// Mean sequences advanced per composed batch step.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_ticks == 0 {
+            0.0
+        } else {
+            self.stepped_seqs as f64 / self.batch_ticks as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::num(self.admitted as f64)),
+            ("rejected_overload", Json::num(self.rejected_overload as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("preempted", Json::num(self.preempted as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("running", Json::num(self.running as f64)),
+            ("queue_wait_s_mean", Json::num(self.mean_queue_wait_s())),
+            ("queue_wait_s_max", Json::num(self.queue_wait_s_max)),
+            ("ttfs_s_mean", Json::num(self.mean_ttfs_s())),
+            ("slo_violations", Json::num(self.slo_violations as f64)),
+            ("batch_ticks", Json::num(self.batch_ticks as f64)),
+            ("batch_occupancy_mean", Json::num(self.mean_batch_occupancy())),
+        ])
+    }
+}
+
+struct Shared {
+    queue: Mutex<AdmissionQueue<Job>>,
+    cv: Condvar,
+    stats: Mutex<RouterStats>,
+    closed: AtomicBool,
+}
+
+/// Lock that survives poisoning: if the composer thread panicked while
+/// holding a lock, the state it protects is still the best available
+/// answer (counters, queue entries) and the liveness guard must be able
+/// to drain the queue regardless.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Liveness guard: runs when the composer thread exits for *any* reason
+/// — clean shutdown, startup failure, or a panic mid-serve.  Marks the
+/// scheduler closed (so submits stop accepting) and fails every job
+/// still queued, so no client can block forever on a reply that will
+/// never come (the old router surfaced this as "engine worker is gone").
+struct WorkerGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        let mut q = lock(&self.shared.queue);
+        let mut stranded = 0u64;
+        while let Some((_prio, job)) = q.pop() {
+            stranded += 1;
+            let _ = job.reply.send(Err(anyhow!("scheduler worker terminated")));
+        }
+        let mut s = lock(&self.shared.stats);
+        s.failed += stranded;
+        s.queue_depth = 0;
+        s.running = 0;
+    }
+}
+
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn the composer thread.  The engine is created *inside* the
+    /// worker (it owns the PJRT client for its lifetime); startup errors
+    /// propagate here.
+    pub fn start(cfg: DeployConfig) -> Result<Scheduler> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(AdmissionQueue::new(cfg.max_queue)),
+            cv: Condvar::new(),
+            stats: Mutex::new(RouterStats::default()),
+            closed: AtomicBool::new(false),
+        });
+        let wshared = Arc::clone(&shared);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("specreason-sched".into())
+            .spawn(move || worker_loop(cfg, wshared, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler worker died during startup"))??;
+        Ok(Scheduler { shared, worker: Some(worker) })
+    }
+
+    /// Try to admit a request into the wait queue; `Err` means
+    /// backpressure (`overloaded`) or shutdown.  The returned channel
+    /// yields the request's result when it completes.
+    pub fn submit(&self, req: JobRequest) -> Result<mpsc::Receiver<Result<JobResult>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let prio = req.priority;
+        let job = Job {
+            req,
+            reply: reply_tx,
+            submitted_at: Instant::now(),
+            first_op_at: None,
+            preemptions: 0,
+        };
+        {
+            let mut q = lock(&self.shared.queue);
+            // Checked *under the queue lock*: the worker's liveness guard
+            // sets `closed` and then drains the queue under this same
+            // lock, so a submit can never slip a job in after the final
+            // drain (it either lands before — and gets drained — or sees
+            // `closed` here).
+            anyhow::ensure!(
+                !self.shared.closed.load(Ordering::SeqCst),
+                "scheduler is shut down"
+            );
+            match q.push(prio, job) {
+                Ok(()) => {
+                    let mut s = lock(&self.shared.stats);
+                    s.admitted += 1;
+                    s.queue_depth = q.len();
+                }
+                Err(_rejected) => {
+                    lock(&self.shared.stats).rejected_overload += 1;
+                    anyhow::bail!("overloaded: admission queue full");
+                }
+            }
+        }
+        self.shared.cv.notify_all();
+        Ok(reply_rx)
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        lock(&self.shared.stats).clone()
+    }
+
+    /// Stop the worker: in-flight and already-queued requests finish,
+    /// then the thread joins.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// Worst-case KV tokens a request can reach in either model's partition:
+/// profile-maximal prompt + thinking budget + transient verification
+/// template + answer, plus draft-overshoot slack for spec-decode rounds.
+fn need_tokens(req: &JobRequest) -> usize {
+    let prompt_hi = DatasetProfile::of(req.dataset).prompt_len.1;
+    prompt_hi
+        + req.spec.token_budget
+        + req.spec.verify_template_len
+        + req.spec.answer_tokens
+        + req.spec.draft_k
+        + 1
+}
+
+/// KV reservation ledger: would admitting a request of `need_new` tokens
+/// stay within `model`'s partition even if every in-flight sequence grew
+/// to its own worst case?  Block-granular (each sequence rounds up to
+/// whole blocks), so an admitted request can never hit a KV-exhaustion
+/// error mid-flight.  Subsumes the instantaneous free-block check
+/// ([`Engine::kv_can_reserve`]) because this scheduler's sequences are
+/// the partitions' only consumers.
+fn kv_fits(engine: &Engine, model: &str, running: &[SeqTask<'_>], need_new: usize) -> bool {
+    let Ok(pool) = engine.kv_pool_config(model) else {
+        return false;
+    };
+    let bs = pool.block_size.max(1);
+    let reserved: usize = running.iter().map(|t| t.need_tokens.div_ceil(bs)).sum();
+    // Ledger bound, plus the live free-block query as defense in depth
+    // (protects embedders that run other sequences on the same engine).
+    reserved + need_new.div_ceil(bs) <= pool.total_blocks
+        && engine.kv_can_reserve(model, need_new)
+}
+
+/// Could a request of `need` tokens ever fit `model`'s partition, even
+/// with the engine idle?
+fn kv_feasible(engine: &Engine, model: &str, need: usize) -> bool {
+    match engine.kv_pool_config(model) {
+        Ok(pool) => need.div_ceil(pool.block_size.max(1)) <= pool.total_blocks,
+        Err(_) => false,
+    }
+}
+
+/// Reject budgets that cannot fit the context window before any compute.
+/// The prompt bound is derived from the dataset profile (the generator's
+/// actual range), so the two cannot drift.
+fn validate_budget(
+    engine: &Engine,
+    base_model: &str,
+    dataset: Dataset,
+    spec: &SpecConfig,
+) -> Result<()> {
+    let base = engine.model(base_model)?;
+    let max_prompt = DatasetProfile::of(dataset).prompt_len.1;
+    let need = max_prompt + spec.token_budget + spec.verify_template_len + spec.answer_tokens;
+    anyhow::ensure!(
+        need <= base.arch.max_seq,
+        "token_budget {} does not fit the context window ({} needed > {})",
+        spec.token_budget,
+        need,
+        base.arch.max_seq
+    );
+    Ok(())
+}
+
+fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Result<()>>) {
+    // From here on, however this thread exits — clean shutdown, startup
+    // failure, or a panic — the guard closes the scheduler and fails
+    // whatever is still queued, so clients never hang on a dead worker.
+    let _guard = WorkerGuard { shared: Arc::clone(&shared) };
+    let engine = match Engine::new(&cfg.engine_config()) {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let oracle = Oracle::default();
+    let combo = Combo::new(&cfg.base_model, &cfg.small_model);
+    let mut running: Vec<SeqTask> = Vec::new();
+
+    loop {
+        admit(&engine, &oracle, &combo, &cfg, &shared, &mut running);
+        lock(&shared.stats).running = running.len();
+
+        if running.is_empty() {
+            let q = lock(&shared.queue);
+            if q.is_empty() {
+                if shared.closed.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Idle: wait for a submit (or shutdown) notification.
+                let _unused = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                continue;
+            }
+            // Queue non-empty but nothing admitted: admit() guarantees
+            // progress when the running set is empty (it fails requests
+            // that can never fit), so just loop.
+            continue;
+        }
+
+        let report = task::tick(&engine, &combo, &mut running);
+        if report.stepped > 0 {
+            let mut s = lock(&shared.stats);
+            s.batch_ticks += 1;
+            s.stepped_seqs += report.stepped as u64;
+        }
+        finalize(&engine, &cfg, &shared, &mut running);
+    }
+
+    // Shutdown with the queue drained; nothing should be left in flight,
+    // but release anything that is.
+    for t in running.drain(..) {
+        let _ = engine.release(&t.seq);
+        let _ = t.job.reply.send(Err(anyhow!("scheduler shut down")));
+    }
+}
+
+fn pop_job(shared: &Shared) -> Option<(Priority, Job)> {
+    let mut q = lock(&shared.queue);
+    let popped = q.pop();
+    if popped.is_some() {
+        lock(&shared.stats).queue_depth = q.len();
+    }
+    popped
+}
+
+/// Re-queue a job at the front of its class (it was popped but cannot
+/// run yet — blocked or preemption-pending).
+fn requeue_front(shared: &Shared, prio: Priority, job: Job) {
+    let mut q = lock(&shared.queue);
+    q.push_front(prio, job);
+    lock(&shared.stats).queue_depth = q.len();
+}
+
+/// Admit queued jobs while batch slots and KV capacity allow, preempting
+/// lower-class running sequences when a higher class would otherwise
+/// starve.  Every decision is made about the job actually *popped* (not a
+/// peeked snapshot), so a concurrent submit can never swap the job under
+/// an admission decision; a blocked job goes back to the front of its
+/// class untouched.
+fn admit<'e>(
+    engine: &'e Engine,
+    oracle: &'e Oracle,
+    combo: &'e Combo,
+    cfg: &DeployConfig,
+    shared: &Shared,
+    running: &mut Vec<SeqTask<'e>>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    loop {
+        let Some((prio, job)) = pop_job(shared) else { return };
+        let need = need_tokens(&job.req);
+
+        // Never-serviceable requests fail fast — *before* the
+        // fits/preemption decision, so an invalid (or oversized) request
+        // can never evict another tenant's in-flight work on its way to
+        // a rejection.
+        if let Err(e) = validate_budget(engine, &combo.base, job.req.dataset, &job.req.spec) {
+            lock(&shared.stats).failed += 1;
+            let _ = job.reply.send(Err(e));
+            continue;
+        }
+        if !kv_feasible(engine, &combo.small, need) || !kv_feasible(engine, &combo.base, need) {
+            lock(&shared.stats).failed += 1;
+            let _ = job.reply.send(Err(anyhow!(
+                "request needs {need} KV tokens; exceeds partition capacity"
+            )));
+            continue;
+        }
+
+        let full = running.len() >= max_batch;
+        let fits = !full
+            && kv_fits(engine, &combo.small, running, need)
+            && kv_fits(engine, &combo.base, running, need);
+
+        if !fits {
+            // This job outranks a running sequence: evict the weakest and
+            // retry (the job returns to its class front, so it is the
+            // next candidate unless an even higher class arrives).
+            if cfg.preempt {
+                if let Some(victim) = victim_index(running, prio) {
+                    requeue_front(shared, prio, job);
+                    preempt(engine, shared, running, victim);
+                    continue;
+                }
+            }
+            if running.is_empty() {
+                // Feasible on an idle engine but blocked with nothing
+                // running should be impossible (the ledger is empty);
+                // fail defensively rather than risk a busy spin.
+                lock(&shared.stats).failed += 1;
+                let _ = job.reply.send(Err(anyhow!(
+                    "request needs {need} KV tokens but cannot be scheduled"
+                )));
+                continue;
+            }
+            // Blocked behind the current batch: wait at the class front.
+            requeue_front(shared, prio, job);
+            return;
+        }
+
+        let wait = job.submitted_at.elapsed().as_secs_f64();
+        {
+            let mut s = lock(&shared.stats);
+            s.queue_wait_samples += 1;
+            s.queue_wait_s_sum += wait;
+            if wait > s.queue_wait_s_max {
+                s.queue_wait_s_max = wait;
+            }
+        }
+        match make_task(engine, oracle, combo, prio, job) {
+            Ok(t) => running.push(t),
+            Err((job, e)) => {
+                lock(&shared.stats).failed += 1;
+                let _ = job.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+/// Build the in-flight state for an admitted job (budget validation
+/// already happened in [`admit`], before the preemption decision).
+fn make_task<'e>(
+    engine: &'e Engine,
+    oracle: &'e Oracle,
+    combo: &'e Combo,
+    prio: Priority,
+    job: Job,
+) -> Result<SeqTask<'e>, (Job, anyhow::Error)> {
+    let need_tokens = need_tokens(&job.req);
+    // Deliberately NOT the eval query cache (`eval::qcache`): request
+    // seeds are untrusted client input, so caching per (dataset, seed)
+    // here would grow without bound.  Generation is cheap relative to a
+    // query's engine work (and to a preemption restart's lost compute).
+    let q = TraceGenerator::new(job.req.dataset, job.req.seed).query(job.req.query_index);
+    let seq = match engine.new_sequence(&q.prompt) {
+        Ok(s) => s,
+        Err(e) => return Err((job, e)),
+    };
+    let seeds = SeedStream::new(q.seed);
+    let machine = StepMachine::new(
+        oracle,
+        std::borrow::Cow::Owned(q),
+        std::borrow::Cow::Borrowed(combo),
+        std::borrow::Cow::Owned(job.req.spec.clone()),
+        job.req.sample,
+    );
+    Ok(SeqTask {
+        job,
+        prio,
+        machine,
+        seq,
+        seeds,
+        qm: QueryMetrics::default(),
+        need_tokens,
+        admitted_at: Instant::now(),
+        failed: None,
+    })
+}
+
+/// The preemption victim for a waiting request of class `head`: the
+/// lowest-priority running sequence with `prio < head`, breaking ties
+/// toward the most recently admitted (least progress to discard).
+fn victim_index(running: &[SeqTask<'_>], head: Priority) -> Option<usize> {
+    select_victim(running.iter().map(|t| (t.prio, t.admitted_at)), head)
+}
+
+/// Victim-selection comparator over `(priority, admitted_at)` pairs —
+/// separated from [`SeqTask`] so it is unit-testable without an engine.
+fn select_victim(
+    candidates: impl Iterator<Item = (Priority, Instant)>,
+    head: Priority,
+) -> Option<usize> {
+    let mut best: Option<(usize, Priority, Instant)> = None;
+    for (i, (prio, admitted_at)) in candidates.enumerate() {
+        if prio >= head {
+            continue;
+        }
+        best = match best {
+            None => Some((i, prio, admitted_at)),
+            Some((j, best_prio, best_at)) => {
+                if prio < best_prio || (prio == best_prio && admitted_at > best_at) {
+                    Some((i, prio, admitted_at))
+                } else {
+                    Some((j, best_prio, best_at))
+                }
+            }
+        };
+    }
+    best.map(|(i, _, _)| i)
+}
+
+/// Evict a running sequence: discard its speculative KV (rollback to the
+/// prompt), release its blocks, and re-queue its job at the front of its
+/// class for a from-scratch restart.
+fn preempt<'e>(
+    engine: &Engine,
+    shared: &Shared,
+    running: &mut Vec<SeqTask<'e>>,
+    idx: usize,
+) {
+    let mut t = running.remove(idx);
+    let prompt_len = t.seq.prompt_len;
+    let _ = engine.rollback(&mut t.seq, prompt_len);
+    let _ = engine.release(&t.seq);
+    let mut job = t.job;
+    job.preemptions += 1;
+    let mut q = lock(&shared.queue);
+    q.push_front(t.prio, job);
+    let mut s = lock(&shared.stats);
+    s.preempted += 1;
+    s.queue_depth = q.len();
+}
+
+/// Retire finished (or failed) sequences: release KV, reply, count.
+fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut Vec<SeqTask<'_>>) {
+    let mut i = 0;
+    while i < running.len() {
+        let done = running[i].failed.is_some() || running[i].machine.is_done();
+        if !done {
+            i += 1;
+            continue;
+        }
+        let t = running.remove(i);
+        let _ = engine.release(&t.seq);
+        let SeqTask { job, prio, qm, admitted_at, failed, .. } = t;
+        let e2e_s = job.submitted_at.elapsed().as_secs_f64();
+        match failed {
+            Some(e) => {
+                lock(&shared.stats).failed += 1;
+                let _ = job.reply.send(Err(e));
+            }
+            None => {
+                let queue_wait_s = admitted_at.duration_since(job.submitted_at).as_secs_f64();
+                let ttfs_s = job
+                    .first_op_at
+                    .map(|at| at.duration_since(job.submitted_at).as_secs_f64())
+                    .unwrap_or(e2e_s);
+                {
+                    let mut s = lock(&shared.stats);
+                    s.completed += 1;
+                    s.ttfs_s_sum += ttfs_s;
+                    if cfg.slo_ms > 0 && e2e_s * 1000.0 > cfg.slo_ms as f64 {
+                        s.slo_violations += 1;
+                    }
+                }
+                let result = JobResult {
+                    metrics: qm,
+                    scheme: job.req.spec.scheme,
+                    priority: prio,
+                    queue_wait_s,
+                    ttfs_s,
+                    e2e_s,
+                    preemptions: job.preemptions,
+                };
+                let _ = job.reply.send(Ok(result));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_json_shape() {
+        let mut s = RouterStats::default();
+        s.admitted = 5;
+        s.rejected_overload = 1;
+        s.completed = 3;
+        s.queue_wait_samples = 3;
+        s.queue_wait_s_sum = 0.6;
+        s.ttfs_s_sum = 0.9;
+        s.batch_ticks = 4;
+        s.stepped_seqs = 10;
+        let j = s.to_json();
+        assert_eq!(j.get("admitted").as_usize(), Some(5));
+        assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
+        assert_eq!(j.get("completed").as_usize(), Some(3));
+        assert!((j.get("queue_wait_s_mean").as_f64().unwrap() - 0.2).abs() < 1e-12);
+        assert!((j.get("ttfs_s_mean").as_f64().unwrap() - 0.3).abs() < 1e-12);
+        assert!((j.get("batch_occupancy_mean").as_f64().unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn need_tokens_uses_profile_prompt_bound() {
+        let spec = SpecConfig::default();
+        let req = JobRequest {
+            dataset: Dataset::Gpqa,
+            query_index: 0,
+            sample: 0,
+            seed: 1,
+            spec: spec.clone(),
+            priority: Priority::Normal,
+        };
+        let expect = DatasetProfile::of(Dataset::Gpqa).prompt_len.1
+            + spec.token_budget
+            + spec.verify_template_len
+            + spec.answer_tokens
+            + spec.draft_k
+            + 1;
+        assert_eq!(need_tokens(&req), expect);
+    }
+
+    // Victim selection against the production comparator: lowest class
+    // first, then least progress (most recently admitted).
+    #[test]
+    fn victim_prefers_lowest_class_then_newest() {
+        let now = Instant::now();
+        let candidates = [
+            (Priority::Low, now),
+            (Priority::Normal, now + Duration::from_millis(1)),
+            (Priority::Low, now + Duration::from_millis(2)),
+        ];
+        // The newest Low entry wins for a High head.
+        assert_eq!(select_victim(candidates.iter().copied(), Priority::High), Some(2));
+        // A Normal head may only evict Lows.
+        assert_eq!(select_victim(candidates.iter().copied(), Priority::Normal), Some(2));
+        // Nothing qualifies for a Low head (strictly-lower rule).
+        assert_eq!(select_victim(candidates.iter().copied(), Priority::Low), None);
+        // Same class never preempts itself.
+        let same = [(Priority::High, now)];
+        assert_eq!(select_victim(same.iter().copied(), Priority::High), None);
+    }
+}

@@ -1,0 +1,161 @@
+//! Priority classes and the bounded admission queue.
+//!
+//! Three strict classes (high > normal > low), FIFO within a class.  The
+//! queue enforces the `max_queue` backpressure bound on *new* arrivals
+//! ([`AdmissionQueue::push`] rejects when full — the server's
+//! `overloaded` error) while preemption re-queues
+//! ([`AdmissionQueue::push_front`]) are bound-exempt: a preempted
+//! sequence already held a slot and must not be droppable by later
+//! arrivals.
+
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Request priority class.  `Ord`: `Low < Normal < High`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn all() -> [Priority; 3] {
+        [Priority::Low, Priority::Normal, Priority::High]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "low" => Priority::Low,
+            "normal" => Priority::Normal,
+            "high" => Priority::High,
+            other => anyhow::bail!("unknown priority '{other}' (low|normal|high)"),
+        })
+    }
+
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Bounded multi-class FIFO.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    classes: [VecDeque<T>; 3],
+    max_queue: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(max_queue: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            classes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            max_queue,
+        }
+    }
+
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.iter().all(|c| c.is_empty())
+    }
+
+    /// Enqueue a new arrival; `Err(item)` means the queue is full
+    /// (overload backpressure).
+    pub fn push(&mut self, prio: Priority, item: T) -> Result<(), T> {
+        if self.len() >= self.max_queue {
+            return Err(item);
+        }
+        self.classes[prio.index()].push_back(item);
+        Ok(())
+    }
+
+    /// Re-queue a preempted item at the front of its class (bound-exempt).
+    pub fn push_front(&mut self, prio: Priority, item: T) {
+        self.classes[prio.index()].push_front(item);
+    }
+
+    /// Highest class first, FIFO within a class.
+    pub fn pop(&mut self) -> Option<(Priority, T)> {
+        for prio in [Priority::High, Priority::Normal, Priority::Low] {
+            if let Some(item) = self.classes[prio.index()].pop_front() {
+                return Some((prio, item));
+            }
+        }
+        None
+    }
+
+    /// The item [`pop`](Self::pop) would return, without removing it.
+    pub fn peek(&self) -> Option<(Priority, &T)> {
+        for prio in [Priority::High, Priority::Normal, Priority::Low] {
+            if let Some(item) = self.classes[prio.index()].front() {
+                return Some((prio, item));
+            }
+        }
+        None
+    }
+
+    pub fn peek_priority(&self) -> Option<Priority> {
+        self.peek().map(|(p, _)| p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_order_and_parse() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in Priority::all() {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn pops_by_class_then_fifo() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(Priority::Low, "l1").unwrap();
+        q.push(Priority::Normal, "n1").unwrap();
+        q.push(Priority::High, "h1").unwrap();
+        q.push(Priority::Normal, "n2").unwrap();
+        q.push(Priority::High, "h2").unwrap();
+        assert_eq!(q.peek_priority(), Some(Priority::High));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
+        assert_eq!(order, vec!["h1", "h2", "n1", "n2", "l1"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn enforces_bound_on_new_arrivals_only() {
+        let mut q = AdmissionQueue::new(2);
+        q.push(Priority::Normal, 1).unwrap();
+        q.push(Priority::Low, 2).unwrap();
+        // Full: new arrivals bounce, whatever their class.
+        assert_eq!(q.push(Priority::High, 3), Err(3));
+        assert_eq!(q.len(), 2);
+        // Preemption re-queues are exempt and land at the class front.
+        q.push_front(Priority::Normal, 4);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some((Priority::Normal, 4)));
+        assert_eq!(q.pop(), Some((Priority::Normal, 1)));
+        assert_eq!(q.pop(), Some((Priority::Low, 2)));
+    }
+}

@@ -1,0 +1,206 @@
+//! In-flight sequence state and the step-level batch composer.
+//!
+//! A [`SeqTask`] bundles everything one admitted request needs to be
+//! driven re-entrantly: its [`StepMachine`] (the op stream), its engine
+//! [`Sequence`], decode-seed stream and metrics.  [`tick`] advances every
+//! in-flight task by (at most) one engine op, grouping front ops by their
+//! [`TaskPhase`] into one batched engine pass per phase:
+//!
+//! * speculate / fallback / answer decode groups →
+//!   [`Engine::decode_batch`] (one pass per phase group); spec-decode
+//!   bonus tokens are real decodes and ride the fallback group, with
+//!   their zero-GPU-cost accounting applied after the pass;
+//! * verification ops (templated §4.1 scoring and spec-decode catch-up) →
+//!   [`Engine::scored_prefill_batch`];
+//! * rollbacks (pure KV bookkeeping, no compute) execute inline before
+//!   the batches are composed.
+//!
+//! Per-task op order is exactly the machine's plan order, and each task's
+//! ops run on its own sequence, so a task's results are independent of
+//! its batchmates — at `max_batch = 1` the composed "batch" degenerates
+//! to the serial path.
+
+use std::time::Instant;
+
+use crate::coordinator::{
+    execute_op, verify_template, Combo, EngineOp, Role, SeedStream, StepMachine, TaskPhase,
+};
+use crate::engine::{BatchDecode, BatchVerify, Engine, Sequence};
+use crate::metrics::{Phase, QueryMetrics};
+
+use super::queue::Priority;
+use super::Job;
+
+/// One admitted, in-flight sequence.
+pub(crate) struct SeqTask<'e> {
+    pub job: Job,
+    pub prio: Priority,
+    pub machine: StepMachine<'e>,
+    pub seq: Sequence,
+    pub seeds: SeedStream,
+    pub qm: QueryMetrics,
+    /// Worst-case KV tokens this sequence can reach (admission ledger).
+    pub need_tokens: usize,
+    pub admitted_at: Instant,
+    pub failed: Option<anyhow::Error>,
+}
+
+impl SeqTask<'_> {
+    /// Record the request's first engine op (on the `Job`, so the
+    /// timestamp survives preemption restarts).
+    pub fn note_first_op(&mut self) {
+        if self.job.first_op_at.is_none() {
+            self.job.first_op_at = Some(Instant::now());
+        }
+    }
+}
+
+/// Outcome of one composed tick (for stats).
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct TickReport {
+    /// Sequences that advanced through a batched engine pass.
+    pub stepped: usize,
+}
+
+/// Advance every runnable task by one engine op, batched by op kind.
+pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) -> TickReport {
+    // --- rollbacks run inline (pure KV bookkeeping, no engine pass) ---
+    for t in running.iter_mut() {
+        if t.failed.is_some() {
+            continue;
+        }
+        loop {
+            let op = match t.machine.peek() {
+                Some(op @ EngineOp::Rollback { .. }) => op,
+                _ => break,
+            };
+            t.note_first_op();
+            match execute_op(
+                engine,
+                &combo.small,
+                &combo.base,
+                &mut t.seq,
+                &mut t.seeds,
+                op,
+                &mut t.qm,
+            ) {
+                Ok(()) => t.machine.commit(&mut t.qm),
+                Err(e) => {
+                    t.failed = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+
+    // --- compose this step's batches from the front ops, grouped by
+    // the machine's scheduling phase (speculate / verify / fallback /
+    // answer) ---
+    const SPECULATE: usize = 0;
+    const FALLBACK: usize = 1;
+    const ANSWER: usize = 2;
+    let mut decode_groups: [(Vec<BatchDecode<'_>>, Vec<usize>); 3] =
+        [(Vec::new(), Vec::new()), (Vec::new(), Vec::new()), (Vec::new(), Vec::new())];
+    let mut verify_reqs: Vec<BatchVerify<'_>> = Vec::new();
+    let mut verify_idx: Vec<usize> = Vec::new();
+    // Spec-decode bonus tokens in this tick's fallback batch: (task
+    // index, gpu_secs before the pass) — their decode is real compute
+    // but charged zero GPU-clock (logits come free with the verification
+    // pass), so the charge is subtracted once the batch returns, exactly
+    // like the serial executor does.
+    let mut bonus_before: Vec<(usize, f64)> = Vec::new();
+    for (i, t) in running.iter_mut().enumerate() {
+        if t.failed.is_some() {
+            continue;
+        }
+        let tphase = t.machine.phase();
+        let Some(op) = t.machine.peek() else { continue };
+        let (role, n, phase) = match op {
+            EngineOp::Decode { role, n, phase } => (role, n, phase),
+            EngineOp::Finish { role, n } => (role, n, Phase::Answer),
+            EngineOp::BonusToken => {
+                bonus_before.push((i, t.qm.gpu_secs));
+                (Role::Base, 1, Phase::SpecVerify)
+            }
+            EngineOp::VerifyPass { template_len, phase } => {
+                let template = if template_len == 0 {
+                    Vec::new()
+                } else {
+                    verify_template(engine, template_len)
+                };
+                t.note_first_op();
+                verify_reqs.push(BatchVerify {
+                    seq: &mut t.seq,
+                    model: &combo.base,
+                    template,
+                    phase,
+                    qm: &mut t.qm,
+                });
+                verify_idx.push(i);
+                continue;
+            }
+            // Rollbacks were drained above; a fresh one can only appear
+            // after this tick's batch op commits.
+            _ => continue,
+        };
+        t.note_first_op();
+        let model = match role {
+            Role::Small => combo.small.as_str(),
+            Role::Base => combo.base.as_str(),
+        };
+        let seed = t.seeds.next();
+        let group = match tphase {
+            TaskPhase::Speculate => SPECULATE,
+            TaskPhase::Answer => ANSWER,
+            _ => FALLBACK,
+        };
+        decode_groups[group]
+            .0
+            .push(BatchDecode { seq: &mut t.seq, model, n, seed, phase, qm: &mut t.qm });
+        decode_groups[group].1.push(i);
+    }
+
+    let [spec_group, fallback_group, answer_group] = decode_groups;
+    let stepped = verify_idx.len()
+        + spec_group.1.len()
+        + fallback_group.1.len()
+        + answer_group.1.len();
+
+    // --- one engine pass per phase group (all batches run before any
+    // commit so the per-task borrows stay disjoint) ---
+    let verify_results = engine.scored_prefill_batch(verify_reqs);
+    let spec_results = engine.decode_batch(spec_group.0);
+    let fallback_results = engine.decode_batch(fallback_group.0);
+    let answer_results = engine.decode_batch(answer_group.0);
+
+    let mut commit = |idx: &[usize], results: Vec<Result<(), anyhow::Error>>| {
+        for (k, r) in results.into_iter().enumerate() {
+            let t = &mut running[idx[k]];
+            match r {
+                Ok(()) => {
+                    // Bonus-token zero-cost accounting: the shared
+                    // refund keeps serial/batched parity exact.
+                    if let Some(&(_, gpu_before)) =
+                        bonus_before.iter().find(|(j, _)| *j == idx[k])
+                    {
+                        crate::coordinator::exec::refund_bonus_gpu(&mut t.qm, gpu_before);
+                    }
+                    t.machine.commit(&mut t.qm);
+                }
+                Err(e) => t.failed = Some(e),
+            }
+        }
+    };
+    commit(&verify_idx, drop_payload(verify_results));
+    commit(&spec_group.1, drop_payload(spec_results));
+    commit(&fallback_group.1, drop_payload(fallback_results));
+    commit(&answer_group.1, drop_payload(answer_results));
+
+    TickReport { stepped }
+}
+
+/// Collapse per-request payloads to unit results (the composer only needs
+/// success/failure; generated tokens already live in each sequence).
+fn drop_payload<T>(results: Vec<Result<T, anyhow::Error>>) -> Vec<Result<(), anyhow::Error>> {
+    results.into_iter().map(|r| r.map(|_| ())).collect()
+}

@@ -125,6 +125,39 @@ impl Calibration {
     pub fn reflection_of(&self, c: ModelClass) -> f64 {
         self.reflection[c as usize]
     }
+
+    /// Stable FNV-1a fingerprint over every constant's bit pattern.
+    /// Keys process-wide caches of quantities derived from a calibration
+    /// (e.g. the oracle's `own_health` Monte-Carlo), so two `Oracle`
+    /// instances share work iff their calibrations are identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let scalars = [
+            self.sigma_quality,
+            self.sigma_verify,
+            self.sigma_prm,
+            self.score_slope,
+            self.score_center,
+            self.quality_bar,
+            self.health_penalty,
+            self.critical_multiplier,
+            self.reflection_refund,
+            self.completion_kappa,
+            self.health_ratio_cap,
+        ];
+        for bits in scalars
+            .iter()
+            .chain(self.reflection.iter())
+            .chain(self.verbosity.iter())
+            .chain(self.draft_agreement.iter())
+            .map(|v| v.to_bits())
+            .chain(std::iter::once(self.reflection_extra_tokens as u64))
+        {
+            h ^= bits;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
 }
 
 /// Variant-level tweaks: the two base LRMs and the two speculators are
@@ -186,6 +219,19 @@ mod tests {
     fn skywork_is_the_noisier_judge() {
         assert!(variant_tweak("skywork-sim").verify_noise_mult > variant_tweak("qwq-sim").verify_noise_mult);
         assert!(variant_tweak("r1-70b-sim").verify_noise_mult > 1.0);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = Calibration::default();
+        let b = Calibration::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = Calibration::default();
+        c.sigma_quality += 1e-9;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = Calibration::default();
+        d.reflection_extra_tokens += 1;
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 
     #[test]

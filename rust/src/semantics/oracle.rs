@@ -38,28 +38,22 @@ fn sigmoid(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Oracle {
     pub calib: Calibration,
-    /// Cache of a model's expected own-trajectory health per dataset
-    /// (Monte-Carlo; see `own_health`).
-    own_health_cache: std::sync::Mutex<std::collections::BTreeMap<(crate::semantics::datasets::Dataset, String), f64>>,
 }
 
-impl Clone for Oracle {
-    fn clone(&self) -> Self {
-        Oracle {
-            calib: self.calib.clone(),
-            own_health_cache: std::sync::Mutex::new(
-                self.own_health_cache.lock().unwrap().clone(),
-            ),
-        }
-    }
-}
+/// Process-wide cache of `own_health` Monte-Carlo results, keyed by
+/// (dataset, model, calibration fingerprint) so every `Oracle` instance
+/// in the process — sweep workers, scheduler, benches — computes each
+/// (dataset, model) anchor at most once per calibration.
+static OWN_HEALTH: std::sync::Mutex<
+    std::collections::BTreeMap<(crate::semantics::datasets::Dataset, String, u64), f64>,
+> = std::sync::Mutex::new(std::collections::BTreeMap::new());
 
 impl Oracle {
     pub fn new(calib: Calibration) -> Self {
-        Oracle { calib, own_health_cache: Default::default() }
+        Oracle { calib }
     }
 
     /// Latent quality of `model`'s attempt at plan step `step` ∈ [0, 1].
@@ -150,10 +144,12 @@ impl Oracle {
     /// step errors, so only degradation *relative to its own baseline*
     /// (e.g. accepted bad speculations) should cost accuracy.
     pub fn own_health(&self, dataset: crate::semantics::datasets::Dataset, model: &str) -> f64 {
-        let key = (dataset, model.to_string());
-        if let Some(&h) = self.own_health_cache.lock().unwrap().get(&key) {
+        let key = (dataset, model.to_string(), self.calib.fingerprint());
+        if let Some(&h) = OWN_HEALTH.lock().unwrap().get(&key) {
             return h;
         }
+        // Compute outside the lock (a concurrent duplicate computes the
+        // same deterministic value; last insert wins harmlessly).
         let gen = crate::semantics::trace::TraceGenerator::new(dataset, 0xCA11B8A7E);
         let n = 64;
         let mut acc = 0.0;
@@ -167,8 +163,17 @@ impl Oracle {
             acc += t.health;
         }
         let h = acc / n as f64;
-        self.own_health_cache.lock().unwrap().insert(key, h);
+        OWN_HEALTH.lock().unwrap().insert(key, h);
         h
+    }
+
+    /// Whether the process-wide cache already holds the `own_health`
+    /// anchor for this oracle's calibration (test hook).
+    pub fn own_health_cached(&self, dataset: crate::semantics::datasets::Dataset, model: &str) -> bool {
+        OWN_HEALTH
+            .lock()
+            .unwrap()
+            .contains_key(&(dataset, model.to_string(), self.calib.fingerprint()))
     }
 
     /// Final pass@1 outcome. `sample` differentiates the k pass@1 samples.
@@ -439,6 +444,24 @@ mod tests {
         };
         // Base reflects more often than small ⇒ retains more health.
         assert!(run("qwq-sim") > run("r1-sim") + 0.01);
+    }
+
+    #[test]
+    fn own_health_is_cached_process_wide() {
+        // A model name no other test touches, so this test owns its key.
+        let model = "own-health-probe-sim";
+        let o1 = Oracle::default();
+        let h1 = o1.own_health(Dataset::Aime, model);
+        // A *different* Oracle instance with the same calibration sees
+        // the cached anchor (the Monte-Carlo ran once per process).
+        let o2 = Oracle::default();
+        assert!(o2.own_health_cached(Dataset::Aime, model));
+        assert_eq!(o2.own_health(Dataset::Aime, model).to_bits(), h1.to_bits());
+        // A different calibration keys separately.
+        let mut calib = Calibration::default();
+        calib.sigma_quality += 0.001;
+        let o3 = Oracle::new(calib);
+        assert!(!o3.own_health_cached(Dataset::Aime, model));
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! TCP serving front end: newline-delimited JSON requests routed through
-//! a bounded queue to the engine worker (see router.rs).
+//! TCP serving front end: newline-delimited JSON requests admitted
+//! through the router shim into the continuous-batching scheduler
+//! (see router.rs and `crate::scheduler`).
 //!
 //! Threading model (tokio is unavailable offline — DESIGN.md §3):
 //! one accept loop + a fixed [`ThreadPool`](crate::util::threadpool) of
-//! connection handlers + one engine worker thread.  This matches the
-//! paper's deployment: a single engine serializes the two colocated
-//! models; concurrency above it is I/O only.
+//! connection handlers + one scheduler composer thread that owns the
+//! engine and serves up to `max_batch` in-flight sequences per step.
+//! At `max_batch = 1` this degenerates to the paper's deployment — a
+//! single engine pass at a time, bit-identical metrics to the old
+//! serial router.
 
 pub mod protocol;
 pub mod router;
@@ -37,7 +40,10 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        let io_threads = cfg.io_threads;
+        // Each connection handler blocks for its in-flight query, so
+        // fewer handlers than batch slots would cap batch occupancy
+        // below max_batch regardless of client concurrency.
+        let io_threads = cfg.io_threads.max(cfg.max_batch);
         let router = Arc::new(Router::start(cfg)?);
         Ok(Server {
             listener,
@@ -107,7 +113,9 @@ fn handle_connection(
                 Op::Query(q) => match router.submit(q) {
                     Err(e) => protocol::error_response(req.id, &format!("{e:#}")),
                     Ok(rx) => match rx.recv() {
-                        Ok(Ok(result)) => protocol::ok_response(req.id, result),
+                        Ok(Ok(result)) => {
+                            protocol::ok_response(req.id, router::job_result_to_json(&result))
+                        }
                         Ok(Err(e)) => protocol::error_response(req.id, &format!("{e:#}")),
                         Err(_) => protocol::error_response(req.id, "engine worker dropped"),
                     },

@@ -4,7 +4,7 @@
 //! ```json
 //! {"id": 1, "op": "query", "dataset": "aime", "query_index": 3,
 //!  "scheme": "spec-reason", "threshold": 7, "first_n_base": 0,
-//!  "budget": 704, "sample": 0}
+//!  "budget": 704, "sample": 0, "priority": "high"}
 //! {"id": 2, "op": "stats"}
 //! {"id": 3, "op": "ping"}
 //! {"id": 4, "op": "shutdown"}
@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::Scheme;
 use crate::metrics::QueryMetrics;
+use crate::scheduler::Priority;
 use crate::semantics::Dataset;
 use crate::util::json::Json;
 
@@ -38,6 +39,8 @@ pub struct QueryRequest {
     pub budget: Option<usize>,
     /// Workload seed (defaults to the server's).
     pub seed: Option<u64>,
+    /// Scheduling class (defaults to normal).
+    pub priority: Option<Priority>,
 }
 
 #[derive(Debug, Clone)]
@@ -67,6 +70,10 @@ impl Request {
                     }
                     None => None,
                 };
+                let priority = match j.get("priority").as_str() {
+                    Some(p) => Some(Priority::parse(p)?),
+                    None => None,
+                };
                 Op::Query(QueryRequest {
                     dataset,
                     query_index: j.get("query_index").as_usize().unwrap_or(0),
@@ -76,6 +83,7 @@ impl Request {
                     first_n_base: j.get("first_n_base").as_usize(),
                     budget: j.get("budget").as_usize(),
                     seed: j.get("seed").as_usize().map(|s| s as u64),
+                    priority,
                 })
             }
             other => anyhow::bail!("unknown op '{other}'"),
@@ -145,9 +153,26 @@ mod tests {
                 assert_eq!(q.threshold, Some(5));
                 assert_eq!(q.budget, Some(256));
                 assert_eq!(q.first_n_base, None);
+                assert_eq!(q.priority, None);
             }
             _ => panic!("wrong op"),
         }
+    }
+
+    #[test]
+    fn parses_priority_class() {
+        let r = Request::parse(
+            r#"{"op": "query", "dataset": "aime", "priority": "high"}"#,
+        )
+        .unwrap();
+        match r.op {
+            Op::Query(q) => assert_eq!(q.priority, Some(Priority::High)),
+            _ => panic!("wrong op"),
+        }
+        assert!(Request::parse(
+            r#"{"op": "query", "dataset": "aime", "priority": "urgent"}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,205 +1,123 @@
-//! Request router: bounded admission queue in front of a single engine
-//! worker.
+//! Request router: a thin admission shim over the continuous-batching
+//! [`Scheduler`](crate::scheduler::Scheduler).
 //!
-//! The paper's serving setup executes the two colocated models
-//! sequentially ("the small and base models take turns", §4.1), so one
-//! worker owns the engine and drains a FIFO queue; connection handlers
-//! only parse/serialize.  The queue bound provides backpressure: beyond
-//! `max_queue` outstanding requests, new queries are rejected with an
-//! `overloaded` error rather than growing latency unboundedly.
+//! The router's job shrank to protocol-level concerns: resolve a wire
+//! [`QueryRequest`] against the deployment defaults into a fully-specified
+//! [`JobRequest`], submit it (the scheduler enforces the `max_queue`
+//! backpressure bound, KV-aware admission, batching and preemption), and
+//! render results/stats as JSON.  Connection handlers only parse and
+//! serialize; the engine lives inside the scheduler's composer thread.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::config::DeployConfig;
-use crate::coordinator::{run_query, AcceptancePolicy, Combo, RealBackend, SpecConfig};
-use crate::engine::Engine;
-use crate::semantics::{Oracle, TraceGenerator};
+use crate::coordinator::AcceptancePolicy;
+use crate::scheduler::{JobRequest, JobResult, Scheduler};
 use crate::server::protocol::{metrics_to_json, QueryRequest};
 use crate::util::json::Json;
 
-/// A unit of routed work.
-pub struct RoutedQuery {
-    pub req: QueryRequest,
-    pub reply: mpsc::Sender<Result<Json>>,
-}
-
-/// Router statistics (served over the `stats` op).
-#[derive(Debug, Default, Clone)]
-pub struct RouterStats {
-    pub admitted: u64,
-    pub rejected_overload: u64,
-    pub completed: u64,
-    pub failed: u64,
-    pub queue_depth: usize,
-}
+pub use crate::scheduler::RouterStats;
 
 pub struct Router {
-    tx: Option<mpsc::SyncSender<RoutedQuery>>,
-    stats: Arc<Mutex<RouterStats>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    sched: Scheduler,
+    cfg: DeployConfig,
 }
 
 impl Router {
-    /// Spawn the engine worker. The engine is created *inside* the worker
-    /// thread (it owns the PJRT client for its lifetime).
+    /// Boot the scheduler (which loads the engine on its composer
+    /// thread); startup errors propagate here.
     pub fn start(cfg: DeployConfig) -> Result<Router> {
-        let (tx, rx) = mpsc::sync_channel::<RoutedQuery>(cfg.max_queue);
-        let stats = Arc::new(Mutex::new(RouterStats::default()));
-        let wstats = Arc::clone(&stats);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::Builder::new()
-            .name("specreason-engine".into())
-            .spawn(move || {
-                let engine = match Engine::new(&cfg.engine_config()) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let oracle = Oracle::default();
-                let combo = Combo::new(&cfg.base_model, &cfg.small_model);
-                while let Ok(job) = rx.recv() {
-                    {
-                        let mut s = wstats.lock().unwrap();
-                        s.queue_depth = s.queue_depth.saturating_sub(1);
-                    }
-                    let result = serve_one(&engine, &oracle, &combo, &cfg, &job.req);
-                    {
-                        let mut s = wstats.lock().unwrap();
-                        match &result {
-                            Ok(_) => s.completed += 1,
-                            Err(_) => s.failed += 1,
-                        }
-                    }
-                    let _ = job.reply.send(result);
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine worker died during startup"))??;
-        Ok(Router { tx: Some(tx), stats, worker: Some(worker) })
+        let sched = Scheduler::start(cfg.clone())?;
+        Ok(Router { sched, cfg })
     }
 
-    /// Try to admit a query; `Err` means backpressure.
-    pub fn submit(&self, req: QueryRequest) -> Result<mpsc::Receiver<Result<Json>>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let routed = RoutedQuery { req, reply: reply_tx };
-        match self.tx.as_ref().expect("router shut down").try_send(routed) {
-            Ok(()) => {
-                let mut s = self.stats.lock().unwrap();
-                s.admitted += 1;
-                s.queue_depth += 1;
-                Ok(reply_rx)
-            }
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.stats.lock().unwrap().rejected_overload += 1;
-                anyhow::bail!("overloaded: admission queue full")
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                anyhow::bail!("engine worker is gone")
-            }
+    /// Try to admit a query; `Err` means backpressure (`overloaded`).
+    pub fn submit(&self, req: QueryRequest) -> Result<mpsc::Receiver<Result<JobResult>>> {
+        self.sched.submit(self.resolve(&req))
+    }
+
+    /// Apply per-request overrides onto the deployment defaults.
+    fn resolve(&self, req: &QueryRequest) -> JobRequest {
+        let mut spec = self.cfg.spec_config();
+        if let Some(s) = req.scheme {
+            spec.scheme = s;
+        }
+        if let Some(t) = req.threshold {
+            spec.policy = AcceptancePolicy::Static { threshold: t };
+        }
+        if let Some(n) = req.first_n_base {
+            spec.first_n_base = n;
+        }
+        if let Some(b) = req.budget {
+            spec.token_budget = b;
+        }
+        JobRequest {
+            dataset: req.dataset,
+            query_index: req.query_index,
+            sample: req.sample,
+            seed: req.seed.unwrap_or(0x5EED),
+            spec,
+            priority: req.priority.unwrap_or_default(),
         }
     }
 
     pub fn stats(&self) -> RouterStats {
-        self.stats.lock().unwrap().clone()
+        self.sched.stats()
     }
 
     pub fn stats_json(&self) -> Json {
-        let s = self.stats();
-        Json::obj(vec![
-            ("admitted", Json::num(s.admitted as f64)),
-            ("rejected_overload", Json::num(s.rejected_overload as f64)),
-            ("completed", Json::num(s.completed as f64)),
-            ("failed", Json::num(s.failed as f64)),
-            ("queue_depth", Json::num(s.queue_depth as f64)),
-        ])
+        self.stats().to_json()
     }
 
-    /// Stop the worker: close the queue (in-flight request finishes) and
-    /// join.
-    pub fn shutdown(mut self) {
-        self.close_and_join();
-    }
-
-    fn close_and_join(&mut self) {
-        drop(self.tx.take()); // closes the channel; worker drains and exits
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// Stop the scheduler: queued and in-flight requests finish, then the
+    /// composer thread joins.
+    pub fn shutdown(self) {
+        self.sched.shutdown();
     }
 }
 
-impl Drop for Router {
-    fn drop(&mut self) {
-        self.close_and_join();
-    }
-}
-
-/// Execute one routed query on the engine.
-fn serve_one(
-    engine: &Engine,
-    oracle: &Oracle,
-    combo: &Combo,
-    cfg: &DeployConfig,
-    req: &QueryRequest,
-) -> Result<Json> {
-    let mut spec = cfg.spec_config();
-    if let Some(s) = req.scheme {
-        spec.scheme = s;
-    }
-    if let Some(t) = req.threshold {
-        spec.policy = AcceptancePolicy::Static { threshold: t };
-    }
-    if let Some(n) = req.first_n_base {
-        spec.first_n_base = n;
-    }
-    if let Some(b) = req.budget {
-        spec.token_budget = b;
-    }
-    validate_budget(engine, combo, &spec)?;
-    let seed = req.seed.unwrap_or(0x5EED);
-    let gen = TraceGenerator::new(req.dataset, seed);
-    let q = gen.query(req.query_index);
-    let mut backend = RealBackend::new(engine, &combo.small, &combo.base);
-    let out = run_query(oracle, &q, combo, &spec, &mut backend, req.sample)?;
-    backend.release()?;
-    Ok(metrics_to_json(&out.metrics, spec.scheme))
-}
-
-/// Reject budgets that cannot fit the context window before any compute.
-fn validate_budget(engine: &Engine, combo: &Combo, spec: &SpecConfig) -> Result<()> {
-    let base = engine.model(&combo.base)?;
-    let max_prompt = 160; // generator bound (see DatasetProfile::prompt_len)
-    let need = max_prompt + spec.token_budget + spec.verify_template_len + spec.answer_tokens;
-    anyhow::ensure!(
-        need <= base.arch.max_seq,
-        "token_budget {} does not fit the context window ({} needed > {})",
-        spec.token_budget, need, base.arch.max_seq
-    );
-    Ok(())
+/// Serialize a completed request for the wire: the per-query metrics plus
+/// serving-side telemetry (queue wait, time-to-first-step, preemptions).
+pub fn job_result_to_json(r: &JobResult) -> Json {
+    let mut j = metrics_to_json(&r.metrics, r.scheme);
+    j.set("priority", Json::str(r.priority.name()));
+    j.set("queue_wait_s", Json::num(r.queue_wait_s));
+    j.set("ttfs_s", Json::num(r.ttfs_s));
+    j.set("e2e_s", Json::num(r.e2e_s));
+    j.set("preemptions", Json::num(r.preemptions as f64));
+    j
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Scheme;
+    use crate::metrics::QueryMetrics;
+    use crate::scheduler::Priority;
 
     // Router startup requires artifacts + engine; covered by
-    // rust/tests/server_integration.rs. Here: pure stats plumbing.
+    // rust/tests/server_integration.rs. Here: pure serialization.
     #[test]
-    fn stats_json_shape() {
-        let s = RouterStats { admitted: 3, rejected_overload: 1, completed: 2, failed: 0, queue_depth: 1 };
-        let j = Json::obj(vec![
-            ("admitted", Json::num(s.admitted as f64)),
-            ("queue_depth", Json::num(s.queue_depth as f64)),
-        ]);
-        assert_eq!(j.get("admitted").as_usize(), Some(3));
+    fn job_result_serializes_with_serving_telemetry() {
+        let mut m = QueryMetrics::default();
+        m.answer_correct = true;
+        m.thinking_tokens = 99;
+        let r = JobResult {
+            metrics: m,
+            scheme: Scheme::SpecReason,
+            priority: Priority::High,
+            queue_wait_s: 0.25,
+            ttfs_s: 0.5,
+            e2e_s: 1.5,
+            preemptions: 1,
+        };
+        let j = job_result_to_json(&r);
+        assert_eq!(j.get("scheme").as_str(), Some("spec-reason"));
+        assert_eq!(j.get("thinking_tokens").as_usize(), Some(99));
+        assert_eq!(j.get("priority").as_str(), Some("high"));
+        assert_eq!(j.get("preemptions").as_usize(), Some(1));
+        assert!((j.get("queue_wait_s").as_f64().unwrap() - 0.25).abs() < 1e-12);
     }
 }

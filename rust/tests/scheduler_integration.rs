@@ -1,0 +1,201 @@
+//! Scheduler integration: the continuous-batching scheduler against the
+//! real engine.
+//!
+//! * `max_batch = 1` determinism: per-request deterministic
+//!   `QueryMetrics` (GPU clock, counters, verify scores, correctness)
+//!   bit-identical to the serial `run_query` + `RealBackend` path — the
+//!   pre-scheduler router;
+//! * `max_batch = 8` batch invariance: each request's results are
+//!   independent of its batchmates;
+//! * priority preemption: a high-class arrival evicts a low-class
+//!   in-flight sequence, and both still complete.
+//!
+//! All tests skip (with a notice) when `artifacts/` is absent, like the
+//! AOT-dependent engine tests.
+
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::coordinator::{run_query, Combo, RealBackend};
+use specreason::engine::Engine;
+use specreason::metrics::QueryMetrics;
+use specreason::scheduler::{JobRequest, Priority, Scheduler};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn deploy(max_batch: usize) -> DeployConfig {
+    DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: 96,
+        answer_tokens: 8,
+        max_batch,
+        max_queue: 64,
+        ..Default::default()
+    }
+}
+
+/// Serve `queries` through `run_query` + `RealBackend` — the serial
+/// reference the scheduler must reproduce.
+fn serial_reference(cfg: &DeployConfig, dataset: Dataset, seed: u64, n: usize) -> Vec<QueryMetrics> {
+    let engine = Engine::new(&cfg.engine_config()).expect("engine init");
+    let oracle = Oracle::default();
+    let combo = Combo::new(&cfg.base_model, &cfg.small_model);
+    let spec = cfg.spec_config();
+    let gen = TraceGenerator::new(dataset, seed);
+    (0..n)
+        .map(|i| {
+            let q = gen.query(i);
+            let mut b = RealBackend::new(&engine, &combo.small, &combo.base);
+            let out = run_query(&oracle, &q, &combo, &spec, &mut b, 0).expect("serial run");
+            b.release().expect("release");
+            out.metrics
+        })
+        .collect()
+}
+
+/// Compare every deterministic field of two `QueryMetrics` (wall-clock
+/// fields are measured and excluded by definition).
+fn assert_deterministic_eq(a: &QueryMetrics, b: &QueryMetrics, ctx: &str) {
+    assert_eq!(a.gpu_secs.to_bits(), b.gpu_secs.to_bits(), "{ctx}: gpu_secs");
+    assert_eq!(a.phase_gpu.len(), b.phase_gpu.len(), "{ctx}: phase_gpu keys");
+    for (k, v) in &a.phase_gpu {
+        let w = b.phase_gpu.get(k).unwrap_or_else(|| panic!("{ctx}: missing phase {k}"));
+        assert_eq!(v.to_bits(), w.to_bits(), "{ctx}: phase_gpu[{k}]");
+    }
+    assert_eq!(a.thinking_tokens, b.thinking_tokens, "{ctx}: thinking_tokens");
+    assert_eq!(a.tokens_small_accepted, b.tokens_small_accepted, "{ctx}");
+    assert_eq!(a.tokens_base, b.tokens_base, "{ctx}");
+    assert_eq!(a.steps_total, b.steps_total, "{ctx}");
+    assert_eq!(a.steps_speculated, b.steps_speculated, "{ctx}");
+    assert_eq!(a.steps_accepted, b.steps_accepted, "{ctx}");
+    assert_eq!(a.draft_tokens_proposed, b.draft_tokens_proposed, "{ctx}");
+    assert_eq!(a.draft_tokens_accepted, b.draft_tokens_accepted, "{ctx}");
+    assert_eq!(a.verify_scores, b.verify_scores, "{ctx}: verify_scores");
+    assert_eq!(a.answer_correct, b.answer_correct, "{ctx}: answer_correct");
+}
+
+fn job(cfg: &DeployConfig, dataset: Dataset, seed: u64, index: usize, prio: Priority) -> JobRequest {
+    JobRequest {
+        dataset,
+        query_index: index,
+        sample: 0,
+        seed,
+        spec: cfg.spec_config(),
+        priority: prio,
+    }
+}
+
+#[test]
+fn batch1_is_bit_identical_to_serial_router() {
+    if !have_artifacts() {
+        eprintln!("skipping batch1_is_bit_identical_to_serial_router: no artifacts/");
+        return;
+    }
+    let cfg = deploy(1);
+    let n = 3;
+    let seed = 0x5EED;
+    let serial = serial_reference(&cfg, Dataset::Math500, seed, n);
+
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let rxs: Vec<_> = (0..n)
+        .map(|i| sched.submit(job(&cfg, Dataset::Math500, seed, i, Priority::Normal)).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv_timeout(Duration::from_secs(300))
+            .expect("reply dropped")
+            .expect("query failed");
+        assert_deterministic_eq(&res.metrics, &serial[i], &format!("query {i}"));
+        assert_eq!(res.preemptions, 0);
+    }
+    let s = sched.stats();
+    assert_eq!(s.completed, n as u64);
+    // max_batch = 1 ⇒ every composed step advanced exactly one sequence.
+    assert_eq!(s.stepped_seqs, s.batch_ticks);
+    sched.shutdown();
+}
+
+#[test]
+fn batch8_results_match_serial_per_request() {
+    if !have_artifacts() {
+        eprintln!("skipping batch8_results_match_serial_per_request: no artifacts/");
+        return;
+    }
+    let cfg = deploy(8);
+    let n = 8;
+    let seed = 0xBA7C;
+    let serial = serial_reference(&cfg, Dataset::Math500, seed, n);
+
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    // Submit the whole batch up front so the composer interleaves all 8.
+    let rxs: Vec<_> = (0..n)
+        .map(|i| sched.submit(job(&cfg, Dataset::Math500, seed, i, Priority::Normal)).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv_timeout(Duration::from_secs(300))
+            .expect("reply dropped")
+            .expect("query failed");
+        assert_deterministic_eq(&res.metrics, &serial[i], &format!("query {i}"));
+    }
+    let s = sched.stats();
+    assert_eq!(s.completed, n as u64);
+    assert!(
+        s.mean_batch_occupancy() > 1.5,
+        "batch=8 with 8 concurrent requests should compose multi-sequence steps (got {:.2})",
+        s.mean_batch_occupancy()
+    );
+    sched.shutdown();
+}
+
+#[test]
+fn high_priority_preempts_low_priority_in_flight() {
+    if !have_artifacts() {
+        eprintln!("skipping high_priority_preempts_low_priority_in_flight: no artifacts/");
+        return;
+    }
+    // One batch slot, so the high request can only run by evicting.
+    let mut cfg = deploy(1);
+    cfg.token_budget = 256; // keep the low-priority job busy for a while
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+
+    let rx_low = sched
+        .submit(job(&cfg, Dataset::Aime, 0x10, 0, Priority::Low))
+        .unwrap();
+    // Wait until the low job is actually in flight.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let s = sched.stats();
+        if s.running >= 1 && s.queue_depth == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "low-priority job never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let rx_high = sched
+        .submit(job(&cfg, Dataset::Math500, 0x11, 1, Priority::High))
+        .unwrap();
+    let high = rx_high
+        .recv_timeout(Duration::from_secs(300))
+        .expect("high reply dropped")
+        .expect("high query failed");
+    let low = rx_low
+        .recv_timeout(Duration::from_secs(300))
+        .expect("low reply dropped")
+        .expect("low query failed");
+
+    let s = sched.stats();
+    assert!(s.preempted >= 1, "the low job should have been evicted at least once");
+    assert!(low.preemptions >= 1, "low job must report its preemption");
+    assert_eq!(high.preemptions, 0);
+    assert_eq!(s.completed, 2);
+    // The preempted restart is result-transparent: same deterministic
+    // metrics as an undisturbed serial run.
+    let serial = serial_reference(&cfg, Dataset::Aime, 0x10, 1);
+    assert_deterministic_eq(&low.metrics, &serial[0], "preempted low query");
+    sched.shutdown();
+}

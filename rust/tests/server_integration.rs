@@ -7,8 +7,13 @@ use std::thread;
 use std::time::Duration;
 
 use specreason::config::DeployConfig;
-use specreason::server::{Client, Server};
+use specreason::server::protocol::QueryRequest;
+use specreason::server::{Client, Router, Server};
 use specreason::util::json::Json;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
 
 fn boot() -> (String, thread::JoinHandle<()>) {
     let cfg = DeployConfig {
@@ -119,4 +124,75 @@ fn concurrent_clients_are_serialized_by_the_router() {
     assert_eq!(s.get("completed").as_usize(), Some(n_clients));
     c.call(Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
     handle.join().unwrap();
+}
+
+/// Fill the admission queue past `max_queue` and check the overload
+/// path: the `overloaded` error plus the stats counters.
+#[test]
+fn overload_rejects_past_max_queue() {
+    if !have_artifacts() {
+        eprintln!("skipping overload_rejects_past_max_queue: no artifacts/ (run the AOT compile first)");
+        return;
+    }
+    let cfg = DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: 128,
+        answer_tokens: 8,
+        max_queue: 1,
+        max_batch: 1,
+        ..Default::default()
+    };
+    let router = Router::start(cfg).expect("router start");
+
+    // Burst submissions without awaiting replies: with one batch slot and
+    // a one-deep queue, the composer cannot drain a burst of 8 before the
+    // later submissions arrive, so some must bounce with `overloaded`.
+    let n_burst = 8usize;
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..n_burst {
+        let req = QueryRequest {
+            dataset: specreason::semantics::Dataset::Math500,
+            query_index: i,
+            sample: 0,
+            scheme: None,
+            threshold: None,
+            first_n_base: None,
+            budget: Some(96),
+            seed: None,
+            priority: None,
+        };
+        match router.submit(req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                assert!(
+                    format!("{e:#}").contains("overloaded"),
+                    "unexpected submit error: {e:#}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected >= 1, "burst of {n_burst} into max_queue=1 must overload");
+    let admitted = pending.len();
+    assert_eq!(admitted + rejected, n_burst);
+
+    // Stats reflect the rejections immediately...
+    let s = router.stats();
+    assert_eq!(s.rejected_overload, rejected as u64);
+    assert_eq!(s.admitted, admitted as u64);
+
+    // ...and the admitted requests all complete.
+    for rx in pending {
+        let result = rx
+            .recv_timeout(Duration::from_secs(300))
+            .expect("scheduler dropped a reply")
+            .expect("admitted query failed");
+        assert!(result.metrics.steps_total > 0);
+    }
+    let s = router.stats();
+    assert_eq!(s.completed, admitted as u64);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.queue_depth, 0);
+    router.shutdown();
 }
