@@ -16,19 +16,16 @@
 use std::time::Instant;
 
 use specreason::coordinator::{AcceptancePolicy, Scheme, SpecConfig};
-use specreason::engine::{Engine, EngineConfig};
-use specreason::eval::{bench_real, bench_threads, run_cell_bench, main_combos, Cell, Sweep};
+use specreason::engine::EngineConfig;
+use specreason::eval::{
+    bench_real, bench_threads, engine_count, run_cell_bench, main_combos, Cell, Sweep,
+};
+use specreason::exec::EnginePool;
 use specreason::semantics::{Dataset, Oracle};
 use specreason::util::bench::{bench, BenchConfig, Table};
 
 fn main() {
     let oracle = Oracle::default();
-    let engine = if bench_real() {
-        eprintln!("[fig3] loading real engine (qwq-sim + r1-sim)...");
-        Some(Engine::new(&EngineConfig::default()).expect("engine"))
-    } else {
-        None
-    };
     let combos = if bench_real() {
         vec![main_combos()[0].clone()]
     } else {
@@ -54,6 +51,15 @@ fn main() {
             }
         }
     }
+    // Engines load only after the grid is planned — `engine_count` caps
+    // by worker count, work items, and SPECREASON_BENCH_ENGINES.
+    let engines = if bench_real() {
+        let n = specreason::exec::or_exit(engine_count(bench_threads(), sweep.len()));
+        eprintln!("[fig3] loading {n} real engine(s) (qwq-sim + r1-sim)...");
+        Some(EnginePool::new(&EngineConfig::default(), n).expect("engine pool"))
+    } else {
+        None
+    };
     eprintln!(
         "[fig3] sweeping {} cells / {} work items on {} threads",
         sweep.cells().len(),
@@ -61,7 +67,7 @@ fn main() {
         bench_threads()
     );
     let t0 = Instant::now();
-    let results = sweep.run_bench(&oracle, engine.as_ref()).expect("sweep");
+    let results = sweep.run_bench(&oracle, engines.as_ref()).expect("sweep");
     eprintln!("[fig3] grid done in {:.2}s", t0.elapsed().as_secs_f64());
 
     let mut idx = 0;

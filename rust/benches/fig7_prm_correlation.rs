@@ -7,9 +7,7 @@
 //! shared sweep pool and folds results back in query order
 //! (deterministic at any thread count).
 
-use std::sync::Arc;
-
-use specreason::eval::{bench_threads, shared_pool};
+use specreason::eval::bench_threads;
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::util::bench::{bench, BenchConfig, Table};
 use specreason::util::stats::{pearson, Histogram};
@@ -20,23 +18,23 @@ fn main() {
     let n_queries = specreason::eval::bench_queries().max(40);
 
     eprintln!("[fig7] scoring {n_queries} queries on {} threads", bench_threads());
-    let shared_oracle = Arc::new(oracle.clone());
-    let per_query: Vec<Vec<(f64, f64)>> = shared_pool()
-        .map((0..n_queries).collect::<Vec<usize>>(), move |_, qi| {
+    // The process-wide executor's map needs no 'static: the oracle is
+    // borrowed straight from the stack (no Arc clone).
+    let per_query: Vec<Vec<(f64, f64)>> = specreason::exec::global()
+        .map((0..n_queries).collect::<Vec<usize>>(), |_, qi| {
             // Queries regenerate deterministically from (dataset, seed,
             // index); scoring is pure per (query, step).
             let q = TraceGenerator::new(Dataset::Aime, 1234).query(qi);
             (0..q.plan_len())
                 .map(|step| {
                     // The speculated steps come from the small model (§5.4).
-                    let quality = shared_oracle.step_quality(&q, step, 0, "r1-sim");
-                    let p = shared_oracle.prm_score(&q, step, 0, quality);
-                    let u = shared_oracle.verifier_score(&q, step, 0, quality, "qwq-sim");
+                    let quality = oracle.step_quality(&q, step, 0, "r1-sim");
+                    let p = oracle.prm_score(&q, step, 0, quality);
+                    let u = oracle.verifier_score(&q, step, 0, quality, "qwq-sim");
                     (p, u as f64)
                 })
                 .collect()
-        })
-        .expect("sweep pool");
+        });
 
     let mut hist = Histogram::new(0.0, 1.0, 10);
     let mut prm = Vec::new();

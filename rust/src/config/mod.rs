@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{AcceptancePolicy, Scheme, SpecConfig};
 use crate::engine::EngineConfig;
+use crate::exec::{ExecConfig, PinPolicy};
 use crate::metrics::Testbed;
 use crate::util::json::Json;
 
@@ -46,6 +47,12 @@ pub struct DeployConfig {
     /// End-to-end latency SLO in milliseconds (0 disables the counter);
     /// completions slower than this increment `slo_violations`.
     pub slo_ms: u64,
+    /// Process-wide executor sizing/placement: `threads` (JSON) or
+    /// `--threads` (CLI, env-backed by `SPECREASON_BENCH_THREADS`) and
+    /// `pin` (`"floating"|"pinned"`) govern the one worker substrate
+    /// that serving (connection handlers + batched engine passes) and
+    /// eval sweeps share.
+    pub exec: ExecConfig,
 }
 
 impl Default for DeployConfig {
@@ -71,6 +78,7 @@ impl Default for DeployConfig {
             max_batch: 1,
             preempt: true,
             slo_ms: 0,
+            exec: ExecConfig::default(),
         }
     }
 }
@@ -145,6 +153,12 @@ impl DeployConfig {
         if let Some(v) = j.get("slo_ms").as_usize() {
             c.slo_ms = v as u64;
         }
+        if let Some(v) = j.get("threads").as_usize() {
+            c.exec.workers = Some(v);
+        }
+        if let Some(v) = j.get("pin").as_str() {
+            c.exec.pin = PinPolicy::parse(v)?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -157,6 +171,11 @@ impl DeployConfig {
             "base and small model must differ"
         );
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(
+            self.exec.workers != Some(0),
+            "threads must be >= 1 (omit it for auto: SPECREASON_BENCH_THREADS or \
+             available parallelism)"
+        );
         Ok(())
     }
 
@@ -230,6 +249,21 @@ mod tests {
         assert_eq!(c.slo_ms, 30000);
         assert_eq!(c.max_queue, 128);
         assert!(DeployConfig::from_json_str(r#"{"max_batch": 0}"#).is_err());
+    }
+
+    #[test]
+    fn parses_exec_knobs() {
+        let c = DeployConfig::from_json_str(r#"{"threads": 6, "pin": "pinned"}"#).unwrap();
+        assert_eq!(c.exec.workers, Some(6));
+        assert_eq!(c.exec.pin, PinPolicy::Pinned);
+        // Default: auto-sized, floating.
+        let d = DeployConfig::default();
+        assert_eq!(d.exec.workers, None);
+        assert_eq!(d.exec.pin, PinPolicy::Floating);
+        // threads=0 is a hard error, not a silent fallback.
+        let err = DeployConfig::from_json_str(r#"{"threads": 0}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("threads must be >= 1"));
+        assert!(DeployConfig::from_json_str(r#"{"pin": "warp"}"#).is_err());
     }
 
     #[test]

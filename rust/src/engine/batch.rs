@@ -9,28 +9,30 @@
 //!
 //! Each request operates on its own [`Sequence`] (own KV views, own
 //! metrics), so requests are mutually independent; the batch fans them
-//! across scoped threads onto the internally-synchronized PJRT client
-//! (see the `Send`/`Sync` notes in mod.rs).  A batch of one executes
-//! inline on the calling thread — the `max_batch = 1` serving mode is
-//! therefore *exactly* the serial path, which is what makes its
-//! `QueryMetrics` bit-identical to the pre-scheduler router.
-//!
-//! Threads are spawned per batch (µs-scale) rather than kept in a
-//! persistent pool: every request is at least one PJRT executable
-//! dispatch (ms-scale), so spawn overhead is noise today.  A pinned
-//! scoped worker pool is tracked as a ROADMAP follow-on for when the
-//! per-op cost shrinks.
+//! across the process-wide work-stealing executor's **pinned workers**
+//! via the scoped API ([`Executor::scoped_map`](crate::exec::Executor)),
+//! onto the internally-synchronized PJRT client (see the `Send`/`Sync`
+//! notes in mod.rs).  No threads are spawned per pass anymore — the old
+//! scoped-spawn path paid a thread spawn+join per request per step; the
+//! pinned pool pays one striped deque push (see `microbench_executor`
+//! for the measured difference).  A batch of one executes inline on the
+//! calling thread — the `max_batch = 1` serving mode is therefore
+//! *exactly* the serial path, which is what makes its `QueryMetrics`
+//! bit-identical to the pre-scheduler router.
 //!
 //! Results come back per-request (a failed request — e.g. a context
-//! overflow — does not poison its batchmates) and in request order.
-//! Because every engine op is deterministic given its seed and sequence
-//! state, a request's result is independent of which batch it rode in.
+//! overflow, or even a panic, which is caught per item and surfaced as
+//! that request's `Err` with the payload message — does not poison its
+//! batchmates) and in request order.  Because every engine op is
+//! deterministic given its seed and sequence state, a request's result
+//! is independent of which batch (and which worker) it rode in.
 
-use std::thread;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use anyhow::{anyhow, Result};
 
 use super::{Engine, Sequence};
+use crate::exec::panic_message;
 use crate::metrics::{Phase, QueryMetrics};
 
 /// One sequence's slot in a batched decode pass.
@@ -66,29 +68,46 @@ fn verify_one(engine: &Engine, r: &mut BatchVerify<'_>) -> Result<Option<Vec<f32
     }
 }
 
+/// Run one request's op under per-request panic isolation: a panic
+/// becomes that slot's `Err` (payload message included) instead of
+/// unwinding through the composer and poisoning batchmates.
+fn isolated<R>(what: &str, f: impl FnOnce() -> Result<R>) -> Result<R> {
+    catch_unwind(AssertUnwindSafe(f)).unwrap_or_else(|payload| {
+        Err(anyhow!("{what} worker panicked: {}", panic_message(payload.as_ref())))
+    })
+}
+
+/// The batch executor, or per-request errors when the process-wide pool
+/// cannot be built (e.g. an invalid `SPECREASON_BENCH_THREADS` in an
+/// embedder's environment) — a config error must reach the requests'
+/// reply channels, never abort the host process.
+fn batch_executor<R>(n: usize) -> std::result::Result<std::sync::Arc<crate::exec::Executor>, Vec<Result<R>>> {
+    crate::exec::try_global().map_err(|e| {
+        (0..n)
+            .map(|_| Err(anyhow!("batch executor unavailable: {e:#}")))
+            .collect()
+    })
+}
+
 impl Engine {
     /// Decode one step for up to `max_batch` sequences in a single
     /// batched pass.  Returns per-request results in request order.
     pub fn decode_batch(&self, mut reqs: Vec<BatchDecode<'_>>) -> Vec<Result<Vec<i32>>> {
         if reqs.len() <= 1 {
-            // Inline: the serial path, no thread overhead.
+            // Inline: the serial path, no executor involvement.
             return reqs
                 .iter_mut()
                 .map(|r| self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm))
                 .collect();
         }
-        thread::scope(|s| {
-            let handles: Vec<_> = reqs
-                .iter_mut()
-                .map(|r| s.spawn(move || self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(anyhow!("decode_batch worker panicked")))
-                })
-                .collect()
+        let exec = match batch_executor(reqs.len()) {
+            Ok(exec) => exec,
+            Err(errs) => return errs,
+        };
+        exec.scoped_map("engine:decode_batch", reqs, |_, mut r| {
+            isolated("decode_batch", || {
+                self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm)
+            })
         })
     }
 
@@ -102,18 +121,12 @@ impl Engine {
         if reqs.len() <= 1 {
             return reqs.iter_mut().map(|r| verify_one(self, r)).collect();
         }
-        thread::scope(|s| {
-            let handles: Vec<_> = reqs
-                .iter_mut()
-                .map(|r| s.spawn(move || verify_one(self, r)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(anyhow!("scored_prefill_batch worker panicked")))
-                })
-                .collect()
+        let exec = match batch_executor(reqs.len()) {
+            Ok(exec) => exec,
+            Err(errs) => return errs,
+        };
+        exec.scoped_map("engine:verify_batch", reqs, |_, mut r| {
+            isolated("scored_prefill_batch", || verify_one(self, &mut r))
         })
     }
 }

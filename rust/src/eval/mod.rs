@@ -13,10 +13,11 @@ use anyhow::Result;
 
 use crate::coordinator::{Combo, QueryOutcome, Scheme, SpecConfig};
 use crate::engine::Engine;
+use crate::exec::EnginePool;
 use crate::metrics::{Aggregate, Testbed};
 use crate::semantics::{Dataset, ModelClass, Oracle};
 
-pub use sweep::{bench_threads, shared_pool, Sweep, WorkItem};
+pub use sweep::{bench_threads, chunk_plan, Sweep, WorkItem};
 
 /// One evaluation cell.
 #[derive(Debug, Clone)]
@@ -134,20 +135,38 @@ pub fn bench_real() -> bool {
     std::env::var("SPECREASON_BENCH_REAL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Explicit engine-count override for real-path sweeps
+/// (`SPECREASON_BENCH_ENGINES`, the per-engine-memory cap), if set.
+/// [`crate::exec::env_positive`] semantics: an invalid value (0 or
+/// garbage) is an `Err`, not a silent fallback — a typo'd memory cap
+/// must not quietly load one engine per core.  Binary entry points
+/// surface the error via [`crate::exec::or_exit`].
+pub fn env_engines() -> Result<Option<usize>> {
+    crate::exec::env_positive("SPECREASON_BENCH_ENGINES", "one engine per sweep worker")
+}
+
+/// Engine count for a real-path (`SPECREASON_BENCH_REAL=1`) sweep: one
+/// engine per worker, never more than the work items (extra engines
+/// could never be leased; each carries a full KV partition) nor the
+/// `SPECREASON_BENCH_ENGINES` memory cap.  The single home of the
+/// capping policy — `specreason run` and the fig benches both call it.
+pub fn engine_count(threads: usize, work_items: usize) -> Result<usize> {
+    Ok(threads
+        .min(work_items.max(1))
+        .min(env_engines()?.unwrap_or(usize::MAX)))
+}
+
 /// Run a cell honoring the bench env (sim by default, real with
-/// SPECREASON_BENCH_REAL=1 and a caller-provided engine loader).
+/// SPECREASON_BENCH_REAL=1 and a caller-provided engine pool).
 pub fn run_cell_bench(
     oracle: &Oracle,
     cell: &Cell,
-    engine: Option<&Engine>,
+    engines: Option<&EnginePool>,
     seed: u64,
 ) -> Result<CellResult> {
-    match engine {
-        Some(e) if bench_real() => {
-            run_cell_real(e, oracle, cell, bench_queries(), bench_samples(), seed)
-        }
-        _ => run_cell_sim(oracle, cell, bench_queries(), bench_samples(), seed),
-    }
+    let mut sw = Sweep::new(bench_queries(), bench_samples(), seed);
+    sw.cell(cell.clone());
+    Ok(sw.run_bench(oracle, engines)?.remove(0))
 }
 
 /// The four main-results model combinations (§5.1).

@@ -1,32 +1,43 @@
 //! Parallel sweep engine: fan (cell × query × sample) evaluation across
-//! the shared thread pool with deterministic merging.
+//! the process-wide work-stealing executor with deterministic merging.
 //!
 //! The paper's headline figures are all produced by sweeping
 //! scheme × dataset × combo × threshold grids, and every (query, sample)
 //! unit inside a grid is independent: [`run_query`] is a pure function of
 //! (oracle, query seed, sample), so the grid is embarrassingly parallel.
-//! A [`Sweep`] expands its cells into [`WorkItem`]s, executes them across
-//! the process-wide [`ThreadPool`] (thread count from
-//! `SPECREASON_BENCH_THREADS`, default = available parallelism), and
-//! folds the per-item outcomes back **in plan order**, so the merged
-//! [`Aggregate`]s are bit-identical to a sequential run at any thread
-//! count — `run_sim_seq` exists precisely so tests can assert that.
+//! A [`Sweep`] expands its cells into [`WorkItem`]s, executes them as
+//! **adaptively-sized chunks** on the shared [`Executor`] (worker count
+//! from `SPECREASON_BENCH_THREADS` / `--threads`, default = available
+//! parallelism), and folds the per-item outcomes back **in plan order**,
+//! so the merged [`Aggregate`]s are bit-identical to a sequential run at
+//! any worker count and under any steal order — `run_sim_seq` exists
+//! precisely so tests can assert that.
 //!
-//! The real-engine path reuses the same planner and merge code but
-//! executes items sequentially: the paper's deployment serializes the two
-//! colocated models on shared GPUs, so there is no intra-engine
-//! parallelism to exploit (batched server scheduling is tracked as a
-//! ROADMAP follow-on).
+//! Chunking is *guided* rather than static: head chunks are large
+//! (amortizing dispatch over many `run_query` calls) and shrink
+//! geometrically toward per-item tail chunks, so a long-tailed final
+//! cell (AIME plans) spreads across workers via stealing instead of
+//! straggling on whichever worker drew the last fat chunk.
+//!
+//! The real-engine path reuses the same planner, chunker and merge code
+//! over an [`EnginePool`] (one engine per worker, round-robin lease):
+//! each chunk leases an engine for its duration, each engine serializes
+//! its own colocated model pair exactly like the paper's deployment, and
+//! the deterministic (GPU-clock) metrics stay bit-identical at any pool
+//! size.  [`Sweep::run_real`] with a single engine remains the serial
+//! reference.
 
-use std::sync::{Arc, Mutex};
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::{run_query, QueryOutcome, RealBackend, SimBackend};
 use crate::engine::Engine;
+use crate::exec::{EnginePool, Executor};
 use crate::metrics::{Aggregate, GpuClock};
 use crate::semantics::{ModelClass, Oracle, Query};
-use crate::util::threadpool::ThreadPool;
 
 use super::{
     arch_name, bench_queries, bench_real, bench_samples, label, testbed_for, Cell, CellResult,
@@ -109,88 +120,138 @@ impl Sweep {
         items
     }
 
-    /// Run on the simulator across the shared pool (default thread count).
+    /// Run on the simulator across the process-wide executor.
     pub fn run_sim(&self, oracle: &Oracle) -> Result<Vec<CellResult>> {
-        self.run_sim_on_pool(oracle, &shared_pool())
+        self.run_sim_exec(oracle, &crate::exec::try_global()?)
     }
 
-    /// Run on the simulator across a dedicated pool of `threads` workers
-    /// (`0` = the shared pool at the default thread count).
+    /// Run on the simulator across a dedicated executor of `threads`
+    /// workers (`0` = the shared executor at the default worker count).
     pub fn run_sim_threads(&self, oracle: &Oracle, threads: usize) -> Result<Vec<CellResult>> {
         if threads == 0 {
             return self.run_sim(oracle);
         }
-        self.run_sim_on_pool(oracle, &ThreadPool::new(threads))
+        self.run_sim_exec(oracle, &Executor::new(threads))
     }
 
     /// Pure-sequential reference path: a plain loop over the plan with no
-    /// pool involved. The parallel paths must match this bit-for-bit.
+    /// executor involved. The parallel paths must match this bit-for-bit.
     pub fn run_sim_seq(&self, oracle: &Oracle) -> Result<Vec<CellResult>> {
         let outs = run_items_sim(oracle, &self.cells, self.seed, &self.plan())?;
         Ok(self.collect(outs))
     }
 
-    fn run_sim_on_pool(&self, oracle: &Oracle, pool: &ThreadPool) -> Result<Vec<CellResult>> {
+    /// Run on the simulator across an explicit executor (the
+    /// determinism suites drive this with adversarial steal orders).
+    pub fn run_sim_exec(&self, oracle: &Oracle, exec: &Executor) -> Result<Vec<CellResult>> {
         let items = self.plan();
         if items.is_empty() {
             return Ok(self.collect(Vec::new()));
         }
-        // Chunk items so per-job channel overhead amortizes over many
-        // run_query calls while keeping enough chunks for load balance.
-        let per_chunk = chunk_size(items.len(), pool.size());
-        let chunks: Vec<Vec<WorkItem>> = items.chunks(per_chunk).map(|c| c.to_vec()).collect();
-        let ctx = Arc::new(SimCtx {
-            oracle: oracle.clone(),
-            cells: self.cells.clone(),
-            seed: self.seed,
-        });
-        let results = pool
-            .map(chunks, move |_, chunk: Vec<WorkItem>| {
-                run_items_sim(&ctx.oracle, &ctx.cells, ctx.seed, &chunk)
-            })
-            .map_err(|e| anyhow::anyhow!("sweep pool unavailable: {e}"))?;
-        // map() returned chunk results in submission order; flatten back
-        // into plan order (first error in plan order wins).
+        let chunks = chunk_plan(items.len(), exec.workers());
+        // Borrowed context — scoped_map needs no 'static, no Arc, no
+        // clone of the cells.
+        let results: Vec<Result<Vec<QueryOutcome>>> =
+            exec.scoped_map("sweep:sim", chunks, |_, range: Range<usize>| {
+                run_items_sim(oracle, &self.cells, self.seed, &items[range])
+            });
+        self.flatten(results)
+    }
+
+    /// Run on the real engine (must have every cell's models loaded).
+    /// Items execute sequentially — one engine serializes its colocated
+    /// models — but planning and merging are the same code as the
+    /// parallel paths; this is the serial reference for
+    /// [`Sweep::run_real_pool`].
+    pub fn run_real(&self, engine: &Engine, oracle: &Oracle) -> Result<Vec<CellResult>> {
+        let outs = run_items_real(engine, oracle, &self.cells, self.seed, &self.plan())?;
+        Ok(self.collect(outs))
+    }
+
+    /// Run on an [`EnginePool`]: engine-count-bounded *puller* jobs fan
+    /// across the executor, each leasing one pool engine for the whole
+    /// sweep and pulling adaptive chunks off a shared cursor, so
+    /// `SPECREASON_BENCH_REAL=1` sweeps finally scale with cores while
+    /// no executor worker ever parks inside a lease wait (with
+    /// `SPECREASON_BENCH_ENGINES=1` on a 16-worker pool, exactly one
+    /// worker is busy).  Deterministic (GPU-clock) metrics are
+    /// bit-identical to [`Sweep::run_real`] — chunk outcomes are merged
+    /// by chunk index, never by completion order; only measured
+    /// wall-clock differs.
+    pub fn run_real_pool(&self, pool: &EnginePool, oracle: &Oracle) -> Result<Vec<CellResult>> {
+        let items = self.plan();
+        if items.is_empty() {
+            return Ok(self.collect(Vec::new()));
+        }
+        if pool.size() == 1 {
+            let engine = pool.lease();
+            let outs = run_items_real(&engine, oracle, &self.cells, self.seed, &items)?;
+            return Ok(self.collect(outs));
+        }
+        let exec = crate::exec::try_global()?;
+        let n_pullers = pool.size().min(exec.workers()).max(1);
+        let chunks = chunk_plan(items.len(), n_pullers);
+        let cursor = AtomicUsize::new(0);
+        // Early abort, like the serial `?` in run_real: once any chunk
+        // errors, pullers stop claiming new chunks instead of burning
+        // the rest of the grid's engine time.
+        let failed = std::sync::atomic::AtomicBool::new(false);
+        let per_puller: Vec<Vec<(usize, Result<Vec<QueryOutcome>>)>> = exec.scoped_map(
+            "sweep:real",
+            (0..n_pullers).collect::<Vec<usize>>(),
+            |_, _puller| {
+                let engine = pool.lease();
+                let mut done = Vec::new();
+                while !failed.load(Ordering::Relaxed) {
+                    let c = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(range) = chunks.get(c) else { break };
+                    let outs = run_items_real(
+                        &engine,
+                        oracle,
+                        &self.cells,
+                        self.seed,
+                        &items[range.clone()],
+                    );
+                    if outs.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    done.push((c, outs));
+                }
+                done
+            },
+        );
+        // Re-establish plan order by chunk index before merging.  The
+        // cursor hands indices out contiguously, so claimed chunks form
+        // a prefix; unclaimed slots (possible only after an abort, i.e.
+        // past the erroring chunk) are dropped — flatten surfaces the
+        // first error in plan order before it could ever reach them.
+        let mut by_chunk: Vec<Option<Result<Vec<QueryOutcome>>>> =
+            (0..chunks.len()).map(|_| None).collect();
+        for (c, outs) in per_puller.into_iter().flatten() {
+            by_chunk[c] = Some(outs);
+        }
+        let results: Vec<Result<Vec<QueryOutcome>>> =
+            by_chunk.into_iter().map_while(|slot| slot).collect();
+        self.flatten(results)
+    }
+
+    /// Honor the bench env: simulator by default, real engines with
+    /// `SPECREASON_BENCH_REAL=1` and a caller-provided engine pool.
+    pub fn run_bench(&self, oracle: &Oracle, engines: Option<&EnginePool>) -> Result<Vec<CellResult>> {
+        match engines {
+            Some(pool) if bench_real() => self.run_real_pool(pool, oracle),
+            _ => self.run_sim(oracle),
+        }
+    }
+
+    /// Flatten per-chunk outcome runs back into plan order (first error
+    /// in plan order wins) and fold into per-cell results.
+    fn flatten(&self, results: Vec<Result<Vec<QueryOutcome>>>) -> Result<Vec<CellResult>> {
         let mut outs = Vec::with_capacity(self.len());
         for chunk in results {
             outs.extend(chunk?);
         }
         Ok(self.collect(outs))
-    }
-
-    /// Run on the real engine (must have every cell's models loaded).
-    /// Items execute sequentially — the engine serializes the colocated
-    /// models on the (simulated) GPUs — but planning and merging are the
-    /// same code as the parallel path.
-    pub fn run_real(&self, engine: &Engine, oracle: &Oracle) -> Result<Vec<CellResult>> {
-        let mut outs = Vec::with_capacity(self.len());
-        let mut cached: Option<(usize, usize, Arc<Query>)> = None;
-        for item in self.plan() {
-            let cell = &self.cells[item.cell_id];
-            let stale = match &cached {
-                Some((c, qi, _)) => *c != item.cell_id || *qi != item.query_idx,
-                None => true,
-            };
-            if stale {
-                let q = super::qcache::cached_query(cell.dataset, self.seed, item.query_idx);
-                cached = Some((item.cell_id, item.query_idx, q));
-            }
-            let q: &Query = &cached.as_ref().expect("query cached").2;
-            let mut b = RealBackend::new(engine, &cell.combo.small, &cell.combo.base);
-            let out = run_query(oracle, q, &cell.combo, &cell.cfg, &mut b, item.sample)?;
-            b.release()?;
-            outs.push(out);
-        }
-        Ok(self.collect(outs))
-    }
-
-    /// Honor the bench env: simulator by default, real engine with
-    /// `SPECREASON_BENCH_REAL=1` and a caller-provided engine.
-    pub fn run_bench(&self, oracle: &Oracle, engine: Option<&Engine>) -> Result<Vec<CellResult>> {
-        match engine {
-            Some(e) if bench_real() => self.run_real(e, oracle),
-            _ => self.run_sim(oracle),
-        }
     }
 
     /// Fold per-item outcomes (in plan order) into per-cell results.
@@ -213,12 +274,6 @@ impl Sweep {
             })
             .collect()
     }
-}
-
-struct SimCtx {
-    oracle: Oracle,
-    cells: Vec<Cell>,
-    seed: u64,
 }
 
 /// Execute a run of work items on the simulator. Pure in (oracle, cells,
@@ -259,43 +314,70 @@ fn run_items_sim(
     Ok(outs)
 }
 
-fn chunk_size(items: usize, workers: usize) -> usize {
-    // ~8 chunks per worker balances channel overhead against stragglers.
-    let target_chunks = workers.max(1) * 8;
-    ((items + target_chunks - 1) / target_chunks).max(1)
-}
-
-/// Worker count for eval sweeps: `SPECREASON_BENCH_THREADS` if set (> 0),
-/// else the machine's available parallelism.
-pub fn bench_threads() -> usize {
-    std::env::var("SPECREASON_BENCH_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
-}
-
-static SHARED: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
-
-/// The process-wide sweep pool, created on first use with
-/// [`bench_threads`] workers and shared by every sweep (and any other
-/// caller that wants parallel helpers, e.g. the fig7 scoring loop).
-pub fn shared_pool() -> Arc<ThreadPool> {
-    let mut guard = SHARED.lock().unwrap();
-    if let Some(pool) = guard.as_ref() {
-        return Arc::clone(pool);
+/// Execute a run of work items on one (leased) engine — the real-path
+/// twin of [`run_items_sim`], shared by the serial reference and every
+/// pool chunk.  Deterministic metrics depend only on (query seed,
+/// sample), never on which engine ran the item.
+fn run_items_real(
+    engine: &Engine,
+    oracle: &Oracle,
+    cells: &[Cell],
+    seed: u64,
+    items: &[WorkItem],
+) -> Result<Vec<QueryOutcome>> {
+    let mut outs = Vec::with_capacity(items.len());
+    let mut cached: Option<(usize, usize, Arc<Query>)> = None;
+    for item in items {
+        let cell = &cells[item.cell_id];
+        let stale = match &cached {
+            Some((c, qi, _)) => *c != item.cell_id || *qi != item.query_idx,
+            None => true,
+        };
+        if stale {
+            let q = super::qcache::cached_query(cell.dataset, seed, item.query_idx);
+            cached = Some((item.cell_id, item.query_idx, q));
+        }
+        let q: &Query = &cached.as_ref().expect("query cached").2;
+        let mut b = RealBackend::new(engine, &cell.combo.small, &cell.combo.base);
+        let out = run_query(oracle, q, &cell.combo, &cell.cfg, &mut b, item.sample)?;
+        b.release()?;
+        outs.push(out);
     }
-    let pool = Arc::new(ThreadPool::new(bench_threads()));
-    *guard = Some(Arc::clone(&pool));
-    pool
+    Ok(outs)
+}
+
+/// Guided chunk plan over `total` items for `workers` workers: each
+/// chunk takes `ceil(remaining / (2 * workers))` items (never fewer than
+/// one), so chunks shrink geometrically toward per-item granularity at
+/// the tail.  Pure in (total, workers) — chunk boundaries, and therefore
+/// the merge, are independent of execution order.
+pub fn chunk_plan(total: usize, workers: usize) -> Vec<Range<usize>> {
+    let w = workers.max(1);
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start < total {
+        let remaining = total - start;
+        let len = remaining.div_ceil(2 * w).max(1);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Worker count for eval sweeps: `SPECREASON_BENCH_THREADS` if set
+/// (validated — `0` is an error, not a silent fallback), else the
+/// machine's available parallelism.  Exits with a clear message on an
+/// invalid setting ([`crate::exec::or_exit`]); library callers wanting
+/// a `Result` should use [`crate::exec::default_workers`].
+pub fn bench_threads() -> usize {
+    crate::exec::or_exit(crate::exec::default_workers())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+    use crate::exec::{ExecConfig, PinPolicy, StealOrder};
     use crate::semantics::Dataset;
 
     fn grid() -> Sweep {
@@ -352,6 +434,24 @@ mod tests {
     }
 
     #[test]
+    fn adversarial_steal_order_is_bit_identical_too() {
+        let oracle = Oracle::default();
+        let sw = grid();
+        let seq = sw.run_sim_seq(&oracle).unwrap();
+        let exec = Executor::with_config(&ExecConfig {
+            workers: Some(3),
+            pin: PinPolicy::Floating,
+            steal: StealOrder::Adversarial(0xDEC0DE),
+        })
+        .unwrap();
+        let par = sw.run_sim_exec(&oracle, &exec).unwrap();
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.agg, b.agg, "{}: diverged under forced stealing", a.cell_label);
+            assert_eq!(a.mean_gpu().to_bits(), b.mean_gpu().to_bits());
+        }
+    }
+
+    #[test]
     fn empty_sweep_returns_no_results() {
         let oracle = Oracle::default();
         let sw = Sweep::new(4, 2, 7);
@@ -361,14 +461,30 @@ mod tests {
     }
 
     #[test]
-    fn chunking_covers_all_items() {
-        for (items, workers) in [(1usize, 4usize), (7, 4), (32, 1), (1920, 8), (3, 16)] {
-            let c = chunk_size(items, workers);
-            assert!(c >= 1);
-            // ceil(items / c) chunks reconstruct exactly `items` items.
-            let chunks = (items + c - 1) / c;
-            assert!(chunks * c >= items);
-            assert!((chunks - 1) * c < items);
+    fn chunk_plan_covers_all_items_in_order() {
+        for (items, workers) in [(1usize, 4usize), (7, 4), (32, 1), (1920, 8), (3, 16), (0, 4)] {
+            let plan = chunk_plan(items, workers);
+            let mut next = 0usize;
+            for r in &plan {
+                assert_eq!(r.start, next, "chunks must tile contiguously");
+                assert!(!r.is_empty());
+                next = r.end;
+            }
+            assert_eq!(next, items, "chunks must cover every item exactly once");
+        }
+    }
+
+    #[test]
+    fn chunk_plan_shrinks_toward_the_tail() {
+        let plan = chunk_plan(1920, 8);
+        assert!(plan.len() > 8, "guided chunking yields more chunks than workers");
+        let first = plan.first().unwrap().len();
+        let last = plan.last().unwrap().len();
+        assert!(first > last, "head chunks amortize, tail chunks balance");
+        assert_eq!(last, 1, "the tail degenerates to per-item stealing");
+        // Monotone non-increasing chunk sizes.
+        for w in plan.windows(2) {
+            assert!(w[0].len() >= w[1].len());
         }
     }
 

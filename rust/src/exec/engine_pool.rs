@@ -1,0 +1,62 @@
+//! A pool of engines for parallel real-engine sweeps: one engine per
+//! worker (round-robin lease), each serializing its own colocated model
+//! pair exactly like the paper's single deployment.
+//!
+//! The simulator path has been parallel since PR 1, but
+//! `SPECREASON_BENCH_REAL=1` sweeps serialized on one engine because a
+//! `Sequence`'s KV accounting is owned by the engine that admitted it.
+//! An [`EnginePool`] removes that bottleneck at the *deployment* level:
+//! `n` independent engines (own PJRT runtimes, own KV partitions), each
+//! leased to one work chunk at a time.  Per-item results stay
+//! deterministic — every engine computes the same GPU-clock metrics for
+//! the same (query seed, sample) — so the sweep's merged numbers are
+//! bit-identical at any pool size; only measured wall-clock changes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use crate::engine::{Engine, EngineConfig};
+
+pub struct EnginePool {
+    engines: Vec<Mutex<Engine>>,
+    next: AtomicUsize,
+}
+
+/// An exclusive lease on one pool engine (released on drop).
+pub type EngineLease<'a> = MutexGuard<'a, Engine>;
+
+impl EnginePool {
+    /// Load `n` engines from the same config (same artifacts, same
+    /// model pair, independent KV partitions).
+    pub fn new(cfg: &EngineConfig, n: usize) -> Result<EnginePool> {
+        anyhow::ensure!(n >= 1, "engine pool needs at least one engine");
+        let engines = (0..n)
+            .map(|_| Engine::new(cfg).map(Mutex::new))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EnginePool { engines, next: AtomicUsize::new(0) })
+    }
+
+    pub fn size(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Lease an engine: start at the round-robin cursor, take the first
+    /// uncontended engine, and only block when every engine is busy.
+    /// Poison-tolerant like [`super::lock`]: a panic that unwound through
+    /// a lease must not retire that engine from the pool forever.
+    pub fn lease(&self) -> EngineLease<'_> {
+        use std::sync::TryLockError;
+        let n = self.engines.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        for k in 0..n {
+            match self.engines[(start + k) % n].try_lock() {
+                Ok(guard) => return guard,
+                Err(TryLockError::Poisoned(p)) => return p.into_inner(),
+                Err(TryLockError::WouldBlock) => {}
+            }
+        }
+        super::lock(&self.engines[start])
+    }
+}

@@ -1,0 +1,172 @@
+//! One execution substrate for the whole process: a work-stealing
+//! executor of pinned, named workers that carries **engine batch passes**
+//! (`Engine::decode_batch` / `scored_prefill_batch` via the scoped API),
+//! **the continuous-batching scheduler's step batches** (the composer
+//! drives those engine entry points), **eval sweeps** (`eval::sweep`
+//! fans adaptive chunks over [`scoped_map`](Executor::scoped_map)) and
+//! **serving connection handlers** (`server::Server` submits them with
+//! [`execute_labeled`](Executor::execute_labeled)).
+//!
+//! Before this subsystem existed the three compute fan-outs each had
+//! their own substrate — scoped `thread::spawn` per engine batch, a
+//! single-`Mutex<Receiver>` FIFO pool for the server, static chunking
+//! for sweeps; see the module docs of [`executor`], [`scope`] and
+//! [`engine_pool`] for what replaced each.
+//!
+//! ## Process-wide executor
+//!
+//! [`global()`] lazily builds one shared [`Executor`] sized by
+//! [`default_workers`] (`SPECREASON_BENCH_THREADS` > available
+//! parallelism).  `specreason serve` configures it first via
+//! [`configure_global`] so `--threads` governs serving and sweeps
+//! uniformly; eval sweeps pick it up on first use otherwise.  The first
+//! configuration wins — later calls get the existing executor (with a
+//! stderr note if the requested size differs).
+
+mod engine_pool;
+mod executor;
+mod scope;
+pub mod stats;
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::Result;
+
+pub use engine_pool::{EngineLease, EnginePool};
+pub use executor::{Closed, ExecConfig, Executor, PinPolicy, StealOrder};
+pub use scope::Scope;
+pub use stats::{panic_message, ExecStats, PanicInfo};
+
+/// Poison-tolerant lock: a panic while some other thread held the mutex
+/// does not invalidate the executor's plain queue/counter state, and the
+/// substrate must keep scheduling regardless.  Shared by every exec
+/// module so the poisoning policy lives in one place.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Parse a positive-integer env knob (the shared shape of
+/// `SPECREASON_BENCH_THREADS` / `SPECREASON_BENCH_ENGINES`): unset or
+/// empty → `Ok(None)`; `0` or garbage is **rejected with an error**
+/// naming the variable and what unsetting it means — never a silent
+/// fallback, which hid typos in bench scripts.
+pub fn env_positive(var: &str, unset_means: &str) -> Result<Option<usize>> {
+    match std::env::var(var) {
+        Err(_) => Ok(None),
+        Ok(v) if v.trim().is_empty() => Ok(None),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => anyhow::bail!(
+                "{var} must be a positive integer, got {v:?}; unset it for {unset_means}"
+            ),
+        },
+    }
+}
+
+/// Unwrap a config/env result at a binary or bench entry point with no
+/// error channel: print the message and exit 2.  Library code paths with
+/// a `Result` (or per-request error) channel should propagate instead —
+/// see `Engine::decode_batch`.
+pub fn or_exit<T>(r: Result<T>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    })
+}
+
+/// Worker count requested via `SPECREASON_BENCH_THREADS`
+/// ([`env_positive`] semantics).
+pub fn env_workers() -> Result<Option<usize>> {
+    env_positive("SPECREASON_BENCH_THREADS", "auto (available parallelism)")
+}
+
+/// Effective default worker count: `SPECREASON_BENCH_THREADS` if set
+/// (validated), else the machine's available parallelism.
+pub fn default_workers() -> Result<usize> {
+    Ok(env_workers()?.unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }))
+}
+
+static GLOBAL: Mutex<Option<Arc<Executor>>> = Mutex::new(None);
+
+/// Configure (or fetch) the process-wide executor.  The first caller's
+/// config wins; later calls return the existing executor and note a
+/// size mismatch on stderr (executors cannot be resized).
+pub fn configure_global(cfg: &ExecConfig) -> Result<Arc<Executor>> {
+    let mut guard = lock(&GLOBAL);
+    if let Some(exec) = guard.as_ref() {
+        // Only an *explicit* worker request can mismatch meaningfully —
+        // default-config fetches (try_global on the engine batch hot
+        // path) must stay silent and skip env/parallelism resolution
+        // entirely, leaving one uncontended lock + Arc clone per fetch.
+        if let Some(want) = cfg.workers {
+            if want != exec.workers() {
+                eprintln!(
+                    "[exec] global executor already running with {} workers; \
+                     ignoring requested {want}",
+                    exec.workers()
+                );
+            }
+        }
+        return Ok(Arc::clone(exec));
+    }
+    let exec = Arc::new(Executor::with_config(cfg)?);
+    *guard = Some(Arc::clone(&exec));
+    Ok(exec)
+}
+
+/// The process-wide executor, created on first use with default config.
+/// Propagates env-validation errors (`SPECREASON_BENCH_THREADS=0`).
+pub fn try_global() -> Result<Arc<Executor>> {
+    configure_global(&ExecConfig::default())
+}
+
+/// The process-wide executor if one was already created — telemetry
+/// callers use this so a `stats` request never *instantiates* the pool.
+pub fn global_if_initialized() -> Option<Arc<Executor>> {
+    lock(&GLOBAL).as_ref().map(Arc::clone)
+}
+
+/// Infallible [`try_global`] for binary/bench entry points ([`or_exit`]
+/// semantics): an invalid `SPECREASON_BENCH_THREADS` aborts with a clear
+/// message rather than being silently ignored.
+pub fn global() -> Arc<Executor> {
+    or_exit(try_global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Env-var reading tests would race other tests mutating process env;
+    // the validation logic is exercised through ExecConfig instead.
+    #[test]
+    fn exec_config_rejects_zero_workers() {
+        let cfg = ExecConfig { workers: Some(0), ..Default::default() };
+        let err = cfg.resolve_workers().unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "unhelpful error: {err}");
+        let cfg = ExecConfig { workers: Some(3), ..Default::default() };
+        assert_eq!(cfg.resolve_workers().unwrap(), 3);
+    }
+
+    #[test]
+    fn global_is_shared_and_first_config_wins() {
+        let a = global();
+        let b = configure_global(&ExecConfig {
+            workers: Some(a.workers() + 5),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "configure after init returns the same pool");
+        assert_eq!(a.workers(), b.workers());
+    }
+
+    #[test]
+    fn pin_policy_parses() {
+        assert_eq!(PinPolicy::parse("floating").unwrap(), PinPolicy::Floating);
+        assert_eq!(PinPolicy::parse("pinned").unwrap(), PinPolicy::Pinned);
+        assert!(PinPolicy::parse("warp").is_err());
+        assert_eq!(PinPolicy::Pinned.name(), "pinned");
+    }
+}

@@ -1,0 +1,282 @@
+//! Scoped execution on the pinned worker pool: non-`'static` borrows
+//! (e.g. the engine's `&mut Sequence` batch slots) ride the same workers
+//! as `'static` jobs, with a hard join barrier before the scope returns.
+//!
+//! Design (the classic scoped-pool shape, cf. `scoped_threadpool` /
+//! pre-std `crossbeam::scope`):
+//!
+//! * every spawned closure is boxed and lifetime-erased, then parked in a
+//!   per-scope claim queue; a cheap `'static` *stub* task is submitted to
+//!   the executor for each job, and whichever worker runs a stub claims
+//!   **one** job from the queue (stubs never block — an empty queue means
+//!   the job was already claimed elsewhere and the stub is a no-op);
+//! * when the scope closure finishes, the **scoping thread helps**: it
+//!   drains every unclaimed job inline, then waits only for jobs already
+//!   in flight on workers.  Helping makes scopes deadlock-free by
+//!   construction — even on a fully saturated (or shut-down) pool the
+//!   scoping thread can always run its own jobs to completion — and lets
+//!   `scope`/`scoped_map` be called from *inside* pool jobs (nested
+//!   scopes), which the old `ThreadPool::map` forbade.
+//!
+//! Soundness of the lifetime erasure: a spawned job either runs on a
+//! worker (counted by `pending`, awaited by the barrier) or is drained
+//! inline by the scoping thread; in both cases it is gone before
+//! [`Executor::scope`] returns — including the path where the scope
+//! closure itself panics — so an erased closure can never outlive the
+//! borrows it captures.  The `'scope` lifetime is kept invariant via the
+//! `PhantomData` marker so the borrow checker cannot shrink it.
+//!
+//! Panic semantics match the retired `ThreadPool::map` contract: all jobs
+//! run to completion, then the **first panic in spawn (input) order** is
+//! re-raised on the scoping thread.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::executor::{Executor, Inner};
+use super::lock;
+
+/// One spawned job: its spawn index (for first-panic ordering) and the
+/// lifetime-erased closure.
+struct ScopedJob {
+    index: usize,
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+/// Shared state of one `scope` call.
+pub(crate) struct ScopeState {
+    /// Unclaimed jobs; workers (via stubs) and the scoping thread
+    /// (helping) both pop from the front.
+    queue: Mutex<VecDeque<ScopedJob>>,
+    /// Spawned minus finished jobs; the barrier waits for zero.
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// First panic by spawn index, re-raised at the barrier.
+    panic: Mutex<Option<(usize, Box<dyn Any + Send + 'static>)>>,
+    /// The owning executor's counters, so scoped jobs show up in
+    /// telemetry whether a worker stub or the helping submitter ran
+    /// them (a worker-run job's `active` tick comes from the stub task
+    /// itself; helper-run jobs add their own).
+    exec_inner: Arc<Inner>,
+}
+
+impl ScopeState {
+    fn new(exec_inner: Arc<Inner>) -> ScopeState {
+        ScopeState {
+            queue: Mutex::new(VecDeque::new()),
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+            exec_inner,
+        }
+    }
+
+    /// Claim and run at most one job (the worker-stub entry point).
+    pub(crate) fn run_one(st: &Arc<ScopeState>) {
+        let job = lock(&st.queue).pop_front();
+        if let Some(job) = job {
+            Self::run_job(st, job, false);
+        }
+    }
+
+    fn run_job(st: &ScopeState, job: ScopedJob, by_helper: bool) {
+        use std::sync::atomic::Ordering;
+        let stats = &st.exec_inner.stats;
+        if by_helper {
+            // Worker-run jobs are already inside a counted task; the
+            // helping submitter is not a worker, so count it here.
+            stats.active.fetch_add(1, Ordering::SeqCst);
+        }
+        let index = job.index;
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(job.run)) {
+            let mut slot = lock(&st.panic);
+            let keep = matches!(&*slot, Some((i, _)) if *i <= index);
+            if !keep {
+                *slot = Some((index, payload));
+            }
+        }
+        if by_helper {
+            stats.active.fetch_sub(1, Ordering::SeqCst);
+        }
+        stats.scoped_jobs.fetch_add(1, Ordering::Relaxed);
+        let mut pending = lock(&st.pending);
+        *pending -= 1;
+        if *pending == 0 {
+            st.done.notify_all();
+        }
+    }
+
+    /// Helper drain + barrier: run every unclaimed job inline, then wait
+    /// for jobs already claimed by workers.
+    fn join(st: &Arc<ScopeState>) {
+        loop {
+            let job = lock(&st.queue).pop_front();
+            match job {
+                Some(job) => Self::run_job(st, job, true),
+                None => break,
+            }
+        }
+        // Only the scoping thread spawns, and it is here now, so the
+        // queue stays empty; everything still pending is mid-execution
+        // on a worker and will notify.
+        let mut pending = lock(&st.pending);
+        while *pending > 0 {
+            pending = st
+                .done
+                .wait(pending)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`Executor::scope`].
+///
+/// `'scope` is the lifetime of borrows the spawned jobs may capture; it
+/// is invariant (see the module docs) and outlived by nothing the jobs
+/// can touch after the scope's barrier.
+pub struct Scope<'pool, 'scope> {
+    exec: &'pool Executor,
+    state: Arc<ScopeState>,
+    label: &'static str,
+    next_index: Cell<usize>,
+    _marker: PhantomData<Cell<&'scope mut ()>>,
+}
+
+impl<'pool, 'scope> Scope<'pool, 'scope> {
+    /// Spawn a job onto the pool. Never fails: if the executor is shut
+    /// down the job simply waits for the scope's helper drain.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let index = self.next_index.get();
+        self.next_index.set(index + 1);
+        let boxed: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the erased closure cannot outlive `'scope` — it is
+        // consumed either by a worker stub (awaited via `pending`) or by
+        // the helper drain, both strictly before `Executor::scope`
+        // returns or unwinds (ScopeState::join runs on every exit path).
+        let boxed: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'scope>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(boxed)
+        };
+        // Count before publishing: a job can only be claimed after it is
+        // in the queue, so `pending` always covers every claimable job
+        // (no decrement can ever race ahead of its increment).
+        {
+            let mut pending = lock(&self.state.pending);
+            *pending += 1;
+        }
+        {
+            let mut q = lock(&self.state.queue);
+            q.push_back(ScopedJob { index, run: boxed });
+        }
+        let st = Arc::clone(&self.state);
+        // A closed executor is fine: the helper drain picks the job up.
+        let _ = self
+            .exec
+            .submit_striped(self.label, move || ScopeState::run_one(&st));
+    }
+}
+
+impl Executor {
+    /// Run `f` with a [`Scope`] that can spawn non-`'static` jobs onto
+    /// this pool.  Blocks until every spawned job finished (the scoping
+    /// thread helps run unclaimed jobs, so this cannot deadlock and may
+    /// be called from inside a pool job).  If any job panicked, the
+    /// first panic in spawn order is re-raised here after all jobs
+    /// drain; a panic in `f` itself also waits for spawned jobs before
+    /// propagating.
+    pub fn scope<'pool, 'scope, F, R>(&'pool self, label: &'static str, f: F) -> R
+    where
+        F: FnOnce(&Scope<'pool, 'scope>) -> R,
+    {
+        let state = Arc::new(ScopeState::new(Arc::clone(&self.inner)));
+        let scope = Scope {
+            exec: self,
+            state: Arc::clone(&state),
+            label,
+            next_index: Cell::new(0),
+            _marker: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // The barrier runs on every exit path — this is what makes the
+        // lifetime erasure in `spawn` sound.
+        ScopeState::join(&state);
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(r) => {
+                let panicked = lock(&state.panic).take();
+                if let Some((_, payload)) = panicked {
+                    resume_unwind(payload);
+                }
+                r
+            }
+        }
+    }
+
+    /// Run `f` over every item on the pool and return the results in
+    /// input order — the batch primitive under `Engine::decode_batch`,
+    /// `Engine::scored_prefill_batch` and the sweep chunks.
+    ///
+    /// * No `'static` bound: items and `f` may borrow caller state.
+    /// * Results come back in input order regardless of which worker ran
+    ///   which item.
+    /// * If any invocation panics, the first panic in input order is
+    ///   re-raised after all items drain (the `ThreadPool::map`
+    ///   contract).
+    /// * A single item runs inline on the calling thread — identical to
+    ///   the serial path, no pool involvement.
+    pub fn scoped_map<T, R, F>(&self, label: &'static str, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            let item = items.into_iter().next().expect("one item");
+            return vec![f(0, item)];
+        }
+        // Results land in pre-allocated slots through disjoint `&mut`s —
+        // one borrow per spawned job, no channel, no per-item sends on
+        // the batch hot path.  The scope's barrier ends the borrows
+        // before `slots` is consumed; on any job panic the scope
+        // re-raises before the `expect` below can run.
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let f_ref = &f;
+        self.scope(label, |s| {
+            for ((i, item), slot) in items.into_iter().enumerate().zip(slots.iter_mut()) {
+                s.spawn(move || {
+                    *slot = Some(f_ref(i, item));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("scoped_map slot filled"))
+            .collect()
+    }
+
+    /// `'static` convenience over [`Executor::scoped_map`], kept for
+    /// call sites that held the retired `ThreadPool::map` shape.  Same
+    /// ordering and panic contract; unlike its predecessor it is safe to
+    /// call from inside a pool job (the caller helps).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        self.scoped_map("map", items, f)
+    }
+}

@@ -1,0 +1,161 @@
+//! Executor telemetry: lock-free counters sampled into a snapshot, plus
+//! structured panic capture (label + payload message) so a swallowed
+//! worker panic is diagnosable from the `stats` op instead of only a
+//! stderr line.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Structured record of the most recent panic a worker caught.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanicInfo {
+    /// The job label passed at submission (`"unlabeled"` for plain
+    /// [`Executor::execute`](super::Executor::execute) jobs).
+    pub label: String,
+    /// The panic payload message (`&str` / `String` payloads; other
+    /// payload types are reported as such).
+    pub message: String,
+}
+
+/// Best-effort extraction of a panic payload's message.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Internal counters; all atomics so workers never contend on telemetry.
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub submitted: AtomicU64,
+    /// Tasks workers completed.  A scope stub counts here even when its
+    /// job was already claimed elsewhere (it executes as a no-op) — see
+    /// `scoped_jobs` for actual scoped user work.
+    pub executed: AtomicU64,
+    /// Scoped jobs run to completion, whether a worker stub or the
+    /// helping submitter executed them.
+    pub scoped_jobs: AtomicU64,
+    /// Tasks a worker took from a sibling's deque.
+    pub stolen: AtomicU64,
+    /// Tasks a worker took from the global injector.
+    pub injector_pops: AtomicU64,
+    pub panics: AtomicU64,
+    /// Jobs currently executing (instantaneous), including scoped jobs
+    /// a helping submitter runs inline (so utilization stays honest
+    /// when a saturated pool pushes batch work onto the composer).
+    pub active: AtomicUsize,
+    pub last_panic: Mutex<Option<PanicInfo>>,
+}
+
+impl Counters {
+    pub fn record_panic(&self, label: &str, payload: &(dyn Any + Send)) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        let info = PanicInfo { label: label.to_string(), message: panic_message(payload) };
+        *super::lock(&self.last_panic) = Some(info);
+    }
+}
+
+/// A point-in-time view of an [`Executor`](super::Executor)'s activity.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub workers: usize,
+    pub submitted: u64,
+    /// Tasks workers completed (scope stubs count even as no-ops).
+    pub executed: u64,
+    /// Scoped jobs completed, by workers or helping submitters.
+    pub scoped_jobs: u64,
+    pub stolen: u64,
+    pub injector_pops: u64,
+    pub panics: u64,
+    /// Jobs executing right now (including helper-run scoped jobs).
+    pub active: usize,
+    /// Tasks waiting in the injector + per-worker deques right now;
+    /// includes scope stubs whose job may already have been claimed.
+    pub queue_depth: usize,
+    pub last_panic: Option<PanicInfo>,
+}
+
+impl ExecStats {
+    /// Fraction of workers currently executing a job (instantaneous).
+    /// Clamped to 1.0: `active` also counts scoped jobs a helping
+    /// submitter runs inline, which would otherwise push a saturated
+    /// pool's reading above full.
+    pub fn utilization(&self) -> f64 {
+        if self.workers == 0 {
+            0.0
+        } else {
+            (self.active as f64 / self.workers as f64).min(1.0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("workers", Json::num(self.workers as f64)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("executed", Json::num(self.executed as f64)),
+            ("scoped_jobs", Json::num(self.scoped_jobs as f64)),
+            ("stolen", Json::num(self.stolen as f64)),
+            ("injector_pops", Json::num(self.injector_pops as f64)),
+            ("panics", Json::num(self.panics as f64)),
+            ("active", Json::num(self.active as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("utilization", Json::num(self.utilization())),
+        ];
+        if let Some(p) = &self.last_panic {
+            fields.push((
+                "last_panic",
+                Json::obj(vec![
+                    ("label", Json::str(&p.label)),
+                    ("message", Json::str(&p.message)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_message_extracts_common_payloads() {
+        let p: Box<dyn Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(p.as_ref()), "static str");
+        let p: Box<dyn Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_message(p.as_ref()), "owned");
+        let p: Box<dyn Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn stats_json_includes_panic_info() {
+        let mut s = ExecStats {
+            workers: 4,
+            submitted: 10,
+            executed: 9,
+            stolen: 3,
+            active: 2,
+            ..Default::default()
+        };
+        s.last_panic = Some(PanicInfo { label: "sweep".into(), message: "boom".into() });
+        let j = s.to_json();
+        assert_eq!(j.get("workers").as_usize(), Some(4));
+        assert_eq!(j.get("stolen").as_usize(), Some(3));
+        assert!((j.get("utilization").as_f64().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(j.get("last_panic").get("label").as_str(), Some("sweep"));
+        assert_eq!(j.get("last_panic").get("message").as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn utilization_handles_zero_workers() {
+        assert_eq!(ExecStats::default().utilization(), 0.0);
+    }
+}

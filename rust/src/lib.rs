@@ -17,6 +17,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod eval;
+pub mod exec;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;

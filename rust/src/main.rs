@@ -14,7 +14,8 @@ use specreason::coordinator::{
     run_query, AcceptancePolicy, Combo, RealBackend, Scheme, SpecConfig,
 };
 use specreason::engine::Engine;
-use specreason::eval::{bench_threads, Cell, Sweep};
+use specreason::eval::{Cell, Sweep};
+use specreason::exec::{EnginePool, PinPolicy};
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::server::Server;
 use specreason::util::bench::Table;
@@ -80,14 +81,49 @@ fn deploy_from(args: &specreason::util::cli::Args) -> Result<DeployConfig> {
     Ok(cfg)
 }
 
+/// Apply the shared executor options (`--threads`, backed by
+/// `SPECREASON_BENCH_THREADS`, and `--pin`) onto a deploy config.
+/// `--threads 0` is rejected with a clear error (omit it for auto).
+fn exec_opts(cmd: Command) -> Command {
+    cmd.opt_env(
+        "threads",
+        "executor worker threads shared by serving and sweeps (default: auto = available parallelism)",
+        "SPECREASON_BENCH_THREADS",
+        None,
+    )
+    .opt(
+        "pin",
+        "worker placement: floating|pinned (pinned records intent only for now — no affinity syscalls in the offline toolchain)",
+        None,
+    )
+}
+
+fn apply_exec_opts(cfg: &mut DeployConfig, args: &specreason::util::cli::Args) -> Result<()> {
+    if let Some(v) = args.get("threads") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got {v:?}"))?;
+        anyhow::ensure!(
+            n >= 1,
+            "--threads/SPECREASON_BENCH_THREADS must be >= 1 (got 0); omit it for auto"
+        );
+        cfg.exec.workers = Some(n);
+    }
+    if let Some(v) = args.get("pin") {
+        cfg.exec.pin = PinPolicy::parse(v)?;
+    }
+    Ok(())
+}
+
 fn cmd_serve(raw: &[String]) -> Result<()> {
-    let cmd = common_opts(Command::new("specreason serve", "start the TCP server"))
+    let cmd = exec_opts(common_opts(Command::new("specreason serve", "start the TCP server")))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
         .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"));
     let args = cmd.parse(raw)?;
     let mut cfg = deploy_from(&args)?;
     cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
+    apply_exec_opts(&mut cfg, &args)?;
     cfg.validate()?;
     eprintln!(
         "[serve] loading {} + {} from {} ...",
@@ -99,25 +135,23 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
 }
 
 fn cmd_run(raw: &[String]) -> Result<()> {
-    let cmd = common_opts(Command::new("specreason run", "run an eval cell"))
+    let cmd = exec_opts(common_opts(Command::new("specreason run", "run an eval cell")))
         .opt("dataset", "aime|math500|gpqa", Some("aime"))
         .opt("queries", "number of queries", Some("8"))
         .opt("samples", "pass@1 samples per query", Some("2"))
         .opt("seed", "workload seed", Some("1234"))
-        .opt_env(
-            "threads",
-            "sweep worker threads with --sim (0 = auto: available parallelism); the real engine always runs sequentially",
-            "SPECREASON_BENCH_THREADS",
-            Some("0"),
-        )
         .flag("sim", "use the cost-model simulator instead of the engine");
     let args = cmd.parse(raw)?;
-    let cfg = deploy_from(&args)?;
+    let mut cfg = deploy_from(&args)?;
+    apply_exec_opts(&mut cfg, &args)?;
     let dataset = Dataset::parse(args.get_or("dataset", "aime"))?;
     let queries = args.usize("queries", 8)?;
     let samples = args.usize("samples", 2)?;
     let seed = args.u64("seed", 1234)?;
-    let threads = args.usize("threads", 0)?;
+    // One executor governs both paths: size the process-wide pool from
+    // --threads / SPECREASON_BENCH_THREADS / auto, then run on it.
+    let exec = specreason::exec::configure_global(&cfg.exec)?;
+    let threads = exec.workers();
 
     let cell = Cell {
         dataset,
@@ -129,18 +163,13 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     let mut sweep = Sweep::new(queries, samples, seed);
     sweep.cell(cell);
     let result = if args.flag("sim") {
-        let n = if threads == 0 { bench_threads() } else { threads };
-        eprintln!("[run] sweeping {} work items on {n} threads (sim)", sweep.len());
-        sweep.run_sim_threads(&oracle, threads)?.remove(0)
+        eprintln!("[run] sweeping {} work items on {threads} threads (sim)", sweep.len());
+        sweep.run_sim(&oracle)?.remove(0)
     } else {
-        if threads != 0 {
-            // May come from --threads or SPECREASON_BENCH_THREADS; either
-            // way it has no effect on this path.
-            eprintln!("[run] note: worker threads only affect --sim; the real engine runs items sequentially");
-        }
-        eprintln!("[run] loading engine ...");
-        let engine = Engine::new(&cfg.engine_config())?;
-        sweep.run_real(&engine, &oracle)?.remove(0)
+        let n_engines = specreason::eval::engine_count(threads, sweep.len())?;
+        eprintln!("[run] loading {n_engines} engine(s) ...");
+        let pool = EnginePool::new(&cfg.engine_config(), n_engines)?;
+        sweep.run_real_pool(&pool, &oracle)?.remove(0)
     };
 
     let mut t = Table::new(

@@ -17,7 +17,11 @@
 //!    via its re-entrant [`StepMachine`]; front ops are grouped by
 //!    [`TaskPhase`](crate::coordinator::TaskPhase) (speculate / verify /
 //!    fallback / answer) into one batched engine pass (`decode_batch` /
-//!    `scored_prefill_batch`) per phase per step.
+//!    `scored_prefill_batch`) per phase per step.  Those passes fan out
+//!    over the process-wide work-stealing executor's pinned workers
+//!    (scoped, no per-batch thread spawns — see [`crate::exec`]); the
+//!    composer helps run its own batch jobs, so a saturated pool can
+//!    slow a step but never deadlock it.
 //! 3. **Preemption** — when the queue head belongs to a strictly higher
 //!    class than some running sequence and no slot/KV is available, the
 //!    lowest-priority (least-progressed on ties) running sequence is

@@ -3,9 +3,16 @@
 //! (see router.rs and `crate::scheduler`).
 //!
 //! Threading model (tokio is unavailable offline — DESIGN.md §3):
-//! one accept loop + a fixed [`ThreadPool`](crate::util::threadpool) of
-//! connection handlers + one scheduler composer thread that owns the
-//! engine and serves up to `max_batch` in-flight sequences per step.
+//! one accept loop + connection handlers submitted onto the
+//! **process-wide work-stealing executor** ([`crate::exec`]) + one
+//! scheduler composer thread that owns the engine and serves up to
+//! `max_batch` in-flight sequences per step.  The composer's batched
+//! engine passes ride the *same* executor via the scoped API, so serving
+//! has exactly one worker substrate; [`Server::bind`] sizes it so the
+//! blocking connection handlers (`io_threads.max(max_batch)` of them can
+//! be parked awaiting replies) can never starve the engine's batch jobs
+//! (`+ max_batch` headroom — and the composer helps run its own batch
+//! jobs inline regardless, so progress never depends on a free worker).
 //! At `max_batch = 1` this degenerates to the paper's deployment — a
 //! single engine pass at a time, bit-identical metrics to the old
 //! serial router.
@@ -15,47 +22,169 @@ pub mod router;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::DeployConfig;
-use crate::util::threadpool::ThreadPool;
+use crate::exec::Executor;
 pub use protocol::{Op, QueryRequest, Request};
 pub use router::{Router, RouterStats};
 
 pub struct Server {
     listener: TcpListener,
     router: Arc<Router>,
-    pool: ThreadPool,
+    exec: Arc<Executor>,
     shutdown: Arc<AtomicBool>,
+    /// Handlers accepted but not yet finished — the shared executor
+    /// outlives the server, so [`Server::run`] drains this itself on
+    /// shutdown (the retired per-server pool drained by being dropped).
+    active_conns: Arc<AtomicUsize>,
+    /// Max concurrent connection handlers (`io_threads.max(max_batch)`).
+    /// The accept loop stops taking connections at this bound, so the
+    /// executor always keeps the `+ max_batch` headroom free for batched
+    /// engine passes no matter how many clients pile on.  Excess clients
+    /// wait in the OS listen backlog — a *bounded* queue, unlike the
+    /// retired handler pool's unbounded channel: past the backlog the OS
+    /// refuses the connect outright.  That is a deliberate change —
+    /// socket-level backpressure one layer below the admission queue's
+    /// `rejected_overload`, instead of queueing idle sockets forever.
+    handler_cap: usize,
+    /// This server's share of [`RESERVED_HANDLERS`] (0 when its handlers
+    /// ride a dedicated pool instead of the process-wide executor).
+    reservation: usize,
     pub addr: std::net::SocketAddr,
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        RESERVED_HANDLERS.fetch_sub(self.reservation, Ordering::SeqCst);
+    }
+}
+
+/// Handler-worker capacity reserved on the *process-wide* executor
+/// across every live server in this process.  Each server's accept loop
+/// honors its own `handler_cap`, but two servers sharing one pool could
+/// still jointly park enough handlers to occupy the batch headroom — the
+/// ledger makes that joint demand visible so a late-binding server falls
+/// back to a dedicated handler pool instead of breaking the
+/// no-starvation floor.  Released in `Drop for Server`.
+static RESERVED_HANDLERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Decrement-on-drop guard so a handler is always un-counted, even if it
+/// panics (the worker's `catch_unwind` still runs this drop).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Server {
     /// Bind and start the engine. Use `addr = "127.0.0.1:0"` for an
     /// ephemeral port (tests).
-    pub fn bind(cfg: DeployConfig) -> Result<Server> {
+    pub fn bind(mut cfg: DeployConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        // Each connection handler blocks for its in-flight query, so
-        // fewer handlers than batch slots would cap batch occupancy
-        // below max_batch regardless of client concurrency.
-        let io_threads = cfg.io_threads.max(cfg.max_batch);
+        // Each connection handler blocks for its in-flight query, so the
+        // executor needs at least io_threads.max(max_batch) workers for
+        // handlers (fewer would cap batch occupancy below max_batch
+        // regardless of client concurrency) plus max_batch headroom so
+        // the composer's batched engine passes always find free workers
+        // even when every handler slot is parked on a reply.
+        let mut exec_cfg = cfg.exec.clone();
+        let handler_cap = cfg.io_threads.max(cfg.max_batch);
+        let floor = handler_cap + cfg.max_batch;
+        let resolved = exec_cfg.resolve_workers()?;
+        exec_cfg.workers = Some(resolved.max(floor));
+        // Log the raise only when this call actually creates the pool —
+        // with a pre-existing global (first-config-wins) the request is
+        // ignored and configure_global/the fallback below report that.
+        let preexisting = crate::exec::global_if_initialized().is_some();
+        let exec = crate::exec::configure_global(&exec_cfg)?;
+        if resolved < floor && !preexisting {
+            eprintln!(
+                "[server] raising executor workers {resolved} -> {floor} \
+                 (io_threads/max_batch floor; lower io_threads or max_batch to shrink)"
+            );
+        }
+        // Hand the resolved sizing down so Router::start's own
+        // configure_global (the direct-embedder path) agrees with the
+        // pool just built instead of re-requesting the pre-floor size.
+        cfg.exec = exec_cfg;
+        // Boot the scheduler before taking a reservation: Router::start
+        // can fail (bad artifacts), and a reservation taken first would
+        // leak — Drop for Server is the only release path.
         let router = Arc::new(Router::start(cfg)?);
+        // configure_global is first-config-wins; if another consumer
+        // already built a smaller pool (an embedder) — or other live
+        // servers' handlers have already reserved part of this one
+        // (RESERVED_HANDLERS) — handlers on it could occupy every worker
+        // and starve batch passes down to composer-helping speed.  Keep
+        // the no-starvation guarantee by giving *this* server's handlers
+        // a dedicated pool of the same substrate instead; engine batches
+        // still ride the shared executor.
+        let reserved = RESERVED_HANDLERS.fetch_add(floor, Ordering::SeqCst) + floor;
+        let (exec, reservation) = if exec.workers() < reserved {
+            RESERVED_HANDLERS.fetch_sub(floor, Ordering::SeqCst);
+            eprintln!(
+                "[server] process-wide executor has {} workers, {} already \
+                 reserved by other servers (< floor {floor}); using a \
+                 dedicated {floor}-worker handler pool",
+                exec.workers(),
+                reserved - floor
+            );
+            (Arc::new(Executor::new(floor)), 0)
+        } else {
+            (exec, floor)
+        };
         Ok(Server {
             listener,
             router,
-            pool: ThreadPool::new(io_threads),
+            exec,
             shutdown: Arc::new(AtomicBool::new(false)),
+            active_conns: Arc::new(AtomicUsize::new(0)),
+            handler_cap,
+            reservation,
             addr,
         })
     }
 
     /// Serve until a `shutdown` op arrives. Blocks.
     pub fn run(self) -> Result<()> {
+        let result = self.accept_loop();
+        // Whatever ended the accept loop — shutdown op, closed executor,
+        // or a hard accept error — raise the flag so idle handlers
+        // (polling it every read-timeout tick) terminate instead of
+        // occupying executor workers indefinitely, then drain.
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Drain in-flight handlers before returning (the retired
+        // per-server pool did this in Drop).  Idle handlers observe the
+        // shutdown flag within one read-timeout tick (200 ms); handlers
+        // awaiting a reply exit once their query completes.  The
+        // deadline only triggers for queries still running after 30 s —
+        // those handlers finish (and free their worker) when the
+        // scheduler completes or fails the query during Router drop.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while self.active_conns.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "[server] shutdown: leaving {} in-flight handler(s) to finish \
+                     with their queries",
+                    self.active_conns.load(Ordering::SeqCst)
+                );
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        result
+    }
+
+    fn accept_loop(&self) -> Result<()> {
         // Accept-loop wakeups for shutdown: set a small timeout via
         // nonblocking accept + sleep (portable without mio).
         self.listener.set_nonblocking(true)?;
@@ -63,23 +192,41 @@ impl Server {
             if self.shutdown.load(Ordering::SeqCst) {
                 break;
             }
+            // Handler-concurrency bound: beyond handler_cap in-flight
+            // connections, stop accepting (clients wait in the OS
+            // backlog) so parked handlers can never occupy the workers
+            // reserved for batched engine passes.
+            if self.active_conns.load(Ordering::SeqCst) >= self.handler_cap {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     let router = Arc::clone(&self.router);
                     let shutdown = Arc::clone(&self.shutdown);
-                    let submitted = self.pool.execute(move || {
-                        if let Err(e) = handle_connection(stream, &router, &shutdown) {
+                    // Counted before submission so the drain below can
+                    // never miss a handler that is queued but not yet
+                    // running.
+                    self.active_conns.fetch_add(1, Ordering::SeqCst);
+                    let guard = ConnGuard(Arc::clone(&self.active_conns));
+                    let exec = Arc::clone(&self.exec);
+                    let submitted = self.exec.execute_labeled("server:conn", move || {
+                        let _guard = guard;
+                        if let Err(e) = handle_connection(stream, &router, &exec, &shutdown) {
                             eprintln!("[server] connection error: {e:#}");
                         }
                     });
                     if submitted.is_err() {
-                        // Pool closed under us — treat like shutdown.
-                        eprintln!("[server] connection pool closed; stopping accept loop");
+                        // Executor closed under us — treat like shutdown;
+                        // run() raises the flag and drains.  (The
+                        // rejected closure was dropped, running its
+                        // guard, so the count stays balanced.)
+                        eprintln!("[server] executor closed; stopping accept loop");
                         break;
                     }
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    std::thread::sleep(Duration::from_millis(20));
                 }
                 Err(e) => return Err(e.into()),
             }
@@ -88,16 +235,104 @@ impl Server {
     }
 }
 
+/// Read one newline-terminated line, waking every 200 ms to observe the
+/// shutdown flag: a handler parked on an *idle* connection must not
+/// occupy an executor worker past shutdown (the retired per-server pool
+/// made that leak private; on the process-wide pool it would steal a
+/// worker from every later sweep/batch in the process).
+///
+/// Returns `Ok(None)` on EOF or shutdown; partial bytes survive timeout
+/// wakeups (`read_until` keeps them appended in `buf`).
+/// Hard cap on one request line.  A client streaming bytes without a
+/// newline must not grow server memory unboundedly — handlers share the
+/// process with every sweep/batch consumer.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+fn read_line_with_shutdown(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+) -> Result<Option<String>> {
+    buf.clear();
+    loop {
+        // Bounded read_until: pull at most one BufReader fill per
+        // iteration so the cap check below runs even against a client
+        // streaming continuously (std `read_until` would not return —
+        // and a cap could never fire — until the delimiter arrives).
+        let (complete, used) = match reader.fill_buf() {
+            Ok([]) => {
+                // EOF.  A final unterminated line (buffered by earlier
+                // iterations) is still served, as BufRead::lines did;
+                // the next call reads zero bytes into an empty buf → None.
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                (true, 0)
+            }
+            Ok(chunk) => match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    buf.extend_from_slice(&chunk[..=i]);
+                    (true, i + 1)
+                }
+                None => {
+                    buf.extend_from_slice(chunk);
+                    (false, chunk.len())
+                }
+            },
+            // Interrupted (EINTR) is retried like the timeout wakeups —
+            // BufRead::read_until did that internally; a signal must not
+            // kill a healthy connection.
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        reader.consume(used);
+        anyhow::ensure!(
+            buf.len() <= MAX_LINE_BYTES + 1, // +1: the delimiter itself
+            "request line exceeds {MAX_LINE_BYTES} bytes"
+        );
+        if complete {
+            // Strip the delimiter (and a CR) like BufRead::lines did.
+            if buf.last() == Some(&b'\n') {
+                buf.pop();
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return utf8_line(buf).map(Some);
+        }
+    }
+}
+
+/// UTF-8-validate a received line, erroring like `BufRead::lines` did
+/// (no lossy replacement — garbage bytes must not turn into a
+/// plausible-looking request).
+fn utf8_line(buf: &[u8]) -> Result<String> {
+    std::str::from_utf8(buf)
+        .map(str::to_owned)
+        .map_err(|e| anyhow::anyhow!("request line is not valid UTF-8: {e}"))
+}
+
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
+    exec: &Executor,
     shutdown: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    while let Some(line) = read_line_with_shutdown(&mut reader, &mut buf, shutdown)? {
         if line.trim().is_empty() {
             continue;
         }
@@ -105,7 +340,21 @@ fn handle_connection(
             Err(e) => protocol::error_response(0, &format!("{e:#}")),
             Ok(req) => match req.op {
                 Op::Ping => protocol::ok_response(req.id, crate::util::json::Json::str("pong")),
-                Op::Stats => protocol::ok_response(req.id, router.stats_json()),
+                Op::Stats => {
+                    // "exec" (set by stats_json) stays the process-wide
+                    // executor — that is where the engine's batch jobs
+                    // (and their panic telemetry) live.  When Server::bind
+                    // fell back to a dedicated handler pool, report it
+                    // alongside rather than over the top, so neither
+                    // pool's counters mask the other's.
+                    let mut j = router.stats_json();
+                    let on_global = crate::exec::global_if_initialized()
+                        .is_some_and(|g| std::ptr::eq(Arc::as_ptr(&g), exec));
+                    if !on_global {
+                        j.set("handler_exec", exec.stats().to_json());
+                    }
+                    protocol::ok_response(req.id, j)
+                }
                 Op::Shutdown => {
                     shutdown.store(true, Ordering::SeqCst);
                     protocol::ok_response(req.id, crate::util::json::Json::str("bye"))

@@ -29,6 +29,12 @@ impl Router {
     /// Boot the scheduler (which loads the engine on its composer
     /// thread); startup errors propagate here.
     pub fn start(cfg: DeployConfig) -> Result<Router> {
+        // Direct embedders reach here without `Server::bind`/`specreason
+        // run` having sized the process-wide executor — apply the deploy
+        // config's exec knobs ("threads"/"pin") now so they are never
+        // silently ignored.  First-config-wins makes this a no-op when
+        // the server already configured a (floored) pool.
+        crate::exec::configure_global(&cfg.exec)?;
         let sched = Scheduler::start(cfg.clone())?;
         Ok(Router { sched, cfg })
     }
@@ -67,8 +73,20 @@ impl Router {
         self.sched.stats()
     }
 
+    /// Serving counters plus, when the process-wide executor exists, an
+    /// `"exec"` object with its queue-depth / steal / utilization
+    /// counters and the last captured worker panic (label + payload
+    /// message) — swallowed worker panics are diagnosable from here,
+    /// not just a stderr line.  (When `Server::bind` fell back to a
+    /// dedicated handler pool, the server's `stats` op adds a separate
+    /// `"handler_exec"` object for it — `"exec"` always stays the
+    /// process-wide executor carrying the engine's batch jobs.)
     pub fn stats_json(&self) -> Json {
-        self.stats().to_json()
+        let mut j = self.stats().to_json();
+        if let Some(exec) = crate::exec::global_if_initialized() {
+            j.set("exec", exec.stats().to_json());
+        }
+        j
     }
 
     /// Stop the scheduler: queued and in-flight requests finish, then the

@@ -6,8 +6,10 @@
 //! - [`stats`]  — Welford, percentiles, histograms, Pearson, bootstrap CIs
 //! - [`cli`]    — argument parser with subcommands and generated help
 //! - [`bench`]  — criterion-style bench harness + table printer
-//! - [`threadpool`] — fixed worker pool for the serving front end
 //! - [`testing`] — mini property-testing harness + allclose assertions
+//!
+//! (The fixed worker pool that used to live here moved to the
+//! process-wide work-stealing executor in [`crate::exec`].)
 
 pub mod bench;
 pub mod cli;
@@ -15,4 +17,3 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod testing;
-pub mod threadpool;

@@ -1,0 +1,159 @@
+//! Determinism guarantees of the work-stealing executor (exec::) under
+//! *forced* stealing: the sweep's merged results must be bit-identical
+//! to the sequential path at any worker count even when the steal policy
+//! is adversarial (seeded-shuffled victim order + eager stealing), and
+//! the scoped batch primitive the engine/scheduler use must preserve
+//! per-slot results regardless of which worker ran which slot.
+
+use specreason::coordinator::{AcceptancePolicy, Combo, Scheme, SpecConfig};
+use specreason::eval::{chunk_plan, Cell, Sweep};
+use specreason::exec::{ExecConfig, Executor, PinPolicy, StealOrder};
+use specreason::semantics::{Dataset, Oracle};
+
+fn adversarial(workers: usize, seed: u64) -> Executor {
+    Executor::with_config(&ExecConfig {
+        workers: Some(workers),
+        pin: PinPolicy::Floating,
+        steal: StealOrder::Adversarial(seed),
+    })
+    .expect("executor")
+}
+
+fn fig3_subgrid(n_queries: usize, samples: usize, seed: u64) -> Sweep {
+    let mut sweep = Sweep::new(n_queries, samples, seed);
+    for combo in [Combo::new("qwq-sim", "r1-sim"), Combo::new("skywork-sim", "zr1-sim")] {
+        for ds in Dataset::all() {
+            for scheme in Scheme::all() {
+                sweep.cell(Cell {
+                    dataset: ds,
+                    scheme,
+                    combo: combo.clone(),
+                    cfg: SpecConfig {
+                        scheme,
+                        policy: AcceptancePolicy::Static { threshold: 7 },
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+    }
+    sweep
+}
+
+#[test]
+fn forced_stealing_is_bit_identical_at_every_worker_count() {
+    let oracle = Oracle::default();
+    let sweep = fig3_subgrid(6, 2, 42);
+    let seq = sweep.run_sim_seq(&oracle).unwrap();
+    assert_eq!(seq.len(), sweep.cells().len());
+
+    for (workers, steal_seed) in [(1usize, 7u64), (2, 11), (8, 13)] {
+        let exec = adversarial(workers, steal_seed);
+        let par = sweep.run_sim_exec(&oracle, &exec).unwrap();
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell_label, b.cell_label);
+            assert_eq!(
+                a.agg, b.agg,
+                "{}: aggregate diverged at {workers} adversarial workers",
+                a.cell_label
+            );
+            assert_eq!(a.mean_gpu().to_bits(), b.mean_gpu().to_bits());
+            assert_eq!(a.mean_wall().to_bits(), b.mean_wall().to_bits());
+            assert_eq!(a.mean_tokens().to_bits(), b.mean_tokens().to_bits());
+            assert_eq!(a.mean_acceptance().to_bits(), b.mean_acceptance().to_bits());
+            assert_eq!(
+                a.answer_flags(),
+                b.answer_flags(),
+                "{}: answer_correct vector diverged at {workers} adversarial workers",
+                a.cell_label
+            );
+            assert_eq!(a.outcomes.len(), b.outcomes.len());
+            for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(oa.metrics.gpu_secs.to_bits(), ob.metrics.gpu_secs.to_bits());
+                assert_eq!(oa.metrics.thinking_tokens, ob.metrics.thinking_tokens);
+                assert_eq!(oa.metrics.steps_accepted, ob.metrics.steps_accepted);
+                assert_eq!(oa.metrics.verify_scores, ob.metrics.verify_scores);
+            }
+        }
+        let stats = exec.stats();
+        if workers > 1 {
+            assert!(
+                stats.stolen > 0,
+                "adversarial policy at {workers} workers must actually steal \
+                 (stole {}, executed {})",
+                stats.stolen,
+                stats.executed
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_adversarial_runs_are_stable() {
+    // Two runs on distinct adversarial executors (different steal seeds,
+    // so different task interleavings) are identical: scheduling can
+    // never leak into results.
+    let oracle = Oracle::default();
+    let sweep = fig3_subgrid(4, 2, 7);
+    let a = sweep.run_sim_exec(&oracle, &adversarial(4, 1)).unwrap();
+    let b = sweep.run_sim_exec(&oracle, &adversarial(4, 999)).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.agg, y.agg);
+        assert_eq!(x.answer_flags(), y.answer_flags());
+    }
+}
+
+#[test]
+fn scoped_batch_slots_are_independent_of_the_worker_that_ran_them() {
+    // The engine/scheduler batch shape: disjoint &mut slots advanced by
+    // one scoped pass per "step", repeatedly, under forced stealing.
+    // Whatever worker runs a slot, slot i's final state must be the
+    // pure function of i — this is the executor-level analogue of the
+    // scheduler's batch-invariance contract.
+    let exec = adversarial(4, 0xBEEF);
+    let mut slots: Vec<u64> = vec![0; 64];
+    for step in 0..50u64 {
+        let results = exec.scoped_map("test:batch", slots.iter_mut().enumerate().collect(), |_, (i, slot): (usize, &mut u64)| {
+            *slot = slot.wrapping_mul(6364136223846793005).wrapping_add(i as u64 + step);
+            *slot
+        });
+        // In-order results mirror the slots themselves.
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, slots[i], "slot {i} result out of order at step {step}");
+        }
+    }
+    // Against a sequential reference.
+    let mut expect: Vec<u64> = vec![0; 64];
+    for step in 0..50u64 {
+        for (i, slot) in expect.iter_mut().enumerate() {
+            *slot = slot.wrapping_mul(6364136223846793005).wrapping_add(i as u64 + step);
+        }
+    }
+    assert_eq!(slots, expect);
+}
+
+#[test]
+fn map_preserves_input_order_under_forced_stealing() {
+    let exec = adversarial(8, 3);
+    let out = exec.map((0..4096usize).collect(), |i, x| {
+        assert_eq!(i, x);
+        x * 2 + 1
+    });
+    assert_eq!(out, (0..4096).map(|x| x * 2 + 1).collect::<Vec<usize>>());
+}
+
+#[test]
+fn chunk_plan_is_deterministic_and_total() {
+    // The chunker is pure in (total, workers): any execution order of
+    // its ranges reconstructs exactly the plan.
+    for total in [0usize, 1, 5, 64, 1920, 12345] {
+        for workers in [1usize, 2, 8, 64] {
+            let a = chunk_plan(total, workers);
+            let b = chunk_plan(total, workers);
+            assert_eq!(a, b);
+            let covered: usize = a.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, total);
+        }
+    }
+}
