@@ -2,7 +2,10 @@
 //! boots the full TCP serving stack — router, bounded admission queue,
 //! engine worker running real PJRT compute — then drives it with a
 //! multi-client workload of batched requests and reports
-//! latency/throughput percentiles per scheme.
+//! latency/throughput percentiles per scheme.  Afterwards it
+//! demonstrates the v2 streaming protocol: one query watched step by
+//! step through the typed `StreamClient`, and one long query cancelled
+//! mid-flight.
 //!
 //!     make artifacts && cargo run --release --example serve_requests
 //!
@@ -17,7 +20,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use specreason::config::DeployConfig;
-use specreason::server::{Client, Server};
+use specreason::server::{Client, Server, StreamClient, WireEvent};
 use specreason::util::bench::Table;
 use specreason::util::json::Json;
 use specreason::util::stats::Sample;
@@ -104,6 +107,95 @@ fn main() -> Result<()> {
         ]);
     }
     table.print();
+
+    // --- v2 streaming session: watch a CoT progress step by step ---
+    println!("\nstreaming one spec-reason query over the v2 protocol:");
+    let mut sc = StreamClient::connect(&addr)?;
+    let t0 = Instant::now();
+    let id = sc.submit(Json::obj(vec![
+        ("dataset", Json::str("math500")),
+        ("query_index", Json::num(0.0)),
+        ("scheme", Json::str("spec-reason")),
+    ]))?;
+    loop {
+        let (eid, ev) = sc.next_event()?;
+        if eid != id {
+            continue;
+        }
+        let at = t0.elapsed().as_secs_f64();
+        match ev {
+            WireEvent::Queued => println!("  [{at:7.3}s] queued"),
+            WireEvent::Admitted => println!("  [{at:7.3}s] admitted"),
+            WireEvent::Preempted => println!("  [{at:7.3}s] preempted"),
+            WireEvent::Step { kind, step, tokens, score, effective_threshold } => {
+                let score = score.map(|s| s.to_string()).unwrap_or_else(|| "-".into());
+                let thr = effective_threshold
+                    .map(|t| t.to_string())
+                    .unwrap_or_else(|| "-".into());
+                println!(
+                    "  [{at:7.3}s] step {step:>2} {kind:<10} tokens {tokens:>3}  \
+                     score {score}/{thr}"
+                );
+            }
+            WireEvent::Result(r) => {
+                println!(
+                    "  [{at:7.3}s] result: correct={} thinking_tokens={}",
+                    r.get("correct").as_bool().unwrap_or(false),
+                    r.get("thinking_tokens").as_usize().unwrap_or(0)
+                );
+                break;
+            }
+            WireEvent::Error { code, message } => {
+                println!("  [{at:7.3}s] error ({code}): {message}");
+                break;
+            }
+            WireEvent::Cancelled => {
+                println!("  [{at:7.3}s] cancelled");
+                break;
+            }
+        }
+    }
+
+    // --- mid-flight cancel: abort a long request after its first step ---
+    println!("cancelling a long query mid-flight:");
+    'cancel_demo: {
+        let id = sc.submit(Json::obj(vec![
+            ("dataset", Json::str("aime")),
+            ("query_index", Json::num(1.0)),
+            ("budget", Json::num(512.0_f64.min(budget as f64 * 2.0))),
+        ]))?;
+        loop {
+            let (eid, ev) = sc.next_event()?;
+            if eid != id {
+                continue;
+            }
+            if matches!(ev, WireEvent::Step { .. }) {
+                break;
+            }
+            if ev.is_terminal() {
+                // Rejected at admission (or finished implausibly fast):
+                // nothing left to cancel.
+                println!("  query ended before the cancel could land: {ev:?}");
+                break 'cancel_demo;
+            }
+        }
+        let t0 = Instant::now();
+        sc.cancel(id)?;
+        loop {
+            let (eid, ev) = sc.next_event()?;
+            if eid == id && ev.is_terminal() {
+                println!(
+                    "  cancelled in {:.3}s (terminal: {})",
+                    t0.elapsed().as_secs_f64(),
+                    match ev {
+                        WireEvent::Cancelled => "cancelled".to_string(),
+                        other => format!("{other:?}"),
+                    }
+                );
+                break;
+            }
+        }
+    }
 
     // --- graceful shutdown ---
     let mut client = Client::connect(&addr)?;

@@ -19,6 +19,11 @@
 //! with `SPECREASON_BENCH_STRICT=1` on hosts with ≥ 8 cores — shared CI
 //! runners are noisy and batching wins require physical parallelism.
 //!
+//! A **streaming mode** section drives the full TCP stack through the
+//! typed v2 client (`server::StreamClient`): time-to-first-event (TTFE),
+//! time-to-first-`step`-frame, mid-flight cancel latency and events per
+//! request land under `"streaming"` in `BENCH_server.json`.
+//!
 //! Knobs: SPECREASON_BENCH_SERVER_REQS (default 16; requests per run),
 //! SPECREASON_BENCH_SERVER_CLIENTS (default 8),
 //! SPECREASON_BENCH_SERVER_BUDGET (default 96).
@@ -35,6 +40,7 @@ use std::time::{Duration, Instant};
 use specreason::config::DeployConfig;
 use specreason::scheduler::{JobRequest, Priority, Scheduler};
 use specreason::semantics::Dataset;
+use specreason::server::{Server, StreamClient, WireEvent};
 use specreason::util::json::Json;
 use specreason::util::stats::Sample;
 
@@ -47,6 +53,105 @@ struct LoadResult {
     throughput_rps: f64,
     p50_s: f64,
     p99_s: f64,
+}
+
+struct StreamingResult {
+    requests: usize,
+    /// Submit → first event frame received (the v2 protocol's TTFE).
+    ttfe_s: Sample,
+    /// Submit → first `step` frame (compute visibly landing).
+    ttfstep_s: Sample,
+    /// Cancel op sent → `cancelled` terminal frame received.
+    cancel_latency_s: Sample,
+    events_total: usize,
+}
+
+/// Streaming mode: drive the full TCP stack through the typed v2 client,
+/// measuring time-to-first-event and mid-flight cancel latency.
+fn run_streaming(cfg: &DeployConfig, requests: usize, cancels: usize) -> StreamingResult {
+    let server = Server::bind(cfg.clone()).expect("server bind");
+    let addr = server.addr.to_string();
+    let server_thread = thread::spawn(move || server.run().expect("server run"));
+    let mut client = StreamClient::connect(&addr).expect("connect");
+
+    let mut out = StreamingResult {
+        requests,
+        ttfe_s: Sample::new(),
+        ttfstep_s: Sample::new(),
+        cancel_latency_s: Sample::new(),
+        events_total: 0,
+    };
+    for r in 0..requests {
+        let t0 = Instant::now();
+        let id = client
+            .submit(Json::obj(vec![
+                ("dataset", Json::str("math500")),
+                ("query_index", Json::num((r % 16) as f64)),
+            ]))
+            .expect("submit");
+        let mut first = true;
+        let mut first_step = true;
+        loop {
+            let (eid, ev) = client.next_event().expect("event");
+            assert_eq!(eid, id);
+            out.events_total += 1;
+            if first {
+                out.ttfe_s.push(t0.elapsed().as_secs_f64());
+                first = false;
+            }
+            match ev {
+                WireEvent::Step { .. } if first_step => {
+                    out.ttfstep_s.push(t0.elapsed().as_secs_f64());
+                    first_step = false;
+                }
+                WireEvent::Result(_) => break,
+                ev if ev.is_terminal() => panic!("streamed query failed: {ev:?}"),
+                _ => {}
+            }
+        }
+    }
+    // Mid-flight cancels: wait for the first step frame, then abort.
+    for r in 0..cancels {
+        let id = client
+            .submit(Json::obj(vec![
+                ("dataset", Json::str("aime")),
+                ("query_index", Json::num((r % 16) as f64)),
+            ]))
+            .expect("submit");
+        loop {
+            let (eid, ev) = client.next_event().expect("event");
+            assert_eq!(eid, id);
+            match ev {
+                WireEvent::Step { .. } => break,
+                ev if ev.is_terminal() => panic!("terminal before cancel: {ev:?}"),
+                _ => {}
+            }
+        }
+        let t0 = Instant::now();
+        assert!(client.cancel(id).expect("cancel"), "stream must be in flight");
+        // The ack means cancel *requested*: a job can still win the race
+        // by completing in the tick in progress — skip that sample.
+        let cancelled = loop {
+            let (eid, ev) = client.next_event().expect("event");
+            if eid != id {
+                continue;
+            }
+            match ev {
+                WireEvent::Cancelled => break true,
+                WireEvent::Result(_) => break false,
+                ev if ev.is_terminal() => panic!("wrong terminal after cancel: {ev:?}"),
+                _ => {}
+            }
+        };
+        if cancelled {
+            out.cancel_latency_s.push(t0.elapsed().as_secs_f64());
+        } else {
+            println!("  cancel {r}: job completed before the cancel landed (sample skipped)");
+        }
+    }
+    client.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread");
+    out
 }
 
 /// Closed-loop load: `clients` threads each submit their share of
@@ -190,6 +295,29 @@ fn main() {
          batch-8 {batch8_hi_load_rps:.2} req/s ({speedup:.2}x)"
     );
 
+    // --- streaming mode (v2 sessions over the wire): TTFE + cancel
+    // latency through the typed client ---
+    let stream_reqs = reqs.min(8).max(2);
+    let stream_cancels = 3usize;
+    println!("booting server for streaming mode ({stream_reqs} reqs, {stream_cancels} cancels) ...");
+    let scfg = DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: budget.max(128),
+        answer_tokens: 8,
+        max_batch: 4,
+        max_queue: 256,
+        ..Default::default()
+    };
+    let mut streaming = run_streaming(&scfg, stream_reqs, stream_cancels);
+    println!(
+        "streaming: ttfe p50 {:.3}s  first-step p50 {:.3}s  cancel latency p50 {:.3}s  \
+         ({:.1} events/req)",
+        streaming.ttfe_s.percentile(50.0),
+        streaming.ttfstep_s.percentile(50.0),
+        streaming.cancel_latency_s.percentile(50.0),
+        streaming.events_total as f64 / streaming.requests.max(1) as f64
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::str("serving_throughput")),
         ("requests_per_run", Json::num(reqs as f64)),
@@ -197,6 +325,27 @@ fn main() {
         ("host_parallelism", Json::num(host as f64)),
         ("runs", Json::Arr(rows)),
         ("speedup_batch8_vs_serial", Json::num(speedup)),
+        (
+            "streaming",
+            Json::obj(vec![
+                ("requests", Json::num(streaming.requests as f64)),
+                ("ttfe_s_p50", Json::num(streaming.ttfe_s.percentile(50.0))),
+                ("ttfe_s_p99", Json::num(streaming.ttfe_s.percentile(99.0))),
+                ("first_step_s_p50", Json::num(streaming.ttfstep_s.percentile(50.0))),
+                (
+                    "cancel_latency_s_p50",
+                    Json::num(streaming.cancel_latency_s.percentile(50.0)),
+                ),
+                (
+                    "cancel_latency_s_p99",
+                    Json::num(streaming.cancel_latency_s.percentile(99.0)),
+                ),
+                (
+                    "events_per_request_mean",
+                    Json::num(streaming.events_total as f64 / streaming.requests.max(1) as f64),
+                ),
+            ]),
+        ),
     ]);
     std::fs::write(out_path, report.to_string_pretty()).expect("write BENCH_server.json");
     println!("wrote {out_path}");

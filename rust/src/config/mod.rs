@@ -24,6 +24,10 @@ pub struct DeployConfig {
     pub kv_block_size: usize,
     pub kv_seqs_per_model: usize,
     pub temperature: f32,
+    /// Default workload seed for requests that omit `"seed"` (the
+    /// protocol documents per-request seeds as "defaults to the
+    /// server's" — this is the server's).
+    pub seed: u64,
     /// Default request knobs (overridable per request).
     pub scheme: Scheme,
     pub threshold: u8,
@@ -66,6 +70,7 @@ impl Default for DeployConfig {
             kv_block_size: 32,
             kv_seqs_per_model: 8,
             temperature: 0.6,
+            seed: 0x5EED,
             scheme: Scheme::SpecReason,
             threshold: 7,
             first_n_base: 0,
@@ -113,6 +118,9 @@ impl DeployConfig {
         }
         if let Some(v) = j.get("temperature").as_f64() {
             c.temperature = v as f32;
+        }
+        if let Some(v) = j.get("seed").as_usize() {
+            c.seed = v as u64;
         }
         if let Some(v) = j.get("scheme").as_str() {
             c.scheme = Scheme::parse(v)?;
@@ -236,6 +244,13 @@ mod tests {
         assert_eq!(c.max_batch, 1);
         assert!(c.preempt);
         assert_eq!(c.slo_ms, 0);
+        assert_eq!(c.seed, 0x5EED);
+    }
+
+    #[test]
+    fn parses_default_seed() {
+        let c = DeployConfig::from_json_str(r#"{"seed": 4242}"#).unwrap();
+        assert_eq!(c.seed, 4242);
     }
 
     #[test]

@@ -79,6 +79,51 @@ pub enum TaskPhase {
     Done,
 }
 
+/// What happened to a reasoning step, from the streaming client's point
+/// of view (the v2 `step` event's `kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    /// The small model drafted this step (verification pending).
+    Speculated,
+    /// The base model scored the speculation at/above the threshold; the
+    /// small model's tokens stand.
+    Accepted,
+    /// The base-quality generator rendered the step (either the
+    /// speculation was rejected, or the scheme never speculated it).
+    Fallback,
+}
+
+impl StepKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Speculated => "speculated",
+            StepKind::Accepted => "accepted",
+            StepKind::Fallback => "fallback",
+        }
+    }
+}
+
+/// One step-level transition, observable over the v2 streaming API.
+/// Emitted when the engine op carrying it commits — never at plan time —
+/// so clients see compute land, not intentions.  All fields are pure
+/// functions of the request (same determinism contract as the op
+/// stream), so a streamed request's event sequence is deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepEvent {
+    /// Reasoning-step index in the CoT.
+    pub step: usize,
+    pub kind: StepKind,
+    /// Verifier utility score (0-9): the accepting score on `Accepted`,
+    /// the rejecting score on a `Fallback` that follows a rejected
+    /// speculation, absent otherwise.
+    pub score: Option<u8>,
+    /// The acceptance threshold in effect for this step (absent when the
+    /// scheme does not speculate the step).
+    pub effective_threshold: Option<u8>,
+    /// Thinking tokens this transition contributed.
+    pub tokens: usize,
+}
+
 /// Metric side effects attached to an op, applied by [`StepMachine::commit`]
 /// after the op executed (so counters never run ahead of failed compute,
 /// matching the original inline loop).
@@ -92,6 +137,9 @@ enum Effect {
     Draft { proposed: usize, accepted: usize },
     StepDone,
     Finalize,
+    /// Publish a step event when the carrying op commits (drained by the
+    /// driver via [`StepMachine::take_events`]).
+    Emit(StepEvent),
 }
 
 /// Re-entrant per-sequence coordinator state.
@@ -119,6 +167,10 @@ pub struct StepMachine<'o> {
     steps_by_base: usize,
     traj: Trajectory,
     pending: VecDeque<(EngineOp, Vec<Effect>)>,
+    /// Step events whose carrying op has committed, awaiting a driver
+    /// drain (the serial driver never drains; the vec stays bounded by
+    /// the plan length).
+    events: Vec<StepEvent>,
     answer_planned: bool,
     finished: bool,
     health: f64,
@@ -152,6 +204,7 @@ impl<'o> StepMachine<'o> {
             steps_by_base: 0,
             traj: Trajectory::default(),
             pending: VecDeque::new(),
+            events: Vec::new(),
             answer_planned: false,
             finished: false,
             health: 1.0,
@@ -211,8 +264,16 @@ impl<'o> StepMachine<'o> {
                     qm.thinking_tokens = self.thinking_final;
                     self.finished = true;
                 }
+                Effect::Emit(ev) => self.events.push(ev),
             }
         }
+    }
+
+    /// Drain the step events published by committed ops, in commit
+    /// order.  The streaming scheduler calls this after every commit;
+    /// drivers that do not stream may ignore it.
+    pub fn take_events(&mut self) -> Vec<StepEvent> {
+        std::mem::take(&mut self.events)
     }
 
     /// Build the [`QueryOutcome`] once the machine is done.
@@ -276,8 +337,15 @@ impl<'o> StepMachine<'o> {
 
         let mut done = false;
         let speculate = self.cfg.scheme.speculates_steps() && step >= self.cfg.first_n_base;
+        // Threshold/score context for the step events; populated by the
+        // speculation branch so a rejection's fallback event can carry
+        // the rejecting score.
+        let mut threshold: Option<u8> = None;
+        let mut rejected_score: Option<u8> = None;
 
         if speculate {
+            let thr = self.cfg.policy.effective_threshold(ctx);
+            threshold = Some(thr);
             // --- small model speculates the step (§4.1 stage 1) ---
             let intended = self.oracle.step_tokens(&self.q, step, self.att0, &self.combo.small);
             let len = intended.min(remaining);
@@ -285,6 +353,13 @@ impl<'o> StepMachine<'o> {
                 EngineOp::Decode { role: Role::Small, n: len, phase: Phase::Speculate },
                 Some(Effect::Speculated),
             );
+            self.attach(Effect::Emit(StepEvent {
+                step,
+                kind: StepKind::Speculated,
+                score: None,
+                effective_threshold: Some(thr),
+                tokens: len,
+            }));
             self.thinking += len;
 
             // --- base model assesses it in one prefill-only pass ---
@@ -302,6 +377,17 @@ impl<'o> StepMachine<'o> {
                     accepted_len: if accepted { Some(len) } else { None },
                 }),
             );
+            if accepted {
+                self.attach(Effect::Emit(StepEvent {
+                    step,
+                    kind: StepKind::Accepted,
+                    score: Some(score),
+                    effective_threshold: Some(thr),
+                    tokens: len,
+                }));
+            } else {
+                rejected_score = Some(score);
+            }
 
             if accepted {
                 // Accepted: the step stands; trajectory absorbs its quality.
@@ -390,6 +476,15 @@ impl<'o> StepMachine<'o> {
             if len == intended {
                 self.steps_completed += 1;
             }
+            // The fallback event rides the step's last planned op, so it
+            // lands only once the regeneration's compute has committed.
+            self.attach(Effect::Emit(StepEvent {
+                step,
+                kind: StepKind::Fallback,
+                score: rejected_score,
+                effective_threshold: threshold,
+                tokens: len,
+            }));
         }
         self.attach(Effect::StepDone);
         self.step += 1;
@@ -565,6 +660,74 @@ mod tests {
                 "{scheme:?}"
             );
         }
+    }
+
+    /// Drive a machine scheduler-style, draining step events after each
+    /// commit (the way the streaming scheduler does).
+    fn drive_with_events(scheme: Scheme, seed: u64) -> (Vec<StepEvent>, QueryMetrics) {
+        let oracle = Oracle::default();
+        let q = TraceGenerator::new(Dataset::Math500, seed).query(0);
+        let cfg = SpecConfig { scheme, ..Default::default() };
+        let mut b = sim();
+        b.begin(&q).unwrap();
+        let mut m =
+            StepMachine::new(&oracle, Cow::Owned(q), Cow::Owned(combo()), Cow::Owned(cfg), 0);
+        let mut events = Vec::new();
+        while let Some(op) = m.peek() {
+            op.apply(&mut b).unwrap();
+            m.commit(b.metrics_mut());
+            events.extend(m.take_events());
+        }
+        (events, b.metrics_mut().clone())
+    }
+
+    #[test]
+    fn step_events_cover_every_step() {
+        for scheme in Scheme::all() {
+            let (events, qm) = drive_with_events(scheme, 11);
+            // Every counted reasoning step produced at least one event,
+            // and per-kind counts tie out with the metric counters.
+            let accepted =
+                events.iter().filter(|e| e.kind == StepKind::Accepted).count();
+            let speculated =
+                events.iter().filter(|e| e.kind == StepKind::Speculated).count();
+            let fallback =
+                events.iter().filter(|e| e.kind == StepKind::Fallback).count();
+            assert_eq!(speculated, qm.steps_speculated, "{scheme:?}");
+            assert_eq!(accepted, qm.steps_accepted, "{scheme:?}");
+            assert!(
+                accepted + fallback >= qm.steps_total,
+                "{scheme:?}: every step must resolve to accepted or fallback \
+                 ({accepted}+{fallback} < {})",
+                qm.steps_total
+            );
+            // Accepted events carry the accepting score and threshold.
+            for e in events.iter().filter(|e| e.kind == StepKind::Accepted) {
+                let score = e.score.expect("accepted event must carry a score");
+                let thr = e.effective_threshold.expect("accepted event must carry threshold");
+                assert!(score >= thr, "{scheme:?}: accepted below threshold");
+                assert!(e.tokens > 0);
+            }
+            // A fallback that follows a rejected speculation carries the
+            // rejecting score alongside the threshold that judged it.
+            // (The score may sit at/above the threshold when the
+            // rejection came from budget truncation, not the verifier.)
+            for e in events.iter().filter(|e| e.kind == StepKind::Fallback) {
+                assert_eq!(
+                    e.score.is_some(),
+                    e.effective_threshold.is_some(),
+                    "{scheme:?}: fallback score must come with its threshold"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_events_are_deterministic() {
+        let (a, _) = drive_with_events(Scheme::SpecReason, 7);
+        let (b, _) = drive_with_events(Scheme::SpecReason, 7);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
     }
 
     #[test]

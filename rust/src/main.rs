@@ -118,11 +118,13 @@ fn apply_exec_opts(cfg: &mut DeployConfig, args: &specreason::util::cli::Args) -
 fn cmd_serve(raw: &[String]) -> Result<()> {
     let cmd = exec_opts(common_opts(Command::new("specreason serve", "start the TCP server")))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
-        .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"));
+        .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"))
+        .opt("seed", "default workload seed for requests that omit one", None);
     let args = cmd.parse(raw)?;
     let mut cfg = deploy_from(&args)?;
     cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
+    cfg.seed = args.u64("seed", cfg.seed)?;
     apply_exec_opts(&mut cfg, &args)?;
     cfg.validate()?;
     eprintln!(

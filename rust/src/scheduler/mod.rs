@@ -38,12 +38,29 @@
 //! correctness) are bit-identical to the pre-scheduler router.  At any
 //! `max_batch`, per-request results are independent of batchmates; only
 //! throughput and wall-clock change.
+//!
+//! **Result path (v2):** [`Scheduler::submit`] returns a [`JobHandle`] —
+//! a typed stream of [`JobEvent`]s (`Queued`, `Admitted`, per-step
+//! [`StepEvent`]s as each `StepMachine` transition commits, `Preempted`,
+//! and exactly one terminal `Result` / `Error` / `Cancelled`).  The
+//! one-shot API is a thin fold over the stream
+//! ([`JobHandle::recv`]/[`recv_timeout`](JobHandle::recv_timeout)), so
+//! v1 clients see bit-identical results.  [`JobHandle::cancel`] aborts a
+//! queued or in-flight job through the preemption rollback path (KV
+//! rewound to the prompt and released, reservation ledger shrunk), and a
+//! per-request deadline ([`SubmitOpts::deadline_ms`]) is *enforced*:
+//! expired queued jobs are rejected and expired running jobs evicted
+//! with the `deadline_exceeded` error code (`DeployConfig::slo_ms` still
+//! only records violations).  Failures carry structured [`ErrorCode`]s
+//! ([`code_of`]) so the wire layer never has to classify strings.
 
 pub mod queue;
 mod task;
 
+use std::cell::Cell;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -55,8 +72,284 @@ use crate::metrics::QueryMetrics;
 use crate::semantics::{Dataset, DatasetProfile, Oracle, TraceGenerator};
 use crate::util::json::Json;
 
+pub use crate::coordinator::{StepEvent, StepKind};
 pub use queue::{AdmissionQueue, Priority};
 use task::SeqTask;
+
+/// Structured failure classes for the v2 wire protocol.  Every error a
+/// job can surface maps to exactly one code; free-form detail rides in
+/// the error message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// The request can never be served as specified (bad budget,
+    /// oversized KV need, malformed fields).
+    BadRequest,
+    /// Admission backpressure: the queue is full.
+    Overloaded,
+    /// The client cancelled the request.
+    Cancelled,
+    /// The request's `deadline_ms` elapsed before completion.
+    DeadlineExceeded,
+    /// The engine failed while serving the request.
+    EngineFailure,
+    /// The scheduler is (or went) down.
+    Shutdown,
+}
+
+impl ErrorCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::EngineFailure => "engine_failure",
+            ErrorCode::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ErrorCode> {
+        Ok(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "overloaded" => ErrorCode::Overloaded,
+            "cancelled" => ErrorCode::Cancelled,
+            "deadline_exceeded" => ErrorCode::DeadlineExceeded,
+            "engine_failure" => ErrorCode::EngineFailure,
+            "shutdown" => ErrorCode::Shutdown,
+            other => anyhow::bail!("unknown error code '{other}'"),
+        })
+    }
+}
+
+/// An error with a structured code.  Wrapped in `anyhow::Error` so the
+/// existing one-shot paths keep their exact strings (`{:#}` renders only
+/// the message), while [`code_of`] recovers the code via downcast.
+#[derive(Debug)]
+pub struct CodedError {
+    pub code: ErrorCode,
+    pub msg: String,
+}
+
+impl fmt::Display for CodedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for CodedError {}
+
+/// Build an `anyhow::Error` carrying a structured code.
+pub fn coded(code: ErrorCode, msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(CodedError { code, msg: msg.into() })
+}
+
+/// The structured code of a job error.  Errors that never got a code —
+/// engine failures bubbling up with their context chains intact — default
+/// to [`ErrorCode::EngineFailure`].
+pub fn code_of(err: &anyhow::Error) -> ErrorCode {
+    err.downcast_ref::<CodedError>()
+        .map(|c| c.code)
+        .unwrap_or(ErrorCode::EngineFailure)
+}
+
+/// One lifecycle event of a submitted job, in emission order.  Exactly
+/// one terminal event (`Result` / `Error` / `Cancelled`) ends the
+/// stream.
+#[derive(Debug)]
+pub enum JobEvent {
+    /// Accepted into the admission queue.
+    Queued,
+    /// Admitted into the running set (emitted again after a preemption
+    /// restart).
+    Admitted,
+    /// A reasoning-step transition committed (see [`StepEvent`]).
+    Step(StepEvent),
+    /// Evicted by a higher-priority arrival; re-queued at its class
+    /// front for a from-scratch restart.
+    Preempted,
+    /// Terminal: the job completed.
+    Result(Box<JobResult>),
+    /// Terminal: the job failed ([`code_of`] classifies).
+    Error(anyhow::Error),
+    /// Terminal: the job was cancelled by the client.
+    Cancelled,
+}
+
+impl JobEvent {
+    /// Terminal events end the stream; nothing follows them.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobEvent::Result(_) | JobEvent::Error(_) | JobEvent::Cancelled)
+    }
+}
+
+/// Per-submit options beyond the [`JobRequest`] itself.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOpts {
+    /// Enforced end-to-end deadline, relative to submit.  Queued jobs
+    /// past it are rejected, running jobs aborted, both with the
+    /// `deadline_exceeded` error code.  `None` disables.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Cancellation flag shared between a [`JobHandle`] and its queued /
+/// running job.  Sticky: once requested it stays requested.
+#[derive(Debug, Default)]
+pub struct CancelFlag {
+    requested: AtomicBool,
+}
+
+impl CancelFlag {
+    pub fn request(&self) {
+        self.requested.store(true, Ordering::SeqCst);
+    }
+
+    pub fn requested(&self) -> bool {
+        self.requested.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-blocking poll result for [`JobHandle::poll_event`].
+#[derive(Debug)]
+pub enum EventPoll {
+    Event(JobEvent),
+    /// No event ready yet (the job is still alive).
+    Pending,
+    /// The scheduler dropped the stream without a terminal event (the
+    /// composer thread died mid-serve).
+    Disconnected,
+}
+
+/// A submitted job's handle: iterate its event stream, fold it to a
+/// one-shot result, or cancel it.  Dropping the handle before the
+/// terminal event cancels the job — a client that stopped listening must
+/// not keep consuming engine time.
+pub struct JobHandle {
+    rx: mpsc::Receiver<JobEvent>,
+    cancel: Arc<CancelFlag>,
+    shared: Weak<Shared>,
+    done: Cell<bool>,
+}
+
+impl JobHandle {
+    /// Request cancellation.  Idempotent; a job that already reached a
+    /// terminal state is unaffected.
+    pub fn cancel(&self) {
+        self.cancel.request();
+        if let Some(shared) = self.shared.upgrade() {
+            shared.cv.notify_all();
+        }
+    }
+
+    /// Non-blocking event poll (the server's connection pump).
+    pub fn poll_event(&self) -> EventPoll {
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                if ev.is_terminal() {
+                    self.done.set(true);
+                }
+                EventPoll::Event(ev)
+            }
+            Err(mpsc::TryRecvError::Empty) => EventPoll::Pending,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done.set(true);
+                EventPoll::Disconnected
+            }
+        }
+    }
+
+    /// Blocking event wait; `None` once the stream is over (terminal
+    /// event already consumed, or the scheduler died).
+    pub fn next_event(&self) -> Option<JobEvent> {
+        match self.rx.recv() {
+            Ok(ev) => {
+                if ev.is_terminal() {
+                    self.done.set(true);
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.done.set(true);
+                None
+            }
+        }
+    }
+
+    /// Blocking event wait with a timeout.
+    pub fn next_event_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<JobEvent, mpsc::RecvTimeoutError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                if ev.is_terminal() {
+                    self.done.set(true);
+                }
+                Ok(ev)
+            }
+            Err(e) => {
+                if e == mpsc::RecvTimeoutError::Disconnected {
+                    self.done.set(true);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Fold an event to the one-shot outcome, if terminal.
+    fn terminal_outcome(ev: JobEvent) -> Option<Result<JobResult>> {
+        match ev {
+            JobEvent::Result(r) => Some(Ok(*r)),
+            JobEvent::Error(e) => Some(Err(e)),
+            JobEvent::Cancelled => {
+                Some(Err(coded(ErrorCode::Cancelled, "request cancelled")))
+            }
+            _ => None,
+        }
+    }
+
+    /// One-shot wait: drain events until the terminal one (the v1
+    /// compatibility surface — same `Result` the old reply channel
+    /// carried).  `Err(RecvError)` means the scheduler died mid-serve.
+    pub fn recv(&self) -> Result<Result<JobResult>, mpsc::RecvError> {
+        loop {
+            match self.next_event() {
+                Some(ev) => {
+                    if let Some(out) = Self::terminal_outcome(ev) {
+                        return Ok(out);
+                    }
+                }
+                None => return Err(mpsc::RecvError),
+            }
+        }
+    }
+
+    /// One-shot wait with a timeout covering the whole drain.
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<Result<JobResult>, mpsc::RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.next_event_timeout(left) {
+                Ok(ev) => {
+                    if let Some(out) = Self::terminal_outcome(ev) {
+                        return Ok(out);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for JobHandle {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.cancel();
+        }
+    }
+}
 
 /// A fully-resolved serving request (the router applies per-request
 /// overrides onto the deployment defaults before submitting).
@@ -89,12 +382,26 @@ pub struct JobResult {
 /// Internal queue entry.
 pub(crate) struct Job {
     pub req: JobRequest,
-    pub reply: mpsc::Sender<Result<JobResult>>,
+    /// The handle's event stream; the terminal event is the reply.
+    pub events: mpsc::Sender<JobEvent>,
+    /// Client cancellation flag (shared with the [`JobHandle`]).
+    pub cancel: Arc<CancelFlag>,
+    /// Enforced deadline, if the submit carried one: `(deadline_ms,
+    /// submit + deadline_ms)`.
+    pub deadline: Option<(u64, Instant)>,
     pub submitted_at: Instant,
     /// First engine op *ever* for this request — survives preemption
     /// restarts so TTFS keeps its submit→first-op meaning.
     pub first_op_at: Option<Instant>,
+    /// First streamed step event (time-to-first-event accounting).
+    pub first_event_at: Option<Instant>,
     pub preemptions: u32,
+}
+
+impl Job {
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|(_, at)| now >= at)
+    }
 }
 
 /// Serving statistics (served over the `stats` op).  Extends the old
@@ -116,12 +423,24 @@ pub struct RouterStats {
     pub queue_wait_s_max: f64,
     /// Submit → first engine op, summed over completed requests.
     pub ttfs_s_sum: f64,
+    /// Submit → first streamed step event, summed over completed
+    /// requests (time-to-first-event; falls back to e2e when a request
+    /// completed without streaming a step).
+    pub ttfe_s_sum: f64,
     /// Completed requests whose end-to-end latency exceeded
     /// `DeployConfig::slo_ms` (0 disables).
     pub slo_violations: u64,
+    /// Jobs aborted by client cancellation (queued or in-flight).
+    pub cancelled: u64,
+    /// Jobs rejected (queued) or aborted (running) past their
+    /// per-request `deadline_ms`.
+    pub deadline_evicted: u64,
     /// Composed batch steps and the sequences they advanced.
     pub batch_ticks: u64,
     pub stepped_seqs: u64,
+    /// Worst-case KV blocks currently reserved by the running set (the
+    /// admission ledger, per model partition).
+    pub kv_reserved_blocks: usize,
 }
 
 impl RouterStats {
@@ -138,6 +457,15 @@ impl RouterStats {
             0.0
         } else {
             self.ttfs_s_sum / self.completed as f64
+        }
+    }
+
+    /// Mean submit → first streamed step event over completed requests.
+    pub fn mean_ttfe_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.ttfe_s_sum / self.completed as f64
         }
     }
 
@@ -162,9 +490,13 @@ impl RouterStats {
             ("queue_wait_s_mean", Json::num(self.mean_queue_wait_s())),
             ("queue_wait_s_max", Json::num(self.queue_wait_s_max)),
             ("ttfs_s_mean", Json::num(self.mean_ttfs_s())),
+            ("ttfe_s_mean", Json::num(self.mean_ttfe_s())),
             ("slo_violations", Json::num(self.slo_violations as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("deadline_evicted", Json::num(self.deadline_evicted as f64)),
             ("batch_ticks", Json::num(self.batch_ticks as f64)),
             ("batch_occupancy_mean", Json::num(self.mean_batch_occupancy())),
+            ("kv_reserved_blocks", Json::num(self.kv_reserved_blocks as f64)),
         ])
     }
 }
@@ -200,7 +532,10 @@ impl Drop for WorkerGuard {
         let mut stranded = 0u64;
         while let Some((_prio, job)) = q.pop() {
             stranded += 1;
-            let _ = job.reply.send(Err(anyhow!("scheduler worker terminated")));
+            let _ = job.events.send(JobEvent::Error(coded(
+                ErrorCode::Shutdown,
+                "scheduler worker terminated",
+            )));
         }
         let mut s = lock(&self.shared.stats);
         s.failed += stranded;
@@ -237,16 +572,33 @@ impl Scheduler {
     }
 
     /// Try to admit a request into the wait queue; `Err` means
-    /// backpressure (`overloaded`) or shutdown.  The returned channel
-    /// yields the request's result when it completes.
-    pub fn submit(&self, req: JobRequest) -> Result<mpsc::Receiver<Result<JobResult>>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
+    /// backpressure (`overloaded`) or shutdown.  The returned handle
+    /// streams the request's lifecycle events and yields its result via
+    /// the terminal event (or the one-shot [`JobHandle::recv`] fold).
+    pub fn submit(&self, req: JobRequest) -> Result<JobHandle> {
+        self.submit_with(req, SubmitOpts::default())
+    }
+
+    /// [`submit`](Self::submit) with per-request options (deadline).
+    pub fn submit_with(&self, req: JobRequest, opts: SubmitOpts) -> Result<JobHandle> {
+        let (event_tx, event_rx) = mpsc::channel();
+        let cancel = Arc::new(CancelFlag::default());
         let prio = req.priority;
+        let now = Instant::now();
+        // Queued is sent before the job becomes visible to the composer,
+        // so it always precedes Admitted in the stream.  On a rejected
+        // submit the receiver is dropped unobserved.
+        let _ = event_tx.send(JobEvent::Queued);
         let job = Job {
             req,
-            reply: reply_tx,
-            submitted_at: Instant::now(),
+            events: event_tx,
+            cancel: Arc::clone(&cancel),
+            deadline: opts
+                .deadline_ms
+                .map(|ms| (ms, now + Duration::from_millis(ms))),
+            submitted_at: now,
             first_op_at: None,
+            first_event_at: None,
             preemptions: 0,
         };
         {
@@ -256,10 +608,9 @@ impl Scheduler {
             // lock, so a submit can never slip a job in after the final
             // drain (it either lands before — and gets drained — or sees
             // `closed` here).
-            anyhow::ensure!(
-                !self.shared.closed.load(Ordering::SeqCst),
-                "scheduler is shut down"
-            );
+            if self.shared.closed.load(Ordering::SeqCst) {
+                return Err(coded(ErrorCode::Shutdown, "scheduler is shut down"));
+            }
             match q.push(prio, job) {
                 Ok(()) => {
                     let mut s = lock(&self.shared.stats);
@@ -268,12 +619,20 @@ impl Scheduler {
                 }
                 Err(_rejected) => {
                     lock(&self.shared.stats).rejected_overload += 1;
-                    anyhow::bail!("overloaded: admission queue full");
+                    return Err(coded(
+                        ErrorCode::Overloaded,
+                        "overloaded: admission queue full",
+                    ));
                 }
             }
         }
         self.shared.cv.notify_all();
-        Ok(reply_rx)
+        Ok(JobHandle {
+            rx: event_rx,
+            cancel,
+            shared: Arc::downgrade(&self.shared),
+            done: Cell::new(false),
+        })
     }
 
     pub fn stats(&self) -> RouterStats {
@@ -382,10 +741,19 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
     let oracle = Oracle::default();
     let combo = Combo::new(&cfg.base_model, &cfg.small_model);
     let mut running: Vec<SeqTask> = Vec::new();
+    let block_size = cfg.kv_block_size.max(1);
 
     loop {
+        // Cancellations and deadline expiries first, so a dead job can
+        // neither be admitted nor hold KV through another tick.
+        reap(&engine, &shared, &mut running);
         admit(&engine, &oracle, &combo, &cfg, &shared, &mut running);
-        lock(&shared.stats).running = running.len();
+        {
+            let mut s = lock(&shared.stats);
+            s.running = running.len();
+            s.kv_reserved_blocks =
+                running.iter().map(|t| t.need_tokens.div_ceil(block_size)).sum();
+        }
 
         if running.is_empty() {
             let q = lock(&shared.queue);
@@ -419,8 +787,71 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
     // but release anything that is.
     for t in running.drain(..) {
         let _ = engine.release(&t.seq);
-        let _ = t.job.reply.send(Err(anyhow!("scheduler shut down")));
+        let _ = t
+            .job
+            .events
+            .send(JobEvent::Error(coded(ErrorCode::Shutdown, "scheduler shut down")));
     }
+}
+
+/// Abort cancelled and deadline-expired jobs: reject them while queued,
+/// evict them while running (via the preemption rollback path, so their
+/// KV blocks and ledger reservations are released identically).
+fn reap(engine: &Engine, shared: &Shared, running: &mut Vec<SeqTask<'_>>) {
+    let now = Instant::now();
+    let dead = {
+        let mut q = lock(&shared.queue);
+        let dead = q.drain_where(|job: &Job| job.cancel.requested() || job.expired(now));
+        if !dead.is_empty() {
+            lock(&shared.stats).queue_depth = q.len();
+        }
+        dead
+    };
+    for job in dead {
+        abort_job(shared, job);
+    }
+    let mut i = 0;
+    while i < running.len() {
+        let t = &running[i];
+        if t.job.cancel.requested() || t.job.expired(now) {
+            let t = running.remove(i);
+            let job = evict_seq(engine, t);
+            abort_job(shared, job);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Send the terminal event for an aborted job and count it.  Client
+/// cancellation wins over a simultaneous deadline expiry: the client
+/// already stopped caring.
+fn abort_job(shared: &Shared, job: Job) {
+    if job.cancel.requested() {
+        lock(&shared.stats).cancelled += 1;
+        let _ = job.events.send(JobEvent::Cancelled);
+    } else {
+        let ms = job.deadline.map(|(ms, _)| ms).unwrap_or(0);
+        {
+            let mut s = lock(&shared.stats);
+            s.deadline_evicted += 1;
+            s.failed += 1;
+        }
+        let _ = job.events.send(JobEvent::Error(coded(
+            ErrorCode::DeadlineExceeded,
+            format!("deadline exceeded: request missed its {ms} ms deadline"),
+        )));
+    }
+}
+
+/// The preemption rollback path, shared with cancel/deadline eviction:
+/// rewind the sequence's KV to the prompt, release its blocks, and hand
+/// back the job (its ledger reservation disappears with the `SeqTask`).
+fn evict_seq(engine: &Engine, mut t: SeqTask<'_>) -> Job {
+    let prompt_len = t.seq.prompt_len;
+    let _ = engine.rollback(&mut t.seq, prompt_len);
+    let _ = engine.release(&t.seq);
+    t.job
 }
 
 fn pop_job(shared: &Shared) -> Option<(Priority, Job)> {
@@ -465,13 +896,17 @@ fn admit<'e>(
         // a rejection.
         if let Err(e) = validate_budget(engine, &combo.base, job.req.dataset, &job.req.spec) {
             lock(&shared.stats).failed += 1;
-            let _ = job.reply.send(Err(e));
+            let _ = job.events.send(JobEvent::Error(coded(
+                ErrorCode::BadRequest,
+                format!("{e:#}"),
+            )));
             continue;
         }
         if !kv_feasible(engine, &combo.small, need) || !kv_feasible(engine, &combo.base, need) {
             lock(&shared.stats).failed += 1;
-            let _ = job.reply.send(Err(anyhow!(
-                "request needs {need} KV tokens; exceeds partition capacity"
+            let _ = job.events.send(JobEvent::Error(coded(
+                ErrorCode::BadRequest,
+                format!("request needs {need} KV tokens; exceeds partition capacity"),
             )));
             continue;
         }
@@ -497,8 +932,9 @@ fn admit<'e>(
                 // running should be impossible (the ledger is empty);
                 // fail defensively rather than risk a busy spin.
                 lock(&shared.stats).failed += 1;
-                let _ = job.reply.send(Err(anyhow!(
-                    "request needs {need} KV tokens but cannot be scheduled"
+                let _ = job.events.send(JobEvent::Error(coded(
+                    ErrorCode::EngineFailure,
+                    format!("request needs {need} KV tokens but cannot be scheduled"),
                 )));
                 continue;
             }
@@ -517,10 +953,13 @@ fn admit<'e>(
             }
         }
         match make_task(engine, oracle, combo, prio, job) {
-            Ok(t) => running.push(t),
+            Ok(t) => {
+                let _ = t.job.events.send(JobEvent::Admitted);
+                running.push(t);
+            }
             Err((job, e)) => {
                 lock(&shared.stats).failed += 1;
-                let _ = job.reply.send(Err(e));
+                let _ = job.events.send(JobEvent::Error(e));
             }
         }
     }
@@ -607,14 +1046,13 @@ fn preempt<'e>(
     running: &mut Vec<SeqTask<'e>>,
     idx: usize,
 ) {
-    let mut t = running.remove(idx);
-    let prompt_len = t.seq.prompt_len;
-    let _ = engine.rollback(&mut t.seq, prompt_len);
-    let _ = engine.release(&t.seq);
-    let mut job = t.job;
+    let t = running.remove(idx);
+    let prio = t.prio;
+    let mut job = evict_seq(engine, t);
     job.preemptions += 1;
+    let _ = job.events.send(JobEvent::Preempted);
     let mut q = lock(&shared.queue);
-    q.push_front(t.prio, job);
+    q.push_front(prio, job);
     let mut s = lock(&shared.stats);
     s.preempted += 1;
     s.queue_depth = q.len();
@@ -636,7 +1074,7 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
         match failed {
             Some(e) => {
                 lock(&shared.stats).failed += 1;
-                let _ = job.reply.send(Err(e));
+                let _ = job.events.send(JobEvent::Error(e));
             }
             None => {
                 let queue_wait_s = admitted_at.duration_since(job.submitted_at).as_secs_f64();
@@ -644,10 +1082,15 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                     .first_op_at
                     .map(|at| at.duration_since(job.submitted_at).as_secs_f64())
                     .unwrap_or(e2e_s);
+                let ttfe_s = job
+                    .first_event_at
+                    .map(|at| at.duration_since(job.submitted_at).as_secs_f64())
+                    .unwrap_or(e2e_s);
                 {
                     let mut s = lock(&shared.stats);
                     s.completed += 1;
                     s.ttfs_s_sum += ttfs_s;
+                    s.ttfe_s_sum += ttfe_s;
                     if cfg.slo_ms > 0 && e2e_s * 1000.0 > cfg.slo_ms as f64 {
                         s.slo_violations += 1;
                     }
@@ -661,7 +1104,7 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                     e2e_s,
                     preemptions: job.preemptions,
                 };
-                let _ = job.reply.send(Ok(result));
+                let _ = job.events.send(JobEvent::Result(Box::new(result)));
             }
         }
     }
@@ -680,15 +1123,55 @@ mod tests {
         s.queue_wait_samples = 3;
         s.queue_wait_s_sum = 0.6;
         s.ttfs_s_sum = 0.9;
+        s.ttfe_s_sum = 1.2;
+        s.cancelled = 2;
+        s.deadline_evicted = 1;
         s.batch_ticks = 4;
         s.stepped_seqs = 10;
+        s.kv_reserved_blocks = 7;
         let j = s.to_json();
         assert_eq!(j.get("admitted").as_usize(), Some(5));
         assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
         assert_eq!(j.get("completed").as_usize(), Some(3));
         assert!((j.get("queue_wait_s_mean").as_f64().unwrap() - 0.2).abs() < 1e-12);
         assert!((j.get("ttfs_s_mean").as_f64().unwrap() - 0.3).abs() < 1e-12);
+        assert!((j.get("ttfe_s_mean").as_f64().unwrap() - 0.4).abs() < 1e-12);
+        assert_eq!(j.get("cancelled").as_usize(), Some(2));
+        assert_eq!(j.get("deadline_evicted").as_usize(), Some(1));
         assert!((j.get("batch_occupancy_mean").as_f64().unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(j.get("kv_reserved_blocks").as_usize(), Some(7));
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_classify() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::Overloaded,
+            ErrorCode::Cancelled,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::EngineFailure,
+            ErrorCode::Shutdown,
+        ] {
+            assert_eq!(ErrorCode::parse(code.name()).unwrap(), code);
+        }
+        assert!(ErrorCode::parse("warp").is_err());
+        // Coded errors keep their exact v1 wire string and carry the code.
+        let e = coded(ErrorCode::Overloaded, "overloaded: admission queue full");
+        assert_eq!(format!("{e:#}"), "overloaded: admission queue full");
+        assert_eq!(code_of(&e), ErrorCode::Overloaded);
+        // Uncoded errors (raw engine failures) default to engine_failure.
+        let raw = anyhow!("pjrt exploded").context("decoding step");
+        assert_eq!(code_of(&raw), ErrorCode::EngineFailure);
+        assert_eq!(format!("{raw:#}"), "decoding step: pjrt exploded");
+    }
+
+    #[test]
+    fn terminal_events_classify() {
+        assert!(JobEvent::Cancelled.is_terminal());
+        assert!(JobEvent::Error(anyhow!("x")).is_terminal());
+        assert!(!JobEvent::Queued.is_terminal());
+        assert!(!JobEvent::Admitted.is_terminal());
+        assert!(!JobEvent::Preempted.is_terminal());
     }
 
     #[test]

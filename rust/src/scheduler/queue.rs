@@ -99,6 +99,30 @@ impl<T> AdmissionQueue<T> {
         None
     }
 
+    /// Remove and return every queued item matching `pred`, preserving
+    /// FIFO order among the survivors.  Used by the composer to reap
+    /// cancelled and deadline-expired jobs without admitting them; it
+    /// runs every composer iteration and almost always matches nothing,
+    /// so each class is scanned first and only rebuilt on a hit.
+    pub fn drain_where<F: FnMut(&T) -> bool>(&mut self, mut pred: F) -> Vec<T> {
+        let mut out = Vec::new();
+        for class in &mut self.classes {
+            if !class.iter().any(&mut pred) {
+                continue;
+            }
+            let mut kept = VecDeque::with_capacity(class.len());
+            while let Some(item) = class.pop_front() {
+                if pred(&item) {
+                    out.push(item);
+                } else {
+                    kept.push_back(item);
+                }
+            }
+            *class = kept;
+        }
+        out
+    }
+
     /// The item [`pop`](Self::pop) would return, without removing it.
     pub fn peek(&self) -> Option<(Priority, &T)> {
         for prio in [Priority::High, Priority::Normal, Priority::Low] {
@@ -141,6 +165,21 @@ mod tests {
         let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
         assert_eq!(order, vec!["h1", "h2", "n1", "n2", "l1"]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_where_extracts_and_preserves_order() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(Priority::Normal, 1).unwrap();
+        q.push(Priority::Normal, 2).unwrap();
+        q.push(Priority::High, 3).unwrap();
+        q.push(Priority::Normal, 4).unwrap();
+        let dead = q.drain_where(|&x| x % 2 == 0);
+        assert_eq!(dead, vec![2, 4]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((Priority::High, 3)));
+        assert_eq!(q.pop(), Some((Priority::Normal, 1)));
+        assert!(q.drain_where(|_| true).is_empty());
     }
 
     #[test]

@@ -53,6 +53,18 @@ impl SeqTask<'_> {
             self.job.first_op_at = Some(Instant::now());
         }
     }
+
+    /// Forward the step events published by the machine's latest commit
+    /// to the job's event stream (send errors mean the client dropped
+    /// its handle; the reaper will collect the cancel flag).
+    pub fn flush_events(&mut self) {
+        for ev in self.machine.take_events() {
+            if self.job.first_event_at.is_none() {
+                self.job.first_event_at = Some(Instant::now());
+            }
+            let _ = self.job.events.send(super::JobEvent::Step(ev));
+        }
+    }
 }
 
 /// Outcome of one composed tick (for stats).
@@ -84,7 +96,10 @@ pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) 
                 op,
                 &mut t.qm,
             ) {
-                Ok(()) => t.machine.commit(&mut t.qm),
+                Ok(()) => {
+                    t.machine.commit(&mut t.qm);
+                    t.flush_events();
+                }
                 Err(e) => {
                     t.failed = Some(e);
                     break;
@@ -186,6 +201,7 @@ pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) 
                         crate::coordinator::exec::refund_bonus_gpu(&mut t.qm, gpu_before);
                     }
                     t.machine.commit(&mut t.qm);
+                    t.flush_events();
                 }
                 Err(e) => t.failed = Some(e),
             }

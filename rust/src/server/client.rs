@@ -1,0 +1,272 @@
+//! Typed v2 streaming client: connect, submit queries, iterate their
+//! event streams, cancel mid-flight.
+//!
+//! One TCP connection multiplexes any number of concurrently streaming
+//! queries plus one-shot control ops (`stats`, `cancel`, `shutdown`,
+//! `ping`).  Control acks can interleave with event frames on the wire,
+//! so the client buffers event frames encountered while waiting for an
+//! ack and replays them from [`StreamClient::next_event`].
+//!
+//! The v1 one-shot [`Client`](crate::server::Client) stays untouched for
+//! pre-v2 deployments; this client speaks only v2.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A parsed v2 event frame.
+#[derive(Debug, Clone)]
+pub enum WireEvent {
+    Queued,
+    Admitted,
+    Step {
+        kind: String,
+        step: usize,
+        tokens: usize,
+        score: Option<u8>,
+        effective_threshold: Option<u8>,
+    },
+    Preempted,
+    /// Terminal: the completed result object.
+    Result(Json),
+    /// Terminal: structured failure.
+    Error { code: String, message: String },
+    /// Terminal: the query was cancelled.
+    Cancelled,
+}
+
+impl WireEvent {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, WireEvent::Result(_) | WireEvent::Error { .. } | WireEvent::Cancelled)
+    }
+
+    /// Parse an event frame (a frame carrying an `"event"` field).
+    pub fn parse(j: &Json) -> Result<WireEvent> {
+        Ok(match j.req_str("event")? {
+            "queued" => WireEvent::Queued,
+            "admitted" => WireEvent::Admitted,
+            "preempted" => WireEvent::Preempted,
+            "step" => WireEvent::Step {
+                kind: j.req_str("kind")?.to_string(),
+                step: j.req_usize("step")?,
+                tokens: j.req_usize("tokens")?,
+                score: j.get("score").as_usize().map(|s| s as u8),
+                effective_threshold: j
+                    .get("effective_threshold")
+                    .as_usize()
+                    .map(|t| t as u8),
+            },
+            "result" => WireEvent::Result(j.get("result").clone()),
+            "error" => WireEvent::Error {
+                code: j.get("code").as_str().unwrap_or("engine_failure").to_string(),
+                message: j.get("error").as_str().unwrap_or("").to_string(),
+            },
+            "cancelled" => WireEvent::Cancelled,
+            other => anyhow::bail!("unknown event kind '{other}'"),
+        })
+    }
+}
+
+/// Blocking v2 streaming client.
+pub struct StreamClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: i64,
+    /// Event frames read while waiting for a control ack, replayed by
+    /// [`next_event`](Self::next_event) in arrival order.
+    pending: VecDeque<(i64, WireEvent)>,
+}
+
+impl StreamClient {
+    pub fn connect(addr: &str) -> Result<StreamClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(StreamClient {
+            reader: BufReader::new(stream),
+            writer,
+            next_id: 1,
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// Assign an id, stamp `"v": 2`, and write one request line.
+    fn send(&mut self, mut body: Json) -> Result<i64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        body.set("id", Json::num(id as f64));
+        body.set("v", Json::num(2.0));
+        self.writer.write_all(body.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+
+    fn read_frame(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "server closed the connection");
+            if !line.trim().is_empty() {
+                break;
+            }
+        }
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad frame: {e}"))
+    }
+
+    /// Submit a v2 query.  `body` carries the query fields (`dataset`,
+    /// `scheme`, `budget`, `deadline_ms`, ...); `op`/`id`/`v` are set
+    /// here.  Returns the stream id to match against
+    /// [`next_event`](Self::next_event).
+    pub fn submit(&mut self, mut body: Json) -> Result<i64> {
+        body.set("op", Json::str("query"));
+        self.send(body)
+    }
+
+    /// Block for the next event frame from any stream on this
+    /// connection: `(stream id, event)`.
+    pub fn next_event(&mut self) -> Result<(i64, WireEvent)> {
+        if let Some(ev) = self.pending.pop_front() {
+            return Ok(ev);
+        }
+        let j = self.read_frame()?;
+        anyhow::ensure!(
+            !j.get("event").is_null(),
+            "unexpected control response on the event stream (id {})",
+            j.get("id").as_i64().unwrap_or(0)
+        );
+        let id = j.get("id").as_i64().unwrap_or(0);
+        Ok((id, WireEvent::parse(&j)?))
+    }
+
+    /// Drain `id`'s stream to its terminal event and return it,
+    /// discarding that stream's intermediate events; other streams'
+    /// events stay queued for their own consumers.
+    pub fn wait_terminal(&mut self, id: i64) -> Result<WireEvent> {
+        let mut foreign = VecDeque::new();
+        let terminal = loop {
+            let (eid, ev) = self.next_event()?;
+            if eid != id {
+                foreign.push_back((eid, ev));
+                continue;
+            }
+            if ev.is_terminal() {
+                break ev;
+            }
+        };
+        // Preserve other streams' frames for their own consumers.
+        for item in foreign.into_iter().rev() {
+            self.pending.push_front(item);
+        }
+        Ok(terminal)
+    }
+
+    /// One-shot control op: write the request, read (and return) its
+    /// ack, buffering any event frames that interleave.
+    pub fn call(&mut self, body: Json) -> Result<Json> {
+        let id = self.send(body)?;
+        loop {
+            let j = self.read_frame()?;
+            if !j.get("event").is_null() {
+                let eid = j.get("id").as_i64().unwrap_or(0);
+                // A rejected control op answers with an error *frame*
+                // addressed to our id (ids are never shared between
+                // control ops and query streams on this client) — that
+                // is the ack; buffering it would wait forever.
+                if eid == id && j.get("event").as_str() == Some("error") {
+                    anyhow::bail!(
+                        "server error ({}): {}",
+                        j.get("code").as_str().unwrap_or("unknown"),
+                        j.get("error").as_str().unwrap_or("unknown")
+                    );
+                }
+                self.pending.push_back((eid, WireEvent::parse(&j)?));
+                continue;
+            }
+            anyhow::ensure!(
+                j.get("id").as_i64() == Some(id),
+                "control ack for unexpected id {:?} (awaiting {id})",
+                j.get("id").as_i64()
+            );
+            if j.get("ok").as_bool() != Some(true) {
+                anyhow::bail!(
+                    "server error: {}",
+                    j.get("error").as_str().unwrap_or("unknown")
+                );
+            }
+            return Ok(j.get("result").clone());
+        }
+    }
+
+    /// Cancel an in-flight stream by id.  Returns whether the server
+    /// found it in flight and *requested* cancellation; the stream's
+    /// terminal frame is `cancelled` unless the job wins the race by
+    /// completing in the scheduler tick already in progress (then it is
+    /// `result`).
+    pub fn cancel(&mut self, target: i64) -> Result<bool> {
+        let r = self.call(Json::obj(vec![
+            ("op", Json::str("cancel")),
+            ("target", Json::num(target as f64)),
+        ]))?;
+        Ok(r.get("cancelled").as_bool().unwrap_or(false))
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let r = self.call(Json::obj(vec![("op", Json::str("ping"))]))?;
+        anyhow::ensure!(r.as_str() == Some("pong"), "unexpected ping reply");
+        Ok(())
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call(Json::obj(vec![("op", Json::str("stats"))]))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let r = self.call(Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        anyhow::ensure!(r.as_str() == Some("bye"), "unexpected shutdown reply");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_events_parse_from_frames() {
+        use crate::coordinator::{StepEvent, StepKind};
+        use crate::scheduler::JobEvent;
+        use crate::server::protocol::event_frame;
+
+        let frame = event_frame(
+            5,
+            &JobEvent::Step(StepEvent {
+                step: 2,
+                kind: StepKind::Fallback,
+                score: Some(4),
+                effective_threshold: Some(7),
+                tokens: 12,
+            }),
+        );
+        let j = Json::parse(&frame).unwrap();
+        match WireEvent::parse(&j).unwrap() {
+            WireEvent::Step { kind, step, tokens, score, effective_threshold } => {
+                assert_eq!(kind, "fallback");
+                assert_eq!(step, 2);
+                assert_eq!(tokens, 12);
+                assert_eq!(score, Some(4));
+                assert_eq!(effective_threshold, Some(7));
+            }
+            other => panic!("wrong event: {other:?}"),
+        }
+        let j = Json::parse(&event_frame(5, &JobEvent::Cancelled)).unwrap();
+        assert!(WireEvent::parse(&j).unwrap().is_terminal());
+        let j = Json::parse(&event_frame(5, &JobEvent::Queued)).unwrap();
+        assert!(!WireEvent::parse(&j).unwrap().is_terminal());
+    }
+}

@@ -17,6 +17,7 @@
 //! single engine pass at a time, bit-identical metrics to the old
 //! serial router.
 
+pub mod client;
 pub mod protocol;
 pub mod router;
 
@@ -30,6 +31,8 @@ use anyhow::{Context, Result};
 
 use crate::config::DeployConfig;
 use crate::exec::Executor;
+use crate::scheduler::{code_of, ErrorCode, EventPoll, JobEvent, JobHandle, SubmitOpts};
+pub use client::{StreamClient, WireEvent};
 pub use protocol::{Op, QueryRequest, Request};
 pub use router::{Router, RouterStats};
 
@@ -235,37 +238,47 @@ impl Server {
     }
 }
 
-/// Read one newline-terminated line, waking every 200 ms to observe the
-/// shutdown flag: a handler parked on an *idle* connection must not
-/// occupy an executor worker past shutdown (the retired per-server pool
-/// made that leak private; on the process-wide pool it would steal a
-/// worker from every later sweep/batch in the process).
-///
-/// Returns `Ok(None)` on EOF or shutdown; partial bytes survive timeout
-/// wakeups (`read_until` keeps them appended in `buf`).
 /// Hard cap on one request line.  A client streaming bytes without a
 /// newline must not grow server memory unboundedly — handlers share the
 /// process with every sweep/batch consumer.
 const MAX_LINE_BYTES: usize = 1 << 20;
 
-fn read_line_with_shutdown(
-    reader: &mut BufReader<TcpStream>,
-    buf: &mut Vec<u8>,
-    shutdown: &AtomicBool,
-) -> Result<Option<String>> {
-    buf.clear();
+/// Poll cadence for an idle connection (observes the shutdown flag): a
+/// handler parked on an *idle* connection must not occupy an executor
+/// worker past shutdown (the retired per-server pool made that leak
+/// private; on the process-wide pool it would steal a worker from every
+/// later sweep/batch in the process).
+const IDLE_READ_TIMEOUT: Duration = Duration::from_millis(200);
+
+/// Poll cadence while v2 sessions are streaming on the connection: the
+/// read timeout bounds event-forwarding latency, so it drops while any
+/// stream is live.
+const STREAM_READ_TIMEOUT: Duration = Duration::from_millis(15);
+
+/// One non-blocking(ish) attempt to complete a request line.
+enum LinePoll {
+    Line(String),
+    /// No complete line yet (read timed out); partial bytes stay in
+    /// `buf` for the next poll.
+    Pending,
+    Eof,
+}
+
+/// Pull at most one line from the socket, returning [`LinePoll::Pending`]
+/// on a read-timeout tick so the caller can interleave stream pumping
+/// and shutdown checks.  Bounded fills: the cap check runs even against
+/// a client streaming continuously without a newline (std `read_until`
+/// would not return — and a cap could never fire — until the delimiter
+/// arrives).
+fn poll_line(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>) -> Result<LinePoll> {
     loop {
-        // Bounded read_until: pull at most one BufReader fill per
-        // iteration so the cap check below runs even against a client
-        // streaming continuously (std `read_until` would not return —
-        // and a cap could never fire — until the delimiter arrives).
         let (complete, used) = match reader.fill_buf() {
             Ok([]) => {
                 // EOF.  A final unterminated line (buffered by earlier
-                // iterations) is still served, as BufRead::lines did;
-                // the next call reads zero bytes into an empty buf → None.
+                // polls) is still served, as BufRead::lines did; the
+                // next call reads zero bytes into an empty buf → Eof.
                 if buf.is_empty() {
-                    return Ok(None);
+                    return Ok(LinePoll::Eof);
                 }
                 (true, 0)
             }
@@ -279,19 +292,16 @@ fn read_line_with_shutdown(
                     (false, chunk.len())
                 }
             },
-            // Interrupted (EINTR) is retried like the timeout wakeups —
+            // Interrupted (EINTR) is retried like a timeout tick —
             // BufRead::read_until did that internally; a signal must not
             // kill a healthy connection.
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut
-                    || e.kind() == std::io::ErrorKind::Interrupted =>
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if shutdown.load(Ordering::SeqCst) {
-                    return Ok(None);
-                }
-                continue;
+                return Ok(LinePoll::Pending);
             }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => return Err(e.into()),
         };
         reader.consume(used);
@@ -307,7 +317,9 @@ fn read_line_with_shutdown(
             if buf.last() == Some(&b'\r') {
                 buf.pop();
             }
-            return utf8_line(buf).map(Some);
+            let line = utf8_line(buf)?;
+            buf.clear();
+            return Ok(LinePoll::Line(line));
         }
     }
 }
@@ -321,6 +333,64 @@ fn utf8_line(buf: &[u8]) -> Result<String> {
         .map_err(|e| anyhow::anyhow!("request line is not valid UTF-8: {e}"))
 }
 
+/// One in-flight v2 streaming session on a connection: the client's wire
+/// id plus the scheduler-side handle whose events are forwarded as
+/// NDJSON frames.
+struct StreamSession {
+    wire_id: i64,
+    handle: JobHandle,
+}
+
+/// Forward every ready event of every live session to the wire, retiring
+/// sessions at their terminal frame.  Returns with `Pending` streams
+/// intact; the caller re-pumps on its next loop tick.
+fn pump_sessions(sessions: &mut Vec<StreamSession>, writer: &mut TcpStream) -> Result<()> {
+    let mut wrote = false;
+    let mut i = 0;
+    while i < sessions.len() {
+        let mut done = false;
+        loop {
+            match sessions[i].handle.poll_event() {
+                EventPoll::Event(ev) => {
+                    let terminal = ev.is_terminal();
+                    let frame = protocol::event_frame(sessions[i].wire_id, &ev);
+                    writer.write_all(frame.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    wrote = true;
+                    if terminal {
+                        done = true;
+                        break;
+                    }
+                }
+                EventPoll::Pending => break,
+                EventPoll::Disconnected => {
+                    // The composer died without a terminal event — the
+                    // stream analogue of v1's "engine worker dropped".
+                    let frame = protocol::error_frame(
+                        sessions[i].wire_id,
+                        ErrorCode::Shutdown,
+                        "engine worker dropped",
+                    );
+                    writer.write_all(frame.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    wrote = true;
+                    done = true;
+                    break;
+                }
+            }
+        }
+        if done {
+            sessions.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+    if wrote {
+        writer.flush()?;
+    }
+    Ok(())
+}
+
 fn handle_connection(
     stream: TcpStream,
     router: &Router,
@@ -328,18 +398,108 @@ fn handle_connection(
     shutdown: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    stream.set_read_timeout(Some(IDLE_READ_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
-    while let Some(line) = read_line_with_shutdown(&mut reader, &mut buf, shutdown)? {
+    // v2 sessions in flight on this connection.  Cancellation is scoped
+    // here: a `cancel` op can only target them, and every exit path —
+    // EOF, shutdown, error — drops unfinished handles, whose Drop
+    // cancels the scheduler-side job (a vanished client must not keep
+    // consuming engine time).
+    let mut sessions: Vec<StreamSession> = Vec::new();
+    // An awaited v1 one-shot query.  While set, no further requests are
+    // read (v1 responses stay strictly ordered with their requests, as
+    // the pre-streaming server guaranteed) but live v2 streams keep
+    // pumping — a v1 query must not freeze another stream's frames.
+    let mut v1_pending: Option<(i64, JobHandle)> = None;
+    let mut fast_poll = false;
+    loop {
+        // Forward any events that landed since the last tick.
+        pump_sessions(&mut sessions, &mut writer)?;
+        if let Some((rid, handle)) = v1_pending.take() {
+            // Wake-ups while awaiting the one-shot only matter for two
+            // things: forwarding live v2 streams' frames (tight tick)
+            // and observing shutdown (the idle tick suffices) — pure v1
+            // traffic keeps the old low-churn cadence.
+            let tick = if sessions.is_empty() {
+                IDLE_READ_TIMEOUT
+            } else {
+                STREAM_READ_TIMEOUT
+            };
+            let response = match handle.next_event_timeout(tick) {
+                Ok(JobEvent::Result(result)) => Some(protocol::ok_response(
+                    rid,
+                    protocol::job_result_to_json(&result),
+                )),
+                Ok(JobEvent::Error(e)) => {
+                    Some(protocol::error_response(rid, &format!("{e:#}")))
+                }
+                Ok(JobEvent::Cancelled) => {
+                    Some(protocol::error_response(rid, "request cancelled"))
+                }
+                // Lifecycle events of the one-shot drain silently, just
+                // as the old blocking fold did.
+                Ok(_) => None,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    Some(protocol::error_response(rid, "engine worker dropped"))
+                }
+            };
+            match response {
+                Some(response) => {
+                    writer.write_all(response.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                None => v1_pending = Some((rid, handle)),
+            }
+            continue;
+        }
+        // Live streams tighten the read-timeout tick: the poll cadence
+        // bounds event-forwarding latency.
+        let want_fast = !sessions.is_empty();
+        if want_fast != fast_poll {
+            reader.get_ref().set_read_timeout(Some(if want_fast {
+                STREAM_READ_TIMEOUT
+            } else {
+                IDLE_READ_TIMEOUT
+            }))?;
+            fast_poll = want_fast;
+        }
+        let line = match poll_line(&mut reader, &mut buf)? {
+            LinePoll::Eof => break,
+            LinePoll::Pending => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            LinePoll::Line(line) => line,
+        };
         if line.trim().is_empty() {
             continue;
         }
+        // `None` response: a v2 query became a session; its frames flow
+        // from pump_sessions.
         let response = match Request::parse(&line) {
-            Err(e) => protocol::error_response(0, &format!("{e:#}")),
+            Err(e) => {
+                // v1 keeps the old lenient error reply (id 0); v2 gets a
+                // structured bad_request frame addressed to the request.
+                let (pid, pv) = Request::peek_meta(&line);
+                if pv >= 2 {
+                    Some(protocol::error_frame(pid, ErrorCode::BadRequest, &format!("{e:#}")))
+                } else {
+                    Some(protocol::error_response(0, &format!("{e:#}")))
+                }
+            }
             Ok(req) => match req.op {
-                Op::Ping => protocol::ok_response(req.id, crate::util::json::Json::str("pong")),
+                Op::Ping => {
+                    Some(protocol::ok_response(req.id, crate::util::json::Json::str("pong")))
+                }
                 Op::Stats => {
                     // "exec" (set by stats_json) stays the process-wide
                     // executor — that is where the engine's batch jobs
@@ -353,27 +513,75 @@ fn handle_connection(
                     if !on_global {
                         j.set("handler_exec", exec.stats().to_json());
                     }
-                    protocol::ok_response(req.id, j)
+                    Some(protocol::ok_response(req.id, j))
                 }
                 Op::Shutdown => {
                     shutdown.store(true, Ordering::SeqCst);
-                    protocol::ok_response(req.id, crate::util::json::Json::str("bye"))
+                    Some(protocol::ok_response(req.id, crate::util::json::Json::str("bye")))
                 }
-                Op::Query(q) => match router.submit(q) {
-                    Err(e) => protocol::error_response(req.id, &format!("{e:#}")),
-                    Ok(rx) => match rx.recv() {
-                        Ok(Ok(result)) => {
-                            protocol::ok_response(req.id, router::job_result_to_json(&result))
+                Op::Cancel { target } => {
+                    // Scoped to this connection's sessions by
+                    // construction; the ack reports whether the target
+                    // was found in flight and cancellation *requested*.
+                    // The terminal frame (via the pump) is `cancelled`
+                    // unless the job wins the race by completing in the
+                    // scheduler tick already in progress — then it is
+                    // `result`.
+                    let found = match sessions.iter().find(|s| s.wire_id == target) {
+                        Some(s) => {
+                            s.handle.cancel();
+                            true
                         }
-                        Ok(Err(e)) => protocol::error_response(req.id, &format!("{e:#}")),
-                        Err(_) => protocol::error_response(req.id, "engine worker dropped"),
-                    },
+                        None => false,
+                    };
+                    Some(protocol::ok_response(
+                        req.id,
+                        crate::util::json::Json::obj(vec![(
+                            "cancelled",
+                            crate::util::json::Json::Bool(found),
+                        )]),
+                    ))
+                }
+                Op::Query(q) if req.v >= 2 => {
+                    if sessions.iter().any(|s| s.wire_id == req.id) {
+                        Some(protocol::error_frame(
+                            req.id,
+                            ErrorCode::BadRequest,
+                            "duplicate id: a stream with this id is in flight on this connection",
+                        ))
+                    } else {
+                        match router.submit_with(q, SubmitOpts { deadline_ms: req.deadline_ms }) {
+                            Err(e) => Some(protocol::error_frame(
+                                req.id,
+                                code_of(&e),
+                                &format!("{e:#}"),
+                            )),
+                            Ok(handle) => {
+                                sessions.push(StreamSession { wire_id: req.id, handle });
+                                None
+                            }
+                        }
+                    }
+                }
+                // v1 one-shot query: await the terminal result before
+                // reading further requests (the pre-streaming ordering
+                // contract, with bit-identical response bytes) — but via
+                // the pending-state fold above, so concurrent v2 streams
+                // on this connection keep receiving frames meanwhile.
+                Op::Query(q) => match router.submit(q) {
+                    Err(e) => Some(protocol::error_response(req.id, &format!("{e:#}"))),
+                    Ok(handle) => {
+                        v1_pending = Some((req.id, handle));
+                        None
+                    }
                 },
             },
         };
-        writer.write_all(response.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        if let Some(response) = response {
+            writer.write_all(response.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
         if shutdown.load(Ordering::SeqCst) {
             break;
         }

@@ -1,6 +1,6 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Wire protocol: newline-delimited JSON over TCP, in two versions.
 //!
-//! Requests:
+//! **v1 (default)** — one-shot request/response, unchanged:
 //! ```json
 //! {"id": 1, "op": "query", "dataset": "aime", "query_index": 3,
 //!  "scheme": "spec-reason", "threshold": 7, "first_n_base": 0,
@@ -11,12 +11,37 @@
 //! ```
 //! Responses: `{"id": 1, "ok": true, "result": {...}}` or
 //! `{"id": 1, "ok": false, "error": "..."}`.
+//!
+//! **v2 (streaming sessions)** — requests carry `"v": 2` and a
+//! *required, connection-unique numeric* `"id"`.  A v2 `query` answers
+//! with a stream of NDJSON event frames ending in exactly one terminal
+//! frame:
+//! ```json
+//! {"id": 7, "v": 2, "event": "queued"}
+//! {"id": 7, "v": 2, "event": "admitted"}
+//! {"id": 7, "v": 2, "event": "step", "kind": "speculated", "step": 0,
+//!  "tokens": 18, "effective_threshold": 7}
+//! {"id": 7, "v": 2, "event": "step", "kind": "accepted", "step": 0,
+//!  "score": 8, "effective_threshold": 7, "tokens": 18}
+//! {"id": 7, "v": 2, "event": "preempted"}
+//! {"id": 7, "v": 2, "event": "result", "ok": true, "result": {...}}
+//! ```
+//! Terminal frames are `result`, `error` (with a structured `"code"`:
+//! `bad_request | overloaded | cancelled | deadline_exceeded |
+//! engine_failure | shutdown`) or `cancelled`.  v2 queries may carry
+//! `"deadline_ms"` (enforced end-to-end deadline) and can be aborted
+//! mid-flight by `{"id": 9, "v": 2, "op": "cancel", "target": 7}` —
+//! cancellation is scoped to the connection that submitted the target,
+//! and the ack's `{"cancelled": true}` means *requested*: a job that
+//! completes in the scheduler tick already in progress still terminates
+//! with `result`.  v2 ids must be integers within ±(2^53 − 1) — the
+//! JSON number range where they round-trip exactly.
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::Scheme;
 use crate::metrics::QueryMetrics;
-use crate::scheduler::Priority;
+use crate::scheduler::{code_of, ErrorCode, JobEvent, JobResult, Priority};
 use crate::semantics::Dataset;
 use crate::util::json::Json;
 
@@ -26,6 +51,9 @@ pub enum Op {
     Stats,
     Shutdown,
     Query(QueryRequest),
+    /// Abort an in-flight v2 query (by its request id) on this
+    /// connection.
+    Cancel { target: i64 },
 }
 
 #[derive(Debug, Clone)]
@@ -46,17 +74,66 @@ pub struct QueryRequest {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: i64,
+    /// Protocol version: 1 (one-shot, default) or 2 (streaming session).
+    pub v: u8,
+    /// v2 only: enforced end-to-end deadline for `query` ops.
+    pub deadline_ms: Option<u64>,
     pub op: Op,
 }
 
 impl Request {
     pub fn parse(line: &str) -> Result<Request> {
         let j = Json::parse(line).context("request is not valid JSON")?;
-        let id = j.get("id").as_i64().unwrap_or(0);
+        let v = match j.get("v") {
+            Json::Null => 1u8,
+            val => match val.as_usize() {
+                Some(1) => 1,
+                Some(2) => 2,
+                _ => anyhow::bail!("unsupported protocol version (expected 1 or 2)"),
+            },
+        };
+        // v1 keeps the lenient default (missing/non-numeric id -> 0);
+        // v2 sessions are addressable (cancel-by-id), so an ambiguous id
+        // is a bad_request.
+        let id = match j.get("id").as_i64() {
+            Some(i) => i,
+            None if v >= 2 => {
+                anyhow::bail!("v2 requests require a numeric 'id' (used for cancel/streaming)")
+            }
+            None => 0,
+        };
+        // Ids are load-bearing on v2 (event matching, cancel targets) and
+        // ride JSON numbers (f64): outside ±(2^53 - 1) they no longer
+        // round-trip exactly, so frames could address the wrong stream.
+        // unsigned_abs: huge floats saturate `as i64` to i64::MIN, whose
+        // signed abs() overflows.
+        if v >= 2 {
+            anyhow::ensure!(
+                id.unsigned_abs() < (1u64 << 53),
+                "v2 'id' must be within +/-(2^53 - 1) (JSON number precision)"
+            );
+        }
+        // v2-only field; on v1 it stays an ignored unknown field, exactly
+        // as pre-versioning servers treated it.
+        let deadline_ms = match j.get("deadline_ms") {
+            _ if v < 2 => None,
+            Json::Null => None,
+            val => match val.as_usize() {
+                Some(ms) if ms > 0 => Some(ms as u64),
+                _ => anyhow::bail!("'deadline_ms' must be a positive integer"),
+            },
+        };
         let op = match j.req_str("op")? {
             "ping" => Op::Ping,
             "stats" => Op::Stats,
             "shutdown" => Op::Shutdown,
+            "cancel" => {
+                let target = j
+                    .get("target")
+                    .as_i64()
+                    .ok_or_else(|| anyhow::anyhow!("'cancel' requires a numeric 'target' id"))?;
+                Op::Cancel { target }
+            }
             "query" => {
                 let dataset = Dataset::parse(j.req_str("dataset")?)?;
                 let scheme = match j.get("scheme").as_str() {
@@ -88,7 +165,26 @@ impl Request {
             }
             other => anyhow::bail!("unknown op '{other}'"),
         };
-        Ok(Request { id, op })
+        Ok(Request { id, v, deadline_ms, op })
+    }
+
+    /// Best-effort `(id, v)` extraction from a raw request line, for
+    /// addressing the error reply to a request that failed to parse.
+    /// Any numeric version other than 1 reports as 2 so the error goes
+    /// out as a frame addressed to the request's id (a forward-version
+    /// client correlates by id); unparseable input reports as v1 id 0 —
+    /// exactly the old behavior.
+    pub fn peek_meta(line: &str) -> (i64, u8) {
+        match Json::parse(line) {
+            Ok(j) => {
+                let v = match j.get("v").as_usize() {
+                    None | Some(1) => 1,
+                    Some(_) => 2,
+                };
+                (j.get("id").as_i64().unwrap_or(0), v)
+            }
+            Err(_) => (0, 1),
+        }
     }
 }
 
@@ -108,6 +204,74 @@ pub fn ok_response(id: i64, result: Json) -> String {
         ("id", Json::num(id as f64)),
         ("ok", Json::Bool(true)),
         ("result", result),
+    ])
+    .to_string()
+}
+
+/// Serialize a completed request for the wire: the per-query metrics plus
+/// serving-side telemetry (queue wait, time-to-first-step, preemptions).
+pub fn job_result_to_json(r: &JobResult) -> Json {
+    let mut j = metrics_to_json(&r.metrics, r.scheme);
+    j.set("priority", Json::str(r.priority.name()));
+    j.set("queue_wait_s", Json::num(r.queue_wait_s));
+    j.set("ttfs_s", Json::num(r.ttfs_s));
+    j.set("e2e_s", Json::num(r.e2e_s));
+    j.set("preemptions", Json::num(r.preemptions as f64));
+    j
+}
+
+/// Build one v2 NDJSON event frame for a session's [`JobEvent`].
+pub fn event_frame(id: i64, ev: &JobEvent) -> String {
+    let mut j = Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("v", Json::num(2.0)),
+    ]);
+    match ev {
+        JobEvent::Queued => j.set("event", Json::str("queued")),
+        JobEvent::Admitted => j.set("event", Json::str("admitted")),
+        JobEvent::Preempted => j.set("event", Json::str("preempted")),
+        JobEvent::Step(s) => {
+            j.set("event", Json::str("step"));
+            j.set("kind", Json::str(s.kind.name()));
+            j.set("step", Json::num(s.step as f64));
+            j.set("tokens", Json::num(s.tokens as f64));
+            if let Some(score) = s.score {
+                j.set("score", Json::num(score as f64));
+            }
+            if let Some(thr) = s.effective_threshold {
+                j.set("effective_threshold", Json::num(thr as f64));
+            }
+        }
+        JobEvent::Result(r) => {
+            j.set("event", Json::str("result"));
+            j.set("ok", Json::Bool(true));
+            j.set("result", job_result_to_json(r));
+        }
+        JobEvent::Error(e) => {
+            j.set("event", Json::str("error"));
+            j.set("ok", Json::Bool(false));
+            j.set("code", Json::str(code_of(e).name()));
+            j.set("error", Json::str(format!("{e:#}")));
+        }
+        JobEvent::Cancelled => {
+            j.set("event", Json::str("cancelled"));
+            j.set("ok", Json::Bool(false));
+            j.set("code", Json::str(ErrorCode::Cancelled.name()));
+        }
+    }
+    j.to_string()
+}
+
+/// Build a terminal v2 error frame outside a live job stream (parse
+/// failures, submit rejections, duplicate ids).
+pub fn error_frame(id: i64, code: ErrorCode, err: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("v", Json::num(2.0)),
+        ("event", Json::str("error")),
+        ("ok", Json::Bool(false)),
+        ("code", Json::str(code.name())),
+        ("error", Json::str(err)),
     ])
     .to_string()
 }
@@ -191,6 +355,130 @@ mod tests {
         assert!(Request::parse(r#"{"op":"warp"}"#).is_err());
         assert!(Request::parse(r#"{"op":"query"}"#).is_err()); // no dataset
         assert!(Request::parse(r#"{"op":"query","dataset":"aime","threshold":11}"#).is_err());
+    }
+
+    #[test]
+    fn v1_keeps_lenient_id_default() {
+        // v1 compat: missing or non-numeric ids coerce to 0, exactly as
+        // before the v2 redesign.
+        let r = Request::parse(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!((r.id, r.v), (0, 1));
+        let r = Request::parse(r#"{"id":"seven","op":"ping"}"#).unwrap();
+        assert_eq!((r.id, r.v), (0, 1));
+        assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn v2_requires_numeric_id() {
+        let err = Request::parse(r#"{"v":2,"op":"query","dataset":"aime"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("numeric 'id'"));
+        let err = Request::parse(r#"{"v":2,"id":"x","op":"ping"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("numeric 'id'"));
+        let r = Request::parse(r#"{"v":2,"id":9,"op":"query","dataset":"aime"}"#).unwrap();
+        assert_eq!((r.id, r.v), (9, 2));
+        // Unknown versions are rejected outright.
+        assert!(Request::parse(r#"{"v":3,"id":1,"op":"ping"}"#).is_err());
+        assert!(Request::parse(r#"{"v":"two","id":1,"op":"ping"}"#).is_err());
+        // Ids outside the exact-f64 integer range cannot address streams
+        // reliably — rejected on v2, still lenient on v1.
+        let err =
+            Request::parse(r#"{"v":2,"id":9007199254740993,"op":"ping"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("2^53"));
+        let max_ok = (1i64 << 53) - 1;
+        let line = format!(r#"{{"v":2,"id":{max_ok},"op":"ping"}}"#);
+        assert_eq!(Request::parse(&line).unwrap().id, max_ok);
+        // Huge floats saturate `as i64` to i64::MIN — must reject, not
+        // overflow (signed abs of i64::MIN panics in debug builds).
+        assert!(Request::parse(r#"{"v":2,"id":-1e300,"op":"ping"}"#).is_err());
+        assert!(Request::parse(r#"{"id":9007199254740993,"op":"ping"}"#).is_ok());
+    }
+
+    #[test]
+    fn parses_cancel_and_deadline() {
+        let r = Request::parse(r#"{"v":2,"id":9,"op":"cancel","target":7}"#).unwrap();
+        match r.op {
+            Op::Cancel { target } => assert_eq!(target, 7),
+            _ => panic!("wrong op"),
+        }
+        assert!(Request::parse(r#"{"v":2,"id":9,"op":"cancel"}"#).is_err());
+        let r = Request::parse(
+            r#"{"v":2,"id":4,"op":"query","dataset":"aime","deadline_ms":1500}"#,
+        )
+        .unwrap();
+        assert_eq!(r.deadline_ms, Some(1500));
+        assert!(Request::parse(
+            r#"{"v":2,"id":4,"op":"query","dataset":"aime","deadline_ms":0}"#
+        )
+        .is_err());
+        assert!(Request::parse(
+            r#"{"v":2,"id":4,"op":"query","dataset":"aime","deadline_ms":"soon"}"#
+        )
+        .is_err());
+        // On v1, deadline_ms stays an ignored unknown field (even when
+        // malformed), exactly as pre-versioning servers treated it.
+        let r =
+            Request::parse(r#"{"op":"query","dataset":"aime","deadline_ms":1500}"#).unwrap();
+        assert_eq!(r.deadline_ms, None);
+        let r =
+            Request::parse(r#"{"op":"query","dataset":"aime","deadline_ms":0}"#).unwrap();
+        assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn peek_meta_recovers_id_and_version() {
+        assert_eq!(Request::peek_meta(r#"{"v":2,"id":5,"op":"warp"}"#), (5, 2));
+        // Forward versions answer as frames addressed to the id, not as
+        // an anonymous v1 error.
+        assert_eq!(Request::peek_meta(r#"{"v":3,"id":5,"op":"ping"}"#), (5, 2));
+        assert_eq!(Request::peek_meta(r#"{"op":"warp"}"#), (0, 1));
+        assert_eq!(Request::peek_meta("garbage"), (0, 1));
+    }
+
+    #[test]
+    fn event_frames_are_valid_json() {
+        use crate::coordinator::{StepEvent, StepKind};
+        use crate::scheduler::{coded, ErrorCode, JobEvent};
+
+        let step = JobEvent::Step(StepEvent {
+            step: 3,
+            kind: StepKind::Accepted,
+            score: Some(8),
+            effective_threshold: Some(7),
+            tokens: 21,
+        });
+        let j = Json::parse(&event_frame(7, &step)).unwrap();
+        assert_eq!(j.get("id").as_i64(), Some(7));
+        assert_eq!(j.get("v").as_usize(), Some(2));
+        assert_eq!(j.get("event").as_str(), Some("step"));
+        assert_eq!(j.get("kind").as_str(), Some("accepted"));
+        assert_eq!(j.get("score").as_usize(), Some(8));
+        assert_eq!(j.get("effective_threshold").as_usize(), Some(7));
+        assert_eq!(j.get("tokens").as_usize(), Some(21));
+
+        for (ev, name) in [
+            (JobEvent::Queued, "queued"),
+            (JobEvent::Admitted, "admitted"),
+            (JobEvent::Preempted, "preempted"),
+        ] {
+            let j = Json::parse(&event_frame(1, &ev)).unwrap();
+            assert_eq!(j.get("event").as_str(), Some(name));
+            assert!(j.get("ok").is_null(), "{name} is not terminal");
+        }
+
+        let err = JobEvent::Error(coded(ErrorCode::DeadlineExceeded, "too late"));
+        let j = Json::parse(&event_frame(2, &err)).unwrap();
+        assert_eq!(j.get("event").as_str(), Some("error"));
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        assert_eq!(j.get("code").as_str(), Some("deadline_exceeded"));
+        assert_eq!(j.get("error").as_str(), Some("too late"));
+
+        let j = Json::parse(&event_frame(3, &JobEvent::Cancelled)).unwrap();
+        assert_eq!(j.get("event").as_str(), Some("cancelled"));
+        assert_eq!(j.get("code").as_str(), Some("cancelled"));
+
+        let j = Json::parse(&error_frame(4, ErrorCode::BadRequest, "nope")).unwrap();
+        assert_eq!(j.get("code").as_str(), Some("bad_request"));
+        assert_eq!(j.get("ok").as_bool(), Some(false));
     }
 
     #[test]

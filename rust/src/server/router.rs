@@ -8,17 +8,16 @@
 //! render results/stats as JSON.  Connection handlers only parse and
 //! serialize; the engine lives inside the scheduler's composer thread.
 
-use std::sync::mpsc;
-
 use anyhow::Result;
 
 use crate::config::DeployConfig;
 use crate::coordinator::AcceptancePolicy;
-use crate::scheduler::{JobRequest, JobResult, Scheduler};
-use crate::server::protocol::{metrics_to_json, QueryRequest};
+use crate::scheduler::{JobHandle, JobRequest, Scheduler, SubmitOpts};
+use crate::server::protocol::QueryRequest;
 use crate::util::json::Json;
 
 pub use crate::scheduler::RouterStats;
+pub use crate::server::protocol::job_result_to_json;
 
 pub struct Router {
     sched: Scheduler,
@@ -40,8 +39,16 @@ impl Router {
     }
 
     /// Try to admit a query; `Err` means backpressure (`overloaded`).
-    pub fn submit(&self, req: QueryRequest) -> Result<mpsc::Receiver<Result<JobResult>>> {
+    /// The returned [`JobHandle`] streams the job's lifecycle events; v1
+    /// one-shot callers fold it with [`JobHandle::recv`].
+    pub fn submit(&self, req: QueryRequest) -> Result<JobHandle> {
         self.sched.submit(self.resolve(&req))
+    }
+
+    /// [`submit`](Self::submit) with per-request options (the v2 path's
+    /// enforced `deadline_ms`).
+    pub fn submit_with(&self, req: QueryRequest, opts: SubmitOpts) -> Result<JobHandle> {
+        self.sched.submit_with(self.resolve(&req), opts)
     }
 
     /// Apply per-request overrides onto the deployment defaults.
@@ -63,7 +70,7 @@ impl Router {
             dataset: req.dataset,
             query_index: req.query_index,
             sample: req.sample,
-            seed: req.seed.unwrap_or(0x5EED),
+            seed: req.seed.unwrap_or(self.cfg.seed),
             spec,
             priority: req.priority.unwrap_or_default(),
         }
@@ -96,24 +103,12 @@ impl Router {
     }
 }
 
-/// Serialize a completed request for the wire: the per-query metrics plus
-/// serving-side telemetry (queue wait, time-to-first-step, preemptions).
-pub fn job_result_to_json(r: &JobResult) -> Json {
-    let mut j = metrics_to_json(&r.metrics, r.scheme);
-    j.set("priority", Json::str(r.priority.name()));
-    j.set("queue_wait_s", Json::num(r.queue_wait_s));
-    j.set("ttfs_s", Json::num(r.ttfs_s));
-    j.set("e2e_s", Json::num(r.e2e_s));
-    j.set("preemptions", Json::num(r.preemptions as f64));
-    j
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::Scheme;
     use crate::metrics::QueryMetrics;
-    use crate::scheduler::Priority;
+    use crate::scheduler::{JobResult, Priority};
 
     // Router startup requires artifacts + engine; covered by
     // rust/tests/server_integration.rs. Here: pure serialization.

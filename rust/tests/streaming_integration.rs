@@ -1,0 +1,312 @@
+//! Streaming-protocol integration: the v2 session API end-to-end against
+//! the real engine — deterministic event ordering, mid-flight
+//! cancellation returning the KV reservation ledger to baseline, and
+//! deadline eviction of queued vs running jobs.
+//!
+//! All tests skip (with a notice) when `artifacts/` is absent, like the
+//! other AOT-dependent suites.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::scheduler::{
+    code_of, ErrorCode, JobEvent, JobRequest, Priority, Scheduler, SubmitOpts,
+};
+use specreason::semantics::Dataset;
+use specreason::server::{Server, StreamClient, WireEvent};
+use specreason::util::json::Json;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn deploy(max_batch: usize, budget: usize) -> DeployConfig {
+    DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: budget,
+        answer_tokens: 8,
+        max_batch,
+        max_queue: 64,
+        ..Default::default()
+    }
+}
+
+fn job(cfg: &DeployConfig, dataset: Dataset, index: usize) -> JobRequest {
+    JobRequest {
+        dataset,
+        query_index: index,
+        sample: 0,
+        seed: cfg.seed,
+        spec: cfg.spec_config(),
+        priority: Priority::Normal,
+    }
+}
+
+const EVENT_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Streamed v2 requests emit their full lifecycle in order — `queued`,
+/// `admitted`, ≥ one `step` event per reasoning step, a `result`
+/// terminal — and the event sequence is deterministic across runs.
+#[test]
+fn v2_stream_orders_events_deterministically() {
+    if !have_artifacts() {
+        eprintln!("skipping v2_stream_orders_events_deterministically: no artifacts/");
+        return;
+    }
+    let server = Server::bind(deploy(1, 96)).expect("server bind");
+    let addr = server.addr.to_string();
+    let handle = thread::spawn(move || server.run().expect("server run"));
+
+    let run_once = |client: &mut StreamClient| -> (Vec<String>, Json) {
+        let id = client
+            .submit(Json::obj(vec![
+                ("dataset", Json::str("math500")),
+                ("query_index", Json::num(0.0)),
+                ("scheme", Json::str("spec-reason")),
+                ("budget", Json::num(96.0)),
+            ]))
+            .expect("submit");
+        let mut kinds = Vec::new();
+        loop {
+            let (eid, ev) = client.next_event().expect("event");
+            assert_eq!(eid, id, "single stream, single id");
+            match ev {
+                WireEvent::Queued => kinds.push("queued".to_string()),
+                WireEvent::Admitted => kinds.push("admitted".to_string()),
+                WireEvent::Preempted => kinds.push("preempted".to_string()),
+                WireEvent::Step { kind, tokens, score, effective_threshold, .. } => {
+                    assert!(tokens > 0);
+                    if kind == "accepted" {
+                        assert!(score.unwrap() >= effective_threshold.unwrap());
+                    }
+                    kinds.push(format!("step:{kind}"));
+                }
+                WireEvent::Result(r) => {
+                    kinds.push("result".to_string());
+                    return (kinds, r);
+                }
+                WireEvent::Error { code, message } => panic!("query failed: {code}: {message}"),
+                WireEvent::Cancelled => panic!("query spuriously cancelled"),
+            }
+        }
+    };
+
+    let mut client = StreamClient::connect(&addr).expect("connect");
+    let (kinds_a, result_a) = run_once(&mut client);
+    let (kinds_b, result_b) = run_once(&mut client);
+
+    // Lifecycle shape: queued first, then admitted, terminal last.
+    assert_eq!(kinds_a.first().map(String::as_str), Some("queued"));
+    assert_eq!(kinds_a.get(1).map(String::as_str), Some("admitted"));
+    assert_eq!(kinds_a.last().map(String::as_str), Some("result"));
+    // ≥ one step event per reasoning step.
+    let steps_total = result_a.get("steps_total").as_usize().unwrap();
+    let step_events = kinds_a.iter().filter(|k| k.starts_with("step:")).count();
+    assert!(steps_total > 0);
+    assert!(
+        step_events >= steps_total,
+        "{step_events} step events < {steps_total} reasoning steps"
+    );
+    // Deterministic: identical event sequence and deterministic result
+    // fields on a re-run.
+    assert_eq!(kinds_a, kinds_b);
+    for key in ["thinking_tokens", "steps_total", "steps_speculated", "steps_accepted"] {
+        assert_eq!(result_a.get(key).as_usize(), result_b.get(key).as_usize(), "{key}");
+    }
+    assert_eq!(result_a.get("correct").as_bool(), result_b.get("correct").as_bool());
+
+    client.shutdown().expect("shutdown");
+    handle.join().unwrap();
+}
+
+/// A mid-flight cancel aborts through the preemption rollback path: the
+/// worst-case block-reservation ledger returns to its pre-admission
+/// level (zero here) and the engine keeps serving.
+#[test]
+fn cancel_midflight_returns_kv_ledger_to_baseline() {
+    if !have_artifacts() {
+        eprintln!("skipping cancel_midflight_returns_kv_ledger_to_baseline: no artifacts/");
+        return;
+    }
+    let cfg = deploy(1, 256);
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    assert_eq!(sched.stats().kv_reserved_blocks, 0, "pre-admission baseline");
+
+    let handle = sched.submit(job(&cfg, Dataset::Aime, 0)).expect("submit");
+    // Wait until the job is demonstrably in flight (first step event).
+    loop {
+        match handle.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Step(_) => break,
+            JobEvent::Queued | JobEvent::Admitted => continue,
+            other => panic!("unexpected pre-step event: {other:?}"),
+        }
+    }
+    let reserved = sched.stats().kv_reserved_blocks;
+    assert!(reserved > 0, "an admitted sequence must hold a ledger reservation");
+
+    handle.cancel();
+    // Drain to the terminal event: must be Cancelled.  (Cancel can in
+    // general race a completing job, but after the *first* step of a
+    // budget-256 query dozens of engine ops remain and the composer
+    // reaps between every one — completion cannot win here.)
+    loop {
+        match handle.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Cancelled => break,
+            ev if ev.is_terminal() => panic!("wrong terminal after cancel: {ev:?}"),
+            _ => continue,
+        }
+    }
+    // The composer updates the gauge on its next loop tick.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let s = sched.stats();
+        if s.kv_reserved_blocks == 0 && s.running == 0 {
+            assert_eq!(s.cancelled, 1);
+            break;
+        }
+        assert!(Instant::now() < deadline, "ledger never returned to baseline");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    // The engine is healthy and the blocks are actually free: a fresh
+    // job admits and completes.
+    let handle = sched.submit(job(&cfg, Dataset::Aime, 1)).expect("submit after cancel");
+    let result = handle
+        .recv_timeout(EVENT_TIMEOUT)
+        .expect("reply dropped")
+        .expect("query failed after cancel");
+    assert!(result.metrics.steps_total > 0);
+    sched.shutdown();
+}
+
+/// Deadlines are enforced, not just recorded: a queued job past its
+/// deadline is rejected without ever running; a running job past its
+/// deadline is evicted mid-flight.  Both surface `deadline_exceeded`.
+#[test]
+fn deadline_evicts_queued_and_running_jobs() {
+    if !have_artifacts() {
+        eprintln!("skipping deadline_evicts_queued_and_running_jobs: no artifacts/");
+        return;
+    }
+    let cfg = deploy(1, 256);
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+
+    // Occupy the single batch slot with a long job.
+    let long = sched.submit(job(&cfg, Dataset::Aime, 0)).expect("submit long");
+    loop {
+        match long.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Admitted => break,
+            JobEvent::Queued => continue,
+            other => panic!("unexpected event: {other:?}"),
+        }
+    }
+
+    // Queued eviction: B waits behind the long job and expires there.
+    let queued = sched
+        .submit_with(job(&cfg, Dataset::Math500, 1), SubmitOpts { deadline_ms: Some(1) })
+        .expect("submit queued");
+    let mut saw_admitted = false;
+    let queued_err = loop {
+        match queued.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Error(e) => break e,
+            JobEvent::Admitted => saw_admitted = true,
+            ev if ev.is_terminal() => panic!("wrong terminal: {ev:?}"),
+            _ => continue,
+        }
+    };
+    assert_eq!(code_of(&queued_err), ErrorCode::DeadlineExceeded);
+    assert!(!saw_admitted, "expired while queued, must never admit");
+
+    // Let the long job finish undisturbed (deadline-free jobs are
+    // untouched by the enforcement).
+    let long_result = long
+        .recv_timeout(EVENT_TIMEOUT)
+        .expect("long reply dropped")
+        .expect("long query failed");
+    assert!(long_result.metrics.steps_total > 0);
+
+    // Running eviction: alone on the engine, admitted immediately, then
+    // evicted mid-flight when its deadline lapses.
+    let running = sched
+        .submit_with(job(&cfg, Dataset::Aime, 2), SubmitOpts { deadline_ms: Some(150) })
+        .expect("submit running");
+    let mut saw_admitted = false;
+    let running_err = loop {
+        match running.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Error(e) => break e,
+            JobEvent::Admitted => saw_admitted = true,
+            ev if ev.is_terminal() => panic!("wrong terminal: {ev:?}"),
+            _ => continue,
+        }
+    };
+    assert_eq!(code_of(&running_err), ErrorCode::DeadlineExceeded);
+    assert!(saw_admitted, "a 150ms deadline must admit before expiring");
+
+    let s = sched.stats();
+    assert_eq!(s.deadline_evicted, 2);
+    assert_eq!(s.kv_reserved_blocks, 0);
+    sched.shutdown();
+}
+
+/// Cancel over the wire: the ack reports the hit, the stream ends in a
+/// `cancelled` terminal frame, counters surface in the `stats` op, and
+/// v1 one-shot clients keep working on the same server.
+#[test]
+fn wire_cancel_and_v1_coexistence() {
+    if !have_artifacts() {
+        eprintln!("skipping wire_cancel_and_v1_coexistence: no artifacts/");
+        return;
+    }
+    let server = Server::bind(deploy(1, 256)).expect("server bind");
+    let addr = server.addr.to_string();
+    let handle = thread::spawn(move || server.run().expect("server run"));
+
+    let mut client = StreamClient::connect(&addr).expect("connect");
+    let id = client
+        .submit(Json::obj(vec![
+            ("dataset", Json::str("aime")),
+            ("query_index", Json::num(0.0)),
+            ("budget", Json::num(256.0)),
+        ]))
+        .expect("submit");
+    // In flight: at least one step event seen.
+    loop {
+        let (eid, ev) = client.next_event().expect("event");
+        assert_eq!(eid, id);
+        match ev {
+            WireEvent::Step { .. } => break,
+            ev if ev.is_terminal() => panic!("terminal before cancel: {ev:?}"),
+            _ => continue,
+        }
+    }
+    assert!(client.cancel(id).expect("cancel"), "in-flight stream must be found");
+    // Strict Cancelled assertion is safe here for the same reason as the
+    // scheduler-level cancel test: after the first step of a budget-256
+    // query, completion cannot beat the reaper.
+    assert!(matches!(client.wait_terminal(id).expect("terminal"), WireEvent::Cancelled));
+    // Cancelling a finished (or unknown) id reports a miss.
+    assert!(!client.cancel(id).expect("cancel miss"));
+    assert!(!client.cancel(9999).expect("cancel unknown"));
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.get("cancelled").as_usize(), Some(1));
+    assert_eq!(stats.get("kv_reserved_blocks").as_usize(), Some(0));
+    assert!(!stats.get("ttfe_s_mean").is_null());
+
+    // v1 one-shot traffic still works on the same server.
+    let mut v1 = specreason::server::Client::connect(&addr).expect("v1 connect");
+    v1.ping().expect("v1 ping");
+    let r = v1
+        .call(Json::obj(vec![
+            ("op", Json::str("query")),
+            ("dataset", Json::str("math500")),
+            ("query_index", Json::num(0.0)),
+            ("budget", Json::num(64.0)),
+        ]))
+        .expect("v1 query");
+    assert!(r.get("thinking_tokens").as_usize().unwrap() > 0);
+
+    client.shutdown().expect("shutdown");
+    handle.join().unwrap();
+}
