@@ -24,6 +24,14 @@
 //! time-to-first-`step`-frame, mid-flight cancel latency and events per
 //! request land under `"streaming"` in `BENCH_server.json`.
 //!
+//! A **shared-prefix mode** serves the same query repeatedly (every
+//! request shares the full prompt) with the prefix KV cache off vs on,
+//! reporting the reuse rate (fraction of requests that adopted a cached
+//! prefix, plus reused tokens) and throughput under `"prefix_cache"` —
+//! with the cache on,
+//! `prefix_tokens_reused` must be positive and the worst-case KV
+//! reservation per request drops by the shared blocks.
+//!
 //! Knobs: SPECREASON_BENCH_SERVER_REQS (default 16; requests per run),
 //! SPECREASON_BENCH_SERVER_CLIENTS (default 8),
 //! SPECREASON_BENCH_SERVER_BUDGET (default 96).
@@ -215,6 +223,91 @@ fn run_load(sched: &Arc<Scheduler>, cfg: &DeployConfig, clients: usize, total: u
     }
 }
 
+/// Shared-prefix workload: `total` closed-loop requests for the *same*
+/// query (identical prompt), cache off vs on.  Returns the per-setting
+/// report rows.
+fn run_prefix_mode(budget: usize, total: usize) -> Json {
+    let mut rows = Vec::new();
+    let mut reused_on = 0u64;
+    for enabled in [false, true] {
+        let cfg = DeployConfig {
+            addr: "127.0.0.1:0".into(),
+            token_budget: budget,
+            answer_tokens: 8,
+            max_batch: 4,
+            max_queue: 256,
+            prefix_cache: enabled,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+        let spec = cfg.spec_config();
+        let t0 = Instant::now();
+        let mut reused_tokens_results = 0usize;
+        let mut hit_requests = 0usize;
+        for _ in 0..total {
+            let handle = sched
+                .submit(JobRequest {
+                    dataset: Dataset::Math500,
+                    query_index: 0,
+                    sample: 0,
+                    seed: 0xF16_A,
+                    spec: spec.clone(),
+                    priority: Priority::Normal,
+                })
+                .expect("submit");
+            let r = handle
+                .recv_timeout(Duration::from_secs(600))
+                .expect("reply dropped")
+                .expect("query failed");
+            reused_tokens_results += r.prefix_tokens_reused;
+            if r.prefix_tokens_reused > 0 {
+                hit_requests += 1;
+            }
+        }
+        let makespan = t0.elapsed().as_secs_f64();
+        let stats = sched.stats();
+        // Per-request reuse fraction (stats.prefix_hits sums over model
+        // partitions, so it would double-count a two-model engine).
+        let hit_rate = hit_requests as f64 / total.max(1) as f64;
+        println!(
+            "prefix_cache={enabled}: {total} reqs in {makespan:.2}s ({:.2} req/s), \
+             hits {}, tokens reused {}, cached blocks {}",
+            total as f64 / makespan,
+            stats.prefix_hits,
+            stats.prefix_tokens_reused,
+            stats.prefix_cached_blocks
+        );
+        if enabled {
+            reused_on = stats.prefix_tokens_reused;
+            // Acceptance gate (deterministic accounting, not wall clock):
+            // a shared-prefix workload with the cache on must reuse.
+            assert!(
+                stats.prefix_tokens_reused > 0,
+                "shared-prefix workload with prefix_cache on must reuse tokens"
+            );
+            assert!(
+                reused_tokens_results > 0,
+                "per-request prefix_tokens_reused must surface in results"
+            );
+        } else {
+            assert_eq!(stats.prefix_tokens_reused, 0, "cache off must never reuse");
+        }
+        rows.push(Json::obj(vec![
+            ("prefix_cache", Json::Bool(enabled)),
+            ("requests", Json::num(total as f64)),
+            ("throughput_rps", Json::num(total as f64 / makespan)),
+            ("prefix_hits", Json::num(stats.prefix_hits as f64)),
+            ("hit_rate", Json::num(hit_rate)),
+            ("prefix_tokens_reused", Json::num(stats.prefix_tokens_reused as f64)),
+            ("prefix_cached_blocks", Json::num(stats.prefix_cached_blocks as f64)),
+            ("prefix_evictions", Json::num(stats.prefix_evictions as f64)),
+        ]));
+        sched.shutdown();
+    }
+    println!("shared-prefix mode: cache-on reused {reused_on} prompt tokens");
+    Json::Arr(rows)
+}
+
 fn main() {
     let out_path = "BENCH_server.json";
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -318,6 +411,11 @@ fn main() {
         streaming.events_total as f64 / streaming.requests.max(1) as f64
     );
 
+    // --- shared-prefix mode: same prompt repeated, cache off vs on ---
+    let prefix_reqs = reqs.min(8).max(3);
+    println!("booting schedulers for shared-prefix mode ({prefix_reqs} reqs, cache off/on) ...");
+    let prefix_rows = run_prefix_mode(budget, prefix_reqs);
+
     let report = Json::obj(vec![
         ("bench", Json::str("serving_throughput")),
         ("requests_per_run", Json::num(reqs as f64)),
@@ -325,6 +423,7 @@ fn main() {
         ("host_parallelism", Json::num(host as f64)),
         ("runs", Json::Arr(rows)),
         ("speedup_batch8_vs_serial", Json::num(speedup)),
+        ("prefix_cache", prefix_rows),
         (
             "streaming",
             Json::obj(vec![

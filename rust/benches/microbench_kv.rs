@@ -1,0 +1,204 @@
+//! microbench_kv — shared-prefix KV cache: hit rate vs admitted
+//! throughput, cache off vs on.
+//!
+//!   cargo bench --bench microbench_kv
+//!   SPECREASON_BENCH_KV_REQS=500 cargo bench --bench microbench_kv   # quick
+//!
+//! Pure accounting-path benchmark (no engine, no artifacts — it runs on
+//! every CI host): a synthetic serving workload of `reqs` requests drawn
+//! from `families` prompt families, each request sharing its family's
+//! long prompt prefix and adding a private suffix.  Requests flow
+//! through the real `BlockPool` lifecycle — register → adopt (prefix
+//! lookup) → grow (prefill) → publish → grow (decode) → release — with a
+//! bounded in-flight window so live sequences genuinely co-own blocks.
+//!
+//! Two settings run back-to-back:
+//!
+//! * **cache off** — every request re-prefills its whole prompt;
+//! * **cache on**  — requests adopt their family prefix; the modeled
+//!   prefill charge (the calibrated `GpuClock`, same cost model the
+//!   figures use) covers only the uncached suffix.
+//!
+//! Reported per setting: reuse rate (hits / requests), reused tokens,
+//! modeled prefill GPU-seconds, admitted throughput (requests per
+//! modeled GPU-second), evictions under the cache-block budget, and the
+//! wall-clock accounting overhead (ops/s).  Deterministic gates (pure
+//! accounting, safe on noisy runners): with the cache on the reuse rate
+//! must exceed 50% and the modeled prefill charge must drop; with it
+//! off nothing may be reused.  Emits `BENCH_kv.json`.
+
+use std::time::Instant;
+
+use specreason::kvcache::{BlockPool, PoolConfig};
+use specreason::metrics::{GpuClock, Testbed};
+use specreason::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+const BLOCK: usize = 32;
+const PREFIX_TOKENS: usize = 256; // 8 full blocks shared per family
+const SUFFIX_TOKENS: usize = 64; // 2 private blocks per request
+const DECODE_TOKENS: usize = 256;
+const IN_FLIGHT: usize = 16;
+
+struct RunResult {
+    enabled: bool,
+    requests: usize,
+    hits: u64,
+    tokens_reused: u64,
+    evictions: u64,
+    prefill_gpu_s: f64,
+    total_gpu_s: f64,
+    wall_s: f64,
+}
+
+fn prompt_for(family: usize, req: usize) -> Vec<i32> {
+    let mut p = vec![family as i32 + 1; PREFIX_TOKENS];
+    p.extend(std::iter::repeat(10_000 + req as i32).take(SUFFIX_TOKENS));
+    p
+}
+
+fn run(enabled: bool, reqs: usize, families: usize, cache_budget: usize) -> RunResult {
+    let mut pool = BlockPool::new(PoolConfig { block_size: BLOCK, total_blocks: 1024 })
+        .expect("pool config");
+    if enabled {
+        pool.enable_prefix_cache(cache_budget);
+    }
+    let clock = GpuClock::new(Testbed::A6000x2);
+    let mut prefill_gpu_s = 0.0f64;
+    let mut total_gpu_s = 0.0f64;
+    let mut live: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+
+    let t0 = Instant::now();
+    for r in 0..reqs {
+        let seq = r as u64;
+        let prompt = prompt_for(r % families, r);
+        pool.register(seq).expect("register");
+        // Admission-time adoption of the cached family prefix.
+        let reused = pool.adopt_prefix(seq, &prompt).expect("adopt");
+        // Prompt prefill: accounting grows to the full prompt, but only
+        // the uncached suffix is charged (exactly the engine's rule).
+        pool.grow_to(seq, prompt.len()).expect("prefill grow");
+        let charged = prompt.len() - reused;
+        if charged > 0 {
+            prefill_gpu_s += clock.prefill_cost("base", charged);
+        }
+        pool.publish_prefix(seq, &prompt).expect("publish");
+        // Decode growth + a speculation rollback, then the final answer.
+        pool.grow_to(seq, prompt.len() + DECODE_TOKENS).expect("decode grow");
+        pool.rollback_to(seq, prompt.len() + DECODE_TOKENS / 2).expect("rollback");
+        total_gpu_s += clock.decode_cost("base", DECODE_TOKENS);
+
+        live.push_back(seq);
+        if live.len() > IN_FLIGHT {
+            pool.release(live.pop_front().unwrap()).expect("release");
+        }
+        if r % 256 == 0 {
+            pool.check_invariants();
+        }
+    }
+    while let Some(seq) = live.pop_front() {
+        pool.release(seq).expect("drain release");
+    }
+    pool.check_invariants();
+    let wall_s = t0.elapsed().as_secs_f64();
+    total_gpu_s += prefill_gpu_s;
+
+    let s = pool.prefix_stats();
+    RunResult {
+        enabled,
+        requests: reqs,
+        hits: s.hits,
+        tokens_reused: s.tokens_reused,
+        evictions: s.evictions,
+        prefill_gpu_s,
+        total_gpu_s,
+        wall_s,
+    }
+}
+
+fn row(r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("prefix_cache", Json::Bool(r.enabled)),
+        ("requests", Json::num(r.requests as f64)),
+        ("prefix_hits", Json::num(r.hits as f64)),
+        ("hit_rate", Json::num(r.hits as f64 / r.requests.max(1) as f64)),
+        ("prefix_tokens_reused", Json::num(r.tokens_reused as f64)),
+        ("prefix_evictions", Json::num(r.evictions as f64)),
+        ("prefill_gpu_s", Json::num(r.prefill_gpu_s)),
+        ("total_gpu_s", Json::num(r.total_gpu_s)),
+        (
+            "admitted_throughput_rps",
+            Json::num(r.requests as f64 / r.total_gpu_s.max(1e-12)),
+        ),
+        ("accounting_wall_s", Json::num(r.wall_s)),
+        (
+            "accounting_ops_per_s",
+            Json::num(r.requests as f64 / r.wall_s.max(1e-12)),
+        ),
+    ])
+}
+
+fn main() {
+    let reqs = env_usize("SPECREASON_BENCH_KV_REQS", 2000);
+    let families = env_usize("SPECREASON_BENCH_KV_FAMILIES", 8);
+    // Budget below the steady-state working set, so LRU eviction churn
+    // is part of the measured path.
+    let cache_budget = env_usize("SPECREASON_BENCH_KV_BUDGET", 128);
+    println!(
+        "microbench_kv: {reqs} requests, {families} prompt families, \
+         prefix {PREFIX_TOKENS}+{SUFFIX_TOKENS} tokens, budget {cache_budget} blocks"
+    );
+
+    let off = run(false, reqs, families, cache_budget);
+    let on = run(true, reqs, families, cache_budget);
+
+    for r in [&off, &on] {
+        println!(
+            "prefix_cache={}: hit rate {:.2}, reused {} tokens, evictions {}, \
+             prefill {:.2} gpu-s, admitted {:.2} req/gpu-s, accounting {:.0} req/s wall",
+            r.enabled,
+            r.hits as f64 / r.requests.max(1) as f64,
+            r.tokens_reused,
+            r.evictions,
+            r.prefill_gpu_s,
+            r.requests as f64 / r.total_gpu_s.max(1e-12),
+            r.requests as f64 / r.wall_s.max(1e-12),
+        );
+    }
+
+    // Deterministic accounting gates (no wall clocks involved).
+    assert_eq!(off.tokens_reused, 0, "cache off must never reuse");
+    let hit_rate = on.hits as f64 / on.requests.max(1) as f64;
+    assert!(
+        hit_rate > 0.5,
+        "shared-prefix workload must mostly hit the warm cache (got {hit_rate:.2})"
+    );
+    assert!(
+        on.prefill_gpu_s < off.prefill_gpu_s,
+        "reuse must cut the modeled prefill charge ({} >= {})",
+        on.prefill_gpu_s,
+        off.prefill_gpu_s
+    );
+    let saved = 1.0 - on.prefill_gpu_s / off.prefill_gpu_s;
+    println!(
+        "prefill charge saved: {:.1}%  (admitted throughput {:.2}x)",
+        saved * 100.0,
+        (off.total_gpu_s / on.total_gpu_s.max(1e-12))
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("kv_prefix_cache")),
+        ("requests", Json::num(reqs as f64)),
+        ("families", Json::num(families as f64)),
+        ("block_size", Json::num(BLOCK as f64)),
+        ("prefix_tokens", Json::num(PREFIX_TOKENS as f64)),
+        ("cache_budget_blocks", Json::num(cache_budget as f64)),
+        ("prefill_saved_frac", Json::num(saved)),
+        ("runs", Json::Arr(vec![row(&off), row(&on)])),
+    ]);
+    std::fs::write("BENCH_kv.json", report.to_string_pretty()).expect("write BENCH_kv.json");
+    println!("wrote BENCH_kv.json");
+}

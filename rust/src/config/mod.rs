@@ -23,6 +23,14 @@ pub struct DeployConfig {
     pub addr: String,
     pub kv_block_size: usize,
     pub kv_seqs_per_model: usize,
+    /// Share KV blocks across requests with a common prompt prefix
+    /// (refcounted copy-on-write blocks + a radix prefix index per
+    /// partition).  Off (the default) is bit-identical to the
+    /// exclusive-ownership pool.
+    pub prefix_cache: bool,
+    /// Cached-block budget per partition for the prefix cache; 0 means
+    /// "bounded only by the pool" (pressure eviction applies either way).
+    pub prefix_cache_blocks: usize,
     pub temperature: f32,
     /// Default workload seed for requests that omit `"seed"` (the
     /// protocol documents per-request seeds as "defaults to the
@@ -69,6 +77,8 @@ impl Default for DeployConfig {
             addr: "127.0.0.1:7878".into(),
             kv_block_size: 32,
             kv_seqs_per_model: 8,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
             temperature: 0.6,
             seed: 0x5EED,
             scheme: Scheme::SpecReason,
@@ -115,6 +125,12 @@ impl DeployConfig {
         }
         if let Some(v) = j.get("kv_seqs_per_model").as_usize() {
             c.kv_seqs_per_model = v;
+        }
+        if let Some(v) = j.get("prefix_cache").as_bool() {
+            c.prefix_cache = v;
+        }
+        if let Some(v) = j.get("prefix_cache_blocks").as_usize() {
+            c.prefix_cache_blocks = v;
         }
         if let Some(v) = j.get("temperature").as_f64() {
             c.temperature = v as f32;
@@ -200,6 +216,8 @@ impl DeployConfig {
             },
             kv_block_size: self.kv_block_size,
             kv_seqs_per_model: self.kv_seqs_per_model,
+            prefix_cache: self.prefix_cache,
+            prefix_cache_blocks: self.prefix_cache_blocks,
             temperature: self.temperature,
         }
     }
@@ -251,6 +269,24 @@ mod tests {
     fn parses_default_seed() {
         let c = DeployConfig::from_json_str(r#"{"seed": 4242}"#).unwrap();
         assert_eq!(c.seed, 4242);
+    }
+
+    #[test]
+    fn parses_prefix_cache_knobs() {
+        let c = DeployConfig::from_json_str(
+            r#"{"prefix_cache": true, "prefix_cache_blocks": 128}"#,
+        )
+        .unwrap();
+        assert!(c.prefix_cache);
+        assert_eq!(c.prefix_cache_blocks, 128);
+        let e = c.engine_config();
+        assert!(e.prefix_cache);
+        assert_eq!(e.prefix_cache_blocks, 128);
+        // Default: off, auto budget — bit-identical serving semantics.
+        let d = DeployConfig::default();
+        assert!(!d.prefix_cache);
+        assert_eq!(d.prefix_cache_blocks, 0);
+        assert!(!d.engine_config().prefix_cache);
     }
 
     #[test]

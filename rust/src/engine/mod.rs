@@ -45,6 +45,14 @@ pub struct EngineConfig {
     pub kv_block_size: usize,
     /// Per-model KV partition, in sequences' worth of max_seq.
     pub kv_seqs_per_model: usize,
+    /// Share KV blocks across requests with a common prompt prefix:
+    /// refcounted copy-on-write blocks + a radix prefix index per
+    /// partition.  Off ⇒ accounting and metrics are bit-identical to the
+    /// exclusive-ownership pool.
+    pub prefix_cache: bool,
+    /// Cached-block budget per partition for the prefix cache (0 =
+    /// bounded only by the pool; pressure eviction applies either way).
+    pub prefix_cache_blocks: usize,
     /// Sampling temperature for generation (paper: 0.6).
     pub temperature: f32,
 }
@@ -57,6 +65,8 @@ impl Default for EngineConfig {
             testbed: Testbed::A6000x2,
             kv_block_size: 32,
             kv_seqs_per_model: 8,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
             temperature: 0.6,
         }
     }
@@ -82,6 +92,8 @@ pub struct Engine {
     pub temperature: f32,
     models: BTreeMap<String, ModelRuntime>,
     kv_mgr: Mutex<KvManager>,
+    /// Shared-prefix KV caching enabled (see [`EngineConfig::prefix_cache`]).
+    prefix_cache: bool,
     next_seq: AtomicU64,
 }
 
@@ -97,15 +109,18 @@ impl Engine {
             let rt = ModelRuntime::load(&device, &manifest, name)
                 .with_context(|| format!("loading model {name}"))?;
             // Static partition (§4.1): each model gets its own block pool.
-            let blocks_per_seq = rt.arch.max_seq.div_ceil(cfg.kv_block_size);
+            let blocks_per_seq = rt.arch.max_seq.div_ceil(cfg.kv_block_size.max(1));
             kv_mgr.add_partition(
                 name,
                 PoolConfig {
                     block_size: cfg.kv_block_size,
                     total_blocks: blocks_per_seq * cfg.kv_seqs_per_model,
                 },
-            );
+            )?;
             models.insert(name.clone(), rt);
+        }
+        if cfg.prefix_cache {
+            kv_mgr.enable_prefix_cache(cfg.prefix_cache_blocks);
         }
         Ok(Engine {
             device,
@@ -115,6 +130,7 @@ impl Engine {
             temperature: cfg.temperature,
             models,
             kv_mgr: Mutex::new(kv_mgr),
+            prefix_cache: cfg.prefix_cache,
             next_seq: AtomicU64::new(1),
         })
     }
@@ -159,24 +175,96 @@ impl Engine {
         Ok(self.kv_mgr.lock().unwrap().pool(model)?.config())
     }
 
+    /// Shared-prefix caching enabled?
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache
+    }
+
+    /// Longest cached prompt prefix, in tokens, per model partition —
+    /// read-only (no LRU touch, no refcounts), for the scheduler's
+    /// admission-ledger deduction.  Empty map when the cache is off.
+    pub fn prefix_probe(&self, prompt: &[i32]) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        if !self.prefix_cache {
+            return out;
+        }
+        let mgr = self.kv_mgr.lock().unwrap();
+        for name in self.models.keys() {
+            if let Ok(pool) = mgr.pool(name) {
+                let n = pool.probe_prefix(prompt);
+                if n > 0 {
+                    out.insert(name.clone(), n);
+                }
+            }
+        }
+        out
+    }
+
+    /// Prefix-cache telemetry summed over partitions (hits, reused
+    /// tokens, evictions, cached / shared block gauges).
+    pub fn prefix_stats(&self) -> crate::kvcache::PrefixCacheStats {
+        self.kv_mgr.lock().unwrap().prefix_stats()
+    }
+
+    /// Distinct blocks that live sequences hold *only* via adopted
+    /// shared prefixes in `model`'s partition (blocks a live publisher
+    /// still holds privately are excluded — its own reservation covers
+    /// them).  The scheduler adds this base to its per-request
+    /// reservation ledger: adopted prefixes are deducted from each
+    /// request's worst case, so the resident blocks themselves must be
+    /// accounted exactly once.
+    pub fn kv_shared_resident_blocks(&self, model: &str) -> usize {
+        self.kv_mgr
+            .lock()
+            .unwrap()
+            .pool(model)
+            .map(|p| p.shared_prefix_resident_blocks())
+            .unwrap_or(0)
+    }
+
     /// Admit a new sequence with the given prompt tokens (not yet
     /// prefilled — materialization is lazy and per-model).
     pub fn new_sequence(&self, prompt: &[i32]) -> Result<Sequence> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let id = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        // Build the (side-effect-free) per-model KV views *before*
+        // registering, so no fallible step runs while the sequence is
+        // already holding pool state.
         let mut kvs = BTreeMap::new();
+        for (name, rt) in &self.models {
+            kvs.insert(name.clone(), rt.fresh_kv()?);
+        }
+        let mut reused = BTreeMap::new();
         {
             let mut mgr = self.kv_mgr.lock().unwrap();
             mgr.register_seq(id)?;
-        }
-        for (name, rt) in &self.models {
-            kvs.insert(name.clone(), rt.fresh_kv()?);
+            if self.prefix_cache {
+                // Adopt the longest cached chain per partition: the
+                // sequence starts holding those shared blocks, and their
+                // positions are never charged prefill GPU cost.  An
+                // adoption failure must not leak the registration (and
+                // any refcounts taken so far).
+                for name in self.models.keys() {
+                    match mgr.pool_mut(name).and_then(|p| p.adopt_prefix(id, prompt)) {
+                        Ok(n) => {
+                            if n > 0 {
+                                reused.insert(name.clone(), n);
+                            }
+                        }
+                        Err(e) => {
+                            let _ = mgr.release_seq(id);
+                            return Err(e);
+                        }
+                    }
+                }
+            }
         }
         Ok(Sequence {
             id,
             tokens: prompt.to_vec(),
             prompt_len: prompt.len(),
             kvs,
+            reused,
             admitted_at: Instant::now(),
         })
     }
@@ -206,7 +294,39 @@ impl Engine {
         Ok(())
     }
 
+    /// Tokens in `[from, upto)` not covered by `model`'s adopted shared
+    /// prefix.  Adopted positions' KV blocks were already resident at
+    /// admission, so prefill charges them no GPU-clock cost (with the
+    /// cache off, `reused == 0` and this is exactly `upto - from`).
+    fn charged_span(seq: &Sequence, model: &str, from: usize, upto: usize) -> usize {
+        let reused = seq.reused_tokens(model);
+        (upto - from) - (upto.min(reused) - from.min(reused))
+    }
+
+    /// Publish the prompt's full-block prefix into the shared-prefix
+    /// cache once this model's KV has materialized the whole prompt.
+    /// Monotonic and idempotent; no-op when the cache is off.
+    fn maybe_publish(&self, model: &str, seq: &Sequence) -> Result<()> {
+        if !self.prefix_cache || seq.cache_len(model) < seq.prompt_len {
+            return Ok(());
+        }
+        self.kv_mgr
+            .lock()
+            .unwrap()
+            .pool_mut(model)?
+            .publish_prefix(seq.id, &seq.tokens[..seq.prompt_len])
+    }
+
     /// Materialize `model`'s KV for tokens [cache_len, upto).
+    ///
+    /// With the shared-prefix cache on, positions covered by the
+    /// sequence's adopted prefix charge no GPU-clock cost — on a paged
+    /// GPU allocator their blocks are already resident.  (The CPU-PJRT
+    /// substrate still materializes them physically: per-sequence KV
+    /// round-trips through dense host buffers at the AOT boundary, so
+    /// physical page sharing is not expressible; the GPU clock — the
+    /// calibrated cost model every figure reports — is where reuse
+    /// lands.)
     pub fn prefill_through(
         &self,
         seq: &mut Sequence,
@@ -225,8 +345,14 @@ impl Engine {
         let t0 = Instant::now();
         let span = seq.tokens[from..upto].to_vec();
         rt.prefill(seq.kv_mut(model), &span)?;
-        let gpu = self.clock.prefill_cost(&rt.arch.name, upto - from);
+        let charged = Self::charged_span(seq, model, from, upto);
+        let gpu = if charged == 0 {
+            0.0
+        } else {
+            self.clock.prefill_cost(&rt.arch.name, charged)
+        };
         qm.record(phase, t0.elapsed().as_secs_f64(), gpu);
+        self.maybe_publish(model, seq)?;
         Ok(())
     }
 
@@ -265,6 +391,7 @@ impl Engine {
         let gpu = self.clock.decode_cost(&rt.arch.name, n);
         qm.record(phase, t0.elapsed().as_secs_f64(), gpu);
         seq.tokens.extend_from_slice(&out);
+        self.maybe_publish(model, seq)?;
         Ok(out)
     }
 
@@ -285,7 +412,6 @@ impl Engine {
         let rt = self.model(model)?;
         let len = seq.len();
         let from = seq.cache_len(model);
-        let total = len - from + extra.len();
         if len + extra.len() > rt.arch.max_seq {
             bail!(
                 "verify pass would exceed {model} context ({} + {} > {})",
@@ -303,8 +429,12 @@ impl Engine {
         // discard only the template tokens.
         seq.kv_mut(model).rollback_to(len);
         self.shrink_accounting(model, seq.id, len)?;
-        let gpu = self.clock.prefill_cost(&rt.arch.name, total);
+        // Cache-resident prompt positions in the span charge nothing;
+        // the template itself always does (it is never cached).
+        let charged = Self::charged_span(seq, model, from, len) + extra.len();
+        let gpu = self.clock.prefill_cost(&rt.arch.name, charged);
         qm.record(phase, t0.elapsed().as_secs_f64(), gpu);
+        self.maybe_publish(model, seq)?;
         Ok(logits)
     }
 

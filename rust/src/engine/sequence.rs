@@ -18,6 +18,11 @@ pub struct Sequence {
     pub prompt_len: usize,
     /// Per-model KV cache view (keyed by logical model name).
     pub(crate) kvs: BTreeMap<String, KvState>,
+    /// Prompt-prefix tokens adopted from the shared-prefix cache at
+    /// admission, per model partition (empty when the cache is off or
+    /// missed).  The engine charges no prefill GPU cost for these
+    /// positions — their KV blocks were already resident.
+    pub(crate) reused: BTreeMap<String, usize>,
     /// Wall-clock at admission (for end-to-end latency).
     pub admitted_at: std::time::Instant,
 }
@@ -47,5 +52,16 @@ impl Sequence {
     /// How far `model`'s KV is materialized.
     pub fn cache_len(&self, model: &str) -> usize {
         self.kvs[model].cache_len
+    }
+
+    /// Prompt tokens served from the shared-prefix cache in `model`'s
+    /// partition (0 on a miss or with the cache disabled).
+    pub fn reused_tokens(&self, model: &str) -> usize {
+        self.reused.get(model).copied().unwrap_or(0)
+    }
+
+    /// Cache-served prompt tokens summed over every model partition.
+    pub fn total_reused_tokens(&self) -> usize {
+        self.reused.values().sum()
     }
 }

@@ -1,4 +1,5 @@
-//! Paged KV-cache accounting with a static partition between models.
+//! Paged KV-cache accounting with a static partition between models and
+//! cross-request shared-prefix caching.
 //!
 //! The paper (§4.1, *Implementation details*): "The memory reserved for
 //! Key-Value caches is statically partitioned between the two models. ...
@@ -14,14 +15,45 @@
 //! partition fails before any compute is issued), plus utilization
 //! telemetry for the metrics endpoint.
 //!
+//! ## Shared-prefix caching (copy-on-write refcounting)
+//!
+//! With [`BlockPool::enable_prefix_cache`], blocks become *refcounted*
+//! instead of exclusively owned.  A sequence's fully-written prompt
+//! blocks can be published into a radix index over token IDs
+//! ([`prefix::RadixIndex`]); a later request whose prompt shares that
+//! prefix *adopts* the cached chain ([`BlockPool::adopt_prefix`])
+//! instead of allocating and re-prefilling it.  Every holder — each
+//! adopting sequence, plus the cache itself — contributes one reference;
+//! a block returns to the free list only when its last reference drops.
+//! Rules:
+//!
+//! * only *full* (immutable) blocks are ever published or adopted at
+//!   block granularity; the mutable frontier block is private;
+//! * a grow that would write into a shared frontier block first
+//!   **copies-on-write**: the frontier is replaced by a fresh private
+//!   block and the shared one is dereferenced;
+//! * under pool pressure (or over the cache-block budget), cached
+//!   entries are evicted LRU-leaf-first; eviction drops only the
+//!   *cache's* reference, so blocks still held by live sequences stay
+//!   allocated and blocks held by nobody else return to the free list.
+//!
 //! Invariants (enforced, and property-tested in rust/tests/properties.rs):
-//! * a block belongs to at most one sequence at a time;
-//! * `free + Σ allocated == total` per pool at all times;
+//! * every block's refcount equals its owner count (sequence holders +
+//!   cache nodes); the free list holds exactly the refcount-zero blocks;
+//! * `free + distinct allocated == total` per pool at all times;
+//! * a block is never freed while its refcount is above zero;
+//! * a shared block is never written: the mutable (partially-filled)
+//!   frontier of a sequence is either private or an adopted,
+//!   never-grown-into prefix tail;
 //! * rollback never frees blocks still covering live tokens.
+
+pub mod prefix;
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
+
+pub use prefix::{PrefixStats, RadixIndex};
 
 pub type SeqId = u64;
 
@@ -39,6 +71,49 @@ impl PoolConfig {
     pub fn capacity_tokens(&self) -> usize {
         self.block_size * self.total_blocks
     }
+
+    /// Reject degenerate geometry before it can reach the accounting
+    /// arithmetic (`blocks_for` divides by `block_size`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.block_size >= 1, "kv block_size must be >= 1 (got 0)");
+        anyhow::ensure!(self.total_blocks >= 1, "kv total_blocks must be >= 1 (got 0)");
+        Ok(())
+    }
+}
+
+/// Aggregated prefix-cache telemetry (counters from [`PrefixStats`] plus
+/// the pool-side gauges that need refcount visibility).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub tokens_reused: u64,
+    pub evictions: u64,
+    /// Blocks currently held by the radix index (gauge).
+    pub cached_blocks: usize,
+    /// Blocks with more than one owner right now (gauge).
+    pub shared_blocks: usize,
+}
+
+/// One sequence's allocation record.
+#[derive(Debug)]
+struct SeqAlloc {
+    blocks: Vec<u32>,
+    /// Live token count (blocks cover `tokens.div_ceil(block_size)`).
+    tokens: usize,
+    /// Leading blocks adopted from the prefix cache.  These are shared
+    /// and immutable; everything past them is private to this sequence.
+    shared_prefix: usize,
+    /// This sequence's prompt prefix has been published to the cache.
+    published: bool,
+}
+
+/// Per-pool prefix-cache state: the index plus its budget and counters.
+struct PrefixState {
+    index: RadixIndex,
+    /// Cached-block budget; publishing past it evicts LRU entries.
+    max_blocks: usize,
+    stats: PrefixStats,
 }
 
 /// Block pool for a single model.
@@ -46,23 +121,58 @@ impl PoolConfig {
 pub struct BlockPool {
     cfg: PoolConfig,
     free: Vec<u32>,
-    /// seq -> (blocks, live token count)
-    seqs: BTreeMap<SeqId, (Vec<u32>, usize)>,
+    /// Owner count per block: sequence holders + cache nodes.  Zero ⇔
+    /// the block is on the free list.
+    refcount: Vec<u32>,
+    seqs: BTreeMap<SeqId, SeqAlloc>,
     peak_used_blocks: usize,
+    prefix: Option<PrefixState>,
+}
+
+impl std::fmt::Debug for PrefixState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixState")
+            .field("cached_blocks", &self.index.len())
+            .field("max_blocks", &self.max_blocks)
+            .field("stats", &self.stats)
+            .finish()
+    }
 }
 
 impl BlockPool {
-    pub fn new(cfg: PoolConfig) -> Self {
-        BlockPool {
+    pub fn new(cfg: PoolConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(BlockPool {
             cfg,
             free: (0..cfg.total_blocks as u32).rev().collect(),
+            refcount: vec![0; cfg.total_blocks],
             seqs: BTreeMap::new(),
             peak_used_blocks: 0,
-        }
+            prefix: None,
+        })
     }
 
     pub fn config(&self) -> PoolConfig {
         self.cfg
+    }
+
+    /// Turn on shared-prefix caching.  `max_blocks == 0` means "bounded
+    /// only by the pool" (pressure eviction still applies).
+    pub fn enable_prefix_cache(&mut self, max_blocks: usize) {
+        let cap = if max_blocks == 0 {
+            self.cfg.total_blocks
+        } else {
+            max_blocks.min(self.cfg.total_blocks)
+        };
+        self.prefix = Some(PrefixState {
+            index: RadixIndex::new(self.cfg.block_size),
+            max_blocks: cap,
+            stats: PrefixStats::default(),
+        });
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
@@ -77,16 +187,36 @@ impl BlockPool {
         self.free.len()
     }
 
-    /// Free capacity in tokens (whole blocks only).
+    /// Free capacity in tokens (whole blocks only; excludes evictable
+    /// cache blocks — see [`BlockPool::can_reserve`] for the admission
+    /// view that includes them).
     pub fn free_tokens(&self) -> usize {
         self.free.len() * self.cfg.block_size
     }
 
+    /// Cached blocks whose only owner is the cache: evicting them under
+    /// pressure returns real capacity.
+    pub fn evictable_blocks(&self) -> usize {
+        match &self.prefix {
+            None => 0,
+            Some(s) => s
+                .index
+                .blocks()
+                .iter()
+                .filter(|&&b| self.refcount[b as usize] == 1)
+                .count(),
+        }
+    }
+
     /// Could a *fresh* sequence (zero blocks held) grow to `tokens` right
     /// now?  The admission-side counterpart of [`BlockPool::can_grow_to`]
-    /// for sequences that are not registered yet.
+    /// for sequences that are not registered yet.  Counts cache-only
+    /// blocks as available: pressure eviction reclaims them on demand.
     pub fn can_reserve(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free.len()
+        let need = self.blocks_for(tokens);
+        // Short-circuit before the O(cached) evictability walk: the hot
+        // admission path usually has free blocks to spare.
+        need <= self.free.len() || need <= self.free.len() + self.evictable_blocks()
     }
 
     pub fn peak_used_blocks(&self) -> usize {
@@ -99,7 +229,7 @@ impl BlockPool {
 
     /// Tokens currently accounted to `seq`.
     pub fn seq_tokens(&self, seq: SeqId) -> usize {
-        self.seqs.get(&seq).map(|(_, t)| *t).unwrap_or(0)
+        self.seqs.get(&seq).map(|a| a.tokens).unwrap_or(0)
     }
 
     /// Register a new sequence (zero tokens).
@@ -107,96 +237,376 @@ impl BlockPool {
         if self.seqs.contains_key(&seq) {
             bail!("sequence {seq} already registered");
         }
-        self.seqs.insert(seq, (Vec::new(), 0));
+        self.seqs.insert(
+            seq,
+            SeqAlloc { blocks: Vec::new(), tokens: 0, shared_prefix: 0, published: false },
+        );
         Ok(())
     }
 
-    /// Would a grow to `new_tokens` succeed?
+    /// Drop one reference; the block returns to the free list only when
+    /// nobody holds it anymore (never frees a block with refcount > 0).
+    fn deref_block(&mut self, block: u32) {
+        let rc = &mut self.refcount[block as usize];
+        assert!(*rc > 0, "deref of unowned block {block}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(block);
+        }
+    }
+
+    /// Evict one cached entry — the LRU leaf, preferring one whose block
+    /// actually frees — and drop the cache's reference.  `false` when
+    /// the cache is off or empty.
+    fn evict_one(&mut self) -> bool {
+        let Some(state) = self.prefix.as_mut() else { return false };
+        let refcount = &self.refcount;
+        let Some(block) = state.index.evict_lru_leaf(&|b| refcount[b as usize] == 1)
+        else {
+            return false;
+        };
+        state.stats.evictions += 1;
+        self.deref_block(block);
+        true
+    }
+
+    /// Evict cached entries until at least `need_free` blocks are free
+    /// or the cache is empty.
+    fn evict_for(&mut self, need_free: usize) {
+        while self.free.len() < need_free {
+            if !self.evict_one() {
+                return;
+            }
+        }
+    }
+
+    /// Would a grow to `new_tokens` succeed (given pressure eviction)?
     pub fn can_grow_to(&self, seq: SeqId, new_tokens: usize) -> bool {
         match self.seqs.get(&seq) {
             None => false,
-            Some((blocks, _)) => {
+            Some(a) => {
                 let need = self.blocks_for(new_tokens);
-                need <= blocks.len() + self.free.len()
+                let cow = new_tokens > a.tokens
+                    && a.tokens % self.cfg.block_size != 0
+                    && a.blocks.last().is_some_and(|&b| self.refcount[b as usize] > 1);
+                let extra = need.saturating_sub(a.blocks.len()) + usize::from(cow);
+                extra <= self.free.len() || extra <= self.free.len() + self.evictable_blocks()
             }
         }
     }
 
     /// Grow `seq`'s accounting to `new_tokens` (monotonic within a step;
     /// use `rollback_to` to shrink). Allocates blocks; fails atomically
-    /// (no partial allocation) if the partition is exhausted.
+    /// for the sequence (no partial allocation) if the partition is
+    /// exhausted even after evicting cache-only blocks.  If the current
+    /// frontier block is shared (adopted mid-block, or co-held by the
+    /// cache), it is copied-on-write before any new token lands in it.
     pub fn grow_to(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
-        let need = self.blocks_for(new_tokens);
-        let (blocks, tokens) = self
-            .seqs
-            .get_mut(&seq)
-            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
-        if new_tokens < *tokens {
-            bail!("grow_to({new_tokens}) below current {tokens}; use rollback_to");
+        let bs = self.cfg.block_size;
+        let need = new_tokens.div_ceil(bs);
+        let (cur_blocks, cur_tokens, frontier_shared) = {
+            let a = self
+                .seqs
+                .get(&seq)
+                .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            let shared =
+                a.blocks.last().is_some_and(|&b| self.refcount[b as usize] > 1);
+            (a.blocks.len(), a.tokens, shared)
+        };
+        if new_tokens < cur_tokens {
+            bail!("grow_to({new_tokens}) below current {cur_tokens}; use rollback_to");
         }
-        if need > blocks.len() {
-            let extra = need - blocks.len();
-            if extra > self.free.len() {
-                bail!(
-                    "KV partition exhausted: sequence {seq} needs {extra} more blocks, {} free",
-                    self.free.len()
-                );
-            }
-            for _ in 0..extra {
-                blocks.push(self.free.pop().unwrap());
+        if new_tokens == cur_tokens {
+            return Ok(());
+        }
+        // Copy-on-write: new tokens land in the frontier block when the
+        // current frontier sits mid-block; a shared frontier must be
+        // replaced by a private copy before the write.
+        let cow = cur_tokens % bs != 0 && frontier_shared;
+        let extra = need.saturating_sub(cur_blocks) + usize::from(cow);
+        if extra > self.free.len() {
+            // Evict only when eviction can actually satisfy the grow —
+            // a doomed request must fail atomically, not destructively
+            // drain the whole prefix cache on its way to the error.
+            if extra <= self.free.len() + self.evictable_blocks() {
+                self.evict_for(extra);
             }
         }
-        *tokens = new_tokens;
-        self.peak_used_blocks = self.peak_used_blocks.max(self.cfg.total_blocks - self.free.len());
+        if extra > self.free.len() {
+            bail!(
+                "KV partition exhausted: sequence {seq} needs {extra} more blocks, {} free",
+                self.free.len()
+            );
+        }
+        let mut fresh = Vec::with_capacity(extra);
+        for _ in 0..extra {
+            let b = self.free.pop().unwrap();
+            self.refcount[b as usize] = 1;
+            fresh.push(b);
+        }
+        let mut fresh = fresh.into_iter();
+        let mut cow_dropped = None;
+        let a = self.seqs.get_mut(&seq).unwrap();
+        if cow {
+            let old = a.blocks.pop().unwrap();
+            a.blocks.push(fresh.next().unwrap());
+            // The copied frontier is private now; it can no longer be
+            // part of the adopted shared prefix.
+            if a.shared_prefix >= a.blocks.len() {
+                a.shared_prefix = a.blocks.len() - 1;
+            }
+            cow_dropped = Some(old);
+        }
+        a.blocks.extend(fresh);
+        a.tokens = new_tokens;
+        debug_assert_eq!(a.blocks.len(), need);
+        // Write-time guarantee ("never share a mutable frontier block"):
+        // every block receiving new tokens — the mid-block frontier
+        // (post-COW) and all fresh appends — is exclusively owned.
+        if cur_tokens % bs != 0 {
+            let frontier = a.blocks[cur_blocks - 1];
+            assert_eq!(
+                self.refcount[frontier as usize], 1,
+                "grow wrote into shared frontier block {frontier}"
+            );
+        }
+        if let Some(old) = cow_dropped {
+            self.deref_block(old);
+        }
+        self.peak_used_blocks =
+            self.peak_used_blocks.max(self.cfg.total_blocks - self.free.len());
         Ok(())
     }
 
     /// Discard KV accounting beyond `new_tokens` (speculation rollback).
+    /// Dropped shared blocks are dereferenced, not freed — the cache
+    /// (and any co-holding sequence) keeps them alive.
     pub fn rollback_to(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
         let bs = self.cfg.block_size;
-        let (blocks, tokens) = self
-            .seqs
-            .get_mut(&seq)
-            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
-        if new_tokens > *tokens {
-            bail!("rollback_to({new_tokens}) above current {tokens}");
-        }
         let keep = new_tokens.div_ceil(bs);
-        while blocks.len() > keep {
-            self.free.push(blocks.pop().unwrap());
+        let dropped = {
+            let a = self
+                .seqs
+                .get_mut(&seq)
+                .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            if new_tokens > a.tokens {
+                bail!("rollback_to({new_tokens}) above current {}", a.tokens);
+            }
+            let mut dropped = Vec::new();
+            while a.blocks.len() > keep {
+                dropped.push(a.blocks.pop().unwrap());
+            }
+            a.tokens = new_tokens;
+            a.shared_prefix = a.shared_prefix.min(a.blocks.len());
+            dropped
+        };
+        for b in dropped {
+            self.deref_block(b);
         }
-        *tokens = new_tokens;
         Ok(())
     }
 
-    /// Release a finished sequence.
+    /// Release a finished sequence (drops its reference on every block).
     pub fn release(&mut self, seq: SeqId) -> Result<()> {
-        let (blocks, _) = self
+        let a = self
             .seqs
             .remove(&seq)
             .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
-        self.free.extend(blocks);
+        for b in a.blocks {
+            self.deref_block(b);
+        }
         Ok(())
+    }
+
+    // ----------------------------------------------------------------
+    // Shared-prefix cache operations
+    // ----------------------------------------------------------------
+
+    /// Longest cached prefix of `prompt`, in tokens, without touching
+    /// recency or refcounts (the scheduler's admission probe).
+    pub fn probe_prefix(&self, prompt: &[i32]) -> usize {
+        match &self.prefix {
+            None => 0,
+            Some(s) => s.index.probe(prompt).len() * self.cfg.block_size,
+        }
+    }
+
+    /// Look up `prompt` in the prefix cache and adopt the matched chain
+    /// for the (freshly registered, still-empty) sequence `seq`: the
+    /// sequence starts already holding the shared blocks, accounted at
+    /// the matched token count.  Returns the reused token count (0 on a
+    /// miss or with the cache disabled).
+    pub fn adopt_prefix(&mut self, seq: SeqId, prompt: &[i32]) -> Result<usize> {
+        if self.prefix.is_none() {
+            return Ok(0);
+        }
+        {
+            let a = self
+                .seqs
+                .get(&seq)
+                .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            anyhow::ensure!(
+                a.blocks.is_empty() && a.tokens == 0,
+                "adopt_prefix into non-empty sequence {seq}"
+            );
+        }
+        let state = self.prefix.as_mut().unwrap();
+        let matched = state.index.lookup(prompt);
+        if matched.is_empty() {
+            state.stats.misses += 1;
+            return Ok(0);
+        }
+        let tokens = matched.len() * self.cfg.block_size;
+        state.stats.hits += 1;
+        state.stats.tokens_reused += tokens as u64;
+        for &b in &matched {
+            self.refcount[b as usize] += 1;
+        }
+        let a = self.seqs.get_mut(&seq).unwrap();
+        a.shared_prefix = matched.len();
+        a.blocks = matched;
+        a.tokens = tokens;
+        Ok(tokens)
+    }
+
+    /// Publish `prompt`'s full-block prefix — whose KV `seq` has now
+    /// fully materialized — into the prefix cache.  Only whole blocks
+    /// are indexed (the mutable frontier stays private); chunks another
+    /// sequence already published are left as-is.  Idempotent per
+    /// sequence.  Publishing past the cache budget evicts LRU entries.
+    pub fn publish_prefix(&mut self, seq: SeqId, prompt: &[i32]) -> Result<()> {
+        if self.prefix.is_none() {
+            return Ok(());
+        }
+        let bs = self.cfg.block_size;
+        let full = prompt.len() / bs;
+        if full == 0 {
+            return Ok(());
+        }
+        let blocks = {
+            let a = self
+                .seqs
+                .get(&seq)
+                .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            if a.published {
+                return Ok(());
+            }
+            anyhow::ensure!(
+                a.tokens >= full * bs,
+                "publish_prefix: sequence {seq} holds {} tokens, prefix needs {}",
+                a.tokens,
+                full * bs
+            );
+            a.blocks[..full].to_vec()
+        };
+        let state = self.prefix.as_mut().unwrap();
+        let fresh = state.index.insert(&prompt[..full * bs], &blocks);
+        for &b in &fresh {
+            self.refcount[b as usize] += 1;
+        }
+        // Budget: freshly published nodes carry the newest LRU stamps,
+        // so the evictions land on cold entries first.
+        loop {
+            let over_budget = {
+                let state = self.prefix.as_ref().unwrap();
+                state.index.len() > state.max_blocks
+            };
+            if !over_budget || !self.evict_one() {
+                break;
+            }
+        }
+        self.seqs.get_mut(&seq).unwrap().published = true;
+        Ok(())
+    }
+
+    /// Distinct blocks live sequences hold *only via adopted prefixes*.
+    /// The scheduler's reservation ledger deducts adopted prefixes from
+    /// each request's worst case, so these resident-but-unledgered
+    /// blocks are accounted once, here.  Blocks a live sequence also
+    /// holds *privately* (e.g. the still-running publisher's own prompt)
+    /// are excluded: that sequence's full-need reservation already
+    /// covers them, and counting them again would double-charge
+    /// publisher + adopter coexistence.
+    pub fn shared_prefix_resident_blocks(&self) -> usize {
+        let mut adopted = std::collections::BTreeSet::new();
+        let mut private = std::collections::BTreeSet::new();
+        for a in self.seqs.values() {
+            for &b in &a.blocks[..a.shared_prefix] {
+                adopted.insert(b);
+            }
+            for &b in &a.blocks[a.shared_prefix..] {
+                private.insert(b);
+            }
+        }
+        adopted.difference(&private).count()
+    }
+
+    /// Prefix-cache counters plus refcount gauges.
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        let (stats, cached) = match &self.prefix {
+            None => (PrefixStats::default(), 0),
+            Some(s) => (s.stats, s.index.len()),
+        };
+        PrefixCacheStats {
+            hits: stats.hits,
+            misses: stats.misses,
+            tokens_reused: stats.tokens_reused,
+            evictions: stats.evictions,
+            cached_blocks: cached,
+            shared_blocks: self.refcount.iter().filter(|&&rc| rc > 1).count(),
+        }
     }
 
     /// Internal-consistency check (used by property tests).
     pub fn check_invariants(&self) {
-        let allocated: usize = self.seqs.values().map(|(b, _)| b.len()).sum();
+        let bs = self.cfg.block_size;
+        // Owner count per block: sequence holders + cache nodes.
+        let mut owners = vec![0u32; self.cfg.total_blocks];
+        for (seq, a) in &self.seqs {
+            for &b in &a.blocks {
+                owners[b as usize] += 1;
+            }
+            assert!(
+                a.blocks.len() == a.tokens.div_ceil(bs),
+                "seq {seq}: {} blocks for {} tokens",
+                a.blocks.len(),
+                a.tokens
+            );
+            assert!(a.shared_prefix <= a.blocks.len(), "seq {seq}: shared prefix overrun");
+            // The mutable-frontier rule ("a shared block is never
+            // written") is a *write-time* property: a shared mid-block
+            // frontier is legal while unwritten — adopted prefix tails,
+            // or published blocks re-entered by rollback — and `grow_to`
+            // copies-on-write (and asserts exclusivity) before any token
+            // lands in one.
+        }
+        if let Some(s) = &self.prefix {
+            for b in s.index.blocks() {
+                owners[b as usize] += 1;
+            }
+        }
+        let mut seen_free = std::collections::HashSet::new();
+        for &b in &self.free {
+            assert!(seen_free.insert(b), "block {b} on the free list twice");
+            assert_eq!(owners[b as usize], 0, "free block {b} still owned");
+        }
+        let mut allocated = 0;
+        for (b, &o) in owners.iter().enumerate() {
+            assert_eq!(
+                self.refcount[b], o,
+                "block {b}: refcount {} != {o} owners",
+                self.refcount[b]
+            );
+            if o > 0 {
+                allocated += 1;
+                assert!(!seen_free.contains(&(b as u32)), "owned block {b} on free list");
+            }
+        }
         assert_eq!(
             allocated + self.free.len(),
             self.cfg.total_blocks,
             "block conservation violated"
         );
-        let mut seen = std::collections::HashSet::new();
-        for b in self.free.iter().chain(self.seqs.values().flat_map(|(b, _)| b)) {
-            assert!(seen.insert(*b), "block {b} owned twice");
-        }
-        for (seq, (blocks, tokens)) in &self.seqs {
-            assert!(
-                blocks.len() == tokens.div_ceil(self.cfg.block_size),
-                "seq {seq}: {} blocks for {tokens} tokens", blocks.len()
-            );
-        }
     }
 }
 
@@ -212,8 +622,16 @@ impl KvManager {
     }
 
     /// Carve out a static partition for `model`.
-    pub fn add_partition(&mut self, model: &str, cfg: PoolConfig) {
-        self.pools.insert(model.to_string(), BlockPool::new(cfg));
+    pub fn add_partition(&mut self, model: &str, cfg: PoolConfig) -> Result<()> {
+        self.pools.insert(model.to_string(), BlockPool::new(cfg)?);
+        Ok(())
+    }
+
+    /// Turn on shared-prefix caching in every partition.
+    pub fn enable_prefix_cache(&mut self, max_blocks: usize) {
+        for pool in self.pools.values_mut() {
+            pool.enable_prefix_cache(max_blocks);
+        }
     }
 
     pub fn pool(&self, model: &str) -> Result<&BlockPool> {
@@ -248,6 +666,21 @@ impl KvManager {
         Ok(())
     }
 
+    /// Prefix-cache telemetry summed over partitions.
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        let mut total = PrefixCacheStats::default();
+        for pool in self.pools.values() {
+            let s = pool.prefix_stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.tokens_reused += s.tokens_reused;
+            total.evictions += s.evictions;
+            total.cached_blocks += s.cached_blocks;
+            total.shared_blocks += s.shared_blocks;
+        }
+        total
+    }
+
     pub fn check_invariants(&self) {
         for pool in self.pools.values() {
             pool.check_invariants();
@@ -260,7 +693,23 @@ mod tests {
     use super::*;
 
     fn pool(block: usize, total: usize) -> BlockPool {
-        BlockPool::new(PoolConfig { block_size: block, total_blocks: total })
+        BlockPool::new(PoolConfig { block_size: block, total_blocks: total }).unwrap()
+    }
+
+    fn cached_pool(block: usize, total: usize, budget: usize) -> BlockPool {
+        let mut p = pool(block, total);
+        p.enable_prefix_cache(budget);
+        p
+    }
+
+    #[test]
+    fn degenerate_pool_config_is_rejected() {
+        // blocks_for divides by block_size; a zero must be caught at
+        // construction, not surface as a divide-by-zero later.
+        assert!(BlockPool::new(PoolConfig { block_size: 0, total_blocks: 8 }).is_err());
+        assert!(BlockPool::new(PoolConfig { block_size: 16, total_blocks: 0 }).is_err());
+        assert!(PoolConfig { block_size: 0, total_blocks: 0 }.validate().is_err());
+        PoolConfig { block_size: 1, total_blocks: 1 }.validate().unwrap();
     }
 
     #[test]
@@ -360,8 +809,8 @@ mod tests {
     #[test]
     fn manager_static_partition() {
         let mut m = KvManager::new();
-        m.add_partition("base", PoolConfig { block_size: 32, total_blocks: 32 });
-        m.add_partition("small", PoolConfig { block_size: 32, total_blocks: 8 });
+        m.add_partition("base", PoolConfig { block_size: 32, total_blocks: 32 }).unwrap();
+        m.add_partition("small", PoolConfig { block_size: 32, total_blocks: 8 }).unwrap();
         m.register_seq(7).unwrap();
         m.pool_mut("base").unwrap().grow_to(7, 1024).unwrap();
         // base exhaustion does not affect small's partition (static split)
@@ -371,5 +820,160 @@ mod tests {
         m.release_seq(7).unwrap();
         assert_eq!(m.pool("base").unwrap().free_blocks(), 32);
         assert!(m.pool("missing").is_err());
+    }
+
+    // ---------------- shared-prefix cache ----------------
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn publish_then_adopt_shares_full_blocks() {
+        let mut p = cached_pool(16, 8, 0);
+        let toks = prompt(40); // 2 full blocks + 8-token frontier
+        p.register(1).unwrap();
+        p.grow_to(1, 40).unwrap();
+        p.publish_prefix(1, &toks).unwrap();
+        let s = p.prefix_stats();
+        assert_eq!(s.cached_blocks, 2, "only full blocks are published");
+        assert_eq!(s.shared_blocks, 2, "publisher + cache co-own them");
+        assert_eq!(p.probe_prefix(&toks), 32);
+
+        p.register(2).unwrap();
+        let reused = p.adopt_prefix(2, &toks).unwrap();
+        assert_eq!(reused, 32);
+        assert_eq!(p.seq_tokens(2), 32);
+        // 3 (seq 1) + 1 (seq 2 frontier-free: adopted only) distinct + 0 new:
+        // seq 2 holds the same two blocks, so used stays at 3.
+        assert_eq!(p.used_blocks(), 3);
+        p.check_invariants();
+
+        // Releasing both sequences keeps the cached blocks resident.
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.prefix_stats().shared_blocks, 0);
+        assert_eq!(p.evictable_blocks(), 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn adopting_sequence_grows_privately_past_the_prefix() {
+        let mut p = cached_pool(16, 8, 0);
+        let toks = prompt(32);
+        p.register(1).unwrap();
+        p.grow_to(1, 32).unwrap();
+        p.publish_prefix(1, &toks).unwrap();
+        p.register(2).unwrap();
+        assert_eq!(p.adopt_prefix(2, &toks).unwrap(), 32);
+        // Growth past a block-aligned adopted prefix allocates fresh
+        // private blocks; the shared ones are untouched.
+        p.grow_to(2, 40).unwrap();
+        assert_eq!(p.seq_tokens(2), 40);
+        assert_eq!(p.used_blocks(), 3); // 2 shared + 1 private
+        p.rollback_to(2, 32).unwrap();
+        assert_eq!(p.used_blocks(), 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn cow_copies_a_shared_mid_block_frontier_before_writing() {
+        let mut p = cached_pool(16, 8, 0);
+        // Build a mid-block shared frontier directly at the pool level:
+        // publish 2 full blocks, adopt, roll the adopter back into the
+        // shared region, then grow again.
+        let toks = prompt(32);
+        p.register(1).unwrap();
+        p.grow_to(1, 32).unwrap();
+        p.publish_prefix(1, &toks).unwrap();
+        p.register(2).unwrap();
+        assert_eq!(p.adopt_prefix(2, &toks).unwrap(), 32);
+        p.rollback_to(2, 20).unwrap(); // frontier now mid-block in shared block 2
+        p.check_invariants();
+        let used_before = p.used_blocks();
+        p.grow_to(2, 24).unwrap(); // writes into the shared frontier ⇒ COW
+        assert_eq!(p.used_blocks(), used_before + 1, "COW allocates a private copy");
+        p.check_invariants(); // frontier rule: the written block is private
+        // Seq 1 and the cache still hold the original block intact.
+        assert_eq!(p.probe_prefix(&toks), 32);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        p.check_invariants();
+    }
+
+    #[test]
+    fn pressure_evicts_cache_only_blocks_lru_first() {
+        let mut p = cached_pool(16, 4, 0);
+        // Fill the pool with two cached prompts (2 blocks each), then
+        // release the publishers: 4 blocks cached, 0 free.
+        for (seq, base) in [(1u64, 0i32), (2, 1000)] {
+            let toks: Vec<i32> = (base..base + 32).collect();
+            p.register(seq).unwrap();
+            p.grow_to(seq, 32).unwrap();
+            p.publish_prefix(seq, &toks).unwrap();
+            p.release(seq).unwrap();
+        }
+        assert_eq!(p.free_blocks(), 0);
+        assert_eq!(p.evictable_blocks(), 4);
+        assert!(p.can_reserve(64), "evictable blocks count as reservable");
+        // A fresh sequence needing 3 blocks forces LRU eviction (prompt
+        // one is older).
+        p.register(3).unwrap();
+        assert!(p.can_grow_to(3, 48));
+        p.grow_to(3, 48).unwrap();
+        let s = p.prefix_stats();
+        assert!(s.evictions >= 3, "pressure must evict cached blocks (got {})", s.evictions);
+        // The newest entry's surviving block(s), if any, still probe.
+        assert_eq!(p.probe_prefix(&prompt(32)), 0, "older prompt evicted first");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn publish_budget_is_enforced() {
+        let mut p = cached_pool(16, 16, 2);
+        let toks = prompt(96); // 6 full blocks, budget 2
+        p.register(1).unwrap();
+        p.grow_to(1, 96).unwrap();
+        p.publish_prefix(1, &toks).unwrap();
+        let s = p.prefix_stats();
+        assert!(s.cached_blocks <= 2, "budget exceeded: {}", s.cached_blocks);
+        assert!(s.evictions >= 4);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn publish_is_idempotent_and_second_publisher_reuses_chain() {
+        let mut p = cached_pool(16, 8, 0);
+        let toks = prompt(32);
+        p.register(1).unwrap();
+        p.grow_to(1, 32).unwrap();
+        p.publish_prefix(1, &toks).unwrap();
+        p.publish_prefix(1, &toks).unwrap(); // no-op
+        assert_eq!(p.prefix_stats().cached_blocks, 2);
+        // A second sequence that prefilled the same prompt privately
+        // publishes: the existing chain wins, nothing new is cached.
+        p.register(2).unwrap();
+        p.grow_to(2, 32).unwrap();
+        p.publish_prefix(2, &toks).unwrap();
+        assert_eq!(p.prefix_stats().cached_blocks, 2);
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        p.check_invariants();
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut p = pool(16, 4);
+        let toks = prompt(32);
+        p.register(1).unwrap();
+        p.grow_to(1, 32).unwrap();
+        p.publish_prefix(1, &toks).unwrap();
+        assert_eq!(p.probe_prefix(&toks), 0);
+        p.register(2).unwrap();
+        assert_eq!(p.adopt_prefix(2, &toks).unwrap(), 0);
+        let s = p.prefix_stats();
+        assert_eq!((s.hits, s.misses, s.cached_blocks), (0, 0, 0));
+        p.check_invariants();
     }
 }

@@ -1,0 +1,293 @@
+//! Radix (trie) prefix index over token IDs, at block granularity.
+//!
+//! Maps an incoming prompt to the longest chain of *full* cached KV
+//! blocks whose token content is a prefix of the prompt.  Each node
+//! covers exactly one block's worth of token IDs (the edge label) and
+//! names the physical block holding that chunk's KV; a path from the
+//! root spells out a cached prompt prefix, one block at a time.  Only
+//! whole blocks are indexed — the mutable frontier of a sequence (a
+//! partially-filled last block) is never published, which is what keeps
+//! every cached block immutable.
+//!
+//! This structure is pure bookkeeping: it owns no refcounts and frees
+//! nothing.  [`BlockPool`](super::BlockPool) drives it — taking a cache
+//! reference on every block the index starts naming, and dropping that
+//! reference when a node is evicted.  Keeping the index side-effect-free
+//! is what makes it differentially testable against a naive reference
+//! map (see `prop_radix_index_matches_naive_reference` in
+//! rust/tests/properties.rs).
+//!
+//! Recency is a logical LRU clock (no wall time), so lookups, inserts
+//! and evictions are bit-deterministic — eviction order is part of the
+//! determinism contract, not scheduling noise.  Ties (nodes stamped by
+//! the same operation) break toward the lexicographically-first token
+//! chain, because traversal is depth-first over `BTreeMap` children and
+//! the first strictly-better candidate wins.
+
+use std::collections::BTreeMap;
+
+/// Cumulative counters for one pool's prefix cache (gauges — cached /
+/// shared block counts — live on the pool, which owns the refcounts).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    /// Lookups that matched at least one full block.
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Prompt tokens served from cached blocks, summed over hits.
+    pub tokens_reused: u64,
+    /// Cache nodes evicted (budget or pool pressure).
+    pub evictions: u64,
+}
+
+struct Node {
+    /// The physical block holding this chunk's KV.
+    block: u32,
+    /// Logical LRU stamp (updated by lookup / insert walks).
+    last_used: u64,
+    /// Children keyed by their block's token content.
+    children: BTreeMap<Vec<i32>, Node>,
+}
+
+/// The radix index: a trie of block-sized token chunks.
+pub struct RadixIndex {
+    block_size: usize,
+    children: BTreeMap<Vec<i32>, Node>,
+    /// Logical clock; each lookup/insert is one tick.
+    clock: u64,
+    /// Total nodes (== cached blocks).
+    len: usize,
+}
+
+impl RadixIndex {
+    pub fn new(block_size: usize) -> RadixIndex {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        RadixIndex { block_size, children: BTreeMap::new(), clock: 0, len: 0 }
+    }
+
+    /// Cached blocks (nodes) currently indexed.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Longest cached chain matching a prefix of `tokens`, updating the
+    /// matched path's recency.  Returns the chain's block ids (empty on
+    /// a miss); the match covers `result.len() * block_size` tokens.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Vec<u32> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut out = Vec::new();
+        let mut children = &mut self.children;
+        for chunk in tokens.chunks_exact(self.block_size) {
+            match children.get_mut(chunk) {
+                Some(node) => {
+                    node.last_used = stamp;
+                    out.push(node.block);
+                    children = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// [`lookup`](Self::lookup) without touching recency (read-only
+    /// admission probes must not perturb eviction order).
+    pub fn probe(&self, tokens: &[i32]) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut children = &self.children;
+        for chunk in tokens.chunks_exact(self.block_size) {
+            match children.get(chunk) {
+                Some(node) => {
+                    out.push(node.block);
+                    children = &node.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Index `tokens`' full-block chunks, chunk `i` backed by
+    /// `blocks[i]`.  Chunks already present keep their existing block
+    /// (first publisher wins — the cache must never hold two blocks for
+    /// one chunk); absent chunks are inserted.  Returns the block ids of
+    /// the *newly inserted* nodes, so the caller can take cache
+    /// references on exactly those.
+    pub fn insert(&mut self, tokens: &[i32], blocks: &[u32]) -> Vec<u32> {
+        let chunks: Vec<&[i32]> = tokens.chunks_exact(self.block_size).collect();
+        assert_eq!(
+            chunks.len(),
+            blocks.len(),
+            "insert: {} full chunks but {} blocks",
+            chunks.len(),
+            blocks.len()
+        );
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut fresh = Vec::new();
+        let mut children = &mut self.children;
+        for (chunk, &block) in chunks.into_iter().zip(blocks) {
+            let node = children.entry(chunk.to_vec()).or_insert_with(|| {
+                fresh.push(block);
+                Node { block, last_used: stamp, children: BTreeMap::new() }
+            });
+            node.last_used = stamp;
+            children = &mut node.children;
+        }
+        self.len += fresh.len();
+        fresh
+    }
+
+    /// Evict the least-recently-used leaf, preferring leaves for which
+    /// `prefer(block)` holds (the pool passes "freeing this block
+    /// actually returns memory"), and return its block id.  Leaf-first
+    /// keeps every surviving chain contiguous from the root; an interior
+    /// node becomes evictable once its children are gone.
+    pub fn evict_lru_leaf(&mut self, prefer: &dyn Fn(u32) -> bool) -> Option<u32> {
+        let mut best: Option<(bool, u64, u32)> = None;
+        Self::find_lru_leaf(&self.children, prefer, &mut best);
+        let (_, _, block) = best?;
+        let removed = Self::remove_leaf(&mut self.children, block);
+        debug_assert!(removed, "lru leaf {block} vanished during eviction");
+        self.len -= 1;
+        Some(block)
+    }
+
+    fn find_lru_leaf(
+        children: &BTreeMap<Vec<i32>, Node>,
+        prefer: &dyn Fn(u32) -> bool,
+        best: &mut Option<(bool, u64, u32)>,
+    ) {
+        for node in children.values() {
+            if node.children.is_empty() {
+                let p = prefer(node.block);
+                let better = match best {
+                    None => true,
+                    // Preferred beats non-preferred; within a class,
+                    // strictly-older wins (first visit wins ties).
+                    Some((bp, bu, _)) => (p && !*bp) || (p == *bp && node.last_used < *bu),
+                };
+                if better {
+                    *best = Some((p, node.last_used, node.block));
+                }
+            } else {
+                Self::find_lru_leaf(&node.children, prefer, best);
+            }
+        }
+    }
+
+    fn remove_leaf(children: &mut BTreeMap<Vec<i32>, Node>, block: u32) -> bool {
+        let mut found: Option<Vec<i32>> = None;
+        for (key, node) in children.iter_mut() {
+            if node.children.is_empty() {
+                if node.block == block {
+                    found = Some(key.clone());
+                    break;
+                }
+            } else if Self::remove_leaf(&mut node.children, block) {
+                return true;
+            }
+        }
+        if let Some(key) = found {
+            children.remove(&key);
+            return true;
+        }
+        false
+    }
+
+    /// All indexed block ids (invariant checking / evictability counts).
+    pub fn blocks(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len);
+        Self::collect_blocks(&self.children, &mut out);
+        out
+    }
+
+    fn collect_blocks(children: &BTreeMap<Vec<i32>, Node>, out: &mut Vec<u32>) {
+        for node in children.values() {
+            out.push(node.block);
+            Self::collect_blocks(&node.children, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(spec: &[i32]) -> Vec<i32> {
+        spec.to_vec()
+    }
+
+    #[test]
+    fn insert_then_lookup_matches_full_blocks_only() {
+        let mut idx = RadixIndex::new(4);
+        // 10 tokens = 2 full blocks + a partial tail that is never indexed.
+        let prompt = toks(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        let fresh = idx.insert(&prompt[..8], &[100, 101]);
+        assert_eq!(fresh, vec![100, 101]);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.lookup(&prompt), vec![100, 101]);
+        // A diverging suffix matches only the shared leading block.
+        assert_eq!(idx.lookup(&toks(&[1, 2, 3, 4, 9, 9, 9, 9])), vec![100]);
+        // A diverging first block matches nothing.
+        assert!(idx.lookup(&toks(&[9, 2, 3, 4])).is_empty());
+        // Shorter than one block matches nothing.
+        assert!(idx.lookup(&toks(&[1, 2, 3])).is_empty());
+    }
+
+    #[test]
+    fn reinsert_keeps_existing_blocks_and_extends() {
+        let mut idx = RadixIndex::new(2);
+        assert_eq!(idx.insert(&toks(&[1, 2, 3, 4]), &[10, 11]), vec![10, 11]);
+        // Same chunks from another publisher: existing nodes win, the
+        // new tail extends the chain with the publisher's block.
+        let fresh = idx.insert(&toks(&[1, 2, 3, 4, 5, 6]), &[20, 21, 22]);
+        assert_eq!(fresh, vec![22]);
+        assert_eq!(idx.lookup(&toks(&[1, 2, 3, 4, 5, 6])), vec![10, 11, 22]);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn probe_does_not_touch_recency() {
+        let mut idx = RadixIndex::new(2);
+        idx.insert(&toks(&[1, 1]), &[1]);
+        idx.insert(&toks(&[2, 2]), &[2]);
+        // Probing the older entry must not save it from LRU eviction.
+        assert_eq!(idx.probe(&toks(&[1, 1])), vec![1]);
+        assert_eq!(idx.evict_lru_leaf(&|_| true), Some(1));
+        // A lookup *does* refresh: now [2,2] is newer than a re-insert.
+        idx.insert(&toks(&[1, 1]), &[3]);
+        idx.lookup(&toks(&[1, 1]));
+        assert_eq!(idx.evict_lru_leaf(&|_| true), Some(2));
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_and_honors_preference() {
+        let mut idx = RadixIndex::new(2);
+        idx.insert(&toks(&[1, 2, 3, 4, 5, 6]), &[10, 11, 12]);
+        // The interior nodes are older than the leaf (same stamp), but
+        // only the leaf is evictable.
+        assert_eq!(idx.evict_lru_leaf(&|_| true), Some(12));
+        // Preference: block 10 is "pinned" (prefer == false), so the
+        // deeper 11 goes first even though 10 is on the same chain.
+        assert_eq!(idx.evict_lru_leaf(&|b| b != 10), Some(11));
+        assert_eq!(idx.evict_lru_leaf(&|b| b != 10), Some(10));
+        assert_eq!(idx.evict_lru_leaf(&|_| true), None);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn blocks_enumerates_every_node() {
+        let mut idx = RadixIndex::new(2);
+        idx.insert(&toks(&[1, 2, 3, 4]), &[10, 11]);
+        idx.insert(&toks(&[9, 9]), &[12]);
+        let mut blocks = idx.blocks();
+        blocks.sort_unstable();
+        assert_eq!(blocks, vec![10, 11, 12]);
+    }
+}

@@ -119,12 +119,25 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     let cmd = exec_opts(common_opts(Command::new("specreason serve", "start the TCP server")))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
         .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"))
-        .opt("seed", "default workload seed for requests that omit one", None);
+        .opt("seed", "default workload seed for requests that omit one", None)
+        .flag(
+            "prefix-cache",
+            "share KV blocks across requests with a common prompt prefix",
+        )
+        .opt(
+            "prefix-cache-blocks",
+            "cached-block budget per KV partition (0 = bounded by the pool)",
+            None,
+        );
     let args = cmd.parse(raw)?;
     let mut cfg = deploy_from(&args)?;
     cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
     cfg.seed = args.u64("seed", cfg.seed)?;
+    if args.flag("prefix-cache") {
+        cfg.prefix_cache = true;
+    }
+    cfg.prefix_cache_blocks = args.usize("prefix-cache-blocks", cfg.prefix_cache_blocks)?;
     apply_exec_opts(&mut cfg, &args)?;
     cfg.validate()?;
     eprintln!(

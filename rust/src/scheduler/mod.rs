@@ -12,6 +12,11 @@
 //!    every in-flight sequence's reservation (the block-granular ledger
 //!    in [`kv_fits`], backed by the `KvManager` free-block queries) — so
 //!    an admitted request can never hit a KV-exhaustion error mid-flight.
+//!    With `DeployConfig::prefix_cache` on, the ledger is prefix-aware:
+//!    an admitted sequence reserves only its worst case *net of the
+//!    prompt prefix it adopted from the shared-prefix KV cache*, and the
+//!    adopted blocks are charged once (not per sharer) via the distinct
+//!    pinned-block count — see [`kv_fits`] for the exact bound.
 //! 2. **Step-level batch composition** ([`task::tick`]) — every in-flight
 //!    sequence exposes its next [`EngineOp`](crate::coordinator::EngineOp)
 //!    via its re-entrant [`StepMachine`]; front ops are grouped by
@@ -377,6 +382,9 @@ pub struct JobResult {
     pub e2e_s: f64,
     /// Times this request was preempted and restarted.
     pub preemptions: u32,
+    /// Prompt tokens served from the shared-prefix KV cache, summed
+    /// over model partitions (0 with the cache off or on a miss).
+    pub prefix_tokens_reused: usize,
 }
 
 /// Internal queue entry.
@@ -438,9 +446,21 @@ pub struct RouterStats {
     /// Composed batch steps and the sequences they advanced.
     pub batch_ticks: u64,
     pub stepped_seqs: u64,
-    /// Worst-case KV blocks currently reserved by the running set (the
-    /// admission ledger, per model partition).
+    /// Worst-case KV blocks currently reserved by the running set in the
+    /// base model's partition (the admission ledger; net of adopted
+    /// shared prefixes when the prefix cache is on).
     pub kv_reserved_blocks: usize,
+    /// Shared-prefix cache: lookups that matched ≥ 1 cached block
+    /// (cumulative, summed over partitions).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cached blocks (cumulative).
+    pub prefix_tokens_reused: u64,
+    /// Blocks currently co-owned by more than one holder (gauge).
+    pub prefix_blocks_shared: usize,
+    /// Blocks currently held by the prefix indexes (gauge).
+    pub prefix_cached_blocks: usize,
+    /// Cached entries evicted under budget or pool pressure (cumulative).
+    pub prefix_evictions: u64,
 }
 
 impl RouterStats {
@@ -497,6 +517,11 @@ impl RouterStats {
             ("batch_ticks", Json::num(self.batch_ticks as f64)),
             ("batch_occupancy_mean", Json::num(self.mean_batch_occupancy())),
             ("kv_reserved_blocks", Json::num(self.kv_reserved_blocks as f64)),
+            ("prefix_hits", Json::num(self.prefix_hits as f64)),
+            ("prefix_tokens_reused", Json::num(self.prefix_tokens_reused as f64)),
+            ("prefix_blocks_shared", Json::num(self.prefix_blocks_shared as f64)),
+            ("prefix_cached_blocks", Json::num(self.prefix_cached_blocks as f64)),
+            ("prefix_evictions", Json::num(self.prefix_evictions as f64)),
         ])
     }
 }
@@ -680,16 +705,42 @@ fn need_tokens(req: &JobRequest) -> usize {
 /// error mid-flight.  Subsumes the instantaneous free-block check
 /// ([`Engine::kv_can_reserve`]) because this scheduler's sequences are
 /// the partitions' only consumers.
-fn kv_fits(engine: &Engine, model: &str, running: &[SeqTask<'_>], need_new: usize) -> bool {
+///
+/// With the prefix cache on, the ledger stops double-counting memory
+/// that is already resident, without ever under-reserving:
+///
+/// * every *admitted* sequence's reservation is net of its adopted
+///   prefix (`SeqTask::reserve`), and the adopted blocks themselves are
+///   counted exactly once via the engine's distinct count of
+///   shared-prefix blocks pinned by live sequences
+///   ([`Engine::kv_shared_resident_blocks`]);
+/// * the *incoming* request is still charged its full worst case: its
+///   adoption may convert cache-only (evictable) blocks into pinned
+///   ones, so deducting its match here could strand an already-admitted
+///   sequence's growth.  Once admitted, it joins the net-of-prefix side
+///   of the sum — with N sharers in flight, the shared blocks are held
+///   once instead of N times;
+/// * cache-*only* blocks need no reservation at all: pool pressure
+///   evicts them on demand (`matched` feeds the instantaneous
+///   free-or-evictable query with the post-adoption growth).
+fn kv_fits(
+    engine: &Engine,
+    model: &str,
+    running: &[SeqTask<'_>],
+    need_new: usize,
+    matched: &std::collections::BTreeMap<String, usize>,
+) -> bool {
     let Ok(pool) = engine.kv_pool_config(model) else {
         return false;
     };
     let bs = pool.block_size.max(1);
-    let reserved: usize = running.iter().map(|t| t.need_tokens.div_ceil(bs)).sum();
+    let deducted = need_new.saturating_sub(matched.get(model).copied().unwrap_or(0));
+    let reserved: usize = running.iter().map(|t| t.reserve_blocks(model, bs)).sum();
+    let pinned = engine.kv_shared_resident_blocks(model);
     // Ledger bound, plus the live free-block query as defense in depth
     // (protects embedders that run other sequences on the same engine).
-    reserved + need_new.div_ceil(bs) <= pool.total_blocks
-        && engine.kv_can_reserve(model, need_new)
+    reserved + pinned + need_new.div_ceil(bs) <= pool.total_blocks
+        && engine.kv_can_reserve(model, deducted)
 }
 
 /// Could a request of `need` tokens ever fit `model`'s partition, even
@@ -749,10 +800,18 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
         reap(&engine, &shared, &mut running);
         admit(&engine, &oracle, &combo, &cfg, &shared, &mut running);
         {
+            let ps = engine.prefix_stats();
             let mut s = lock(&shared.stats);
             s.running = running.len();
-            s.kv_reserved_blocks =
-                running.iter().map(|t| t.need_tokens.div_ceil(block_size)).sum();
+            s.kv_reserved_blocks = running
+                .iter()
+                .map(|t| t.reserve_blocks(&cfg.base_model, block_size))
+                .sum();
+            s.prefix_hits = ps.hits;
+            s.prefix_tokens_reused = ps.tokens_reused;
+            s.prefix_blocks_shared = ps.shared_blocks;
+            s.prefix_cached_blocks = ps.cached_blocks;
+            s.prefix_evictions = ps.evictions;
         }
 
         if running.is_empty() {
@@ -912,9 +971,27 @@ fn admit<'e>(
         }
 
         let full = running.len() >= max_batch;
-        let fits = !full
-            && kv_fits(engine, &combo.small, running, need)
-            && kv_fits(engine, &combo.base, running, need);
+        // With the prefix cache on, the workload query is generated
+        // before the fits decision so the admission ledger can probe its
+        // cached prompt prefix (a KV-blocked job therefore re-probes on
+        // each retry — the cache may have warmed since; generation is
+        // cheap next to the engine work it gates).  With it off — and
+        // while the batch is full, where the decision cannot change —
+        // generation stays where it always was: after admission.
+        let mut staged: Option<crate::semantics::Query> = None;
+        let fits = !full && {
+            let matched = if engine.prefix_cache_enabled() {
+                let q = TraceGenerator::new(job.req.dataset, job.req.seed)
+                    .query(job.req.query_index);
+                let m = engine.prefix_probe(&q.prompt);
+                staged = Some(q);
+                m
+            } else {
+                std::collections::BTreeMap::new()
+            };
+            kv_fits(engine, &combo.small, running, need, &matched)
+                && kv_fits(engine, &combo.base, running, need, &matched)
+        };
 
         if !fits {
             // This job outranks a running sequence: evict the weakest and
@@ -952,7 +1029,10 @@ fn admit<'e>(
                 s.queue_wait_s_max = wait;
             }
         }
-        match make_task(engine, oracle, combo, prio, job) {
+        let q = staged.unwrap_or_else(|| {
+            TraceGenerator::new(job.req.dataset, job.req.seed).query(job.req.query_index)
+        });
+        match make_task(engine, oracle, combo, prio, job, q, need) {
             Ok(t) => {
                 let _ = t.job.events.send(JobEvent::Admitted);
                 running.push(t);
@@ -967,23 +1047,36 @@ fn admit<'e>(
 
 /// Build the in-flight state for an admitted job (budget validation
 /// already happened in [`admit`], before the preemption decision).
+///
+/// `q` was generated by [`admit`] for the prefix probe — deliberately
+/// NOT via the eval query cache (`eval::qcache`): request seeds are
+/// untrusted client input, so caching per (dataset, seed) would grow
+/// without bound.  Generation is cheap relative to a query's engine
+/// work (and to a preemption restart's lost compute).
 fn make_task<'e>(
     engine: &'e Engine,
     oracle: &'e Oracle,
     combo: &'e Combo,
     prio: Priority,
     job: Job,
+    q: crate::semantics::Query,
+    need_tokens: usize,
 ) -> Result<SeqTask<'e>, (Job, anyhow::Error)> {
-    let need_tokens = need_tokens(&job.req);
-    // Deliberately NOT the eval query cache (`eval::qcache`): request
-    // seeds are untrusted client input, so caching per (dataset, seed)
-    // here would grow without bound.  Generation is cheap relative to a
-    // query's engine work (and to a preemption restart's lost compute).
-    let q = TraceGenerator::new(job.req.dataset, job.req.seed).query(job.req.query_index);
     let seq = match engine.new_sequence(&q.prompt) {
         Ok(s) => s,
         Err(e) => return Err((job, e)),
     };
+    // The ledger reservation is net of what the sequence *actually*
+    // adopted (the probe and this lookup run back-to-back on the
+    // composer thread, so they agree; using the adoption keeps the
+    // ledger honest even for direct embedders).
+    let mut reserve = std::collections::BTreeMap::new();
+    for model in [combo.small.as_str(), combo.base.as_str()] {
+        reserve.insert(
+            model.to_string(),
+            need_tokens.saturating_sub(seq.reused_tokens(model)),
+        );
+    }
     let seeds = SeedStream::new(q.seed);
     let machine = StepMachine::new(
         oracle,
@@ -999,7 +1092,7 @@ fn make_task<'e>(
         seq,
         seeds,
         qm: QueryMetrics::default(),
-        need_tokens,
+        reserve,
         admitted_at: Instant::now(),
         failed: None,
     })
@@ -1069,6 +1162,7 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
         }
         let t = running.remove(i);
         let _ = engine.release(&t.seq);
+        let prefix_tokens_reused = t.seq.total_reused_tokens();
         let SeqTask { job, prio, qm, admitted_at, failed, .. } = t;
         let e2e_s = job.submitted_at.elapsed().as_secs_f64();
         match failed {
@@ -1103,6 +1197,7 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                     ttfs_s,
                     e2e_s,
                     preemptions: job.preemptions,
+                    prefix_tokens_reused,
                 };
                 let _ = job.events.send(JobEvent::Result(Box::new(result)));
             }
@@ -1129,6 +1224,11 @@ mod tests {
         s.batch_ticks = 4;
         s.stepped_seqs = 10;
         s.kv_reserved_blocks = 7;
+        s.prefix_hits = 6;
+        s.prefix_tokens_reused = 192;
+        s.prefix_blocks_shared = 4;
+        s.prefix_cached_blocks = 9;
+        s.prefix_evictions = 2;
         let j = s.to_json();
         assert_eq!(j.get("admitted").as_usize(), Some(5));
         assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
@@ -1140,6 +1240,11 @@ mod tests {
         assert_eq!(j.get("deadline_evicted").as_usize(), Some(1));
         assert!((j.get("batch_occupancy_mean").as_f64().unwrap() - 2.5).abs() < 1e-12);
         assert_eq!(j.get("kv_reserved_blocks").as_usize(), Some(7));
+        assert_eq!(j.get("prefix_hits").as_usize(), Some(6));
+        assert_eq!(j.get("prefix_tokens_reused").as_usize(), Some(192));
+        assert_eq!(j.get("prefix_blocks_shared").as_usize(), Some(4));
+        assert_eq!(j.get("prefix_cached_blocks").as_usize(), Some(9));
+        assert_eq!(j.get("prefix_evictions").as_usize(), Some(2));
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! its batchmates — at `max_batch = 1` the composed "batch" degenerates
 //! to the serial path.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::coordinator::{
@@ -39,13 +40,25 @@ pub(crate) struct SeqTask<'e> {
     pub seq: Sequence,
     pub seeds: SeedStream,
     pub qm: QueryMetrics,
-    /// Worst-case KV tokens this sequence can reach (admission ledger).
-    pub need_tokens: usize,
+    /// Worst-case KV tokens this sequence can still demand, per model
+    /// partition, *net of its adopted shared prefix* (the admission
+    /// ledger).  With the prefix cache off this is the same worst case
+    /// for every model — the old single `need_tokens`.
+    pub reserve: BTreeMap<String, usize>,
     pub admitted_at: Instant,
     pub failed: Option<anyhow::Error>,
 }
 
 impl SeqTask<'_> {
+    /// This task's ledger reservation in `model`'s partition, in blocks.
+    pub fn reserve_blocks(&self, model: &str, block_size: usize) -> usize {
+        self.reserve
+            .get(model)
+            .copied()
+            .unwrap_or(0)
+            .div_ceil(block_size.max(1))
+    }
+
     /// Record the request's first engine op (on the `Job`, so the
     /// timestamp survives preemption restarts).
     pub fn note_first_op(&mut self) {

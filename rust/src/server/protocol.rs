@@ -217,6 +217,7 @@ pub fn job_result_to_json(r: &JobResult) -> Json {
     j.set("ttfs_s", Json::num(r.ttfs_s));
     j.set("e2e_s", Json::num(r.e2e_s));
     j.set("preemptions", Json::num(r.preemptions as f64));
+    j.set("prefix_tokens_reused", Json::num(r.prefix_tokens_reused as f64));
     j
 }
 

@@ -125,12 +125,14 @@ mod tests {
             ttfs_s: 0.5,
             e2e_s: 1.5,
             preemptions: 1,
+            prefix_tokens_reused: 64,
         };
         let j = job_result_to_json(&r);
         assert_eq!(j.get("scheme").as_str(), Some("spec-reason"));
         assert_eq!(j.get("thinking_tokens").as_usize(), Some(99));
         assert_eq!(j.get("priority").as_str(), Some("high"));
         assert_eq!(j.get("preemptions").as_usize(), Some(1));
+        assert_eq!(j.get("prefix_tokens_reused").as_usize(), Some(64));
         assert!((j.get("queue_wait_s").as_f64().unwrap() - 0.25).abs() < 1e-12);
     }
 }

@@ -4,11 +4,13 @@
 //! These run on the simulator backend — no PJRT — so they can afford
 //! hundreds of randomized cases.
 
+use std::collections::BTreeMap;
+
 use specreason::coordinator::{
     run_query, AcceptancePolicy, Combo, Scheme, SimBackend, SpecConfig,
 };
 use specreason::eval::{main_combos, run_cell_sim, Cell};
-use specreason::kvcache::{BlockPool, PoolConfig};
+use specreason::kvcache::{BlockPool, PoolConfig, RadixIndex};
 use specreason::metrics::{GpuClock, Testbed};
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::util::testing::check;
@@ -22,7 +24,8 @@ fn prop_block_pool_conservation_under_random_ops() {
     check("block conservation", 300, |rng| {
         let block = [8, 16, 32][rng.below(3)];
         let total = rng.range(4, 64);
-        let mut pool = BlockPool::new(PoolConfig { block_size: block, total_blocks: total });
+        let mut pool =
+            BlockPool::new(PoolConfig { block_size: block, total_blocks: total }).unwrap();
         let nseq = rng.range(1, 6);
         for s in 0..nseq {
             pool.register(s as u64).unwrap();
@@ -65,6 +68,205 @@ fn prop_block_pool_conservation_under_random_ops() {
             for (s, &l) in lens.iter().enumerate() {
                 assert_eq!(pool.seq_tokens(s as u64), l);
             }
+        }
+    });
+}
+
+/// Refcounted pools under sharing: random interleavings of register /
+/// grow / rollback / publish / adopt (share) / release must maintain
+/// `free + unique allocated == total`, never free a block with a live
+/// refcount, and never write into a shared mutable frontier block
+/// (copy-on-write) — all asserted by `check_invariants` after every op,
+/// plus `can_grow_to` ⇔ `grow_to` agreement under pressure eviction.
+#[test]
+fn prop_refcounted_pool_conservation_under_sharing() {
+    check("refcounted block conservation", 200, |rng| {
+        let block = [4, 8][rng.below(2)];
+        let total = rng.range(6, 48);
+        let budget = if rng.below(2) == 0 { 0 } else { rng.range(1, total) };
+        let mut pool =
+            BlockPool::new(PoolConfig { block_size: block, total_blocks: total }).unwrap();
+        pool.enable_prefix_cache(budget);
+
+        let nseq = rng.range(2, 5);
+        // Prompts come from two "families" (constant token streams), so
+        // publishes and adoptions genuinely collide — including
+        // prefix-of-prefix matches from differing lengths.
+        let new_prompt = |rng: &mut specreason::util::rng::Rng| {
+            let fam = rng.below(2) as i32;
+            let len = rng.range(1, 4 * block);
+            vec![fam; len]
+        };
+        let mut prompts: Vec<Vec<i32>> = Vec::new();
+        for _ in 0..nseq {
+            prompts.push(new_prompt(rng));
+        }
+        let mut lens = vec![0usize; nseq];
+        for s in 0..nseq {
+            pool.register(s as u64).unwrap();
+        }
+
+        for _ in 0..rng.range(10, 70) {
+            let s = rng.below(nseq);
+            match rng.below(6) {
+                0 => {
+                    // Grow: the capacity probe must agree with the
+                    // attempt, with pressure eviction on both sides.
+                    let target = lens[s] + rng.range(1, 3 * block);
+                    let can = pool.can_grow_to(s as u64, target);
+                    let did = pool.grow_to(s as u64, target).is_ok();
+                    assert_eq!(can, did, "can_grow_to disagrees with grow_to");
+                    if did {
+                        lens[s] = target;
+                    }
+                }
+                1 => {
+                    // Rollback (possibly into an adopted shared region —
+                    // a later grow must copy-on-write the frontier).
+                    let target = if lens[s] == 0 { 0 } else { rng.below(lens[s] + 1) };
+                    pool.rollback_to(s as u64, target).unwrap();
+                    lens[s] = target;
+                }
+                2 => {
+                    // Publish whatever prompt prefix is covered so far.
+                    let covered = lens[s].min(prompts[s].len());
+                    let p = prompts[s][..covered].to_vec();
+                    pool.publish_prefix(s as u64, &p).unwrap();
+                }
+                3 => {
+                    // Release, then come back as a fresh request that
+                    // adopts (shares) whatever the cache still holds.
+                    pool.release(s as u64).unwrap();
+                    pool.register(s as u64).unwrap();
+                    prompts[s] = new_prompt(rng);
+                    lens[s] = pool.adopt_prefix(s as u64, &prompts[s]).unwrap();
+                    assert_eq!(lens[s] % block, 0, "adoption is whole blocks only");
+                }
+                4 => {
+                    // Read-only probe: block-aligned, never beyond the
+                    // prompt's full blocks.
+                    let probed = pool.probe_prefix(&prompts[s]);
+                    assert_eq!(probed % block, 0);
+                    assert!(probed <= (prompts[s].len() / block) * block);
+                }
+                _ => {
+                    // Share-heavy path: cover the whole prompt, publish.
+                    let p = prompts[s].clone();
+                    let target = lens[s].max(p.len());
+                    if pool.grow_to(s as u64, target).is_ok() {
+                        lens[s] = target;
+                        pool.publish_prefix(s as u64, &p).unwrap();
+                    }
+                }
+            }
+            // Conservation + refcount/ownership consistency + the
+            // mutable-frontier rule, after every single op.
+            pool.check_invariants();
+            assert_eq!(pool.used_blocks() + pool.free_blocks(), total);
+            for (i, &l) in lens.iter().enumerate() {
+                assert_eq!(pool.seq_tokens(i as u64), l, "seq {i} token accounting");
+            }
+        }
+    });
+}
+
+/// Differential test: the radix prefix index against a naive reference
+/// map from full token prefixes to (block, LRU stamp).  Random seeded
+/// token streams from a tiny alphabet force prefix-of-prefix collisions;
+/// interleaved LRU evictions model eviction under pressure.  Insert,
+/// lookup and eviction results must match exactly, including LRU order
+/// and tie-breaking.
+#[test]
+fn prop_radix_index_matches_naive_reference() {
+    check("radix vs naive prefix map", 200, |rng| {
+        let bs = [2, 4][rng.below(2)];
+        let mut idx = RadixIndex::new(bs);
+        // Reference: every cached block keyed by its full token prefix.
+        let mut naive: BTreeMap<Vec<i32>, (u32, u64)> = BTreeMap::new();
+        let mut clock = 0u64;
+        let mut next_block = 0u32;
+
+        for _ in 0..rng.range(15, 80) {
+            // Token stream with a partial tail (never indexed).
+            let len = rng.below(6) * bs + rng.below(bs);
+            let toks: Vec<i32> = (0..len).map(|_| rng.below(3) as i32).collect();
+            match rng.below(3) {
+                0 => {
+                    // Insert: existing chunks keep their block, absent
+                    // chunks take the publisher's.
+                    clock += 1;
+                    let full = toks.len() / bs;
+                    let blocks: Vec<u32> = (0..full)
+                        .map(|_| {
+                            next_block += 1;
+                            next_block
+                        })
+                        .collect();
+                    let fresh = idx.insert(&toks[..full * bs], &blocks);
+                    let mut expect_fresh = Vec::new();
+                    for i in 0..full {
+                        let key = toks[..(i + 1) * bs].to_vec();
+                        match naive.get_mut(&key) {
+                            Some(e) => e.1 = clock,
+                            None => {
+                                naive.insert(key, (blocks[i], clock));
+                                expect_fresh.push(blocks[i]);
+                            }
+                        }
+                    }
+                    assert_eq!(fresh, expect_fresh, "insert fresh-block mismatch");
+                }
+                1 => {
+                    // Lookup: longest contiguous chain, refreshing LRU.
+                    clock += 1;
+                    let got = idx.lookup(&toks);
+                    let mut expect = Vec::new();
+                    for i in 1.. {
+                        let end = i * bs;
+                        if end > toks.len() {
+                            break;
+                        }
+                        match naive.get_mut(&toks[..end]) {
+                            Some(e) => {
+                                e.1 = clock;
+                                expect.push(e.0);
+                            }
+                            None => break,
+                        }
+                    }
+                    assert_eq!(got, expect, "lookup chain mismatch");
+                    // The read-only probe agrees and perturbs nothing.
+                    assert_eq!(idx.probe(&toks), expect);
+                }
+                _ => {
+                    // Evict the LRU leaf (a key that is not a strict
+                    // prefix of any other key); ties break toward the
+                    // lexicographically-first chain in both models.
+                    let got = idx.evict_lru_leaf(&|_| true);
+                    // First-wins strict-minimum scan: `min_by_key`
+                    // returns the *last* minimal element on ties, but
+                    // the index keeps the first-visited chain.
+                    let mut expect: Option<(Vec<i32>, u64, u32)> = None;
+                    for (k, &(block, stamp)) in naive.iter() {
+                        let leaf =
+                            !naive.keys().any(|o| o.len() > k.len() && o.starts_with(k));
+                        if !leaf {
+                            continue;
+                        }
+                        if expect.as_ref().map_or(true, |(_, best, _)| stamp < *best) {
+                            expect = Some((k.clone(), stamp, block));
+                        }
+                    }
+                    match expect {
+                        None => assert_eq!(got, None, "eviction from empty index"),
+                        Some((k, _, block)) => {
+                            naive.remove(&k).unwrap();
+                            assert_eq!(got, Some(block), "LRU eviction mismatch");
+                        }
+                    }
+                }
+            }
+            assert_eq!(idx.len(), naive.len(), "cached-block count drifted");
         }
     });
 }

@@ -1,7 +1,12 @@
 //! Streaming-protocol integration: the v2 session API end-to-end against
 //! the real engine — deterministic event ordering, mid-flight
 //! cancellation returning the KV reservation ledger to baseline, and
-//! deadline eviction of queued vs running jobs.
+//! deadline eviction of queued vs running jobs.  Also the shared-prefix
+//! KV cache's serving contract: with the cache enabled at
+//! `max_batch = 1`, disjoint prompts stay bit-identical to the
+//! cache-off path, and cancel / deadline eviction of a prefix-sharing
+//! request returns both the reservation ledger and the block refcounts
+//! to baseline.
 //!
 //! All tests skip (with a notice) when `artifacts/` is absent, like the
 //! other AOT-dependent suites.
@@ -246,6 +251,194 @@ fn deadline_evicts_queued_and_running_jobs() {
     let s = sched.stats();
     assert_eq!(s.deadline_evicted, 2);
     assert_eq!(s.kv_reserved_blocks, 0);
+    sched.shutdown();
+}
+
+/// Compare every deterministic field of two `QueryMetrics` (wall-clock
+/// fields are measured and excluded by definition).
+fn assert_deterministic_eq(
+    a: &specreason::metrics::QueryMetrics,
+    b: &specreason::metrics::QueryMetrics,
+    ctx: &str,
+) {
+    assert_eq!(a.gpu_secs.to_bits(), b.gpu_secs.to_bits(), "{ctx}: gpu_secs");
+    assert_eq!(a.phase_gpu.len(), b.phase_gpu.len(), "{ctx}: phase_gpu keys");
+    for (k, v) in &a.phase_gpu {
+        let w = b.phase_gpu.get(k).unwrap_or_else(|| panic!("{ctx}: missing phase {k}"));
+        assert_eq!(v.to_bits(), w.to_bits(), "{ctx}: phase_gpu[{k}]");
+    }
+    assert_eq!(a.thinking_tokens, b.thinking_tokens, "{ctx}: thinking_tokens");
+    assert_eq!(a.steps_total, b.steps_total, "{ctx}: steps_total");
+    assert_eq!(a.steps_speculated, b.steps_speculated, "{ctx}: steps_speculated");
+    assert_eq!(a.steps_accepted, b.steps_accepted, "{ctx}: steps_accepted");
+    assert_eq!(a.verify_scores, b.verify_scores, "{ctx}: verify_scores");
+    assert_eq!(a.answer_correct, b.answer_correct, "{ctx}: answer_correct");
+}
+
+/// With the prefix cache enabled at `max_batch = 1`, *disjoint* prompts
+/// never hit the cache, so every request's `QueryMetrics` stay
+/// bit-identical to the cache-off (seed) serving path — the off switch
+/// and the miss path are both exact no-ops.
+#[test]
+fn prefix_cache_disjoint_prompts_stay_bit_identical() {
+    if !have_artifacts() {
+        eprintln!("skipping prefix_cache_disjoint_prompts_stay_bit_identical: no artifacts/");
+        return;
+    }
+    let n = 3;
+    let run = |prefix_cache: bool| -> Vec<specreason::metrics::QueryMetrics> {
+        let mut cfg = deploy(1, 96);
+        cfg.prefix_cache = prefix_cache;
+        let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+        // Distinct query indexes ⇒ distinct generated prompts.
+        let out = (0..n)
+            .map(|i| {
+                sched
+                    .submit(job(&cfg, Dataset::Math500, i))
+                    .expect("submit")
+                    .recv_timeout(EVENT_TIMEOUT)
+                    .expect("reply dropped")
+                    .expect("query failed")
+            })
+            .map(|r| {
+                assert_eq!(r.prefix_tokens_reused, 0, "disjoint prompts must not hit");
+                r.metrics
+            })
+            .collect();
+        sched.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    for i in 0..n {
+        assert_deterministic_eq(&on[i], &off[i], &format!("query {i}"));
+    }
+}
+
+/// Cancel and deadline-evict of requests *sharing a cached prefix* go
+/// through the preemption rollback path: refcounts are decremented (not
+/// freed out from under the cache), and both the worst-case reservation
+/// ledger and the shared-block gauge return to their pre-admission
+/// baseline while the cached blocks stay resident for future hits.
+#[test]
+fn shared_prefix_cancel_and_deadline_return_ledger_and_refcounts() {
+    if !have_artifacts() {
+        eprintln!(
+            "skipping shared_prefix_cancel_and_deadline_return_ledger_and_refcounts: \
+             no artifacts/"
+        );
+        return;
+    }
+    let mut cfg = deploy(1, 256);
+    cfg.prefix_cache = true;
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+
+    // Request 1 populates the cache (and measures the no-hit ledger).
+    let first = sched.submit(job(&cfg, Dataset::Aime, 0)).expect("submit first");
+    loop {
+        match first.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Step(_) => break,
+            JobEvent::Queued | JobEvent::Admitted => continue,
+            other => panic!("unexpected pre-step event: {other:?}"),
+        }
+    }
+    let reserved_no_hit = sched.stats().kv_reserved_blocks;
+    assert!(reserved_no_hit > 0);
+    let r1 = first
+        .recv_timeout(EVENT_TIMEOUT)
+        .expect("reply dropped")
+        .expect("first query failed");
+    assert_eq!(r1.prefix_tokens_reused, 0, "cold cache cannot hit");
+
+    let wait_baseline = |ctx: &str| {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let s = sched.stats();
+            if s.kv_reserved_blocks == 0 && s.running == 0 && s.prefix_blocks_shared == 0 {
+                break s;
+            }
+            assert!(Instant::now() < deadline, "{ctx}: never returned to baseline");
+            thread::sleep(Duration::from_millis(5));
+        }
+    };
+    let base = wait_baseline("after first completion");
+    assert!(base.prefix_cached_blocks > 0, "the prompt prefix must be cached now");
+
+    // Request 2: same prompt ⇒ shares the cached prefix.  Its ledger
+    // reservation is net of the adopted blocks, so it is strictly
+    // smaller than the no-hit reservation; cancel mid-flight.
+    let second = sched.submit(job(&cfg, Dataset::Aime, 0)).expect("submit second");
+    loop {
+        match second.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Step(_) => break,
+            JobEvent::Queued | JobEvent::Admitted => continue,
+            other => panic!("unexpected pre-step event: {other:?}"),
+        }
+    }
+    let s = sched.stats();
+    assert!(s.prefix_hits >= 1, "same prompt must hit the cache");
+    assert!(s.prefix_tokens_reused > 0);
+    assert!(s.prefix_blocks_shared > 0, "request + cache co-own the prefix");
+    assert!(
+        s.kv_reserved_blocks < reserved_no_hit,
+        "ledger must deduct the shared prefix ({} >= {reserved_no_hit})",
+        s.kv_reserved_blocks
+    );
+    second.cancel();
+    loop {
+        match second.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Cancelled => break,
+            ev if ev.is_terminal() => panic!("wrong terminal after cancel: {ev:?}"),
+            _ => continue,
+        }
+    }
+    let after_cancel = wait_baseline("after cancel");
+    assert_eq!(after_cancel.cancelled, 1);
+    assert!(
+        after_cancel.prefix_cached_blocks > 0,
+        "cancel must decrement refcounts, not free shared blocks"
+    );
+
+    // Request 3: shares the prefix again, then is evicted by its
+    // deadline while running — same rollback path, same baseline.
+    let third = sched
+        .submit_with(job(&cfg, Dataset::Aime, 0), SubmitOpts { deadline_ms: Some(150) })
+        .expect("submit third");
+    let err = loop {
+        match third.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Error(e) => break e,
+            ev if ev.is_terminal() => panic!("wrong terminal: {ev:?}"),
+            _ => continue,
+        }
+    };
+    assert_eq!(code_of(&err), ErrorCode::DeadlineExceeded);
+    let after_deadline = wait_baseline("after deadline eviction");
+    assert_eq!(after_deadline.deadline_evicted, 1);
+    assert!(after_deadline.prefix_cached_blocks > 0);
+
+    // The engine stays healthy and the hit path still completes: a
+    // fresh identical request reuses the prefix end-to-end.
+    let fourth = sched
+        .submit(job(&cfg, Dataset::Aime, 0))
+        .expect("submit fourth")
+        .recv_timeout(EVENT_TIMEOUT)
+        .expect("reply dropped")
+        .expect("fourth query failed");
+    assert!(fourth.prefix_tokens_reused > 0, "warm cache must be reused");
+    assert_deterministic_eq(&r1.metrics, &{
+        let mut m = fourth.metrics.clone();
+        // GPU charging legitimately differs on the reused prefill span;
+        // everything content-determined must match the cold run.
+        m.gpu_secs = r1.metrics.gpu_secs;
+        m.phase_gpu = r1.metrics.phase_gpu.clone();
+        m
+    }, "hit-path content determinism");
+    assert!(
+        fourth.metrics.gpu_secs < r1.metrics.gpu_secs,
+        "reused prefill must charge less GPU-clock ({} >= {})",
+        fourth.metrics.gpu_secs,
+        r1.metrics.gpu_secs
+    );
     sched.shutdown();
 }
 
