@@ -331,6 +331,7 @@ fn main() {
     );
 
     let mut rows: Vec<Json> = Vec::new();
+    let mut resilience_rows: Vec<Json> = Vec::new();
     let mut serial_hi_load_rps = 0.0f64;
     let mut batch8_hi_load_rps = 0.0f64;
     for max_batch in [1usize, 4, 8] {
@@ -367,11 +368,25 @@ fn main() {
         }
         let stats = sched.stats();
         println!(
-            "  batch occupancy mean {:.2}, preempted {}, rejected {}",
+            "  batch occupancy mean {:.2}, preempted {}, rejected {}, retries {}, \
+             degraded {}, shed {}, faults {}",
             stats.mean_batch_occupancy(),
             stats.preempted,
-            stats.rejected_overload
+            stats.rejected_overload,
+            stats.step_retries,
+            stats.degraded_admissions,
+            stats.shed_jobs,
+            stats.faults_injected
         );
+        // Resilience counters per scheduler run (all zero without an
+        // armed fault plan / degrade config — the trajectory baseline).
+        resilience_rows.push(Json::obj(vec![
+            ("max_batch", Json::num(max_batch as f64)),
+            ("step_retries", Json::num(stats.step_retries as f64)),
+            ("degraded_admissions", Json::num(stats.degraded_admissions as f64)),
+            ("shed_jobs", Json::num(stats.shed_jobs as f64)),
+            ("faults_injected", Json::num(stats.faults_injected as f64)),
+        ]));
         match Arc::try_unwrap(sched) {
             Ok(s) => s.shutdown(),
             Err(_) => panic!("client thread leaked a scheduler handle"),
@@ -422,6 +437,7 @@ fn main() {
         ("budget", Json::num(budget as f64)),
         ("host_parallelism", Json::num(host as f64)),
         ("runs", Json::Arr(rows)),
+        ("resilience", Json::Arr(resilience_rows)),
         ("speedup_batch8_vs_serial", Json::num(speedup)),
         ("prefix_cache", prefix_rows),
         (

@@ -1,0 +1,224 @@
+//! microbench_faults — serving-path resilience under deterministic fault
+//! injection: recovery overhead vs fault rate, and goodput in degraded
+//! mode under a submission burst.
+//!
+//!   cargo bench --bench microbench_faults
+//!   SPECREASON_BENCH_FAULTS_REQS=4 cargo bench --bench microbench_faults
+//!
+//! **Fault-rate sweep:** for each injection rate (0 = baseline, then
+//! increasing) the bench boots the scheduler with every engine-side
+//! fault site armed (`engine_op`, `batch`, `kv`), drives a fixed
+//! closed-loop workload, and reports completions, injected faults, step
+//! retries, throughput, and the overhead relative to the zero-rate
+//! baseline.  Every job must still complete — transient-failure retry
+//! with bounded backoff is the machinery under test — and the KV
+//! reservation ledger must drain to zero.
+//!
+//! **Degraded mode:** a burst of submissions against a deliberately tiny
+//! pressure envelope (low watermarks, slow recovery) reports how many
+//! requests were shed at the door, served base-only, or served normally,
+//! plus goodput of the accepted set.
+//!
+//! Emits `BENCH_faults.json` (the chaos lane's trajectory artifact).
+//! Without `artifacts/` the bench writes a `{"skipped": true}` marker
+//! and exits cleanly, like the other engine-dependent benches.
+
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::faults::{FaultPlan, FaultSite};
+use specreason::scheduler::{JobRequest, Priority, Scheduler};
+use specreason::semantics::Dataset;
+use specreason::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn base_cfg(budget: usize) -> DeployConfig {
+    DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: budget,
+        answer_tokens: 8,
+        max_batch: 4,
+        max_queue: 256,
+        ..Default::default()
+    }
+}
+
+fn req(cfg: &DeployConfig, index: usize) -> JobRequest {
+    JobRequest {
+        dataset: Dataset::Math500,
+        query_index: index % 16,
+        sample: 0,
+        seed: 0xFA17_B,
+        spec: cfg.spec_config(),
+        priority: Priority::Normal,
+    }
+}
+
+/// One sweep cell: a fixed workload under `rate`, all engine-side sites
+/// armed with `fault_seed`.
+fn run_faulted(budget: usize, reqs: usize, rate: f64, fault_seed: u64) -> Json {
+    let mut cfg = base_cfg(budget);
+    if rate > 0.0 {
+        cfg.fault_plan = FaultPlan {
+            seed: fault_seed,
+            rate,
+            sites: vec![FaultSite::EngineOp, FaultSite::Batch, FaultSite::Kv],
+            // Bound total chaos per run so the retry budget always wins.
+            max_faults: (reqs as u64) * 2,
+            panic_in_batch: false,
+        };
+        cfg.max_step_retries = 20;
+        cfg.retry_backoff_ms = 1;
+    }
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..reqs)
+        .map(|i| sched.submit(req(&cfg, i)).expect("submit"))
+        .collect();
+    let mut completed = 0usize;
+    for h in handles {
+        let r = h
+            .recv_timeout(Duration::from_secs(600))
+            .expect("scheduler dropped a reply")
+            .expect("job failed despite retry budget");
+        assert!(r.metrics.steps_total > 0);
+        completed += 1;
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    let stats = sched.stats();
+    sched.shutdown();
+    assert_eq!(completed, reqs);
+    assert_eq!(stats.kv_reserved_blocks, 0, "KV ledger must drain to baseline");
+    if rate == 0.0 {
+        assert_eq!(stats.faults_injected, 0, "zero rate must stay silent");
+    }
+    println!(
+        "rate={rate:<5} seed={fault_seed}: {reqs} reqs in {makespan:.2}s \
+         ({:.2} req/s), faults {}, retries {}",
+        reqs as f64 / makespan,
+        stats.faults_injected,
+        stats.step_retries
+    );
+    Json::obj(vec![
+        ("rate", Json::num(rate)),
+        ("fault_seed", Json::num(fault_seed as f64)),
+        ("requests", Json::num(reqs as f64)),
+        ("throughput_rps", Json::num(reqs as f64 / makespan)),
+        ("makespan_s", Json::num(makespan)),
+        ("faults_injected", Json::num(stats.faults_injected as f64)),
+        ("step_retries", Json::num(stats.step_retries as f64)),
+    ])
+}
+
+/// Degraded-mode burst: tiny watermarks + slow recovery, submissions
+/// arriving faster than a `max_batch = 1` engine drains them.
+fn run_degraded_burst(budget: usize, burst: usize) -> Json {
+    let mut cfg = base_cfg(budget);
+    cfg.max_batch = 1;
+    cfg.degrade = true;
+    cfg.degrade_queue_hiwater = 2;
+    cfg.degrade_shed_hiwater = 6;
+    cfg.degrade_enter_ticks = 1;
+    cfg.degrade_exit_ticks = 1_000;
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..burst {
+        match sched.submit(req(&cfg, i)) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                assert!(
+                    format!("{e:#}").contains("overloaded"),
+                    "shed rejections carry the overloaded class: {e:#}"
+                );
+                shed += 1;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let accepted = handles.len();
+    let mut completed = 0usize;
+    let mut degraded = 0usize;
+    for h in handles {
+        let r = h
+            .recv_timeout(Duration::from_secs(600))
+            .expect("scheduler dropped a reply")
+            .expect("accepted job failed");
+        completed += 1;
+        degraded += usize::from(r.degraded);
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    let stats = sched.stats();
+    sched.shutdown();
+    assert_eq!(completed, accepted, "every accepted job completes");
+    assert_eq!(stats.shed_jobs as usize, shed, "shed accounting");
+    println!(
+        "degraded burst: {burst} submitted → {accepted} accepted ({degraded} base-only), \
+         {shed} shed, goodput {:.2} req/s",
+        completed as f64 / makespan
+    );
+    Json::obj(vec![
+        ("burst", Json::num(burst as f64)),
+        ("accepted", Json::num(accepted as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("degraded_served", Json::num(degraded as f64)),
+        ("degraded_admissions", Json::num(stats.degraded_admissions as f64)),
+        ("shed", Json::num(shed as f64)),
+        ("goodput_rps", Json::num(completed as f64 / makespan)),
+    ])
+}
+
+fn main() {
+    let out_path = "BENCH_faults.json";
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        let marker = Json::obj(vec![
+            ("bench", Json::str("faults")),
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::str("no artifacts/ (AOT compile not run)")),
+        ]);
+        std::fs::write(out_path, marker.to_string_pretty()).expect("write marker");
+        println!("microbench_faults: skipped (no artifacts/); wrote {out_path}");
+        return;
+    }
+
+    let reqs = env_usize("SPECREASON_BENCH_FAULTS_REQS", 6);
+    let budget = env_usize("SPECREASON_BENCH_FAULTS_BUDGET", 64);
+    println!("microbench_faults: {reqs} reqs per cell, budget {budget}");
+
+    // Zero-rate baseline, then rising fault pressure over two seeds each
+    // (distinct deterministic schedules at the same rate).
+    let mut rows = Vec::new();
+    let baseline = run_faulted(budget, reqs, 0.0, 0);
+    let baseline_rps = baseline.get("throughput_rps").as_f64().unwrap_or(0.0);
+    rows.push(baseline);
+    for rate in [0.02, 0.05] {
+        for fault_seed in [1u64, 2] {
+            let row = run_faulted(budget, reqs, rate, fault_seed);
+            let rps = row.get("throughput_rps").as_f64().unwrap_or(0.0);
+            if baseline_rps > 0.0 && rps > 0.0 {
+                println!(
+                    "  recovery overhead at rate {rate}: {:.1}% of baseline throughput",
+                    100.0 * rps / baseline_rps
+                );
+            }
+            rows.push(row);
+        }
+    }
+
+    let degraded = run_degraded_burst(budget, 24);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("faults")),
+        ("requests_per_cell", Json::num(reqs as f64)),
+        ("budget", Json::num(budget as f64)),
+        ("baseline_rps", Json::num(baseline_rps)),
+        ("sweep", Json::Arr(rows)),
+        ("degraded_burst", degraded),
+    ]);
+    std::fs::write(out_path, report.to_string_pretty()).expect("write BENCH_faults.json");
+    println!("wrote {out_path}");
+}

@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::{AcceptancePolicy, Scheme, SpecConfig};
 use crate::engine::EngineConfig;
 use crate::exec::{ExecConfig, PinPolicy};
+use crate::faults::FaultPlan;
 use crate::metrics::Testbed;
 use crate::util::json::Json;
 
@@ -65,6 +66,45 @@ pub struct DeployConfig {
     /// that serving (connection handlers + batched engine passes) and
     /// eval sweeps share.
     pub exec: ExecConfig,
+    /// Deterministic fault injection (JSON `"fault_plan"` object or
+    /// `serve --fault-plan`).  [`FaultPlan::none`] — the default —
+    /// injects nothing and serving is bit-identical to a plan-free
+    /// build.
+    pub fault_plan: FaultPlan,
+    /// Transient-failure retry budget: how many times the scheduler
+    /// replays a job whose step failed with a *transient* error (the
+    /// failed sequence is rolled back through the preemption path
+    /// first).  0 disables retries; fatal errors never retry.
+    pub max_step_retries: u32,
+    /// Base backoff before a retry is re-admitted, in milliseconds;
+    /// doubles per attempt (bounded exponential).
+    pub retry_backoff_ms: u64,
+    /// Graceful degradation under sustained pressure.  Off (the
+    /// default) keeps admission behavior bit-identical; on, the
+    /// composer hysteretically switches new admissions to
+    /// base-model-only and, under severe pressure, sheds submissions
+    /// with `overloaded` + a retry-after hint.
+    pub degrade: bool,
+    /// Queue depth at which pressure samples count toward entering
+    /// degraded (base-only) admissions.
+    pub degrade_queue_hiwater: usize,
+    /// Queue depth at which pressure counts as severe (shed mode).
+    pub degrade_shed_hiwater: usize,
+    /// Consecutive pressured composer samples before escalating a mode.
+    pub degrade_enter_ticks: u32,
+    /// Consecutive calm samples before stepping back down (hysteresis).
+    pub degrade_exit_ticks: u32,
+    /// Step retries observed within one sample window that count as a
+    /// retry storm (a pressure signal on their own).
+    pub degrade_retry_storm: u32,
+    /// Retry-after hint (milliseconds) carried by shed responses.
+    pub degrade_retry_after_ms: u64,
+    /// Read-timeout tick for an idle connection, ms (shutdown/cancel
+    /// observation cadence; was a hardcoded 200ms).
+    pub idle_poll_ms: u64,
+    /// Read-timeout tick while v2 sessions stream on a connection, ms
+    /// (event pump cadence; was a hardcoded 15ms).
+    pub stream_poll_ms: u64,
 }
 
 impl Default for DeployConfig {
@@ -94,6 +134,18 @@ impl Default for DeployConfig {
             preempt: true,
             slo_ms: 0,
             exec: ExecConfig::default(),
+            fault_plan: FaultPlan::none(),
+            max_step_retries: 3,
+            retry_backoff_ms: 5,
+            degrade: false,
+            degrade_queue_hiwater: 48,
+            degrade_shed_hiwater: 56,
+            degrade_enter_ticks: 3,
+            degrade_exit_ticks: 50,
+            degrade_retry_storm: 4,
+            degrade_retry_after_ms: 250,
+            idle_poll_ms: 200,
+            stream_poll_ms: 15,
         }
     }
 }
@@ -183,6 +235,45 @@ impl DeployConfig {
         if let Some(v) = j.get("pin").as_str() {
             c.exec.pin = PinPolicy::parse(v)?;
         }
+        // Fault injection: a JSON object or the compact string form.
+        match j.get("fault_plan") {
+            Json::Null => {}
+            Json::Str(s) => c.fault_plan = FaultPlan::parse(s)?,
+            obj => c.fault_plan = FaultPlan::from_json(obj)?,
+        }
+        if let Some(v) = j.get("max_step_retries").as_usize() {
+            c.max_step_retries = v as u32;
+        }
+        if let Some(v) = j.get("retry_backoff_ms").as_usize() {
+            c.retry_backoff_ms = v as u64;
+        }
+        if let Some(v) = j.get("degrade").as_bool() {
+            c.degrade = v;
+        }
+        if let Some(v) = j.get("degrade_queue_hiwater").as_usize() {
+            c.degrade_queue_hiwater = v;
+        }
+        if let Some(v) = j.get("degrade_shed_hiwater").as_usize() {
+            c.degrade_shed_hiwater = v;
+        }
+        if let Some(v) = j.get("degrade_enter_ticks").as_usize() {
+            c.degrade_enter_ticks = v as u32;
+        }
+        if let Some(v) = j.get("degrade_exit_ticks").as_usize() {
+            c.degrade_exit_ticks = v as u32;
+        }
+        if let Some(v) = j.get("degrade_retry_storm").as_usize() {
+            c.degrade_retry_storm = v as u32;
+        }
+        if let Some(v) = j.get("degrade_retry_after_ms").as_usize() {
+            c.degrade_retry_after_ms = v as u64;
+        }
+        if let Some(v) = j.get("idle_poll_ms").as_usize() {
+            c.idle_poll_ms = v as u64;
+        }
+        if let Some(v) = j.get("stream_poll_ms").as_usize() {
+            c.stream_poll_ms = v as u64;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -199,6 +290,17 @@ impl DeployConfig {
             self.exec.workers != Some(0),
             "threads must be >= 1 (omit it for auto: SPECREASON_BENCH_THREADS or \
              available parallelism)"
+        );
+        self.fault_plan.validate()?;
+        anyhow::ensure!(self.idle_poll_ms >= 1, "idle_poll_ms must be >= 1");
+        anyhow::ensure!(self.stream_poll_ms >= 1, "stream_poll_ms must be >= 1");
+        anyhow::ensure!(
+            self.degrade_shed_hiwater >= self.degrade_queue_hiwater,
+            "degrade_shed_hiwater must be >= degrade_queue_hiwater"
+        );
+        anyhow::ensure!(
+            self.degrade_enter_ticks >= 1 && self.degrade_exit_ticks >= 1,
+            "degrade enter/exit ticks must be >= 1"
         );
         Ok(())
     }
@@ -219,6 +321,7 @@ impl DeployConfig {
             prefix_cache: self.prefix_cache,
             prefix_cache_blocks: self.prefix_cache_blocks,
             temperature: self.temperature,
+            fault_plan: self.fault_plan.clone(),
         }
     }
 
@@ -315,6 +418,63 @@ mod tests {
         let err = DeployConfig::from_json_str(r#"{"threads": 0}"#).unwrap_err();
         assert!(format!("{err:#}").contains("threads must be >= 1"));
         assert!(DeployConfig::from_json_str(r#"{"pin": "warp"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_fault_and_retry_knobs() {
+        let c = DeployConfig::from_json_str(
+            r#"{"fault_plan": {"seed": 9, "rate": 0.02, "sites": ["engine_op", "kv"]},
+                "max_step_retries": 5, "retry_backoff_ms": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fault_plan.seed, 9);
+        assert!((c.fault_plan.rate - 0.02).abs() < 1e-12);
+        assert_eq!(c.fault_plan.sites.len(), 2);
+        assert_eq!(c.max_step_retries, 5);
+        assert_eq!(c.retry_backoff_ms, 2);
+        assert_eq!(c.engine_config().fault_plan, c.fault_plan);
+        // Compact string form is accepted too.
+        let s = DeployConfig::from_json_str(
+            r#"{"fault_plan": "seed=3,rate=0.1,sites=batch"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.fault_plan.seed, 3);
+        // Default: inert plan, retries on, degradation off.
+        let d = DeployConfig::default();
+        assert!(d.fault_plan.is_none());
+        assert_eq!(d.max_step_retries, 3);
+        assert!(!d.degrade);
+        assert!(DeployConfig::from_json_str(r#"{"fault_plan": {"rate": 2.0}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_degrade_and_poll_knobs() {
+        let c = DeployConfig::from_json_str(
+            r#"{"degrade": true, "degrade_queue_hiwater": 10,
+                "degrade_shed_hiwater": 20, "degrade_enter_ticks": 2,
+                "degrade_exit_ticks": 4, "degrade_retry_storm": 3,
+                "degrade_retry_after_ms": 100,
+                "idle_poll_ms": 50, "stream_poll_ms": 5}"#,
+        )
+        .unwrap();
+        assert!(c.degrade);
+        assert_eq!(c.degrade_queue_hiwater, 10);
+        assert_eq!(c.degrade_shed_hiwater, 20);
+        assert_eq!(c.degrade_enter_ticks, 2);
+        assert_eq!(c.degrade_exit_ticks, 4);
+        assert_eq!(c.degrade_retry_storm, 3);
+        assert_eq!(c.degrade_retry_after_ms, 100);
+        assert_eq!(c.idle_poll_ms, 50);
+        assert_eq!(c.stream_poll_ms, 5);
+        // Defaults match the previously hardcoded pump cadences.
+        let d = DeployConfig::default();
+        assert_eq!(d.idle_poll_ms, 200);
+        assert_eq!(d.stream_poll_ms, 15);
+        assert!(DeployConfig::from_json_str(r#"{"stream_poll_ms": 0}"#).is_err());
+        assert!(DeployConfig::from_json_str(
+            r#"{"degrade_queue_hiwater": 9, "degrade_shed_hiwater": 3}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use anyhow::Result;
 use super::backend::Role;
 use super::machine::EngineOp;
 use crate::engine::{Engine, Sequence};
+use crate::faults::{self, FaultInjector, FaultSite};
 use crate::metrics::{Phase, QueryMetrics};
 
 /// Per-query decode-seed stream.  Content is oracle-driven; token bytes
@@ -54,6 +55,27 @@ pub fn refund_bonus_gpu(qm: &mut QueryMetrics, gpu_before: f64) {
     if let Some(v) = qm.phase_gpu.get_mut(Phase::SpecVerify.name()) {
         *v -= delta;
     }
+}
+
+/// `engine_op`-site fault gate: consulted once per front op *before*
+/// execution, so a fired fault fails the step with the sequence still
+/// at its pre-op state (the retry path rolls back and replays from the
+/// prompt).  Keyed by [`faults::op_key`] — `(request seed, attempt,
+/// op index)` — so each retry attempt draws a fresh deterministic
+/// schedule instead of re-hitting the same fault forever.
+pub fn inject_op_fault(
+    injector: &FaultInjector,
+    request_seed: u64,
+    attempt: u64,
+    op_index: u64,
+) -> Result<()> {
+    if injector.enabled() {
+        injector.try_fault(
+            FaultSite::EngineOp,
+            faults::op_key(request_seed, attempt, op_index),
+        )?;
+    }
+    Ok(())
 }
 
 /// Execute one [`EngineOp`] against the engine.

@@ -33,6 +33,7 @@ use anyhow::{anyhow, Result};
 
 use super::{Engine, Sequence};
 use crate::exec::panic_message;
+use crate::faults::{self, FaultSite};
 use crate::metrics::{Phase, QueryMetrics};
 
 /// One sequence's slot in a batched decode pass.
@@ -90,6 +91,27 @@ fn batch_executor<R>(n: usize) -> std::result::Result<std::sync::Arc<crate::exec
 }
 
 impl Engine {
+    /// `batch`-site fault gate, keyed by `(seq id, frontier)` so the
+    /// schedule is deterministic per slot yet fresh after a retry (a
+    /// restarted job gets a new sequence id).  With `panic_in_batch`
+    /// the fault is a worker panic — exercising the per-slot
+    /// `catch_unwind` isolation — otherwise the slot's `Err`.  Inert
+    /// (one branch) without an armed plan.
+    fn batch_fault(&self, seq: &Sequence) -> Result<()> {
+        let inj = self.faults();
+        if !inj.enabled() {
+            return Ok(());
+        }
+        let key = faults::key2(seq.id, seq.len() as u64);
+        if inj.should_inject(FaultSite::Batch, key) {
+            if inj.plan().panic_in_batch {
+                panic!("injected: batch fault (seq {})", seq.id);
+            }
+            anyhow::bail!("injected: batch fault (seq {})", seq.id);
+        }
+        Ok(())
+    }
+
     /// Decode one step for up to `max_batch` sequences in a single
     /// batched pass.  Returns per-request results in request order.
     pub fn decode_batch(&self, mut reqs: Vec<BatchDecode<'_>>) -> Vec<Result<Vec<i32>>> {
@@ -97,7 +119,10 @@ impl Engine {
             // Inline: the serial path, no executor involvement.
             return reqs
                 .iter_mut()
-                .map(|r| self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm))
+                .map(|r| {
+                    self.batch_fault(r.seq)?;
+                    self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm)
+                })
                 .collect();
         }
         let exec = match batch_executor(reqs.len()) {
@@ -106,6 +131,7 @@ impl Engine {
         };
         exec.scoped_map("engine:decode_batch", reqs, |_, mut r| {
             isolated("decode_batch", || {
+                self.batch_fault(r.seq)?;
                 self.decode(r.seq, r.model, r.n, r.seed, r.phase, r.qm)
             })
         })
@@ -119,14 +145,23 @@ impl Engine {
         mut reqs: Vec<BatchVerify<'_>>,
     ) -> Vec<Result<Option<Vec<f32>>>> {
         if reqs.len() <= 1 {
-            return reqs.iter_mut().map(|r| verify_one(self, r)).collect();
+            return reqs
+                .iter_mut()
+                .map(|r| {
+                    self.batch_fault(r.seq)?;
+                    verify_one(self, r)
+                })
+                .collect();
         }
         let exec = match batch_executor(reqs.len()) {
             Ok(exec) => exec,
             Err(errs) => return errs,
         };
         exec.scoped_map("engine:verify_batch", reqs, |_, mut r| {
-            isolated("scored_prefill_batch", || verify_one(self, &mut r))
+            isolated("scored_prefill_batch", || {
+                self.batch_fault(r.seq)?;
+                verify_one(self, &mut r)
+            })
         })
     }
 }

@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::faults::{self, FaultInjector, FaultPlan, FaultSite};
 use crate::kvcache::{KvManager, PoolConfig};
 use crate::metrics::{GpuClock, Phase, QueryMetrics, Testbed};
 use crate::runtime::{Device, Manifest, ModelRuntime, Tokenizer};
@@ -55,6 +56,10 @@ pub struct EngineConfig {
     pub prefix_cache_blocks: usize,
     /// Sampling temperature for generation (paper: 0.6).
     pub temperature: f32,
+    /// Deterministic fault injection for the `batch` and `kv` sites
+    /// (and, via the scheduler, `engine_op`).  [`FaultPlan::none`] —
+    /// the default — is bit-identical to a plan-free engine.
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -68,6 +73,7 @@ impl Default for EngineConfig {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             temperature: 0.6,
+            fault_plan: FaultPlan::none(),
         }
     }
 }
@@ -94,6 +100,9 @@ pub struct Engine {
     kv_mgr: Mutex<KvManager>,
     /// Shared-prefix KV caching enabled (see [`EngineConfig::prefix_cache`]).
     prefix_cache: bool,
+    /// Deterministic fault injector for the `batch` / `kv` sites (the
+    /// scheduler borrows it for `engine_op`).  Disabled by default.
+    faults: FaultInjector,
     next_seq: AtomicU64,
 }
 
@@ -131,8 +140,26 @@ impl Engine {
             models,
             kv_mgr: Mutex::new(kv_mgr),
             prefix_cache: cfg.prefix_cache,
+            faults: FaultInjector::new(cfg.fault_plan.clone()),
             next_seq: AtomicU64::new(1),
         })
+    }
+
+    /// The engine's fault injector (inert unless the config armed a
+    /// [`FaultPlan`]); the scheduler consults it for the `engine_op`
+    /// site and mirrors its totals into `faults_injected`.
+    pub fn faults(&self) -> &FaultInjector {
+        &self.faults
+    }
+
+    /// `kv`-site fault gate: fails a reservation/growth attempt before
+    /// any accounting mutates, so recovery sees pre-step state.
+    fn kv_fault(&self, seq_id: u64, tokens: usize) -> Result<()> {
+        if self.faults.enabled() {
+            self.faults
+                .try_fault(FaultSite::Kv, faults::key2(seq_id, tokens as u64))?;
+        }
+        Ok(())
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelRuntime> {
@@ -227,6 +254,10 @@ impl Engine {
     pub fn new_sequence(&self, prompt: &[i32]) -> Result<Sequence> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let id = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        // Reservation is a `kv` injection site: fail before registering
+        // so nothing leaks (the id is burned, which is fine — ids only
+        // need uniqueness).
+        self.kv_fault(id, prompt.len())?;
         // Build the (side-effect-free) per-model KV views *before*
         // registering, so no fallible step runs while the sequence is
         // already holding pool state.
@@ -275,6 +306,9 @@ impl Engine {
     }
 
     fn grow_accounting(&self, model: &str, seq_id: u64, tokens: usize) -> Result<()> {
+        // `kv` injection site: growth fails before any accounting
+        // mutates, so the failed op leaves the ledger at pre-step state.
+        self.kv_fault(seq_id, tokens)?;
         let mut mgr = self.kv_mgr.lock().unwrap();
         let pool = mgr.pool_mut(model)?;
         // grow_to is monotonic; ignore if accounting is already ahead

@@ -1,0 +1,492 @@
+//! Seeded, deterministic fault injection for the serving path.
+//!
+//! A [`FaultPlan`] names *where* failures may fire (injection sites),
+//! *how often* (a per-decision probability), and *under which seed* —
+//! every decision is a pure hash of `(seed, site, key)`, so a given
+//! plan replays the exact same failure schedule on every run.  That
+//! determinism is the point: the chaos suite can sweep seeds and assert
+//! recovery invariants bit-for-bit, which a time- or entropy-based
+//! injector can never support.
+//!
+//! Sites (see [`FaultSite`]):
+//!
+//! - `engine_op` — an in-flight [`StepMachine`](crate::coordinator::StepMachine)
+//!   front op fails before execution (scheduler tick).
+//! - `batch` — one slot of `Engine::decode_batch` /
+//!   `Engine::scored_prefill_batch` fails (or panics, with
+//!   `panic_in_batch`, to exercise the executor's panic isolation).
+//! - `kv` — a KV reservation or block-growth attempt fails before any
+//!   accounting mutates (engine `new_sequence` / growth paths).
+//! - `conn_io` — a connection handler's read/write fails, dropping the
+//!   connection (the server must survive; its jobs are cancelled).
+//!
+//! Injected failures carry an `injected:` message and classify as
+//! `engine_failure` — the *transient* error class — so they exercise
+//! the scheduler's retry/rollback path exactly like a real transient
+//! fault would.  The default plan is [`FaultPlan::none`]: zero sites,
+//! zero rate, and a disabled [`FaultInjector`] whose checks are a
+//! single branch — serving behavior is bit-identical to a build
+//! without this module.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Sites
+// ---------------------------------------------------------------------
+
+/// A well-defined point in the serving path where a fault may fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// Engine-op execution inside the scheduler tick.
+    EngineOp,
+    /// One slot of a batched decode / scored-prefill pass.
+    Batch,
+    /// KV reservation or block growth (before accounting mutates).
+    Kv,
+    /// Connection I/O in a server handler.
+    ConnIo,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 4] =
+        [FaultSite::EngineOp, FaultSite::Batch, FaultSite::Kv, FaultSite::ConnIo];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::EngineOp => "engine_op",
+            FaultSite::Batch => "batch",
+            FaultSite::Kv => "kv",
+            FaultSite::ConnIo => "conn_io",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultSite> {
+        match s {
+            "engine_op" => Ok(FaultSite::EngineOp),
+            "batch" => Ok(FaultSite::Batch),
+            "kv" => Ok(FaultSite::Kv),
+            "conn_io" => Ok(FaultSite::ConnIo),
+            other => bail!(
+                "unknown fault site {other:?} (expected engine_op|batch|kv|conn_io|all)"
+            ),
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::EngineOp => 0,
+            FaultSite::Batch => 1,
+            FaultSite::Kv => 2,
+            FaultSite::ConnIo => 3,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plan
+// ---------------------------------------------------------------------
+
+/// Declarative fault schedule: seed + per-decision rate + enabled sites.
+///
+/// Carried by `DeployConfig` (JSON `"fault_plan"`) and `serve
+/// --fault-plan`; the engine and server each build a [`FaultInjector`]
+/// from it.  [`FaultPlan::none`] (the `Default`) injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the pure decision hash; two runs with the same plan see
+    /// the same failure schedule.
+    pub seed: u64,
+    /// Per-decision injection probability in `[0, 1]`.
+    pub rate: f64,
+    /// Sites where the plan is armed (empty ⇒ inert).
+    pub sites: Vec<FaultSite>,
+    /// Hard cap on the total faults an injector fires (0 ⇒ unlimited).
+    pub max_faults: u64,
+    /// `batch`-site faults panic inside the worker closure instead of
+    /// returning an error — exercises the executor's panic isolation.
+    pub panic_in_batch: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The inert plan: no sites, zero rate. Bit-identity escape hatch.
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, rate: 0.0, sites: Vec::new(), max_faults: 0, panic_in_batch: false }
+    }
+
+    /// A plan armed at every site.
+    pub fn all_sites(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, rate, sites: FaultSite::ALL.to_vec(), ..FaultPlan::none() }
+    }
+
+    /// True when the plan can never fire.
+    pub fn is_none(&self) -> bool {
+        self.rate <= 0.0 || self.sites.is_empty()
+    }
+
+    pub fn site_enabled(&self, site: FaultSite) -> bool {
+        self.sites.contains(&site)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.rate.is_finite() && (0.0..=1.0).contains(&self.rate),
+            "fault_plan rate must be in [0, 1], got {}",
+            self.rate
+        );
+        Ok(())
+    }
+
+    /// Parse the compact CLI form
+    /// `seed=7,rate=0.05,sites=engine_op+batch+kv+conn_io[,max=100][,panic]`
+    /// (or a JSON object string — see [`FaultPlan::from_json`]).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(FaultPlan::none());
+        }
+        if s.starts_with('{') {
+            let j = Json::parse(s).map_err(|e| anyhow::anyhow!("fault plan JSON: {e}"))?;
+            return FaultPlan::from_json(&j);
+        }
+        let mut plan = FaultPlan { sites: FaultSite::ALL.to_vec(), ..FaultPlan::none() };
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if part == "panic" {
+                plan.panic_in_batch = true;
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault plan: expected key=value, got {part:?}"))?;
+            match k.trim() {
+                "seed" => plan.seed = v.trim().parse()?,
+                "rate" => plan.rate = v.trim().parse()?,
+                "max" | "max_faults" => plan.max_faults = v.trim().parse()?,
+                "sites" => {
+                    plan.sites.clear();
+                    for site in v.split('+').map(str::trim).filter(|s| !s.is_empty()) {
+                        if site == "all" {
+                            plan.sites = FaultSite::ALL.to_vec();
+                        } else {
+                            plan.sites.push(FaultSite::parse(site)?);
+                        }
+                    }
+                }
+                other => bail!("fault plan: unknown key {other:?}"),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Parse the JSON-config form:
+    /// `{"seed": 7, "rate": 0.05, "sites": ["engine_op", ...],
+    ///   "max_faults": 100, "panic_in_batch": false}`.
+    /// Omitted `sites` means all sites.
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { sites: FaultSite::ALL.to_vec(), ..FaultPlan::none() };
+        if let Some(v) = j.get("seed").as_f64() {
+            plan.seed = v as u64;
+        }
+        if let Some(v) = j.get("rate").as_f64() {
+            plan.rate = v;
+        }
+        if let Some(v) = j.get("max_faults").as_f64() {
+            plan.max_faults = v as u64;
+        }
+        if let Some(v) = j.get("panic_in_batch").as_bool() {
+            plan.panic_in_batch = v;
+        }
+        if let Some(arr) = j.get("sites").as_arr() {
+            plan.sites.clear();
+            for s in arr {
+                let name = s
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("fault plan sites must be strings"))?;
+                if name == "all" {
+                    plan.sites = FaultSite::ALL.to_vec();
+                } else {
+                    plan.sites.push(FaultSite::parse(name)?);
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("rate", Json::num(self.rate)),
+            (
+                "sites",
+                Json::arr(self.sites.iter().map(|s| Json::str(s.name()))),
+            ),
+            ("max_faults", Json::num(self.max_faults as f64)),
+            ("panic_in_batch", Json::Bool(self.panic_in_batch)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decision hash (SplitMix64-style finalizer, same family as util::rng)
+// ---------------------------------------------------------------------
+
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Combine two key components into one decision key (order-sensitive).
+pub fn key2(a: u64, b: u64) -> u64 {
+    mix(mix(a).wrapping_add(b))
+}
+
+/// Decision key for an engine op: `(request seed, attempt, op index)`.
+/// Folding the attempt in means a retried run draws a *fresh* schedule —
+/// without it, a deterministic injector would re-fail every replay of
+/// the same op forever and retries could never succeed.
+pub fn op_key(request_seed: u64, attempt: u64, op_index: u64) -> u64 {
+    key2(key2(request_seed, attempt), op_index)
+}
+
+// ---------------------------------------------------------------------
+// Injector
+// ---------------------------------------------------------------------
+
+/// Shared, thread-safe executor of a [`FaultPlan`]: pure per-site
+/// decisions plus atomic injected-fault counters.  One lives inside the
+/// `Engine` (engine_op / batch / kv sites) and one inside the server
+/// (conn_io); both surface their totals through `faults_injected`.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    site_on: [bool; 4],
+    injected: [AtomicU64; 4],
+    total: AtomicU64,
+    /// Monotonic key source for sites without a natural deterministic
+    /// key (connection I/O events).
+    conn_ctr: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let mut site_on = [false; 4];
+        if !plan.is_none() {
+            for s in &plan.sites {
+                site_on[s.index()] = true;
+            }
+        }
+        FaultInjector {
+            plan,
+            site_on,
+            injected: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            total: AtomicU64::new(0),
+            conn_ctr: AtomicU64::new(0),
+        }
+    }
+
+    /// A permanently-disabled injector (plan [`FaultPlan::none`]).
+    pub fn disabled() -> FaultInjector {
+        FaultInjector::new(FaultPlan::none())
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// False for the inert plan — callers gate their site checks on
+    /// this so the zero-fault path costs one branch.
+    pub fn enabled(&self) -> bool {
+        !self.plan.is_none()
+    }
+
+    /// Pure decision: would the plan fire at `site` for `key`?  Ignores
+    /// the `max_faults` cap and mutates nothing (tests use this to
+    /// predict schedules).
+    pub fn decides(&self, site: FaultSite, key: u64) -> bool {
+        if !self.site_on[site.index()] || self.plan.rate <= 0.0 {
+            return false;
+        }
+        let h = mix(self.plan.seed ^ key2(site.index() as u64 + 1, key));
+        // Top 53 bits → uniform in [0, 1); strict `<` keeps rate 0 silent.
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        u < self.plan.rate
+    }
+
+    /// Decide and count: true means a fault fires now (respecting the
+    /// `max_faults` cap).
+    pub fn should_inject(&self, site: FaultSite, key: u64) -> bool {
+        if !self.decides(site, key) {
+            return false;
+        }
+        if self.plan.max_faults > 0 {
+            // Reserve a slot under the cap; back out on overshoot.
+            let prev = self.total.fetch_add(1, Ordering::SeqCst);
+            if prev >= self.plan.max_faults {
+                self.total.fetch_sub(1, Ordering::SeqCst);
+                return false;
+            }
+        } else {
+            self.total.fetch_add(1, Ordering::SeqCst);
+        }
+        self.injected[site.index()].fetch_add(1, Ordering::SeqCst);
+        true
+    }
+
+    /// Check-and-fail helper: `Err` with an `injected:` transient error
+    /// when the plan fires at `site` for `key`, `Ok(())` otherwise.
+    pub fn try_fault(&self, site: FaultSite, key: u64) -> Result<()> {
+        if self.should_inject(site, key) {
+            bail!("injected: {} fault (key {key:#018x})", site.name());
+        }
+        Ok(())
+    }
+
+    pub fn injected_total(&self) -> u64 {
+        self.total.load(Ordering::SeqCst)
+    }
+
+    pub fn injected_at(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::SeqCst)
+    }
+
+    /// Next key for connection-I/O decisions (monotonic per process;
+    /// deterministic for single-connection chaos runs).
+    pub fn next_conn_key(&self) -> u64 {
+        self.conn_ctr.fetch_add(1, Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_never_fires() {
+        let inj = FaultInjector::disabled();
+        assert!(!inj.enabled());
+        for key in 0..1000 {
+            for site in FaultSite::ALL {
+                assert!(!inj.decides(site, key));
+                assert!(inj.try_fault(site, key).is_ok());
+            }
+        }
+        assert_eq!(inj.injected_total(), 0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        let a = FaultInjector::new(FaultPlan::all_sites(7, 0.3));
+        let b = FaultInjector::new(FaultPlan::all_sites(7, 0.3));
+        let c = FaultInjector::new(FaultPlan::all_sites(8, 0.3));
+        let mut differs = false;
+        for key in 0..500 {
+            for site in FaultSite::ALL {
+                assert_eq!(a.decides(site, key), b.decides(site, key));
+                differs |= a.decides(site, key) != c.decides(site, key);
+            }
+        }
+        assert!(differs, "seed change should alter the schedule");
+    }
+
+    #[test]
+    fn rate_extremes_and_approximate_frequency() {
+        let never = FaultInjector::new(FaultPlan::all_sites(3, 0.0));
+        let always = FaultInjector::new(FaultPlan::all_sites(3, 1.0));
+        let half = FaultInjector::new(FaultPlan::all_sites(3, 0.5));
+        let mut hits = 0usize;
+        for key in 0..10_000u64 {
+            assert!(!never.decides(FaultSite::Kv, key));
+            assert!(always.decides(FaultSite::Kv, key));
+            if half.decides(FaultSite::Kv, key) {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / 10_000.0;
+        assert!((0.45..=0.55).contains(&frac), "rate 0.5 measured {frac}");
+    }
+
+    #[test]
+    fn sites_gate_independently() {
+        let plan = FaultPlan {
+            seed: 11,
+            rate: 1.0,
+            sites: vec![FaultSite::Batch],
+            ..FaultPlan::none()
+        };
+        let inj = FaultInjector::new(plan);
+        assert!(inj.decides(FaultSite::Batch, 1));
+        assert!(!inj.decides(FaultSite::EngineOp, 1));
+        assert!(!inj.decides(FaultSite::Kv, 1));
+        assert!(!inj.decides(FaultSite::ConnIo, 1));
+    }
+
+    #[test]
+    fn max_faults_caps_total() {
+        let plan = FaultPlan { max_faults: 3, ..FaultPlan::all_sites(5, 1.0) };
+        let inj = FaultInjector::new(plan);
+        let mut fired = 0;
+        for key in 0..100 {
+            if inj.should_inject(FaultSite::EngineOp, key) {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 3);
+        assert_eq!(inj.injected_total(), 3);
+        assert_eq!(inj.injected_at(FaultSite::EngineOp), 3);
+    }
+
+    #[test]
+    fn op_key_varies_with_attempt() {
+        // A retried attempt must draw a fresh schedule: same (seed, op)
+        // across attempts may not map to the same decision key.
+        assert_ne!(op_key(42, 0, 3), op_key(42, 1, 3));
+        assert_ne!(op_key(42, 0, 3), op_key(42, 0, 4));
+        assert_eq!(op_key(42, 1, 3), op_key(42, 1, 3));
+    }
+
+    #[test]
+    fn parse_compact_and_json_roundtrip() {
+        let p = FaultPlan::parse("seed=7,rate=0.05,sites=engine_op+kv,max=10,panic").unwrap();
+        assert_eq!(p.seed, 7);
+        assert!((p.rate - 0.05).abs() < 1e-12);
+        assert_eq!(p.sites, vec![FaultSite::EngineOp, FaultSite::Kv]);
+        assert_eq!(p.max_faults, 10);
+        assert!(p.panic_in_batch);
+
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none());
+        assert_eq!(FaultPlan::parse("none").unwrap(), FaultPlan::none());
+        let all = FaultPlan::parse("seed=1,rate=0.1,sites=all").unwrap();
+        assert_eq!(all.sites, FaultSite::ALL.to_vec());
+        // Sites omitted ⇒ all sites.
+        let dflt = FaultPlan::parse("seed=1,rate=0.1").unwrap();
+        assert_eq!(dflt.sites, FaultSite::ALL.to_vec());
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(FaultPlan::parse("rate=1.5").is_err());
+        assert!(FaultPlan::parse("sites=warp_core").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("seed").is_err());
+    }
+}

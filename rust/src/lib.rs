@@ -18,6 +18,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod eval;
 pub mod exec;
+pub mod faults;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;

@@ -128,6 +128,11 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             "prefix-cache-blocks",
             "cached-block budget per KV partition (0 = bounded by the pool)",
             None,
+        )
+        .opt(
+            "fault-plan",
+            "deterministic fault injection, e.g. 'seed=7,rate=0.05,sites=engine_op+kv' ('none' = off)",
+            None,
         );
     let args = cmd.parse(raw)?;
     let mut cfg = deploy_from(&args)?;
@@ -138,6 +143,9 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         cfg.prefix_cache = true;
     }
     cfg.prefix_cache_blocks = args.usize("prefix-cache-blocks", cfg.prefix_cache_blocks)?;
+    if let Some(plan) = args.get("fault-plan") {
+        cfg.fault_plan = specreason::faults::FaultPlan::parse(plan)?;
+    }
     apply_exec_opts(&mut cfg, &args)?;
     cfg.validate()?;
     eprintln!(

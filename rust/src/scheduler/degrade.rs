@@ -1,0 +1,260 @@
+//! Graceful-degradation controller: hysteretic pressure tracking for
+//! the composer loop.
+//!
+//! Off by default (`DeployConfig::degrade = false`) — the scheduler
+//! never changes admission behavior and this module is inert, keeping
+//! the bit-identity escape hatch every subsystem preserves.  Enabled,
+//! the composer feeds one pressure sample per loop iteration and the
+//! controller walks a three-state machine:
+//!
+//! ```text
+//!            ≥ enter_ticks pressured samples        severe pressure
+//!   Normal ───────────────────────────────▶ BaseOnly ─────────────▶ Shed
+//!     ▲                                        │   ▲                 │
+//!     └──── ≥ exit_ticks calm samples ─────────┘   └──── calm ───────┘
+//! ```
+//!
+//! * **BaseOnly** — new admissions have speculation disabled (scheme
+//!   forced to base-model-only): under pressure the small model's
+//!   drafting work is the first thing to shed, trading SpecReason's
+//!   latency win for capacity while keeping full answer quality.
+//! * **Shed** — severe pressure (queue at the shed watermark): new
+//!   submissions are rejected at the door with `overloaded` plus a
+//!   retry-after hint, before they cost any queue slot.
+//!
+//! Escalation needs `enter_ticks` *consecutive* pressured samples;
+//! recovery needs `exit_ticks` consecutive calm ones and steps down one
+//! state at a time (Shed → BaseOnly → Normal), so a flapping load
+//! cannot thrash admissions (hysteresis).  Pressure signals: queue
+//! depth beyond the watermarks, a retry storm (≥ `retry_storm` step
+//! retries within one sample window), or a KV-blocked admission.
+
+/// Admission mode the composer publishes (atomically) for submitters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeMode {
+    /// Full service: speculation on, admissions unchanged.
+    Normal = 0,
+    /// New admissions run base-model-only (speculation off).
+    BaseOnly = 1,
+    /// New submissions are rejected with `overloaded` + retry-after.
+    Shed = 2,
+}
+
+impl DegradeMode {
+    pub fn from_u8(v: u8) -> DegradeMode {
+        match v {
+            2 => DegradeMode::Shed,
+            1 => DegradeMode::BaseOnly,
+            _ => DegradeMode::Normal,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradeMode::Normal => "normal",
+            DegradeMode::BaseOnly => "base_only",
+            DegradeMode::Shed => "shed",
+        }
+    }
+}
+
+/// Tuning knobs (mirrors the `degrade_*` fields of `DeployConfig`).
+#[derive(Debug, Clone)]
+pub struct DegradeKnobs {
+    /// Queue depth at which a sample counts as pressured.
+    pub queue_hiwater: usize,
+    /// Queue depth at which a sample counts as *severe* (Shed-grade).
+    pub shed_hiwater: usize,
+    /// Consecutive pressured samples before escalating one state.
+    pub enter_ticks: u32,
+    /// Consecutive calm samples before stepping down one state.
+    pub exit_ticks: u32,
+    /// Step retries within one sample window that count as a storm.
+    pub retry_storm: u32,
+}
+
+/// One pressure sample per composer loop; see the module docs for the
+/// state machine.
+#[derive(Debug)]
+pub struct DegradeController {
+    knobs: DegradeKnobs,
+    mode: DegradeMode,
+    hot: u32,
+    calm: u32,
+    /// Cumulative step-retry counter at the previous sample (the delta
+    /// is the per-window storm signal).
+    last_retries: u64,
+}
+
+impl DegradeController {
+    pub fn new(knobs: DegradeKnobs) -> DegradeController {
+        DegradeController {
+            knobs,
+            mode: DegradeMode::Normal,
+            hot: 0,
+            calm: 0,
+            last_retries: 0,
+        }
+    }
+
+    pub fn mode(&self) -> DegradeMode {
+        self.mode
+    }
+
+    /// Feed one sample: current queue depth, the *cumulative* step-retry
+    /// counter, and whether an admission was KV-blocked this iteration.
+    /// Returns the (possibly changed) mode.
+    pub fn observe(
+        &mut self,
+        queue_depth: usize,
+        retries_total: u64,
+        kv_blocked: bool,
+    ) -> DegradeMode {
+        let retries_delta = retries_total.saturating_sub(self.last_retries);
+        self.last_retries = retries_total;
+
+        let severe = queue_depth >= self.knobs.shed_hiwater;
+        let pressured = severe
+            || queue_depth >= self.knobs.queue_hiwater
+            || retries_delta >= self.knobs.retry_storm as u64
+            || kv_blocked;
+
+        if pressured {
+            self.hot = self.hot.saturating_add(1);
+            self.calm = 0;
+        } else {
+            self.calm = self.calm.saturating_add(1);
+            self.hot = 0;
+        }
+
+        if self.hot >= self.knobs.enter_ticks {
+            let next = match self.mode {
+                DegradeMode::Normal => DegradeMode::BaseOnly,
+                // Escalating past BaseOnly requires severe pressure.
+                DegradeMode::BaseOnly if severe => DegradeMode::Shed,
+                m => m,
+            };
+            if next != self.mode {
+                self.mode = next;
+                self.hot = 0;
+            }
+        } else if self.calm >= self.knobs.exit_ticks {
+            let next = match self.mode {
+                DegradeMode::Shed => DegradeMode::BaseOnly,
+                DegradeMode::BaseOnly => DegradeMode::Normal,
+                m => m,
+            };
+            if next != self.mode {
+                self.mode = next;
+                self.calm = 0;
+            }
+        }
+        self.mode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> DegradeKnobs {
+        DegradeKnobs {
+            queue_hiwater: 10,
+            shed_hiwater: 20,
+            enter_ticks: 3,
+            exit_ticks: 4,
+            retry_storm: 5,
+        }
+    }
+
+    #[test]
+    fn calm_stays_normal() {
+        let mut c = DegradeController::new(knobs());
+        for _ in 0..100 {
+            assert_eq!(c.observe(0, 0, false), DegradeMode::Normal);
+        }
+    }
+
+    #[test]
+    fn sustained_queue_pressure_enters_base_only_then_shed() {
+        let mut c = DegradeController::new(knobs());
+        // Mild pressure: two samples are not enough (hysteresis)...
+        assert_eq!(c.observe(15, 0, false), DegradeMode::Normal);
+        assert_eq!(c.observe(15, 0, false), DegradeMode::Normal);
+        // ...the third crosses enter_ticks.
+        assert_eq!(c.observe(15, 0, false), DegradeMode::BaseOnly);
+        // Mild pressure alone never escalates to Shed.
+        for _ in 0..10 {
+            assert_eq!(c.observe(15, 0, false), DegradeMode::BaseOnly);
+        }
+        // Severe pressure does.
+        c.observe(25, 0, false);
+        c.observe(25, 0, false);
+        assert_eq!(c.observe(25, 0, false), DegradeMode::Shed);
+    }
+
+    #[test]
+    fn recovery_is_hysteretic_and_stepwise() {
+        let mut c = DegradeController::new(knobs());
+        for _ in 0..3 {
+            c.observe(25, 0, false);
+        }
+        for _ in 0..3 {
+            c.observe(25, 0, false);
+        }
+        assert_eq!(c.mode(), DegradeMode::Shed);
+        // Three calm samples: still shed (exit_ticks = 4).
+        for _ in 0..3 {
+            assert_eq!(c.observe(0, 0, false), DegradeMode::Shed);
+        }
+        // Fourth steps down one state only.
+        assert_eq!(c.observe(0, 0, false), DegradeMode::BaseOnly);
+        // Another full calm window reaches Normal.
+        for _ in 0..3 {
+            assert_eq!(c.observe(0, 0, false), DegradeMode::BaseOnly);
+        }
+        assert_eq!(c.observe(0, 0, false), DegradeMode::Normal);
+        // A pressure blip mid-recovery resets the calm counter.
+        for _ in 0..3 {
+            c.observe(15, 0, false);
+        }
+        assert_eq!(c.mode(), DegradeMode::BaseOnly);
+        c.observe(0, 0, false);
+        c.observe(15, 0, false); // blip
+        for _ in 0..3 {
+            assert_eq!(c.observe(0, 0, false), DegradeMode::BaseOnly);
+        }
+        assert_eq!(c.observe(0, 0, false), DegradeMode::Normal);
+    }
+
+    #[test]
+    fn retry_storm_and_kv_block_are_pressure_signals() {
+        let mut c = DegradeController::new(knobs());
+        // Retry deltas of 5 per window (cumulative counter rises by 5).
+        let mut total = 0;
+        for _ in 0..3 {
+            total += 5;
+            c.observe(0, total, false);
+        }
+        assert_eq!(c.mode(), DegradeMode::BaseOnly);
+
+        let mut c = DegradeController::new(knobs());
+        for _ in 0..3 {
+            c.observe(0, 0, true);
+        }
+        assert_eq!(c.mode(), DegradeMode::BaseOnly);
+        // Neither signal alone is severe: no path to Shed.
+        for _ in 0..10 {
+            c.observe(0, 0, true);
+        }
+        assert_eq!(c.mode(), DegradeMode::BaseOnly);
+    }
+
+    #[test]
+    fn mode_u8_roundtrip() {
+        for m in [DegradeMode::Normal, DegradeMode::BaseOnly, DegradeMode::Shed] {
+            assert_eq!(DegradeMode::from_u8(m as u8), m);
+        }
+        assert_eq!(DegradeMode::from_u8(99), DegradeMode::Normal);
+    }
+}

@@ -59,12 +59,13 @@
 //! only records violations).  Failures carry structured [`ErrorCode`]s
 //! ([`code_of`]) so the wire layer never has to classify strings.
 
+pub mod degrade;
 pub mod queue;
 mod task;
 
 use std::cell::Cell;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
@@ -78,6 +79,7 @@ use crate::semantics::{Dataset, DatasetProfile, Oracle, TraceGenerator};
 use crate::util::json::Json;
 
 pub use crate::coordinator::{StepEvent, StepKind};
+pub use degrade::{DegradeController, DegradeKnobs, DegradeMode};
 pub use queue::{AdmissionQueue, Priority};
 use task::SeqTask;
 
@@ -124,6 +126,22 @@ impl ErrorCode {
             other => anyhow::bail!("unknown error code '{other}'"),
         })
     }
+
+    /// Transient failures are worth retrying: the op stream is a pure
+    /// function of the request, so replaying a rolled-back sequence can
+    /// succeed if the fault was momentary.  Only `engine_failure`
+    /// qualifies — the other codes are statements about the request or
+    /// the client (bad budget, cancelled, expired, shutting down) that
+    /// no retry can change.
+    pub fn is_transient(self) -> bool {
+        matches!(self, ErrorCode::EngineFailure)
+    }
+}
+
+/// Whether a job error is transient ([`ErrorCode::is_transient`] over
+/// [`code_of`]): uncoded engine failures count.
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    code_of(err).is_transient()
 }
 
 /// An error with a structured code.  Wrapped in `anyhow::Error` so the
@@ -172,6 +190,14 @@ pub enum JobEvent {
     /// Evicted by a higher-priority arrival; re-queued at its class
     /// front for a from-scratch restart.
     Preempted,
+    /// A transient failure was rolled back (KV rewound to the prompt,
+    /// reservation released) and the job re-queued for replay attempt
+    /// `attempt` after `backoff_ms` of bounded exponential backoff.
+    /// Non-terminal; step events restart from the beginning.
+    Retried { attempt: u32, backoff_ms: u64 },
+    /// Admitted in degraded mode (speculation disabled under sustained
+    /// pressure); precedes this admission's `Admitted`.  Non-terminal.
+    Degraded,
     /// Terminal: the job completed.
     Result(Box<JobResult>),
     /// Terminal: the job failed ([`code_of`] classifies).
@@ -385,6 +411,11 @@ pub struct JobResult {
     /// Prompt tokens served from the shared-prefix KV cache, summed
     /// over model partitions (0 with the cache off or on a miss).
     pub prefix_tokens_reused: usize,
+    /// Transient-failure replays this request survived (each rolled
+    /// back through the preemption path and restarted from scratch).
+    pub retries: u32,
+    /// Served in degraded mode (speculation disabled under pressure).
+    pub degraded: bool,
 }
 
 /// Internal queue entry.
@@ -404,11 +435,26 @@ pub(crate) struct Job {
     /// First streamed step event (time-to-first-event accounting).
     pub first_event_at: Option<Instant>,
     pub preemptions: u32,
+    /// Transient-failure replays so far (bounded by
+    /// `DeployConfig::max_step_retries`).
+    pub retries: u32,
+    /// Earliest re-admission time for a retried job (exponential
+    /// backoff); `None` once elapsed or never retried.
+    pub not_before: Option<Instant>,
+    /// This job was switched to degraded (base-only) service; sticky so
+    /// restarts stay consistent and the event is emitted once.
+    pub degraded: bool,
 }
 
 impl Job {
     pub fn expired(&self, now: Instant) -> bool {
         self.deadline.is_some_and(|(_, at)| now >= at)
+    }
+
+    /// Restart attempts so far (preemptions + retries): the `engine_op`
+    /// fault site keys on this so every replay draws a fresh schedule.
+    pub fn attempt(&self) -> u64 {
+        self.preemptions as u64 + self.retries as u64
     }
 }
 
@@ -461,6 +507,17 @@ pub struct RouterStats {
     pub prefix_cached_blocks: usize,
     /// Cached entries evicted under budget or pool pressure (cumulative).
     pub prefix_evictions: u64,
+    /// Transient-failure replays (each one rolled a sequence back to
+    /// the prompt and re-queued its job with backoff).
+    pub step_retries: u64,
+    /// Admissions served in degraded (base-only) mode.
+    pub degraded_admissions: u64,
+    /// Submissions rejected at the door by shed mode.
+    pub shed_jobs: u64,
+    /// Faults fired by the engine's deterministic injector (0 without
+    /// an armed fault plan; the server adds its conn_io count on top in
+    /// the `stats` op).
+    pub faults_injected: u64,
 }
 
 impl RouterStats {
@@ -522,6 +579,10 @@ impl RouterStats {
             ("prefix_blocks_shared", Json::num(self.prefix_blocks_shared as f64)),
             ("prefix_cached_blocks", Json::num(self.prefix_cached_blocks as f64)),
             ("prefix_evictions", Json::num(self.prefix_evictions as f64)),
+            ("step_retries", Json::num(self.step_retries as f64)),
+            ("degraded_admissions", Json::num(self.degraded_admissions as f64)),
+            ("shed_jobs", Json::num(self.shed_jobs as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
         ])
     }
 }
@@ -531,6 +592,12 @@ struct Shared {
     cv: Condvar,
     stats: Mutex<RouterStats>,
     closed: AtomicBool,
+    /// Current [`DegradeMode`] as u8, published by the composer's
+    /// controller and read lock-free by submitters (always `Normal`
+    /// with `degrade` off).
+    degrade: AtomicU8,
+    /// Retry-after hint (ms) carried by shed rejections.
+    shed_retry_after_ms: u64,
 }
 
 /// Lock that survives poisoning: if the composer thread panicked while
@@ -584,6 +651,8 @@ impl Scheduler {
             cv: Condvar::new(),
             stats: Mutex::new(RouterStats::default()),
             closed: AtomicBool::new(false),
+            degrade: AtomicU8::new(DegradeMode::Normal as u8),
+            shed_retry_after_ms: cfg.degrade_retry_after_ms,
         });
         let wshared = Arc::clone(&shared);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -625,7 +694,26 @@ impl Scheduler {
             first_op_at: None,
             first_event_at: None,
             preemptions: 0,
+            retries: 0,
+            not_before: None,
+            degraded: false,
         };
+        // Shed mode rejects at the door, before the job costs a queue
+        // slot — an overload response with an explicit retry-after hint
+        // (hysteresis in the composer's controller decides when service
+        // resumes).  Always `Normal` unless `degrade` is configured on.
+        if DegradeMode::from_u8(self.shared.degrade.load(Ordering::SeqCst))
+            == DegradeMode::Shed
+        {
+            lock(&self.shared.stats).shed_jobs += 1;
+            return Err(coded(
+                ErrorCode::Overloaded,
+                format!(
+                    "overloaded: shedding load under pressure (retry after ~{} ms)",
+                    self.shared.shed_retry_after_ms
+                ),
+            ));
+        }
         {
             let mut q = lock(&self.shared.queue);
             // Checked *under the queue lock*: the worker's liveness guard
@@ -793,12 +881,21 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
     let combo = Combo::new(&cfg.base_model, &cfg.small_model);
     let mut running: Vec<SeqTask> = Vec::new();
     let block_size = cfg.kv_block_size.max(1);
+    // Inert unless `degrade` is on: observe() is never called and the
+    // published mode stays Normal, so admissions are untouched.
+    let mut degrade_ctl = DegradeController::new(DegradeKnobs {
+        queue_hiwater: cfg.degrade_queue_hiwater,
+        shed_hiwater: cfg.degrade_shed_hiwater,
+        enter_ticks: cfg.degrade_enter_ticks,
+        exit_ticks: cfg.degrade_exit_ticks,
+        retry_storm: cfg.degrade_retry_storm,
+    });
 
     loop {
         // Cancellations and deadline expiries first, so a dead job can
         // neither be admitted nor hold KV through another tick.
         reap(&engine, &shared, &mut running);
-        admit(&engine, &oracle, &combo, &cfg, &shared, &mut running);
+        let admitted = admit(&engine, &oracle, &combo, &cfg, &shared, &mut running);
         {
             let ps = engine.prefix_stats();
             let mut s = lock(&shared.stats);
@@ -812,6 +909,15 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
             s.prefix_blocks_shared = ps.shared_blocks;
             s.prefix_cached_blocks = ps.cached_blocks;
             s.prefix_evictions = ps.evictions;
+            s.faults_injected = engine.faults().injected_total();
+        }
+        if cfg.degrade {
+            let (depth, retries) = {
+                let s = lock(&shared.stats);
+                (s.queue_depth, s.step_retries)
+            };
+            let mode = degrade_ctl.observe(depth, retries, admitted.kv_blocked);
+            shared.degrade.store(mode as u8, Ordering::SeqCst);
         }
 
         if running.is_empty() {
@@ -824,6 +930,20 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
                 let _unused = shared
                     .cv
                     .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                continue;
+            }
+            if let Some(at) = admitted.backoff_until {
+                // The queue head is a retry waiting out its backoff and
+                // nothing is running: park until it is due (bounded, so
+                // shutdown and new submits are still observed promptly)
+                // instead of spinning through admit().
+                let wait = at
+                    .saturating_duration_since(Instant::now())
+                    .min(Duration::from_millis(50));
+                let _unused = shared
+                    .cv
+                    .wait_timeout(q, wait)
                     .unwrap_or_else(|poisoned| poisoned.into_inner());
                 continue;
             }
@@ -930,6 +1050,17 @@ fn requeue_front(shared: &Shared, prio: Priority, job: Job) {
     lock(&shared.stats).queue_depth = q.len();
 }
 
+/// What one [`admit`] pass reports back to the composer loop.
+#[derive(Debug, Default)]
+struct AdmitOutcome {
+    /// The queue head is a retry still inside its backoff window; the
+    /// idle loop parks until then instead of spinning.
+    backoff_until: Option<Instant>,
+    /// An admission was blocked on KV capacity (not just batch slots)
+    /// this pass — a pressure signal for the degradation controller.
+    kv_blocked: bool,
+}
+
 /// Admit queued jobs while batch slots and KV capacity allow, preempting
 /// lower-class running sequences when a higher class would otherwise
 /// starve.  Every decision is made about the job actually *popped* (not a
@@ -943,10 +1074,22 @@ fn admit<'e>(
     cfg: &DeployConfig,
     shared: &Shared,
     running: &mut Vec<SeqTask<'e>>,
-) {
+) -> AdmitOutcome {
     let max_batch = cfg.max_batch.max(1);
+    let mut out = AdmitOutcome::default();
     loop {
-        let Some((prio, job)) = pop_job(shared) else { return };
+        let Some((prio, mut job)) = pop_job(shared) else { return out };
+        // A retried job waits out its backoff at the class front (its
+        // class peers queue behind it — retry-ordering is preserved and
+        // backoffs are milliseconds-scale).
+        if let Some(at) = job.not_before {
+            if Instant::now() < at {
+                out.backoff_until = Some(at);
+                requeue_front(shared, prio, job);
+                return out;
+            }
+            job.not_before = None;
+        }
         let need = need_tokens(&job.req);
 
         // Never-serviceable requests fail fast — *before* the
@@ -994,6 +1137,12 @@ fn admit<'e>(
         };
 
         if !fits {
+            if !full {
+                // Slots are free but the KV ledger says no: capacity
+                // pressure, not batch-shape pressure — feed the
+                // degradation controller.
+                out.kv_blocked = true;
+            }
             // This job outranks a running sequence: evict the weakest and
             // retry (the job returns to its class front, so it is the
             // next candidate unless an even higher class arrives).
@@ -1017,7 +1166,28 @@ fn admit<'e>(
             }
             // Blocked behind the current batch: wait at the class front.
             requeue_front(shared, prio, job);
-            return;
+            return out;
+        }
+
+        // Degraded (base-only) admission: under sustained pressure the
+        // controller publishes BaseOnly and *fresh* jobs lose their
+        // speculation (the small model's drafting work is the shed
+        // capacity).  Previously-admitted jobs keep their scheme — a
+        // preemption/retry restart must replay the identical op stream —
+        // and the override is sticky on the job so every restart of a
+        // degraded job stays degraded.
+        if cfg.degrade
+            && job.preemptions == 0
+            && job.retries == 0
+            && !job.degraded
+            && job.req.spec.scheme != Scheme::VanillaBase
+            && DegradeMode::from_u8(shared.degrade.load(Ordering::SeqCst))
+                != DegradeMode::Normal
+        {
+            job.req.spec.scheme = Scheme::VanillaBase;
+            job.degraded = true;
+            lock(&shared.stats).degraded_admissions += 1;
+            let _ = job.events.send(JobEvent::Degraded);
         }
 
         let wait = job.submitted_at.elapsed().as_secs_f64();
@@ -1038,11 +1208,57 @@ fn admit<'e>(
                 running.push(t);
             }
             Err((job, e)) => {
+                // Admission-time transient failures (e.g. an injected
+                // `kv`-site fault inside `new_sequence`) ride the same
+                // bounded-retry path as mid-flight ones; nothing was
+                // registered with the engine, so there is nothing to
+                // roll back.
+                if retryable(cfg, &job, &e) {
+                    schedule_retry(cfg, shared, prio, job);
+                    continue;
+                }
                 lock(&shared.stats).failed += 1;
                 let _ = job.events.send(JobEvent::Error(e));
             }
         }
     }
+}
+
+/// Is this failed job worth replaying?  Transient error class, retry
+/// budget left, and a client that still cares (not cancelled, deadline
+/// not already blown — the reap pass would only abort it again).
+fn retryable(cfg: &DeployConfig, job: &Job, err: &anyhow::Error) -> bool {
+    cfg.max_step_retries > 0
+        && job.retries < cfg.max_step_retries
+        && is_transient(err)
+        && !job.cancel.requested()
+        && !job.expired(Instant::now())
+}
+
+/// Bounded exponential backoff before replay attempt `attempt`
+/// (1-based): `base · 2^(attempt-1)`, shift-capped and clamped to 5 s so
+/// a misconfigured base cannot park a job forever.
+fn retry_backoff_ms(base_ms: u64, attempt: u32) -> u64 {
+    let shift = attempt.saturating_sub(1).min(16);
+    base_ms.saturating_mul(1u64 << shift).min(5_000)
+}
+
+/// Re-queue a failed job for another from-scratch attempt: bump its
+/// retry counter, arm the backoff gate, emit `Retried`, and return it to
+/// the front of its class.  The caller has already rolled back whatever
+/// engine state the attempt held (or never created any).
+fn schedule_retry(cfg: &DeployConfig, shared: &Shared, prio: Priority, mut job: Job) {
+    job.retries += 1;
+    let backoff_ms = retry_backoff_ms(cfg.retry_backoff_ms, job.retries);
+    job.not_before = Some(Instant::now() + Duration::from_millis(backoff_ms));
+    let _ = job
+        .events
+        .send(JobEvent::Retried { attempt: job.retries, backoff_ms });
+    let mut q = lock(&shared.queue);
+    q.push_front(prio, job);
+    let mut s = lock(&shared.stats);
+    s.step_retries += 1;
+    s.queue_depth = q.len();
 }
 
 /// Build the in-flight state for an admitted job (budget validation
@@ -1095,6 +1311,7 @@ fn make_task<'e>(
         reserve,
         admitted_at: Instant::now(),
         failed: None,
+        ops_executed: 0,
     })
 }
 
@@ -1152,12 +1369,28 @@ fn preempt<'e>(
 }
 
 /// Retire finished (or failed) sequences: release KV, reply, count.
+/// Transiently-failed tasks with retry budget left never reach a
+/// terminal event here — they are rolled back through the preemption
+/// path (KV rewound to the prompt, blocks released, ledger reservation
+/// dropped with the task) and re-queued with backoff for a from-scratch
+/// replay.
 fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut Vec<SeqTask<'_>>) {
     let mut i = 0;
     while i < running.len() {
         let done = running[i].failed.is_some() || running[i].machine.is_done();
         if !done {
             i += 1;
+            continue;
+        }
+        let retry = {
+            let t = &running[i];
+            t.failed.as_ref().is_some_and(|e| retryable(cfg, &t.job, e))
+        };
+        if retry {
+            let t = running.remove(i);
+            let prio = t.prio;
+            let job = evict_seq(engine, t);
+            schedule_retry(cfg, shared, prio, job);
             continue;
         }
         let t = running.remove(i);
@@ -1198,6 +1431,8 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                     e2e_s,
                     preemptions: job.preemptions,
                     prefix_tokens_reused,
+                    retries: job.retries,
+                    degraded: job.degraded,
                 };
                 let _ = job.events.send(JobEvent::Result(Box::new(result)));
             }
@@ -1229,6 +1464,10 @@ mod tests {
         s.prefix_blocks_shared = 4;
         s.prefix_cached_blocks = 9;
         s.prefix_evictions = 2;
+        s.step_retries = 11;
+        s.degraded_admissions = 3;
+        s.shed_jobs = 8;
+        s.faults_injected = 13;
         let j = s.to_json();
         assert_eq!(j.get("admitted").as_usize(), Some(5));
         assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
@@ -1245,6 +1484,10 @@ mod tests {
         assert_eq!(j.get("prefix_blocks_shared").as_usize(), Some(4));
         assert_eq!(j.get("prefix_cached_blocks").as_usize(), Some(9));
         assert_eq!(j.get("prefix_evictions").as_usize(), Some(2));
+        assert_eq!(j.get("step_retries").as_usize(), Some(11));
+        assert_eq!(j.get("degraded_admissions").as_usize(), Some(3));
+        assert_eq!(j.get("shed_jobs").as_usize(), Some(8));
+        assert_eq!(j.get("faults_injected").as_usize(), Some(13));
     }
 
     #[test]
@@ -1277,6 +1520,33 @@ mod tests {
         assert!(!JobEvent::Queued.is_terminal());
         assert!(!JobEvent::Admitted.is_terminal());
         assert!(!JobEvent::Preempted.is_terminal());
+        assert!(!JobEvent::Retried { attempt: 1, backoff_ms: 5 }.is_terminal());
+        assert!(!JobEvent::Degraded.is_terminal());
+    }
+
+    #[test]
+    fn transient_classification_and_backoff() {
+        // Only engine_failure is worth a replay.
+        assert!(ErrorCode::EngineFailure.is_transient());
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::Overloaded,
+            ErrorCode::Cancelled,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Shutdown,
+        ] {
+            assert!(!code.is_transient());
+        }
+        // Uncoded errors default to engine_failure and thus transient.
+        assert!(is_transient(&anyhow!("pjrt hiccup")));
+        assert!(!is_transient(&coded(ErrorCode::BadRequest, "nope")));
+        // Backoff doubles per attempt, clamped to 5 s; overflow-safe.
+        assert_eq!(retry_backoff_ms(5, 1), 5);
+        assert_eq!(retry_backoff_ms(5, 2), 10);
+        assert_eq!(retry_backoff_ms(5, 3), 20);
+        assert_eq!(retry_backoff_ms(5, 11), 5_000);
+        assert_eq!(retry_backoff_ms(0, 4), 0);
+        assert_eq!(retry_backoff_ms(u64::MAX, u32::MAX), 5_000);
     }
 
     #[test]

@@ -24,7 +24,8 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::coordinator::{
-    execute_op, verify_template, Combo, EngineOp, Role, SeedStream, StepMachine, TaskPhase,
+    execute_op, inject_op_fault, verify_template, Combo, EngineOp, Role, SeedStream, StepMachine,
+    TaskPhase,
 };
 use crate::engine::{BatchDecode, BatchVerify, Engine, Sequence};
 use crate::metrics::{Phase, QueryMetrics};
@@ -47,6 +48,11 @@ pub(crate) struct SeqTask<'e> {
     pub reserve: BTreeMap<String, usize>,
     pub admitted_at: Instant,
     pub failed: Option<anyhow::Error>,
+    /// Front ops executed (or attempted) this admission — the op index
+    /// fed to the `engine_op` fault site.  Resets with the task on every
+    /// restart, so together with [`Job::attempt`] each replay walks a
+    /// fresh deterministic fault schedule.
+    pub ops_executed: u64,
 }
 
 impl SeqTask<'_> {
@@ -57,6 +63,23 @@ impl SeqTask<'_> {
             .copied()
             .unwrap_or(0)
             .div_ceil(block_size.max(1))
+    }
+
+    /// `engine_op`-site fault gate for this task's next front op: fires
+    /// *before* the op executes or joins a batch, so a faulted step
+    /// leaves the sequence at its pre-op state for the rollback/retry
+    /// path.  Returns `false` (and marks the task failed) when a fault
+    /// fired; inert without an armed plan.
+    fn gate_front_op(&mut self, engine: &Engine) -> bool {
+        let op_index = self.ops_executed;
+        self.ops_executed += 1;
+        match inject_op_fault(engine.faults(), self.job.req.seed, self.job.attempt(), op_index) {
+            Ok(()) => true,
+            Err(e) => {
+                self.failed = Some(e);
+                false
+            }
+        }
     }
 
     /// Record the request's first engine op (on the `Job`, so the
@@ -99,6 +122,9 @@ pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) 
                 Some(op @ EngineOp::Rollback { .. }) => op,
                 _ => break,
             };
+            if !t.gate_front_op(engine) {
+                break;
+            }
             t.note_first_op();
             match execute_op(
                 engine,
@@ -143,6 +169,9 @@ pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) 
         }
         let tphase = t.machine.phase();
         let Some(op) = t.machine.peek() else { continue };
+        if !t.gate_front_op(engine) {
+            continue;
+        }
         let (role, n, phase) = match op {
             EngineOp::Decode { role, n, phase } => (role, n, phase),
             EngineOp::Finish { role, n } => (role, n, Phase::Answer),

@@ -31,6 +31,11 @@ pub enum WireEvent {
         effective_threshold: Option<u8>,
     },
     Preempted,
+    /// A transient failure was rolled back and the query re-queued for
+    /// replay attempt `attempt` after `backoff_ms` of backoff.
+    Retried { attempt: u32, backoff_ms: u64 },
+    /// Admitted in degraded (base-only) mode under server pressure.
+    Degraded,
     /// Terminal: the completed result object.
     Result(Json),
     /// Terminal: structured failure.
@@ -50,6 +55,11 @@ impl WireEvent {
             "queued" => WireEvent::Queued,
             "admitted" => WireEvent::Admitted,
             "preempted" => WireEvent::Preempted,
+            "retried" => WireEvent::Retried {
+                attempt: j.req_usize("attempt")? as u32,
+                backoff_ms: j.req_usize("backoff_ms")? as u64,
+            },
+            "degraded" => WireEvent::Degraded,
             "step" => WireEvent::Step {
                 kind: j.req_str("kind")?.to_string(),
                 step: j.req_usize("step")?,
@@ -267,6 +277,16 @@ mod tests {
         let j = Json::parse(&event_frame(5, &JobEvent::Cancelled)).unwrap();
         assert!(WireEvent::parse(&j).unwrap().is_terminal());
         let j = Json::parse(&event_frame(5, &JobEvent::Queued)).unwrap();
+        assert!(!WireEvent::parse(&j).unwrap().is_terminal());
+        let retried = JobEvent::Retried { attempt: 3, backoff_ms: 20 };
+        let j = Json::parse(&event_frame(5, &retried)).unwrap();
+        match WireEvent::parse(&j).unwrap() {
+            WireEvent::Retried { attempt, backoff_ms } => {
+                assert_eq!((attempt, backoff_ms), (3, 20));
+            }
+            other => panic!("wrong event: {other:?}"),
+        }
+        let j = Json::parse(&event_frame(5, &JobEvent::Degraded)).unwrap();
         assert!(!WireEvent::parse(&j).unwrap().is_terminal());
     }
 }

@@ -31,6 +31,7 @@ use anyhow::{Context, Result};
 
 use crate::config::DeployConfig;
 use crate::exec::Executor;
+use crate::faults::{FaultInjector, FaultSite};
 use crate::scheduler::{code_of, ErrorCode, EventPoll, JobEvent, JobHandle, SubmitOpts};
 pub use client::{StreamClient, WireEvent};
 pub use protocol::{Op, QueryRequest, Request};
@@ -58,7 +59,43 @@ pub struct Server {
     /// This server's share of [`RESERVED_HANDLERS`] (0 when its handlers
     /// ride a dedicated pool instead of the process-wide executor).
     reservation: usize,
+    /// Per-connection handler context (poll cadences + the `conn_io`
+    /// fault site), shared by every handler of this server.
+    conn: Arc<ConnContext>,
     pub addr: std::net::SocketAddr,
+}
+
+/// Connection-handler configuration: the read-timeout cadences promoted
+/// from the old hardcoded constants (`DeployConfig::idle_poll_ms` /
+/// `stream_poll_ms`), plus the server-side `conn_io` fault injector.
+/// The injector is distinct from the engine's (which lives on the
+/// scheduler's composer thread) but armed from the same
+/// `DeployConfig::fault_plan`; the `stats` op merges both counters.
+struct ConnContext {
+    /// Poll cadence for an idle connection (observes the shutdown flag):
+    /// a handler parked on an *idle* connection must not occupy an
+    /// executor worker past shutdown.
+    idle_read: Duration,
+    /// Poll cadence while v2 sessions are streaming on the connection:
+    /// the read timeout bounds event-forwarding latency, so it drops
+    /// while any stream is live.
+    stream_read: Duration,
+    faults: FaultInjector,
+}
+
+impl ConnContext {
+    /// `conn_io`-site fault gate: consulted once per processed request
+    /// line and once per streamed frame.  A fired fault errors the
+    /// connection handler — the connection drops (like a mid-stream
+    /// network failure), its unfinished session handles drop, and their
+    /// `Drop` cancels the scheduler-side jobs.  The server itself keeps
+    /// accepting.  Inert (one branch) without an armed plan.
+    fn io_fault(&self) -> Result<()> {
+        if self.faults.enabled() {
+            self.faults.try_fault(FaultSite::ConnIo, self.faults.next_conn_key())?;
+        }
+        Ok(())
+    }
 }
 
 impl Drop for Server {
@@ -119,6 +156,12 @@ impl Server {
         // configure_global (the direct-embedder path) agrees with the
         // pool just built instead of re-requesting the pre-floor size.
         cfg.exec = exec_cfg;
+        // Captured before Router::start consumes the config.
+        let conn = Arc::new(ConnContext {
+            idle_read: Duration::from_millis(cfg.idle_poll_ms),
+            stream_read: Duration::from_millis(cfg.stream_poll_ms),
+            faults: FaultInjector::new(cfg.fault_plan.clone()),
+        });
         // Boot the scheduler before taking a reservation: Router::start
         // can fail (bad artifacts), and a reservation taken first would
         // leak — Drop for Server is the only release path.
@@ -153,6 +196,7 @@ impl Server {
             active_conns: Arc::new(AtomicUsize::new(0)),
             handler_cap,
             reservation,
+            conn,
             addr,
         })
     }
@@ -167,7 +211,8 @@ impl Server {
         self.shutdown.store(true, Ordering::SeqCst);
         // Drain in-flight handlers before returning (the retired
         // per-server pool did this in Drop).  Idle handlers observe the
-        // shutdown flag within one read-timeout tick (200 ms); handlers
+        // shutdown flag within one read-timeout tick (`idle_poll_ms`,
+        // 200 ms by default); handlers
         // awaiting a reply exit once their query completes.  The
         // deadline only triggers for queries still running after 30 s —
         // those handlers finish (and free their worker) when the
@@ -213,9 +258,11 @@ impl Server {
                     self.active_conns.fetch_add(1, Ordering::SeqCst);
                     let guard = ConnGuard(Arc::clone(&self.active_conns));
                     let exec = Arc::clone(&self.exec);
+                    let conn = Arc::clone(&self.conn);
                     let submitted = self.exec.execute_labeled("server:conn", move || {
                         let _guard = guard;
-                        if let Err(e) = handle_connection(stream, &router, &exec, &shutdown) {
+                        if let Err(e) = handle_connection(stream, &router, &exec, &shutdown, &conn)
+                        {
                             eprintln!("[server] connection error: {e:#}");
                         }
                     });
@@ -242,18 +289,6 @@ impl Server {
 /// newline must not grow server memory unboundedly — handlers share the
 /// process with every sweep/batch consumer.
 const MAX_LINE_BYTES: usize = 1 << 20;
-
-/// Poll cadence for an idle connection (observes the shutdown flag): a
-/// handler parked on an *idle* connection must not occupy an executor
-/// worker past shutdown (the retired per-server pool made that leak
-/// private; on the process-wide pool it would steal a worker from every
-/// later sweep/batch in the process).
-const IDLE_READ_TIMEOUT: Duration = Duration::from_millis(200);
-
-/// Poll cadence while v2 sessions are streaming on the connection: the
-/// read timeout bounds event-forwarding latency, so it drops while any
-/// stream is live.
-const STREAM_READ_TIMEOUT: Duration = Duration::from_millis(15);
 
 /// One non-blocking(ish) attempt to complete a request line.
 enum LinePoll {
@@ -344,7 +379,11 @@ struct StreamSession {
 /// Forward every ready event of every live session to the wire, retiring
 /// sessions at their terminal frame.  Returns with `Pending` streams
 /// intact; the caller re-pumps on its next loop tick.
-fn pump_sessions(sessions: &mut Vec<StreamSession>, writer: &mut TcpStream) -> Result<()> {
+fn pump_sessions(
+    sessions: &mut Vec<StreamSession>,
+    writer: &mut TcpStream,
+    conn: &ConnContext,
+) -> Result<()> {
     let mut wrote = false;
     let mut i = 0;
     while i < sessions.len() {
@@ -354,6 +393,7 @@ fn pump_sessions(sessions: &mut Vec<StreamSession>, writer: &mut TcpStream) -> R
                 EventPoll::Event(ev) => {
                     let terminal = ev.is_terminal();
                     let frame = protocol::event_frame(sessions[i].wire_id, &ev);
+                    conn.io_fault()?;
                     writer.write_all(frame.as_bytes())?;
                     writer.write_all(b"\n")?;
                     wrote = true;
@@ -396,9 +436,10 @@ fn handle_connection(
     router: &Router,
     exec: &Executor,
     shutdown: &AtomicBool,
+    conn: &ConnContext,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(IDLE_READ_TIMEOUT))?;
+    stream.set_read_timeout(Some(conn.idle_read))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
@@ -416,16 +457,16 @@ fn handle_connection(
     let mut fast_poll = false;
     loop {
         // Forward any events that landed since the last tick.
-        pump_sessions(&mut sessions, &mut writer)?;
+        pump_sessions(&mut sessions, &mut writer, conn)?;
         if let Some((rid, handle)) = v1_pending.take() {
             // Wake-ups while awaiting the one-shot only matter for two
             // things: forwarding live v2 streams' frames (tight tick)
             // and observing shutdown (the idle tick suffices) — pure v1
             // traffic keeps the old low-churn cadence.
             let tick = if sessions.is_empty() {
-                IDLE_READ_TIMEOUT
+                conn.idle_read
             } else {
-                STREAM_READ_TIMEOUT
+                conn.stream_read
             };
             let response = match handle.next_event_timeout(tick) {
                 Ok(JobEvent::Result(result)) => Some(protocol::ok_response(
@@ -464,9 +505,9 @@ fn handle_connection(
         let want_fast = !sessions.is_empty();
         if want_fast != fast_poll {
             reader.get_ref().set_read_timeout(Some(if want_fast {
-                STREAM_READ_TIMEOUT
+                conn.stream_read
             } else {
-                IDLE_READ_TIMEOUT
+                conn.idle_read
             }))?;
             fast_poll = want_fast;
         }
@@ -483,6 +524,10 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
+        // One conn_io fault opportunity per processed request line (the
+        // request is "lost in transit": the connection drops before it
+        // reaches the router, like a mid-request network failure).
+        conn.io_fault()?;
         // `None` response: a v2 query became a session; its frames flow
         // from pump_sessions.
         let response = match Request::parse(&line) {
@@ -512,6 +557,16 @@ fn handle_connection(
                         .is_some_and(|g| std::ptr::eq(Arc::as_ptr(&g), exec));
                     if !on_global {
                         j.set("handler_exec", exec.stats().to_json());
+                    }
+                    // "faults_injected" totals the whole serving path:
+                    // the scheduler publishes the engine-side sites
+                    // (engine_op / batch / kv); conn_io fires in the
+                    // handlers, so its count merges here.
+                    let conn_faults = conn.faults.injected_total();
+                    if conn_faults > 0 {
+                        let total = j.get("faults_injected").as_f64().unwrap_or(0.0)
+                            + conn_faults as f64;
+                        j.set("faults_injected", crate::util::json::Json::num(total));
                     }
                     Some(protocol::ok_response(req.id, j))
                 }

@@ -24,8 +24,13 @@
 //! {"id": 7, "v": 2, "event": "step", "kind": "accepted", "step": 0,
 //!  "score": 8, "effective_threshold": 7, "tokens": 18}
 //! {"id": 7, "v": 2, "event": "preempted"}
+//! {"id": 7, "v": 2, "event": "retried", "attempt": 1, "backoff_ms": 5}
+//! {"id": 7, "v": 2, "event": "degraded"}
 //! {"id": 7, "v": 2, "event": "result", "ok": true, "result": {...}}
 //! ```
+//! `retried` (a transient failure was rolled back and the job re-queued
+//! for replay) and `degraded` (admitted base-only under pressure) are
+//! non-terminal lifecycle frames, like `preempted`.
 //! Terminal frames are `result`, `error` (with a structured `"code"`:
 //! `bad_request | overloaded | cancelled | deadline_exceeded |
 //! engine_failure | shutdown`) or `cancelled`.  v2 queries may carry
@@ -218,6 +223,8 @@ pub fn job_result_to_json(r: &JobResult) -> Json {
     j.set("e2e_s", Json::num(r.e2e_s));
     j.set("preemptions", Json::num(r.preemptions as f64));
     j.set("prefix_tokens_reused", Json::num(r.prefix_tokens_reused as f64));
+    j.set("retries", Json::num(r.retries as f64));
+    j.set("degraded", Json::Bool(r.degraded));
     j
 }
 
@@ -231,6 +238,12 @@ pub fn event_frame(id: i64, ev: &JobEvent) -> String {
         JobEvent::Queued => j.set("event", Json::str("queued")),
         JobEvent::Admitted => j.set("event", Json::str("admitted")),
         JobEvent::Preempted => j.set("event", Json::str("preempted")),
+        JobEvent::Retried { attempt, backoff_ms } => {
+            j.set("event", Json::str("retried"));
+            j.set("attempt", Json::num(*attempt as f64));
+            j.set("backoff_ms", Json::num(*backoff_ms as f64));
+        }
+        JobEvent::Degraded => j.set("event", Json::str("degraded")),
         JobEvent::Step(s) => {
             j.set("event", Json::str("step"));
             j.set("kind", Json::str(s.kind.name()));
@@ -460,11 +473,19 @@ mod tests {
             (JobEvent::Queued, "queued"),
             (JobEvent::Admitted, "admitted"),
             (JobEvent::Preempted, "preempted"),
+            (JobEvent::Degraded, "degraded"),
         ] {
             let j = Json::parse(&event_frame(1, &ev)).unwrap();
             assert_eq!(j.get("event").as_str(), Some(name));
             assert!(j.get("ok").is_null(), "{name} is not terminal");
         }
+
+        let retried = JobEvent::Retried { attempt: 2, backoff_ms: 10 };
+        let j = Json::parse(&event_frame(5, &retried)).unwrap();
+        assert_eq!(j.get("event").as_str(), Some("retried"));
+        assert_eq!(j.get("attempt").as_usize(), Some(2));
+        assert_eq!(j.get("backoff_ms").as_usize(), Some(10));
+        assert!(j.get("ok").is_null(), "retried is not terminal");
 
         let err = JobEvent::Error(coded(ErrorCode::DeadlineExceeded, "too late"));
         let j = Json::parse(&event_frame(2, &err)).unwrap();

@@ -126,6 +126,8 @@ mod tests {
             e2e_s: 1.5,
             preemptions: 1,
             prefix_tokens_reused: 64,
+            retries: 2,
+            degraded: true,
         };
         let j = job_result_to_json(&r);
         assert_eq!(j.get("scheme").as_str(), Some("spec-reason"));
@@ -133,6 +135,8 @@ mod tests {
         assert_eq!(j.get("priority").as_str(), Some("high"));
         assert_eq!(j.get("preemptions").as_usize(), Some(1));
         assert_eq!(j.get("prefix_tokens_reused").as_usize(), Some(64));
+        assert_eq!(j.get("retries").as_usize(), Some(2));
+        assert_eq!(j.get("degraded").as_bool(), Some(true));
         assert!((j.get("queue_wait_s").as_f64().unwrap() - 0.25).abs() < 1e-12);
     }
 }

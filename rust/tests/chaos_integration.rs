@@ -1,0 +1,452 @@
+//! Chaos integration: deterministic fault injection against the full
+//! serving path, and the recovery invariants it must uphold.
+//!
+//! * a zero-rate fault plan is bit-identical to no plan at all (the
+//!   escape hatch every subsystem preserves);
+//! * a seed sweep (8 distinct fault seeds, all engine-side injection
+//!   sites armed) where every job ends in exactly one terminal event,
+//!   every completed job's deterministic metrics and final-attempt step
+//!   stream are bit-identical to an undisturbed baseline, and the KV
+//!   reservation ledger returns to zero;
+//! * a panicking request inside `decode_batch` / `scored_prefill_batch`
+//!   fails only its own slot (peers unaffected) and the pool drains back
+//!   to zero after rollback + release;
+//! * `conn_io` faults drop individual connections, never the server.
+//!
+//! All tests skip (with a notice) when `artifacts/` is absent, like the
+//! other engine-dependent suites.
+
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::coordinator::Combo;
+use specreason::engine::{BatchDecode, BatchVerify, Engine};
+use specreason::faults::{FaultPlan, FaultSite};
+use specreason::metrics::{Phase, QueryMetrics};
+use specreason::scheduler::{JobEvent, JobRequest, JobResult, Priority, Scheduler};
+use specreason::semantics::{Dataset, TraceGenerator};
+use specreason::util::json::Json;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn deploy(max_batch: usize) -> DeployConfig {
+    DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: 96,
+        answer_tokens: 8,
+        max_batch,
+        max_queue: 64,
+        ..Default::default()
+    }
+}
+
+fn job(cfg: &DeployConfig, dataset: Dataset, seed: u64, index: usize) -> JobRequest {
+    JobRequest {
+        dataset,
+        query_index: index,
+        sample: 0,
+        seed,
+        spec: cfg.spec_config(),
+        priority: Priority::Normal,
+    }
+}
+
+/// Compare every deterministic field of two `QueryMetrics` (wall-clock
+/// fields are measured and excluded by definition).
+fn assert_deterministic_eq(a: &QueryMetrics, b: &QueryMetrics, ctx: &str) {
+    assert_eq!(a.gpu_secs.to_bits(), b.gpu_secs.to_bits(), "{ctx}: gpu_secs");
+    assert_eq!(a.thinking_tokens, b.thinking_tokens, "{ctx}: thinking_tokens");
+    assert_eq!(a.tokens_small_accepted, b.tokens_small_accepted, "{ctx}");
+    assert_eq!(a.tokens_base, b.tokens_base, "{ctx}");
+    assert_eq!(a.steps_total, b.steps_total, "{ctx}");
+    assert_eq!(a.steps_speculated, b.steps_speculated, "{ctx}");
+    assert_eq!(a.steps_accepted, b.steps_accepted, "{ctx}");
+    assert_eq!(a.verify_scores, b.verify_scores, "{ctx}: verify_scores");
+    assert_eq!(a.answer_correct, b.answer_correct, "{ctx}: answer_correct");
+}
+
+/// One job's fully-drained event stream.
+struct Drained {
+    terminals: usize,
+    result: Option<JobResult>,
+    error: Option<String>,
+    retried_events: u32,
+    /// Step events of the *final* attempt (restarts clear the slate, as
+    /// the stream semantics promise).
+    final_steps: Vec<(String, usize, usize, Option<u8>, Option<u8>)>,
+}
+
+/// Drain a handle to stream end, asserting event-stream sanity along the
+/// way: nothing follows a terminal event, and restarts restart the step
+/// numbering from scratch.
+fn drain(handle: specreason::scheduler::JobHandle, ctx: &str) -> Drained {
+    let mut out = Drained {
+        terminals: 0,
+        result: None,
+        error: None,
+        retried_events: 0,
+        final_steps: Vec::new(),
+    };
+    loop {
+        let ev = match handle.next_event_timeout(Duration::from_secs(300)) {
+            Ok(ev) => ev,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                panic!("{ctx}: event stream stalled for 300s")
+            }
+        };
+        assert_eq!(out.terminals, 0, "{ctx}: event after a terminal: {ev:?}");
+        match ev {
+            JobEvent::Queued | JobEvent::Admitted | JobEvent::Degraded => {}
+            JobEvent::Preempted => out.final_steps.clear(),
+            JobEvent::Retried { attempt, backoff_ms: _ } => {
+                out.retried_events += 1;
+                assert_eq!(attempt, out.retried_events, "{ctx}: retry attempts in order");
+                out.final_steps.clear();
+            }
+            JobEvent::Step(s) => out.final_steps.push((
+                s.kind.name().to_string(),
+                s.step,
+                s.tokens,
+                s.score,
+                s.effective_threshold,
+            )),
+            JobEvent::Result(r) => {
+                out.terminals += 1;
+                out.result = Some(*r);
+            }
+            JobEvent::Error(e) => {
+                out.terminals += 1;
+                out.error = Some(format!("{e:#}"));
+            }
+            JobEvent::Cancelled => out.terminals += 1,
+        }
+    }
+    out
+}
+
+/// Run `n` queries through a scheduler built from `cfg`, returning each
+/// job's drained stream plus the final stats, after polling the ledger
+/// back to baseline.
+fn run_jobs(cfg: &DeployConfig, n: usize, seed: u64) -> (Vec<Drained>, specreason::scheduler::RouterStats) {
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let handles: Vec<_> = (0..n)
+        .map(|i| sched.submit(job(cfg, Dataset::Math500, seed, i)).expect("submit"))
+        .collect();
+    let drained: Vec<Drained> = handles
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| drain(h, &format!("job {i}")))
+        .collect();
+    // Every faulted run must end with the reservation ledger and running
+    // set at baseline — poll briefly (the composer retires tasks on its
+    // own tick).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let stats = loop {
+        let s = sched.stats();
+        if (s.kv_reserved_blocks == 0 && s.running == 0 && s.queue_depth == 0)
+            || Instant::now() >= deadline
+        {
+            break s;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    sched.shutdown();
+    assert_eq!(stats.kv_reserved_blocks, 0, "KV reservation ledger back to baseline");
+    assert_eq!(stats.running, 0, "running set drained");
+    assert_eq!(stats.queue_depth, 0, "queue drained");
+    (drained, stats)
+}
+
+#[test]
+fn zero_rate_fault_plan_is_bit_identical_to_none() {
+    if !have_artifacts() {
+        eprintln!("skipping zero_rate_fault_plan_is_bit_identical_to_none: no artifacts/");
+        return;
+    }
+    let n = 3;
+    let seed = 0xFA17;
+    // Baseline: the default config (FaultPlan::none()).
+    let clean_cfg = deploy(2);
+    let (clean, clean_stats) = run_jobs(&clean_cfg, n, seed);
+    assert_eq!(clean_stats.faults_injected, 0);
+
+    // Armed-but-zero-rate plan: every gate is consulted, none may fire,
+    // and results must stay bit-identical.
+    let mut cfg = deploy(2);
+    cfg.fault_plan = FaultPlan::all_sites(1, 0.0);
+    cfg.validate().expect("valid config");
+    let (zero, zero_stats) = run_jobs(&cfg, n, seed);
+    assert_eq!(zero_stats.faults_injected, 0, "zero rate must never fire");
+    assert_eq!(zero_stats.step_retries, 0);
+
+    for (i, (c, z)) in clean.iter().zip(zero.iter()).enumerate() {
+        assert_eq!(c.terminals, 1);
+        assert_eq!(z.terminals, 1);
+        let (cm, zm) = (c.result.as_ref().unwrap(), z.result.as_ref().unwrap());
+        assert_deterministic_eq(&cm.metrics, &zm.metrics, &format!("query {i}"));
+        assert_eq!(c.final_steps, z.final_steps, "query {i}: step streams");
+    }
+}
+
+#[test]
+fn chaos_seed_sweep_recovers_with_bit_identical_results() {
+    if !have_artifacts() {
+        eprintln!("skipping chaos_seed_sweep_recovers_with_bit_identical_results: no artifacts/");
+        return;
+    }
+    let n = 3;
+    let workload_seed = 0xC4A0;
+    let clean_cfg = deploy(2);
+    let (clean, _) = run_jobs(&clean_cfg, n, workload_seed);
+    for d in &clean {
+        assert!(d.result.is_some(), "clean run completes");
+    }
+
+    let mut total_faults = 0u64;
+    let mut total_retries = 0u64;
+    // >= 8 distinct fault seeds, every engine-side site armed.  The
+    // per-run fault budget (`max_faults`) is comfortably below the retry
+    // budget, so each job must eventually complete — and when it does,
+    // its deterministic results must be indistinguishable from the
+    // undisturbed baseline.
+    for fault_seed in 1..=8u64 {
+        let mut cfg = deploy(2);
+        cfg.fault_plan = FaultPlan {
+            seed: fault_seed,
+            rate: 0.04,
+            sites: vec![FaultSite::EngineOp, FaultSite::Batch, FaultSite::Kv],
+            max_faults: 3,
+            panic_in_batch: false,
+        };
+        cfg.max_step_retries = 12;
+        cfg.retry_backoff_ms = 1;
+        cfg.validate().expect("valid config");
+        let (drained, stats) = run_jobs(&cfg, n, workload_seed);
+        total_faults += stats.faults_injected;
+        total_retries += stats.step_retries;
+        for (i, d) in drained.iter().enumerate() {
+            let ctx = format!("fault seed {fault_seed}, job {i}");
+            assert_eq!(d.terminals, 1, "{ctx}: exactly one terminal event");
+            let r = d.result.as_ref().unwrap_or_else(|| {
+                panic!("{ctx}: failed despite retry budget: {:?}", d.error)
+            });
+            assert_deterministic_eq(
+                &r.metrics,
+                &clean[i].result.as_ref().unwrap().metrics,
+                &ctx,
+            );
+            assert_eq!(
+                d.final_steps, clean[i].final_steps,
+                "{ctx}: final-attempt step stream matches the undisturbed run"
+            );
+            assert_eq!(r.retries, d.retried_events, "{ctx}: result counts its retries");
+        }
+        assert_eq!(
+            stats.completed, n as u64,
+            "fault seed {fault_seed}: every job completed"
+        );
+        assert_eq!(stats.failed, 0, "fault seed {fault_seed}: no terminal failures");
+    }
+    // The sweep as a whole must actually have exercised the machinery.
+    assert!(total_faults > 0, "no faults fired across 8 seeds — injector inert?");
+    assert!(total_retries > 0, "no retries across 8 seeds — recovery path unexercised");
+}
+
+#[test]
+fn batch_panic_does_not_poison_batch_peers() {
+    if !have_artifacts() {
+        eprintln!("skipping batch_panic_does_not_poison_batch_peers: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(2);
+    cfg.fault_plan = FaultPlan {
+        seed: 99,
+        rate: 1.0,
+        sites: vec![FaultSite::Batch],
+        max_faults: 1,
+        panic_in_batch: true,
+    };
+    let engine = Engine::new(&cfg.engine_config()).expect("engine init");
+    let combo = Combo::new(&cfg.base_model, &cfg.small_model);
+    let gen = TraceGenerator::new(Dataset::Math500, 7);
+    let (qa, qb) = (gen.query(0), gen.query(1));
+    let mut sa = engine.new_sequence(&qa.prompt).expect("seq a");
+    let mut sb = engine.new_sequence(&qb.prompt).expect("seq b");
+    let (mut qma, mut qmb) = (QueryMetrics::default(), QueryMetrics::default());
+
+    // rate 1.0 means both slots want to fire; max_faults = 1 lets
+    // exactly one panic through.  The panic must surface as that slot's
+    // Err — the peer completes normally.
+    let results = engine.decode_batch(vec![
+        BatchDecode { seq: &mut sa, model: &combo.small, n: 4, seed: 1, phase: Phase::SpecDraft, qm: &mut qma },
+        BatchDecode { seq: &mut sb, model: &combo.small, n: 4, seed: 2, phase: Phase::SpecDraft, qm: &mut qmb },
+    ]);
+    let errs: Vec<String> = results
+        .iter()
+        .filter_map(|r| r.as_ref().err().map(|e| format!("{e:#}")))
+        .collect();
+    assert_eq!(errs.len(), 1, "exactly one slot fails: {errs:?}");
+    assert!(
+        errs[0].contains("panicked") && errs[0].contains("injected: batch fault"),
+        "the failure is the injected panic, isolated per slot: {}",
+        errs[0]
+    );
+    assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 1, "the peer survives");
+
+    // Recovery path: roll both back to their prompts and release — the
+    // pools must return to baseline (no leaked blocks, no stuck
+    // refcounts) even for the panicked slot.
+    for s in [&mut sa, &mut sb] {
+        let p = s.prompt_len;
+        engine.rollback(s, p).expect("rollback");
+    }
+    engine.release(&sa).expect("release a");
+    engine.release(&sb).expect("release b");
+    for model in [combo.small.as_str(), combo.base.as_str()] {
+        assert_eq!(
+            engine.kv_utilization(model),
+            0.0,
+            "{model}: KV pool back to baseline after rollback + release"
+        );
+    }
+
+    // Same isolation contract on the verification path, with a fresh
+    // fault budget.
+    cfg.fault_plan.seed = 100;
+    let engine = Engine::new(&cfg.engine_config()).expect("engine init");
+    let mut sa = engine.new_sequence(&qa.prompt).expect("seq a");
+    let mut sb = engine.new_sequence(&qb.prompt).expect("seq b");
+    let (mut qma, mut qmb) = (QueryMetrics::default(), QueryMetrics::default());
+    let results = engine.scored_prefill_batch(vec![
+        BatchVerify { seq: &mut sa, model: &combo.base, template: Vec::new(), phase: Phase::SpecVerify, qm: &mut qma },
+        BatchVerify { seq: &mut sb, model: &combo.base, template: Vec::new(), phase: Phase::SpecVerify, qm: &mut qmb },
+    ]);
+    assert_eq!(results.iter().filter(|r| r.is_err()).count(), 1);
+    assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 1);
+    for s in [&mut sa, &mut sb] {
+        let p = s.prompt_len;
+        engine.rollback(s, p).expect("rollback");
+    }
+    engine.release(&sa).expect("release a");
+    engine.release(&sb).expect("release b");
+    for model in [combo.small.as_str(), combo.base.as_str()] {
+        assert_eq!(engine.kv_utilization(model), 0.0, "{model}: baseline after verify batch");
+    }
+}
+
+#[test]
+fn conn_io_faults_drop_connections_not_the_server() {
+    if !have_artifacts() {
+        eprintln!("skipping conn_io_faults_drop_connections_not_the_server: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(1);
+    cfg.fault_plan = FaultPlan {
+        seed: 7,
+        rate: 1.0,
+        sites: vec![FaultSite::ConnIo],
+        max_faults: 2,
+        panic_in_batch: false,
+    };
+    let server = specreason::server::Server::bind(cfg).expect("server bind");
+    let addr = server.addr.to_string();
+    let handle = std::thread::spawn(move || {
+        server.run().expect("server run");
+    });
+
+    // The first two request lines fault: their connections drop like a
+    // mid-request network failure.  The server keeps accepting.
+    let mut dropped = 0;
+    let mut c = loop {
+        let mut c = specreason::server::Client::connect(&addr).expect("connect");
+        match c.ping() {
+            Ok(()) => break c,
+            Err(_) => {
+                dropped += 1;
+                assert!(dropped <= 2, "conn_io faults are capped at max_faults = 2");
+            }
+        }
+    };
+    assert_eq!(dropped, 2, "both budgeted conn_io faults fired");
+
+    // The surviving connection serves real traffic, and the stats op
+    // totals the conn_io fires into faults_injected.
+    let r = c
+        .call(Json::obj(vec![
+            ("op", Json::str("query")),
+            ("dataset", Json::str("math500")),
+            ("query_index", Json::num(0.0)),
+            ("budget", Json::num(64.0)),
+        ]))
+        .expect("query on surviving connection");
+    assert!(r.get("thinking_tokens").as_usize().unwrap() > 0);
+    let s = c.call(Json::obj(vec![("op", Json::str("stats"))])).expect("stats");
+    assert_eq!(s.get("faults_injected").as_usize(), Some(2));
+
+    let bye = c.call(Json::obj(vec![("op", Json::str("shutdown"))])).expect("shutdown");
+    assert_eq!(bye.as_str(), Some("bye"));
+    handle.join().unwrap();
+}
+
+#[test]
+fn degrade_mode_sheds_or_serves_but_never_both() {
+    if !have_artifacts() {
+        eprintln!("skipping degrade_mode_sheds_or_serves_but_never_both: no artifacts/");
+        return;
+    }
+    // Tiny watermarks + a long-running job force the controller through
+    // BaseOnly (and likely Shed) under a submission burst.  The
+    // assertions are structural, not timing-dependent: a shed submission
+    // errors at the door (no handle, no events), an accepted one ends in
+    // exactly one terminal event, and the counters reconcile.
+    let mut cfg = deploy(1);
+    cfg.token_budget = 192;
+    cfg.degrade = true;
+    cfg.degrade_queue_hiwater = 2;
+    cfg.degrade_shed_hiwater = 4;
+    cfg.degrade_enter_ticks = 1;
+    cfg.degrade_exit_ticks = 10_000; // never recover within the test
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+
+    let mut handles = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..24 {
+        match sched.submit(job(&cfg, Dataset::Math500, 0xD1, i % 4)) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("overloaded"),
+                    "rejections carry the overloaded class: {msg}"
+                );
+                shed += 1;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let accepted = handles.len();
+    let mut completed = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let d = drain(h, &format!("burst job {i}"));
+        assert_eq!(d.terminals, 1, "burst job {i}: exactly one terminal");
+        if d.result.is_some() {
+            completed += 1;
+        }
+    }
+    let s = sched.stats();
+    sched.shutdown();
+    assert_eq!(s.shed_jobs, shed, "every door rejection is counted once");
+    assert_eq!(s.completed, completed);
+    assert_eq!(accepted as u64, s.admitted, "accepted = queued (shed never queue)");
+    // Shed rejections carry the retry-after hint from the config.
+    if shed > 0 {
+        assert!(s.shed_jobs > 0);
+    }
+    eprintln!(
+        "[chaos] burst: accepted={accepted} shed={shed} degraded_admissions={}",
+        s.degraded_admissions
+    );
+}

@@ -272,6 +272,186 @@ fn prop_radix_index_matches_naive_reference() {
 }
 
 // ---------------------------------------------------------------------
+// Admission-queue invariants under shed / cancel / deadline / faults
+// ---------------------------------------------------------------------
+
+/// Random interleavings of the composer's queue operations — bounded
+/// push (overload bounce), shed-at-the-door, cancel/deadline reaping via
+/// `drain_where`, admission with deterministically-injected transient
+/// faults (re-queued at the class front with a bounded retry budget,
+/// like the scheduler's retry path) — must leave every job with exactly
+/// one outcome.  In particular a job is never both shed and admitted,
+/// never reaped twice, and the queue plus terminal outcomes always
+/// conserve the set of accepted pushes.
+#[test]
+fn prop_admission_queue_shed_xor_admit_under_faults() {
+    use specreason::faults::{key2, FaultInjector, FaultPlan, FaultSite};
+    use specreason::scheduler::{AdmissionQueue, Priority};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum Outcome {
+        Queued,
+        Shed,
+        Bounced,
+        Completed,
+        Reaped,
+        Failed,
+    }
+
+    #[derive(Debug)]
+    struct SimJob {
+        id: u64,
+        prio: Priority,
+        cancelled: bool,
+        deadline: Option<u64>,
+        retries: u32,
+    }
+
+    check("admission queue shed-xor-admit", 300, |rng| {
+        let max_queue = rng.range(2, 10);
+        let max_retries = rng.range(0, 3) as u32;
+        let mut q: AdmissionQueue<SimJob> = AdmissionQueue::new(max_queue);
+        // Admission-time faults drawn from the deterministic injector
+        // (keyed on job id + attempt, exactly like the serving path's
+        // per-attempt fresh schedules).
+        let inj = FaultInjector::new(FaultPlan {
+            seed: rng.next_u64(),
+            rate: 0.3,
+            sites: vec![FaultSite::Kv],
+            max_faults: 0,
+            panic_in_batch: false,
+        });
+
+        let mut outcomes: Vec<Outcome> = Vec::new();
+        let mut queued_ids: Vec<u64> = Vec::new(); // mirror of accepted ids
+        let mut now = 0u64;
+        let mut shed_mode = false;
+
+        let settle = |outcomes: &mut Vec<Outcome>, id: u64, to: Outcome| {
+            let cur = &mut outcomes[id as usize];
+            assert_eq!(
+                *cur,
+                Outcome::Queued,
+                "job {id}: second outcome {to:?} after {cur:?}"
+            );
+            *cur = to;
+        };
+
+        for _ in 0..rng.range(20, 120) {
+            now += 1;
+            match rng.below(6) {
+                0 | 1 => {
+                    // Submit: shed mode rejects at the door (the job
+                    // never occupies a slot); otherwise the bounded push
+                    // either accepts or bounces with the item returned.
+                    if rng.below(8) == 0 {
+                        shed_mode = !shed_mode;
+                    }
+                    let id = outcomes.len() as u64;
+                    let prio = Priority::all()[rng.below(3)];
+                    let job = SimJob {
+                        id,
+                        prio,
+                        cancelled: false,
+                        deadline: if rng.below(3) == 0 {
+                            Some(now + rng.range(0, 20) as u64)
+                        } else {
+                            None
+                        },
+                        retries: 0,
+                    };
+                    if shed_mode {
+                        outcomes.push(Outcome::Shed);
+                    } else {
+                        match q.push(prio, job) {
+                            Ok(()) => {
+                                outcomes.push(Outcome::Queued);
+                                queued_ids.push(id);
+                            }
+                            Err(bounced) => {
+                                assert_eq!(bounced.id, id, "push must return the rejected job");
+                                assert_eq!(q.len(), max_queue, "bounce only when full");
+                                outcomes.push(Outcome::Bounced);
+                            }
+                        }
+                    }
+                }
+                2 => {
+                    // Cancel a random still-queued job (client gave up).
+                    if let Some(&id) = queued_ids.get(rng.below(queued_ids.len().max(1))) {
+                        if outcomes[id as usize] == Outcome::Queued {
+                            // Flag it; the reap pass below collects it.
+                            let flagged = q.drain_where(|j| j.id == id);
+                            for mut j in flagged {
+                                j.cancelled = true;
+                                q.push_front(j.prio, j); // still queued, now doomed
+                            }
+                        }
+                    }
+                }
+                3 => {
+                    // Composer reap tick: cancelled or deadline-expired
+                    // jobs leave the queue without being admitted.
+                    let reaped = q.drain_where(|j| {
+                        j.cancelled || j.deadline.is_some_and(|d| now >= d)
+                    });
+                    for j in reaped {
+                        assert!(
+                            j.cancelled || j.deadline.is_some_and(|d| now >= d),
+                            "drain_where returned a non-matching job"
+                        );
+                        settle(&mut outcomes, j.id, Outcome::Reaped);
+                        queued_ids.retain(|&x| x != j.id);
+                    }
+                }
+                _ => {
+                    // Admit the head of the queue.  An injected fault is
+                    // transient: the job goes back to its class front
+                    // (bound-exempt) until its retry budget runs out.
+                    if let Some((prio, mut job)) = q.pop() {
+                        if job.cancelled || job.deadline.is_some_and(|d| now >= d) {
+                            settle(&mut outcomes, job.id, Outcome::Reaped);
+                            queued_ids.retain(|&x| x != job.id);
+                        } else if inj
+                            .try_fault(FaultSite::Kv, key2(job.id, job.retries as u64))
+                            .is_err()
+                        {
+                            if job.retries < max_retries {
+                                job.retries += 1;
+                                q.push_front(prio, job);
+                            } else {
+                                settle(&mut outcomes, job.id, Outcome::Failed);
+                                queued_ids.retain(|&x| x != job.id);
+                            }
+                        } else {
+                            settle(&mut outcomes, job.id, Outcome::Completed);
+                            queued_ids.retain(|&x| x != job.id);
+                        }
+                    }
+                }
+            }
+
+            // Conservation after every op: accepted ids are exactly the
+            // jobs still queued; everything else reached one terminal.
+            assert_eq!(q.len(), queued_ids.len(), "queue/mirror drift");
+            assert!(q.len() <= max_queue + 1, "front re-queues exceed bound by at most 1");
+            let open = outcomes.iter().filter(|&&o| o == Outcome::Queued).count();
+            assert_eq!(open, queued_ids.len(), "open outcomes == queued jobs");
+        }
+
+        // Drain what's left: every remaining job settles exactly once.
+        while let Some((_prio, job)) = q.pop() {
+            settle(&mut outcomes, job.id, Outcome::Completed);
+            queued_ids.retain(|&x| x != job.id);
+        }
+        assert!(queued_ids.is_empty());
+        for (id, o) in outcomes.iter().enumerate() {
+            assert_ne!(*o, Outcome::Queued, "job {id} never settled");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
 // Coordinator invariants (random schemes, datasets, knobs)
 // ---------------------------------------------------------------------
 

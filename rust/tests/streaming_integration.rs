@@ -80,6 +80,8 @@ fn v2_stream_orders_events_deterministically() {
                 WireEvent::Queued => kinds.push("queued".to_string()),
                 WireEvent::Admitted => kinds.push("admitted".to_string()),
                 WireEvent::Preempted => kinds.push("preempted".to_string()),
+                WireEvent::Retried { .. } => kinds.push("retried".to_string()),
+                WireEvent::Degraded => kinds.push("degraded".to_string()),
                 WireEvent::Step { kind, tokens, score, effective_threshold, .. } => {
                     assert!(tokens > 0);
                     if kind == "accepted" {
