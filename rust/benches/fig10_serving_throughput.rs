@@ -308,6 +308,95 @@ fn run_prefix_mode(budget: usize, total: usize) -> Json {
     Json::Arr(rows)
 }
 
+/// Latency-breakdown mode: serve requests at `max_batch = 1` with
+/// tracing on and attribute each request's time to its phases from the
+/// trace spans.  The per-phase wall sums must agree with the request's
+/// own `QueryMetrics` accumulators (spans are derived from them), and
+/// the total span coverage must telescope to ≤ e2e (+slack) — the
+/// acceptance check that NDJSON timelines reconstruct real latency.
+fn run_latency_breakdown(budget: usize, total: usize) -> Json {
+    let cfg = DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: budget,
+        answer_tokens: 8,
+        max_batch: 1,
+        max_queue: 256,
+        obs_trace: true,
+        ..Default::default()
+    };
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let obs = sched.obs();
+    let spec = cfg.spec_config();
+    let mut phase_wall: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut phase_gpu: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut e2e_sum = 0.0f64;
+    let mut span_sum = 0.0f64;
+    for r in 0..total {
+        let handle = sched
+            .submit(JobRequest {
+                dataset: Dataset::Math500,
+                query_index: r % 16,
+                sample: 0,
+                seed: 0xF16_B,
+                spec: spec.clone(),
+                priority: Priority::Normal,
+            })
+            .expect("submit");
+        let res = handle
+            .recv_timeout(Duration::from_secs(600))
+            .expect("reply dropped")
+            .expect("query failed");
+        let id = res.trace_id.expect("tracing on must stamp a trace_id");
+        let tl = obs.tracer.finished(Some(id)).expect("finished timeline retained");
+        let totals = tl.phase_totals();
+        let mut covered = 0.0f64;
+        for (phase, (w, g)) in totals.iter() {
+            *phase_wall.entry(phase.to_string()).or_default() += w;
+            *phase_gpu.entry(phase.to_string()).or_default() += g;
+            covered += w;
+        }
+        // Span-derivation exactness: each phase's traced wall must match
+        // the metrics accumulator it was diffed from (float telescoping
+        // leaves only rounding noise).
+        for (phase, w) in res.metrics.phase_wall.iter() {
+            let traced = totals.get(phase).map(|t| t.0).unwrap_or(0.0);
+            assert!(
+                (traced - w).abs() <= w.abs() * 1e-6 + 1e-9,
+                "phase {phase}: traced {traced} vs metrics {w}"
+            );
+        }
+        // Coverage: queue_wait + phase spans never exceed e2e (+slack
+        // for scheduler bookkeeping between ops).
+        assert!(
+            covered <= res.e2e_s * 1.05 + 0.05,
+            "span coverage {covered:.4}s exceeds e2e {:.4}s", res.e2e_s
+        );
+        span_sum += covered;
+        e2e_sum += res.e2e_s;
+    }
+    sched.shutdown();
+    let coverage = if e2e_sum > 0.0 { span_sum / e2e_sum } else { 0.0 };
+    println!(
+        "latency breakdown: {total} traced reqs, span coverage {:.1}% of e2e",
+        coverage * 100.0
+    );
+    let mut wall_j = Json::obj(vec![]);
+    for (phase, w) in phase_wall.iter() {
+        wall_j.set(phase, Json::num(*w));
+    }
+    let mut gpu_j = Json::obj(vec![]);
+    for (phase, g) in phase_gpu.iter() {
+        gpu_j.set(phase, Json::num(*g));
+    }
+    Json::obj(vec![
+        ("requests", Json::num(total as f64)),
+        ("e2e_s_sum", Json::num(e2e_sum)),
+        ("span_coverage", Json::num(coverage)),
+        ("phase_wall_s", wall_j),
+        ("phase_gpu_s", gpu_j),
+    ])
+}
+
 fn main() {
     let out_path = "BENCH_server.json";
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -431,6 +520,11 @@ fn main() {
     println!("booting schedulers for shared-prefix mode ({prefix_reqs} reqs, cache off/on) ...");
     let prefix_rows = run_prefix_mode(budget, prefix_reqs);
 
+    // --- latency-breakdown mode: per-phase time attribution from traces ---
+    let breakdown_reqs = reqs.min(6).max(2);
+    println!("booting traced scheduler for latency-breakdown mode ({breakdown_reqs} reqs) ...");
+    let breakdown = run_latency_breakdown(budget, breakdown_reqs);
+
     let report = Json::obj(vec![
         ("bench", Json::str("serving_throughput")),
         ("requests_per_run", Json::num(reqs as f64)),
@@ -440,6 +534,7 @@ fn main() {
         ("resilience", Json::Arr(resilience_rows)),
         ("speedup_batch8_vs_serial", Json::num(speedup)),
         ("prefix_cache", prefix_rows),
+        ("latency_breakdown", breakdown),
         (
             "streaming",
             Json::obj(vec![

@@ -1,0 +1,255 @@
+//! microbench_obs — overhead of the observability subsystem: registry
+//! counters/histograms, tracer span emission (on and off), NDJSON
+//! export, flight-recorder rings, and the served-path cost of turning
+//! tracing on.
+//!
+//!   cargo bench --bench microbench_obs
+//!   SPECREASON_BENCH_OBS_ITERS=50000 cargo bench --bench microbench_obs
+//!
+//! The synthetic sections need no artifacts and always run: they time
+//! the hot-path primitives in isolation (ns per histogram observe, ns
+//! per traced span, ns per *disabled* tracer call — the "off is one
+//! branch" claim — NDJSON bytes/s, ns per flight record) and assert
+//! the histogram's quantile ordering (p50 ≤ p95 ≤ p99).
+//!
+//! The **served** section boots the scheduler twice on the real engine
+//! — tracing off, then on — over the identical serial workload and
+//! asserts the per-request metrics JSON is byte-identical (tracing
+//! never changes results), reporting the wall-clock overhead.  With
+//! `SPECREASON_BENCH_STRICT=1` the overhead gates at ≤ 15%.
+//!
+//! Emits `BENCH_obs.json` (the observability lane's trajectory
+//! artifact).  Without `artifacts/` only the served section is skipped;
+//! the synthetic sections still land in the report.
+
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::obs::{FlightRecorder, Registry, Tracer};
+use specreason::scheduler::{JobRequest, Priority, Scheduler};
+use specreason::semantics::Dataset;
+use specreason::server::protocol::metrics_to_json;
+use specreason::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Registry hot paths: counter increments and histogram observes.
+fn bench_registry(iters: usize) -> Json {
+    let reg = Registry::new();
+    let t0 = Instant::now();
+    for i in 0..iters {
+        reg.counter_add("bench.counter", (i % 3) as u64);
+    }
+    let counter_ns = t0.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+
+    let t0 = Instant::now();
+    for i in 0..iters {
+        // Spread observations over ~6 decades so every bucket band is hit.
+        reg.observe("bench.latency_s", 1e-6 * (1 + i % 1_000_000) as f64);
+    }
+    let observe_ns = t0.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+
+    let (p50, p95, p99) = reg.quantiles("bench.latency_s").expect("histogram exists");
+    assert!(p50 <= p95 && p95 <= p99, "quantile ordering: {p50} {p95} {p99}");
+    let h = reg.histogram_json("bench.latency_s").expect("histogram json");
+    assert_eq!(h.get("count").as_usize(), Some(iters));
+    println!(
+        "registry: counter_add {counter_ns:.0} ns/op, observe {observe_ns:.0} ns/op, \
+         p50 {p50:.2e}s p95 {p95:.2e}s p99 {p99:.2e}s"
+    );
+    Json::obj(vec![
+        ("iters", Json::num(iters as f64)),
+        ("counter_add_ns", Json::num(counter_ns)),
+        ("observe_ns", Json::num(observe_ns)),
+        ("p50_s", Json::num(p50)),
+        ("p95_s", Json::num(p95)),
+        ("p99_s", Json::num(p99)),
+    ])
+}
+
+/// Tracer span emission with tracing on vs the disabled single-branch
+/// path, plus NDJSON export throughput.
+fn bench_tracer(timelines: usize, spans_per: usize) -> Json {
+    const PHASES: [&str; 4] = ["prompt_prefill", "speculate", "spec_verify", "answer"];
+
+    let on = Tracer::new(true, 8, None);
+    let t0 = Instant::now();
+    for i in 0..timelines {
+        let id = on.begin(&format!("bench t{i}")).expect("tracing on");
+        on.edge(id, "queued", "");
+        for s in 0..spans_per {
+            on.span(id, PHASES[s % PHASES.len()], 1e-4, 5e-5);
+        }
+        on.edge(id, "result", "");
+        on.finish(id);
+    }
+    let total_records = timelines * (spans_per + 2);
+    let on_ns = t0.elapsed().as_nanos() as f64 / total_records.max(1) as f64;
+    assert_eq!(on.finished_count(), timelines.min(8), "ring bound holds");
+
+    // Same call sequence against a disabled tracer: every call must be
+    // near-free (one branch), the bit-identity budget for serving.
+    let off = Tracer::off();
+    let t0 = Instant::now();
+    for i in 0..timelines {
+        assert!(off.begin(&format!("bench t{i}")).is_none());
+        off.edge(0, "queued", "");
+        for s in 0..spans_per {
+            off.span(0, PHASES[s % PHASES.len()], 1e-4, 5e-5);
+        }
+        off.edge(0, "result", "");
+        off.finish(0);
+    }
+    let off_ns = t0.elapsed().as_nanos() as f64 / total_records.max(1) as f64;
+
+    // NDJSON export: serialize the newest finished timeline repeatedly.
+    let tl = on.finished(None).expect("finished timeline");
+    let reps = 200usize;
+    let t0 = Instant::now();
+    let mut bytes = 0usize;
+    for _ in 0..reps {
+        bytes += tl.to_ndjson().len();
+    }
+    let ndjson_mb_s = bytes as f64 / 1e6 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    println!(
+        "tracer: on {on_ns:.0} ns/record, off {off_ns:.1} ns/call, \
+         ndjson export {ndjson_mb_s:.0} MB/s"
+    );
+    Json::obj(vec![
+        ("timelines", Json::num(timelines as f64)),
+        ("spans_per_timeline", Json::num(spans_per as f64)),
+        ("on_ns_per_record", Json::num(on_ns)),
+        ("off_ns_per_call", Json::num(off_ns)),
+        ("ndjson_mb_per_s", Json::num(ndjson_mb_s)),
+    ])
+}
+
+/// Flight-recorder ring writes and a dump snapshot.
+fn bench_flight(iters: usize) -> Json {
+    const SUBS: [&str; 4] = ["scheduler", "faults", "degrade", "kv"];
+    let fr = FlightRecorder::new(256);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        fr.record(SUBS[i % SUBS.len()], "bench", "detail payload");
+    }
+    let record_ns = t0.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+    let dump = fr.dump("bench");
+    let dump_bytes = dump.to_string().len();
+    assert_eq!(fr.events_total(), iters as u64);
+    assert_eq!(fr.dumps_total(), 1);
+    println!("flight: record {record_ns:.0} ns/op, dump snapshot {dump_bytes} bytes");
+    Json::obj(vec![
+        ("iters", Json::num(iters as f64)),
+        ("record_ns", Json::num(record_ns)),
+        ("dump_bytes", Json::num(dump_bytes as f64)),
+    ])
+}
+
+/// Served-path overhead: the identical serial workload with tracing off
+/// vs on.  Per-request metrics JSON must be byte-identical — tracing
+/// observes the serving path, it never changes it.
+fn run_served_overhead(budget: usize, reqs: usize) -> Json {
+    let mut digests: Vec<Vec<String>> = Vec::new();
+    let mut makespans: Vec<f64> = Vec::new();
+    for obs_on in [false, true] {
+        let cfg = DeployConfig {
+            addr: "127.0.0.1:0".into(),
+            token_budget: budget,
+            answer_tokens: 8,
+            max_batch: 1,
+            max_queue: 256,
+            obs_trace: obs_on,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+        let spec = cfg.spec_config();
+        let t0 = Instant::now();
+        let mut run: Vec<String> = Vec::new();
+        for r in 0..reqs {
+            let handle = sched
+                .submit(JobRequest {
+                    dataset: Dataset::Math500,
+                    query_index: r % 16,
+                    sample: 0,
+                    seed: 0x0B5_0B5,
+                    spec: spec.clone(),
+                    priority: Priority::Normal,
+                })
+                .expect("submit");
+            let res = handle
+                .recv_timeout(Duration::from_secs(600))
+                .expect("reply dropped")
+                .expect("query failed");
+            assert_eq!(res.trace_id.is_some(), obs_on, "trace_id mirrors the knob");
+            run.push(metrics_to_json(&res.metrics, res.scheme).to_string());
+        }
+        makespans.push(t0.elapsed().as_secs_f64());
+        digests.push(run);
+        sched.shutdown();
+    }
+    assert_eq!(
+        digests[0], digests[1],
+        "tracing on must leave per-request metrics byte-identical"
+    );
+    let overhead_pct = if makespans[0] > 0.0 {
+        (makespans[1] / makespans[0] - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "served: {reqs} reqs, off {:.3}s vs on {:.3}s ({overhead_pct:+.1}% wall), \
+         metrics bit-identical",
+        makespans[0], makespans[1]
+    );
+    let strict = std::env::var("SPECREASON_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    if strict {
+        assert!(
+            overhead_pct <= 15.0,
+            "tracing overhead gate: {overhead_pct:.1}% > 15% of serial wall time"
+        );
+        println!("overhead gate: {overhead_pct:.1}% <= 15%  [ok]");
+    }
+    Json::obj(vec![
+        ("requests", Json::num(reqs as f64)),
+        ("off_makespan_s", Json::num(makespans[0])),
+        ("on_makespan_s", Json::num(makespans[1])),
+        ("overhead_pct", Json::num(overhead_pct)),
+        ("metrics_bit_identical", Json::Bool(true)),
+    ])
+}
+
+fn main() {
+    let out_path = "BENCH_obs.json";
+    let iters = env_usize("SPECREASON_BENCH_OBS_ITERS", 200_000);
+    let reqs = env_usize("SPECREASON_BENCH_OBS_REQS", 4);
+    let budget = env_usize("SPECREASON_BENCH_OBS_BUDGET", 64);
+    println!("microbench_obs: {iters} synthetic iters; served section {reqs} reqs, budget {budget}");
+
+    let registry = bench_registry(iters);
+    let tracer = bench_tracer(iters / 1_000 + 8, 64);
+    let flight = bench_flight(iters);
+
+    let served = if std::path::Path::new("artifacts/manifest.json").exists() {
+        run_served_overhead(budget, reqs)
+    } else {
+        println!("served section: skipped (no artifacts/)");
+        Json::obj(vec![
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::str("no artifacts/ (AOT compile not run)")),
+        ])
+    };
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("obs")),
+        ("iters", Json::num(iters as f64)),
+        ("registry", registry),
+        ("tracer", tracer),
+        ("flight", flight),
+        ("served", served),
+    ]);
+    std::fs::write(out_path, report.to_string_pretty()).expect("write BENCH_obs.json");
+    println!("wrote {out_path}");
+}

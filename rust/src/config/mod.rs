@@ -105,6 +105,21 @@ pub struct DeployConfig {
     /// Read-timeout tick while v2 sessions stream on a connection, ms
     /// (event pump cadence; was a hardcoded 15ms).
     pub stream_poll_ms: u64,
+    /// Structured per-request tracing (`serve --trace`).  Off (the
+    /// default) is bit-identical serving: the tracer never allocates
+    /// and every hook is a single branch.  The always-on metrics
+    /// registry and flight recorder are unaffected by this knob.
+    pub obs_trace: bool,
+    /// Export each finished trace as NDJSON into this directory
+    /// (`serve --trace-dir`); "" disables file export.  Setting it via
+    /// the CLI implies `obs_trace`.
+    pub obs_trace_dir: String,
+    /// Finished trace timelines retained in memory for the v2 `trace`
+    /// wire op (oldest evicted beyond this).
+    pub obs_trace_keep: usize,
+    /// Flight-recorder ring capacity per subsystem (recent events kept
+    /// for fault/degrade post-mortem dumps).
+    pub obs_flight_events: usize,
 }
 
 impl Default for DeployConfig {
@@ -146,6 +161,10 @@ impl Default for DeployConfig {
             degrade_retry_after_ms: 250,
             idle_poll_ms: 200,
             stream_poll_ms: 15,
+            obs_trace: false,
+            obs_trace_dir: String::new(),
+            obs_trace_keep: 64,
+            obs_flight_events: 256,
         }
     }
 }
@@ -274,6 +293,18 @@ impl DeployConfig {
         if let Some(v) = j.get("stream_poll_ms").as_usize() {
             c.stream_poll_ms = v as u64;
         }
+        if let Some(v) = j.get("obs_trace").as_bool() {
+            c.obs_trace = v;
+        }
+        if let Some(v) = j.get("obs_trace_dir").as_str() {
+            c.obs_trace_dir = v.to_string();
+        }
+        if let Some(v) = j.get("obs_trace_keep").as_usize() {
+            c.obs_trace_keep = v;
+        }
+        if let Some(v) = j.get("obs_flight_events").as_usize() {
+            c.obs_flight_events = v;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -302,6 +333,8 @@ impl DeployConfig {
             self.degrade_enter_ticks >= 1 && self.degrade_exit_ticks >= 1,
             "degrade enter/exit ticks must be >= 1"
         );
+        anyhow::ensure!(self.obs_trace_keep >= 1, "obs_trace_keep must be >= 1");
+        anyhow::ensure!(self.obs_flight_events >= 1, "obs_flight_events must be >= 1");
         Ok(())
     }
 
@@ -475,6 +508,27 @@ mod tests {
             r#"{"degrade_queue_hiwater": 9, "degrade_shed_hiwater": 3}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_obs_knobs() {
+        let c = DeployConfig::from_json_str(
+            r#"{"obs_trace": true, "obs_trace_dir": "/tmp/traces",
+                "obs_trace_keep": 8, "obs_flight_events": 32}"#,
+        )
+        .unwrap();
+        assert!(c.obs_trace);
+        assert_eq!(c.obs_trace_dir, "/tmp/traces");
+        assert_eq!(c.obs_trace_keep, 8);
+        assert_eq!(c.obs_flight_events, 32);
+        // Default: tracing off (bit-identical serving), bounded rings.
+        let d = DeployConfig::default();
+        assert!(!d.obs_trace);
+        assert!(d.obs_trace_dir.is_empty());
+        assert_eq!(d.obs_trace_keep, 64);
+        assert_eq!(d.obs_flight_events, 256);
+        assert!(DeployConfig::from_json_str(r#"{"obs_trace_keep": 0}"#).is_err());
+        assert!(DeployConfig::from_json_str(r#"{"obs_flight_events": 0}"#).is_err());
     }
 
     #[test]

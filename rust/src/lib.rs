@@ -21,6 +21,7 @@ pub mod exec;
 pub mod faults;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod semantics;

@@ -133,6 +133,15 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             "fault-plan",
             "deterministic fault injection, e.g. 'seed=7,rate=0.05,sites=engine_op+kv' ('none' = off)",
             None,
+        )
+        .flag(
+            "trace",
+            "per-request span tracing (served over the v2 'trace' op; off by default)",
+        )
+        .opt(
+            "trace-dir",
+            "export each finished trace as NDJSON into this directory (implies --trace)",
+            None,
         );
     let args = cmd.parse(raw)?;
     let mut cfg = deploy_from(&args)?;
@@ -145,6 +154,13 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     cfg.prefix_cache_blocks = args.usize("prefix-cache-blocks", cfg.prefix_cache_blocks)?;
     if let Some(plan) = args.get("fault-plan") {
         cfg.fault_plan = specreason::faults::FaultPlan::parse(plan)?;
+    }
+    if args.flag("trace") {
+        cfg.obs_trace = true;
+    }
+    if let Some(dir) = args.get("trace-dir") {
+        cfg.obs_trace = true;
+        cfg.obs_trace_dir = dir.to_string();
     }
     apply_exec_opts(&mut cfg, &args)?;
     cfg.validate()?;

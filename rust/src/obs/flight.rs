@@ -1,0 +1,194 @@
+//! Flight recorder: bounded per-subsystem ring buffers of recent
+//! events, snapshotted ("dumped") automatically when something goes
+//! wrong — an injected fault fires, a batch slot panics, or the
+//! degrade controller changes state — so a chaos run can be
+//! post-mortem-debugged from the `metrics` wire op without re-running
+//! it under a debugger.
+//!
+//! Recording is cheap (one lock, one ring push) and purely
+//! observational: nothing here feeds back into scheduling decisions,
+//! so the recorder can stay armed by default without violating the
+//! bit-identity guarantee.  Both the rings and the retained dumps are
+//! bounded, so a fault storm cannot grow memory.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Retained dump snapshots (oldest evicted beyond this).
+const MAX_DUMPS: usize = 8;
+
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    /// Global sequence number across all subsystems (records interleave
+    /// deterministically within one recorder).
+    pub seq: u64,
+    /// Seconds since the recorder was created.
+    pub t_s: f64,
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+impl FlightEvent {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t_s", Json::num(self.t_s)),
+            ("kind", Json::str(self.kind)),
+            ("detail", Json::str(&self.detail)),
+        ])
+    }
+}
+
+struct Inner {
+    rings: BTreeMap<&'static str, VecDeque<FlightEvent>>,
+    next_seq: u64,
+    events_total: u64,
+    dumps_total: u64,
+    dumps: VecDeque<Json>,
+}
+
+pub struct FlightRecorder {
+    /// Ring capacity per subsystem.
+    cap: usize,
+    started: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            cap: cap.max(1),
+            started: Instant::now(),
+            inner: Mutex::new(Inner {
+                rings: BTreeMap::new(),
+                next_seq: 0,
+                events_total: 0,
+                dumps_total: 0,
+                dumps: VecDeque::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Append one event to `subsystem`'s ring (evicting its oldest at
+    /// capacity).
+    pub fn record(&self, subsystem: &'static str, kind: &'static str, detail: &str) {
+        let t_s = self.started.elapsed().as_secs_f64();
+        let mut inner = self.lock();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.events_total += 1;
+        let ring = inner.rings.entry(subsystem).or_default();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(FlightEvent { seq, t_s, kind, detail: detail.to_string() });
+    }
+
+    fn rings_json(inner: &Inner) -> Json {
+        let mut j = Json::obj(vec![]);
+        for (subsystem, ring) in inner.rings.iter() {
+            j.set(subsystem, Json::Arr(ring.iter().map(FlightEvent::to_json).collect()));
+        }
+        j
+    }
+
+    /// Snapshot every ring into a dump tagged with `reason`, retain it
+    /// (bounded), and return it.
+    pub fn dump(&self, reason: &str) -> Json {
+        let t_s = self.started.elapsed().as_secs_f64();
+        let mut inner = self.lock();
+        inner.dumps_total += 1;
+        let snap = Json::obj(vec![
+            ("reason", Json::str(reason)),
+            ("t_s", Json::num(t_s)),
+            ("events", Self::rings_json(&inner)),
+        ]);
+        if inner.dumps.len() >= MAX_DUMPS {
+            inner.dumps.pop_front();
+        }
+        inner.dumps.push_back(snap.clone());
+        snap
+    }
+
+    pub fn events_total(&self) -> u64 {
+        self.lock().events_total
+    }
+
+    pub fn dumps_total(&self) -> u64 {
+        self.lock().dumps_total
+    }
+
+    /// Full recorder state: totals, live rings, retained dumps.
+    pub fn to_json(&self) -> Json {
+        let inner = self.lock();
+        Json::obj(vec![
+            ("events_total", Json::num(inner.events_total as f64)),
+            ("dumps_total", Json::num(inner.dumps_total as f64)),
+            ("recent", Self::rings_json(&inner)),
+            ("dumps", Json::Arr(inner.dumps.iter().cloned().collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rings_are_bounded_per_subsystem() {
+        let fr = FlightRecorder::new(3);
+        for i in 0..10 {
+            fr.record("scheduler", "tick", &format!("i={i}"));
+        }
+        fr.record("faults", "injected", "total=1");
+        assert_eq!(fr.events_total(), 11);
+        let j = fr.to_json();
+        let sched = j.get("recent").get("scheduler");
+        assert_eq!(sched.as_arr().unwrap().len(), 3);
+        // Oldest evicted: the survivors are i=7..9.
+        assert_eq!(
+            sched.as_arr().unwrap()[0].get("detail").as_str(),
+            Some("i=7")
+        );
+        assert_eq!(j.get("recent").get("faults").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sequence_numbers_interleave_globally() {
+        let fr = FlightRecorder::new(8);
+        fr.record("a", "x", "");
+        fr.record("b", "y", "");
+        fr.record("a", "z", "");
+        let j = fr.to_json();
+        let a = j.get("recent").get("a");
+        let b = j.get("recent").get("b");
+        assert_eq!(a.as_arr().unwrap()[0].get("seq").as_usize(), Some(0));
+        assert_eq!(b.as_arr().unwrap()[0].get("seq").as_usize(), Some(1));
+        assert_eq!(a.as_arr().unwrap()[1].get("seq").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn dumps_snapshot_and_stay_bounded() {
+        let fr = FlightRecorder::new(4);
+        fr.record("degrade", "transition", "normal -> base_only (queue_depth)");
+        let d = fr.dump("degrade:base_only");
+        assert_eq!(d.get("reason").as_str(), Some("degrade:base_only"));
+        assert_eq!(
+            d.get("events").get("degrade").as_arr().unwrap().len(),
+            1
+        );
+        for i in 0..20 {
+            fr.dump(&format!("r{i}"));
+        }
+        assert_eq!(fr.dumps_total(), 21);
+        let j = fr.to_json();
+        assert_eq!(j.get("dumps").as_arr().unwrap().len(), MAX_DUMPS);
+    }
+}

@@ -1,0 +1,114 @@
+//! Unified observability for the serving path: structured per-request
+//! tracing, a named-metric registry, and a flight recorder — one
+//! dependency-free subsystem threaded through the scheduler,
+//! coordinator step loop, engine gauges, fault injection, and the TCP
+//! server (DESIGN.md's "measure everything, change nothing" rule).
+//!
+//! Split along the bit-identity guarantee:
+//!
+//! - The **registry** ([`registry::Registry`]) and **flight recorder**
+//!   ([`flight::FlightRecorder`]) are always on.  They only *read*
+//!   values the serving path already computes (latencies, queue
+//!   depths, fault counters) and never write into `QueryMetrics` or
+//!   any decision input, so served results are unaffected.
+//! - The **tracer** ([`trace::Tracer`]) allocates per-request state
+//!   and is gated behind `DeployConfig::obs_trace` (default off;
+//!   `serve --trace` / `--trace-dir`).  Off, every call is one branch
+//!   — the `FaultInjector::enabled()` idiom.
+//!
+//! The `metrics` wire op serves [`Obs::metrics_json`]; the `trace`
+//! wire op serves [`trace::Tracer::export_json`].
+
+pub mod flight;
+pub mod registry;
+pub mod trace;
+
+use std::sync::Arc;
+
+pub use flight::{FlightEvent, FlightRecorder};
+pub use registry::{Histogram, Registry};
+pub use trace::{SpanKind, SpanRecord, Timeline, Tracer};
+
+use crate::config::DeployConfig;
+use crate::util::json::Json;
+
+/// Shared observability handle (one per scheduler).
+pub struct Obs {
+    pub registry: Registry,
+    pub tracer: Tracer,
+    pub flight: FlightRecorder,
+}
+
+impl Obs {
+    pub fn new(trace: bool, trace_keep: usize, trace_dir: Option<String>, flight_events: usize) -> Obs {
+        Obs {
+            registry: Registry::new(),
+            tracer: Tracer::new(trace, trace_keep, trace_dir),
+            flight: FlightRecorder::new(flight_events),
+        }
+    }
+
+    /// Build from the deploy config's `obs_*` knobs.
+    pub fn from_deploy(cfg: &DeployConfig) -> Arc<Obs> {
+        let dir = if cfg.obs_trace_dir.is_empty() { None } else { Some(cfg.obs_trace_dir.clone()) };
+        Arc::new(Obs::new(cfg.obs_trace, cfg.obs_trace_keep, dir, cfg.obs_flight_events))
+    }
+
+    /// Registry + flight recorder on, tracing off — the default shape.
+    pub fn off() -> Arc<Obs> {
+        Arc::new(Obs::new(false, 64, None, 256))
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.tracer.enabled()
+    }
+
+    /// The `metrics` wire op payload: full registry dump, flight
+    /// recorder state (recent rings + retained dumps), trace counts.
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("registry", self.registry.to_json()),
+            ("flight", self.flight.to_json()),
+            (
+                "traces",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.tracer.enabled())),
+                    ("active", Json::num(self.tracer.active_count() as f64)),
+                    ("finished", Json::num(self.tracer.finished_count() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_shape_is_trace_off_registry_on() {
+        let obs = Obs::off();
+        assert!(!obs.trace_enabled());
+        obs.registry.counter_add("jobs", 1);
+        obs.flight.record("scheduler", "tick", "");
+        let j = obs.metrics_json();
+        assert_eq!(j.get("registry").get("jobs").get("value").as_usize(), Some(1));
+        assert_eq!(j.get("flight").get("events_total").as_usize(), Some(1));
+        assert_eq!(j.get("traces").get("enabled").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn from_deploy_honors_the_knobs() {
+        let mut cfg = DeployConfig::default();
+        assert!(!Obs::from_deploy(&cfg).trace_enabled());
+        cfg.obs_trace = true;
+        cfg.obs_trace_keep = 3;
+        let obs = Obs::from_deploy(&cfg);
+        assert!(obs.trace_enabled());
+        for i in 0..5 {
+            let id = obs.tracer.begin(&format!("t{i}")).unwrap();
+            obs.tracer.finish(id);
+        }
+        assert_eq!(obs.tracer.finished_count(), 3);
+    }
+}

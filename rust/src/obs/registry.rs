@@ -1,0 +1,313 @@
+//! Metrics registry: named counters, gauges, and log2-bucket histograms.
+//!
+//! The registry is the always-on half of the observability layer: it
+//! records *pure telemetry* (never anything that feeds back into
+//! serving decisions or `QueryMetrics`), so it can stay enabled by
+//! default without violating the bit-identity guarantee.  Histograms
+//! use fixed log2 buckets over microseconds — recording is O(1), needs
+//! no allocation after the first touch of a name, and quantile reads
+//! (p50/p95/p99) walk the 64-bucket array with linear interpolation
+//! inside the landing bucket, clamped to the observed min/max.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::util::json::Json;
+
+/// Number of log2 buckets: bucket 0 holds sub-microsecond values,
+/// bucket `b ≥ 1` holds `[2^(b-1), 2^b)` microseconds, so bucket 63
+/// tops out far beyond any latency this stack can produce.
+const BUCKETS: usize = 64;
+
+/// Fixed-footprint log2-bucket histogram over seconds.
+#[derive(Clone)]
+pub struct Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+fn bucket_index(v: f64) -> usize {
+    if !v.is_finite() || v <= 0.0 {
+        return 0;
+    }
+    let us = v * 1e6;
+    if us < 1.0 {
+        return 0;
+    }
+    let b = us.log2().floor() as i64 + 1;
+    b.clamp(0, (BUCKETS - 1) as i64) as usize
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Estimate the `q`-quantile (`q ∈ [0, 1]`).  Exact up to the log2
+    /// bucket resolution; interpolated linearly within the landing
+    /// bucket and clamped to the observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            if cum >= target {
+                let lo_us = if b == 0 { 0.0 } else { (1u64 << (b - 1)) as f64 };
+                let hi_us = (1u64 << b) as f64;
+                let frac = (target - (cum - n)) as f64 / n as f64;
+                let est = (lo_us + frac * (hi_us - lo_us)) / 1e6;
+                return est.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary object: count, mean, min/max, p50/p95/p99.
+    pub fn to_json(&self) -> Json {
+        let (min, max) = if self.count == 0 { (0.0, 0.0) } else { (self.min, self.max) };
+        Json::obj(vec![
+            ("type", Json::str("histogram")),
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("min", Json::num(min)),
+            ("max", Json::num(max)),
+            ("p50", Json::num(self.quantile(0.50))),
+            ("p95", Json::num(self.quantile(0.95))),
+            ("p99", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+/// Named-metric registry shared by every serving subsystem.  All
+/// methods are `&self` (internally locked) so one `Arc<Registry>` can
+/// be threaded anywhere; lock poisoning is survived like the
+/// scheduler's stats lock (telemetry must not compound a panic).
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        let mut m = self.lock();
+        match m.get_mut(name) {
+            Some(Metric::Counter(c)) => *c += delta,
+            Some(_) => {}
+            None => {
+                m.insert(name.to_string(), Metric::Counter(delta));
+            }
+        }
+    }
+
+    pub fn counter_get(&self, name: &str) -> u64 {
+        match self.lock().get(name) {
+            Some(Metric::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m.get_mut(name) {
+            Some(Metric::Gauge(g)) => *g = v,
+            Some(_) => {}
+            None => {
+                m.insert(name.to_string(), Metric::Gauge(v));
+            }
+        }
+    }
+
+    /// Record one sample into the named histogram (created on first
+    /// touch).
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m.get_mut(name) {
+            Some(Metric::Histogram(h)) => h.record(v),
+            Some(_) => {}
+            None => {
+                let mut h = Histogram::new();
+                h.record(v);
+                m.insert(name.to_string(), Metric::Histogram(h));
+            }
+        }
+    }
+
+    /// (p50, p95, p99) of the named histogram, if it has samples.
+    pub fn quantiles(&self, name: &str) -> Option<(f64, f64, f64)> {
+        match self.lock().get(name) {
+            Some(Metric::Histogram(h)) if h.count() > 0 => {
+                Some((h.quantile(0.50), h.quantile(0.95), h.quantile(0.99)))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn histogram_json(&self, name: &str) -> Option<Json> {
+        match self.lock().get(name) {
+            Some(Metric::Histogram(h)) => Some(h.to_json()),
+            _ => None,
+        }
+    }
+
+    /// Full registry dump, deterministically ordered by name.
+    pub fn to_json(&self) -> Json {
+        let m = self.lock();
+        let mut j = Json::obj(vec![]);
+        for (name, metric) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::obj(vec![
+                    ("type", Json::str("counter")),
+                    ("value", Json::num(*c as f64)),
+                ]),
+                Metric::Gauge(g) => Json::obj(vec![
+                    ("type", Json::str("gauge")),
+                    ("value", Json::num(*g)),
+                ]),
+                Metric::Histogram(h) => h.to_json(),
+            };
+            j.set(name, v);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered_and_bounded() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i as f64 / 1000.0); // 1ms .. 1s
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.50);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 >= 0.001 && p99 <= 1.0);
+        // p50 of a uniform 1ms..1s sample lands within its log2 bucket
+        // (factor-2 resolution around 0.5s).
+        assert!(p50 >= 0.25 && p50 <= 1.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_single_value_pins_all_quantiles() {
+        let mut h = Histogram::new();
+        h.record(0.125);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.125);
+        }
+        assert_eq!(h.mean(), 0.125);
+    }
+
+    #[test]
+    fn histogram_empty_and_degenerate_inputs() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(f64::NAN); // dropped
+        h.record(-1.0); // clamped to 0 (bucket 0)
+        h.record(0.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms() {
+        let r = Registry::new();
+        r.counter_add("jobs", 2);
+        r.counter_add("jobs", 3);
+        assert_eq!(r.counter_get("jobs"), 5);
+        r.gauge_set("depth", 7.0);
+        r.gauge_set("depth", 4.0);
+        r.observe("lat", 0.010);
+        r.observe("lat", 0.020);
+        let (p50, p95, p99) = r.quantiles("lat").unwrap();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(r.quantiles("missing").is_none());
+        let j = r.to_json();
+        assert_eq!(j.get("jobs").get("value").as_usize(), Some(5));
+        assert_eq!(j.get("depth").get("value").as_f64(), Some(4.0));
+        assert_eq!(j.get("lat").get("count").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn registry_type_mismatch_is_ignored() {
+        let r = Registry::new();
+        r.counter_add("x", 1);
+        r.gauge_set("x", 9.0); // ignored: x is a counter
+        r.observe("x", 1.0); // ignored
+        assert_eq!(r.counter_get("x"), 1);
+    }
+}

@@ -1,0 +1,374 @@
+//! Structured per-request tracing: span timelines with logical
+//! sequence numbers and dual wall / simulated-GPU durations.
+//!
+//! A **timeline** is born when the scheduler accepts a submission and
+//! collects two record kinds until the job reaches a terminal state:
+//!
+//! - **spans** — work intervals with a wall duration (and the
+//!   simulated-GPU seconds charged inside it): one per
+//!   `metrics::Phase` increment committed by the step machine
+//!   (`prompt_prefill`, `speculate`, `spec_verify`, `fallback`,
+//!   `answer`, …) plus the synthetic `queue_wait` span stamped at
+//!   admission.  Phase spans are derived from the *same*
+//!   `QueryMetrics` accumulators the results report, so their per-
+//!   phase sums reconstruct the request's latency breakdown exactly.
+//! - **edges** — zero-duration lifecycle points (`queued`, `admitted`,
+//!   `preempted`, `retried`, `degraded`, `result`, `error`,
+//!   `cancelled`) mirroring the v2 `JobEvent` stream.
+//!
+//! Every record carries a per-timeline logical sequence number, so
+//! ordering is unambiguous even when wall timestamps tie.  Tracing is
+//! **off by default**: with `enabled = false` every method is a single
+//! branch and no state is touched, keeping the serving path
+//! bit-identical (the standing guarantee).  Finished timelines are
+//! kept in a bounded ring for the v2 `trace` wire op and, when a trace
+//! directory is configured, exported as one NDJSON file per request.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A work interval with a wall duration.
+    Span,
+    /// A zero-duration lifecycle point.
+    Edge,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Span => "span",
+            SpanKind::Edge => "edge",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Logical sequence number within the timeline (0-based).
+    pub seq: u64,
+    pub name: &'static str,
+    pub kind: SpanKind,
+    /// Wall-clock start offset from timeline begin, seconds.
+    pub t_s: f64,
+    /// Wall duration, seconds (0 for edges).
+    pub wall_s: f64,
+    /// Simulated-GPU seconds charged inside this span (0 for edges).
+    pub gpu_s: f64,
+    /// Freeform annotation ("" when none).
+    pub detail: String,
+}
+
+impl SpanRecord {
+    pub fn to_json(&self, trace_id: u64) -> Json {
+        let mut j = Json::obj(vec![
+            ("trace_id", Json::num(trace_id as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("name", Json::str(self.name)),
+            ("kind", Json::str(self.kind.name())),
+            ("t_s", Json::num(self.t_s)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("gpu_s", Json::num(self.gpu_s)),
+        ]);
+        if !self.detail.is_empty() {
+            j.set("detail", Json::str(&self.detail));
+        }
+        j
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub trace_id: u64,
+    pub label: String,
+    started: Instant,
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Timeline {
+    fn new(trace_id: u64, label: &str) -> Timeline {
+        Timeline {
+            trace_id,
+            label: label.to_string(),
+            started: Instant::now(),
+            spans: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, name: &'static str, kind: SpanKind, t_s: f64, wall_s: f64, gpu_s: f64, detail: &str) {
+        let seq = self.spans.len() as u64;
+        self.spans.push(SpanRecord {
+            seq,
+            name,
+            kind,
+            t_s,
+            wall_s,
+            gpu_s,
+            detail: detail.to_string(),
+        });
+    }
+
+    /// Per-phase wall/GPU totals over the timeline's `Span` records.
+    pub fn phase_totals(&self) -> BTreeMap<&'static str, (f64, f64)> {
+        let mut out: BTreeMap<&'static str, (f64, f64)> = BTreeMap::new();
+        for s in &self.spans {
+            if s.kind == SpanKind::Span {
+                let e = out.entry(s.name).or_insert((0.0, 0.0));
+                e.0 += s.wall_s;
+                e.1 += s.gpu_s;
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::num(self.trace_id as f64)),
+            ("label", Json::str(&self.label)),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(|s| s.to_json(self.trace_id)).collect()),
+            ),
+        ])
+    }
+
+    /// One NDJSON line per span record (the `--trace-dir` export
+    /// format), terminated by a newline.
+    pub fn to_ndjson(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&s.to_json(self.trace_id).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+struct Inner {
+    active: BTreeMap<u64, Timeline>,
+    finished: VecDeque<Timeline>,
+}
+
+pub struct Tracer {
+    enabled: bool,
+    /// Finished timelines retained for the `trace` wire op.
+    keep: usize,
+    /// NDJSON export directory ("" disables file export).
+    dir: Option<String>,
+    next_id: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, keep: usize, dir: Option<String>) -> Tracer {
+        if enabled {
+            if let Some(d) = dir.as_deref() {
+                if let Err(e) = std::fs::create_dir_all(d) {
+                    eprintln!("[obs] cannot create trace dir {d}: {e}");
+                }
+            }
+        }
+        Tracer {
+            enabled,
+            keep: keep.max(1),
+            dir: dir.filter(|d| !d.is_empty()),
+            next_id: AtomicU64::new(1),
+            inner: Mutex::new(Inner { active: BTreeMap::new(), finished: VecDeque::new() }),
+        }
+    }
+
+    /// An inert tracer (every call is a single branch and a no-op).
+    pub fn off() -> Tracer {
+        Tracer::new(false, 1, None)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Open a timeline; `None` when tracing is disabled.
+    pub fn begin(&self, label: &str) -> Option<u64> {
+        if !self.enabled {
+            return None;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.lock().active.insert(id, Timeline::new(id, label));
+        Some(id)
+    }
+
+    /// Record a zero-duration lifecycle edge at "now".
+    pub fn edge(&self, trace_id: u64, name: &'static str, detail: &str) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.lock();
+        if let Some(t) = inner.active.get_mut(&trace_id) {
+            let at = t.started.elapsed().as_secs_f64();
+            t.push(name, SpanKind::Edge, at, 0.0, 0.0, detail);
+        }
+    }
+
+    /// Record a work span that ended "now" with the given durations.
+    pub fn span(&self, trace_id: u64, name: &'static str, wall_s: f64, gpu_s: f64) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.lock();
+        if let Some(t) = inner.active.get_mut(&trace_id) {
+            let end = t.started.elapsed().as_secs_f64();
+            let start = (end - wall_s).max(0.0);
+            t.push(name, SpanKind::Span, start, wall_s, gpu_s, "");
+        }
+    }
+
+    /// Close a timeline: move it to the bounded finished ring and, when
+    /// a trace directory is configured, export it as NDJSON.
+    pub fn finish(&self, trace_id: u64) {
+        if !self.enabled {
+            return;
+        }
+        let exported = {
+            let mut inner = self.lock();
+            match inner.active.remove(&trace_id) {
+                None => return,
+                Some(t) => {
+                    inner.finished.push_back(t.clone());
+                    while inner.finished.len() > self.keep {
+                        inner.finished.pop_front();
+                    }
+                    t
+                }
+            }
+        };
+        if let Some(dir) = self.dir.as_deref() {
+            let path = format!("{dir}/trace-{trace_id}.ndjson");
+            if let Err(e) = std::fs::write(&path, exported.to_ndjson()) {
+                eprintln!("[obs] trace export to {path} failed: {e}");
+            }
+        }
+    }
+
+    /// Snapshot one finished (or still-active) timeline: the given id,
+    /// or the most recently finished when `target` is `None`.  Returns
+    /// `Json::Null` when nothing matches.
+    pub fn export_json(&self, target: Option<u64>) -> Json {
+        let inner = self.lock();
+        let t = match target {
+            Some(id) => inner
+                .finished
+                .iter()
+                .find(|t| t.trace_id == id)
+                .or_else(|| inner.active.get(&id)),
+            None => inner.finished.back(),
+        };
+        match t {
+            Some(t) => t.to_json(),
+            None => Json::Null,
+        }
+    }
+
+    /// Clone of a finished timeline (newest first when `target` is
+    /// `None`) for in-process consumers (benches, tests).
+    pub fn finished(&self, target: Option<u64>) -> Option<Timeline> {
+        let inner = self.lock();
+        match target {
+            Some(id) => inner.finished.iter().find(|t| t.trace_id == id).cloned(),
+            None => inner.finished.back().cloned(),
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.lock().active.len()
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.lock().finished.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        assert_eq!(t.begin("x"), None);
+        t.edge(1, "queued", "");
+        t.span(1, "speculate", 0.5, 1.0);
+        t.finish(1);
+        assert_eq!(t.active_count(), 0);
+        assert_eq!(t.finished_count(), 0);
+        assert!(t.export_json(None).is_null());
+    }
+
+    #[test]
+    fn timeline_records_ordered_spans_and_edges() {
+        let t = Tracer::new(true, 4, None);
+        let id = t.begin("math500 q0").unwrap();
+        t.edge(id, "queued", "");
+        t.edge(id, "admitted", "prio=normal");
+        t.span(id, "prompt_prefill", 0.002, 0.5);
+        t.span(id, "speculate", 0.001, 0.25);
+        t.edge(id, "result", "");
+        t.finish(id);
+        assert_eq!(t.active_count(), 0);
+        assert_eq!(t.finished_count(), 1);
+        let tl = t.finished(Some(id)).unwrap();
+        assert_eq!(tl.spans.len(), 5);
+        // Logical sequence numbers are dense and ordered.
+        for (i, s) in tl.spans.iter().enumerate() {
+            assert_eq!(s.seq, i as u64);
+        }
+        assert_eq!(tl.spans[0].name, "queued");
+        assert_eq!(tl.spans[1].detail, "prio=normal");
+        let totals = tl.phase_totals();
+        assert_eq!(totals.get("prompt_prefill").unwrap().0, 0.002);
+        assert_eq!(totals.get("speculate").unwrap().1, 0.25);
+        // Edges contribute no duration.
+        assert!(!totals.contains_key("queued"));
+        // NDJSON: one valid JSON object per line.
+        let nd = tl.to_ndjson();
+        assert_eq!(nd.lines().count(), 5);
+        for line in nd.lines() {
+            let j = Json::parse(line).expect("valid NDJSON line");
+            assert_eq!(j.get("trace_id").as_usize(), Some(id as usize));
+        }
+    }
+
+    #[test]
+    fn finished_ring_is_bounded() {
+        let t = Tracer::new(true, 2, None);
+        for i in 0..5 {
+            let id = t.begin(&format!("t{i}")).unwrap();
+            t.edge(id, "queued", "");
+            t.finish(id);
+        }
+        assert_eq!(t.finished_count(), 2);
+        // The latest survives; the earliest was evicted.
+        assert!(t.finished(None).is_some());
+        assert!(t.finished(Some(1)).is_none());
+        assert_eq!(t.export_json(None).get("label").as_str(), Some("t4"));
+    }
+
+    #[test]
+    fn export_json_finds_active_and_finished() {
+        let t = Tracer::new(true, 4, None);
+        let id = t.begin("live").unwrap();
+        t.edge(id, "queued", "");
+        assert_eq!(t.export_json(Some(id)).get("label").as_str(), Some("live"));
+        t.finish(id);
+        assert_eq!(t.export_json(Some(id)).get("label").as_str(), Some("live"));
+        assert!(t.export_json(Some(999)).is_null());
+    }
+}

@@ -73,6 +73,18 @@ pub struct DegradeKnobs {
     pub retry_storm: u32,
 }
 
+/// One completed mode change, with the signal that triggered it —
+/// promoted from a silent flip so transitions can be traced, counted
+/// in `RouterStats`, and flight-recorded with their cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradeTransition {
+    pub from: DegradeMode,
+    pub to: DegradeMode,
+    /// Trigger: `"queue_severe"`, `"queue_depth"`, `"retry_storm"`,
+    /// `"kv_blocked"` for escalations; `"recovered"` for step-downs.
+    pub reason: &'static str,
+}
+
 /// One pressure sample per composer loop; see the module docs for the
 /// state machine.
 #[derive(Debug)]
@@ -84,6 +96,9 @@ pub struct DegradeController {
     /// Cumulative step-retry counter at the previous sample (the delta
     /// is the per-window storm signal).
     last_retries: u64,
+    /// The transition completed by the most recent `observe`, if any
+    /// (taken — not polled — by the composer, so none is ever missed).
+    transition: Option<DegradeTransition>,
 }
 
 impl DegradeController {
@@ -94,11 +109,20 @@ impl DegradeController {
             hot: 0,
             calm: 0,
             last_retries: 0,
+            transition: None,
         }
     }
 
     pub fn mode(&self) -> DegradeMode {
         self.mode
+    }
+
+    /// The transition completed by the most recent `observe`, cleared
+    /// on read.  At most one transition can occur per sample (the
+    /// state machine moves one step at a time), so take-after-observe
+    /// never loses one.
+    pub fn take_transition(&mut self) -> Option<DegradeTransition> {
+        self.transition.take()
     }
 
     /// Feed one sample: current queue depth, the *cumulative* step-retry
@@ -118,6 +142,17 @@ impl DegradeController {
             || queue_depth >= self.knobs.queue_hiwater
             || retries_delta >= self.knobs.retry_storm as u64
             || kv_blocked;
+        // Trigger attribution for a completed escalation, strongest
+        // signal first (a severe queue subsumes the mild watermark).
+        let reason = if severe {
+            "queue_severe"
+        } else if queue_depth >= self.knobs.queue_hiwater {
+            "queue_depth"
+        } else if retries_delta >= self.knobs.retry_storm as u64 {
+            "retry_storm"
+        } else {
+            "kv_blocked"
+        };
 
         if pressured {
             self.hot = self.hot.saturating_add(1);
@@ -135,6 +170,8 @@ impl DegradeController {
                 m => m,
             };
             if next != self.mode {
+                self.transition =
+                    Some(DegradeTransition { from: self.mode, to: next, reason });
                 self.mode = next;
                 self.hot = 0;
             }
@@ -145,6 +182,11 @@ impl DegradeController {
                 m => m,
             };
             if next != self.mode {
+                self.transition = Some(DegradeTransition {
+                    from: self.mode,
+                    to: next,
+                    reason: "recovered",
+                });
                 self.mode = next;
                 self.calm = 0;
             }
@@ -248,6 +290,56 @@ mod tests {
             c.observe(0, 0, true);
         }
         assert_eq!(c.mode(), DegradeMode::BaseOnly);
+    }
+
+    #[test]
+    fn transitions_carry_their_trigger_reason() {
+        let mut c = DegradeController::new(knobs());
+        assert_eq!(c.take_transition(), None);
+        // Escalation via the mild queue watermark.
+        for _ in 0..3 {
+            c.observe(15, 0, false);
+        }
+        let t = c.take_transition().expect("escalation recorded");
+        assert_eq!(t.from, DegradeMode::Normal);
+        assert_eq!(t.to, DegradeMode::BaseOnly);
+        assert_eq!(t.reason, "queue_depth");
+        // Cleared on read; non-transition samples record nothing.
+        assert_eq!(c.take_transition(), None);
+        c.observe(15, 0, false);
+        assert_eq!(c.take_transition(), None);
+        // Severe escalation attributes the severe signal.
+        for _ in 0..3 {
+            c.observe(25, 0, false);
+        }
+        let t = c.take_transition().expect("shed transition");
+        assert_eq!(t.to, DegradeMode::Shed);
+        assert_eq!(t.reason, "queue_severe");
+        // Step-downs report recovery.
+        for _ in 0..4 {
+            c.observe(0, 0, false);
+        }
+        let t = c.take_transition().expect("recovery transition");
+        assert_eq!(t.from, DegradeMode::Shed);
+        assert_eq!(t.to, DegradeMode::BaseOnly);
+        assert_eq!(t.reason, "recovered");
+    }
+
+    #[test]
+    fn retry_storm_and_kv_block_reasons_attribute() {
+        let mut c = DegradeController::new(knobs());
+        let mut total = 0;
+        for _ in 0..3 {
+            total += 5;
+            c.observe(0, total, false);
+        }
+        assert_eq!(c.take_transition().unwrap().reason, "retry_storm");
+
+        let mut c = DegradeController::new(knobs());
+        for _ in 0..3 {
+            c.observe(0, 0, true);
+        }
+        assert_eq!(c.take_transition().unwrap().reason, "kv_blocked");
     }
 
     #[test]

@@ -75,13 +75,14 @@ use crate::config::DeployConfig;
 use crate::coordinator::{Combo, Scheme, SeedStream, SpecConfig, StepMachine};
 use crate::engine::Engine;
 use crate::metrics::QueryMetrics;
+use crate::obs::Obs;
 use crate::semantics::{Dataset, DatasetProfile, Oracle, TraceGenerator};
 use crate::util::json::Json;
 
 pub use crate::coordinator::{StepEvent, StepKind};
-pub use degrade::{DegradeController, DegradeKnobs, DegradeMode};
+pub use degrade::{DegradeController, DegradeKnobs, DegradeMode, DegradeTransition};
 pub use queue::{AdmissionQueue, Priority};
-use task::SeqTask;
+use task::{SeqTask, TraceCursor};
 
 /// Structured failure classes for the v2 wire protocol.  Every error a
 /// job can surface maps to exactly one code; free-form detail rides in
@@ -416,6 +417,9 @@ pub struct JobResult {
     pub retries: u32,
     /// Served in degraded mode (speculation disabled under pressure).
     pub degraded: bool,
+    /// Observability trace id (`None` unless `obs_trace` was on when
+    /// the request was submitted) — the key into the `trace` wire op.
+    pub trace_id: Option<u64>,
 }
 
 /// Internal queue entry.
@@ -444,6 +448,8 @@ pub(crate) struct Job {
     /// This job was switched to degraded (base-only) service; sticky so
     /// restarts stay consistent and the event is emitted once.
     pub degraded: bool,
+    /// Open trace timeline (`None` with tracing off).
+    pub trace_id: Option<u64>,
 }
 
 impl Job {
@@ -518,6 +524,16 @@ pub struct RouterStats {
     /// an armed fault plan; the server adds its conn_io count on top in
     /// the `stats` op).
     pub faults_injected: u64,
+    /// Degrade-controller mode changes (both directions; 0 with
+    /// `degrade` off).
+    pub degrade_transitions: u64,
+    /// Current [`DegradeMode`] as u8 (the composer's last published
+    /// mode).
+    pub degrade_mode: u8,
+    /// Trigger of the most recent transition (`""` before the first):
+    /// `queue_severe` / `queue_depth` / `retry_storm` / `kv_blocked` /
+    /// `recovered`.
+    pub degrade_last_reason: String,
 }
 
 impl RouterStats {
@@ -583,6 +599,19 @@ impl RouterStats {
             ("degraded_admissions", Json::num(self.degraded_admissions as f64)),
             ("shed_jobs", Json::num(self.shed_jobs as f64)),
             ("faults_injected", Json::num(self.faults_injected as f64)),
+            // Additive: a nested object so every pre-existing flat key
+            // keeps its exact name and value.
+            (
+                "degrade",
+                Json::obj(vec![
+                    (
+                        "mode",
+                        Json::str(DegradeMode::from_u8(self.degrade_mode).name()),
+                    ),
+                    ("transitions", Json::num(self.degrade_transitions as f64)),
+                    ("last_reason", Json::str(&self.degrade_last_reason)),
+                ]),
+            ),
         ])
     }
 }
@@ -598,6 +627,10 @@ struct Shared {
     degrade: AtomicU8,
     /// Retry-after hint (ms) carried by shed rejections.
     shed_retry_after_ms: u64,
+    /// Observability: metrics registry + tracer + flight recorder.
+    /// Registry and flight are always-on (pure telemetry); the tracer
+    /// is inert unless `DeployConfig::obs_trace` armed it.
+    obs: Arc<Obs>,
 }
 
 /// Lock that survives poisoning: if the composer thread panicked while
@@ -619,11 +652,17 @@ struct WorkerGuard {
 
 impl Drop for WorkerGuard {
     fn drop(&mut self) {
+        // A composer panic is exactly what the flight recorder exists
+        // for: snapshot every ring before the queue is failed over.
+        if std::thread::panicking() {
+            self.shared.obs.flight.dump("composer_panic");
+        }
         self.shared.closed.store(true, Ordering::SeqCst);
         let mut q = lock(&self.shared.queue);
         let mut stranded = 0u64;
         while let Some((_prio, job)) = q.pop() {
             stranded += 1;
+            trace_close(&self.shared.obs, job.trace_id, "error", "shutdown");
             let _ = job.events.send(JobEvent::Error(coded(
                 ErrorCode::Shutdown,
                 "scheduler worker terminated",
@@ -653,6 +692,7 @@ impl Scheduler {
             closed: AtomicBool::new(false),
             degrade: AtomicU8::new(DegradeMode::Normal as u8),
             shed_retry_after_ms: cfg.degrade_retry_after_ms,
+            obs: Obs::from_deploy(&cfg),
         });
         let wshared = Arc::clone(&shared);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -683,6 +723,15 @@ impl Scheduler {
         // so it always precedes Admitted in the stream.  On a rejected
         // submit the receiver is dropped unobserved.
         let _ = event_tx.send(JobEvent::Queued);
+        // With tracing armed the timeline opens at submission (so the
+        // `queued` edge anchors queue-wait); `None` otherwise.
+        let trace_id = self.shared.obs.tracer.begin(&format!(
+            "{:?} q{} s{}",
+            req.dataset, req.query_index, req.sample
+        ));
+        if let Some(id) = trace_id {
+            self.shared.obs.tracer.edge(id, "queued", "");
+        }
         let job = Job {
             req,
             events: event_tx,
@@ -697,6 +746,7 @@ impl Scheduler {
             retries: 0,
             not_before: None,
             degraded: false,
+            trace_id,
         };
         // Shed mode rejects at the door, before the job costs a queue
         // slot — an overload response with an explicit retry-after hint
@@ -706,6 +756,7 @@ impl Scheduler {
             == DegradeMode::Shed
         {
             lock(&self.shared.stats).shed_jobs += 1;
+            trace_close(&self.shared.obs, trace_id, "error", "shed");
             return Err(coded(
                 ErrorCode::Overloaded,
                 format!(
@@ -722,6 +773,7 @@ impl Scheduler {
             // drain (it either lands before — and gets drained — or sees
             // `closed` here).
             if self.shared.closed.load(Ordering::SeqCst) {
+                trace_close(&self.shared.obs, trace_id, "error", "shutdown");
                 return Err(coded(ErrorCode::Shutdown, "scheduler is shut down"));
             }
             match q.push(prio, job) {
@@ -732,6 +784,7 @@ impl Scheduler {
                 }
                 Err(_rejected) => {
                     lock(&self.shared.stats).rejected_overload += 1;
+                    trace_close(&self.shared.obs, trace_id, "error", "queue_full");
                     return Err(coded(
                         ErrorCode::Overloaded,
                         "overloaded: admission queue full",
@@ -750,6 +803,13 @@ impl Scheduler {
 
     pub fn stats(&self) -> RouterStats {
         lock(&self.shared.stats).clone()
+    }
+
+    /// The scheduler's observability handle (registry + tracer + flight
+    /// recorder) — the `metrics` / `trace` wire ops and in-process
+    /// consumers (benches, tests) read through this.
+    pub fn obs(&self) -> Arc<Obs> {
+        Arc::clone(&self.shared.obs)
     }
 
     /// Stop the worker: in-flight and already-queued requests finish,
@@ -890,6 +950,9 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
         exit_ticks: cfg.degrade_exit_ticks,
         retry_storm: cfg.degrade_retry_storm,
     });
+    // Injected-fault watermark: a rise between iterations flight-records
+    // the fault and snapshots every ring (the post-mortem dump).
+    let mut last_faults = 0u64;
 
     loop {
         // Cancellations and deadline expiries first, so a dead job can
@@ -898,18 +961,39 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
         let admitted = admit(&engine, &oracle, &combo, &cfg, &shared, &mut running);
         {
             let ps = engine.prefix_stats();
-            let mut s = lock(&shared.stats);
-            s.running = running.len();
-            s.kv_reserved_blocks = running
-                .iter()
-                .map(|t| t.reserve_blocks(&cfg.base_model, block_size))
-                .sum();
-            s.prefix_hits = ps.hits;
-            s.prefix_tokens_reused = ps.tokens_reused;
-            s.prefix_blocks_shared = ps.shared_blocks;
-            s.prefix_cached_blocks = ps.cached_blocks;
-            s.prefix_evictions = ps.evictions;
-            s.faults_injected = engine.faults().injected_total();
+            let injected = engine.faults().injected_total();
+            {
+                let mut s = lock(&shared.stats);
+                s.running = running.len();
+                s.kv_reserved_blocks = running
+                    .iter()
+                    .map(|t| t.reserve_blocks(&cfg.base_model, block_size))
+                    .sum();
+                s.prefix_hits = ps.hits;
+                s.prefix_tokens_reused = ps.tokens_reused;
+                s.prefix_blocks_shared = ps.shared_blocks;
+                s.prefix_cached_blocks = ps.cached_blocks;
+                s.prefix_evictions = ps.evictions;
+                s.faults_injected = injected;
+                // Mirror the gauges into the registry (reads of values
+                // just computed — never an input to any decision).
+                let reg = &shared.obs.registry;
+                reg.gauge_set("scheduler.queue_depth", s.queue_depth as f64);
+                reg.gauge_set("scheduler.running", s.running as f64);
+                reg.gauge_set("kv.reserved_blocks", s.kv_reserved_blocks as f64);
+                reg.gauge_set("prefix.cached_blocks", ps.cached_blocks as f64);
+                reg.gauge_set("prefix.shared_blocks", ps.shared_blocks as f64);
+                reg.gauge_set("faults.injected_total", injected as f64);
+            }
+            if injected > last_faults {
+                shared.obs.flight.record(
+                    "faults",
+                    "injected",
+                    &format!("total={injected} (+{})", injected - last_faults),
+                );
+                shared.obs.flight.dump("fault_injected");
+                last_faults = injected;
+            }
         }
         if cfg.degrade {
             let (depth, retries) = {
@@ -918,6 +1002,17 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
             };
             let mode = degrade_ctl.observe(depth, retries, admitted.kv_blocked);
             shared.degrade.store(mode as u8, Ordering::SeqCst);
+            if let Some(tr) = degrade_ctl.take_transition() {
+                let detail =
+                    format!("{} -> {} ({})", tr.from.name(), tr.to.name(), tr.reason);
+                shared.obs.flight.record("degrade", "transition", &detail);
+                shared.obs.flight.dump(&format!("degrade:{}", tr.to.name()));
+                shared.obs.registry.counter_add("degrade.transitions", 1);
+                let mut s = lock(&shared.stats);
+                s.degrade_transitions += 1;
+                s.degrade_last_reason = tr.reason.to_string();
+            }
+            lock(&shared.stats).degrade_mode = mode as u8;
         }
 
         if running.is_empty() {
@@ -953,7 +1048,7 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
             continue;
         }
 
-        let report = task::tick(&engine, &combo, &mut running);
+        let report = task::tick(&engine, &combo, &mut running, &shared.obs);
         if report.stepped > 0 {
             let mut s = lock(&shared.stats);
             s.batch_ticks += 1;
@@ -966,10 +1061,20 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
     // but release anything that is.
     for t in running.drain(..) {
         let _ = engine.release(&t.seq);
+        trace_close(&shared.obs, t.job.trace_id, "error", "shutdown");
         let _ = t
             .job
             .events
             .send(JobEvent::Error(coded(ErrorCode::Shutdown, "scheduler shut down")));
+    }
+}
+
+/// Terminal trace edge + timeline close for a job leaving the scheduler
+/// — a single branch (no-op) with tracing off.
+fn trace_close(obs: &Obs, trace_id: Option<u64>, name: &'static str, detail: &str) {
+    if let Some(id) = trace_id {
+        obs.tracer.edge(id, name, detail);
+        obs.tracer.finish(id);
     }
 }
 
@@ -1008,6 +1113,7 @@ fn reap(engine: &Engine, shared: &Shared, running: &mut Vec<SeqTask<'_>>) {
 fn abort_job(shared: &Shared, job: Job) {
     if job.cancel.requested() {
         lock(&shared.stats).cancelled += 1;
+        trace_close(&shared.obs, job.trace_id, "cancelled", "");
         let _ = job.events.send(JobEvent::Cancelled);
     } else {
         let ms = job.deadline.map(|(ms, _)| ms).unwrap_or(0);
@@ -1016,6 +1122,7 @@ fn abort_job(shared: &Shared, job: Job) {
             s.deadline_evicted += 1;
             s.failed += 1;
         }
+        trace_close(&shared.obs, job.trace_id, "error", "deadline_exceeded");
         let _ = job.events.send(JobEvent::Error(coded(
             ErrorCode::DeadlineExceeded,
             format!("deadline exceeded: request missed its {ms} ms deadline"),
@@ -1098,6 +1205,7 @@ fn admit<'e>(
         // a rejection.
         if let Err(e) = validate_budget(engine, &combo.base, job.req.dataset, &job.req.spec) {
             lock(&shared.stats).failed += 1;
+            trace_close(&shared.obs, job.trace_id, "error", "bad_request");
             let _ = job.events.send(JobEvent::Error(coded(
                 ErrorCode::BadRequest,
                 format!("{e:#}"),
@@ -1106,6 +1214,7 @@ fn admit<'e>(
         }
         if !kv_feasible(engine, &combo.small, need) || !kv_feasible(engine, &combo.base, need) {
             lock(&shared.stats).failed += 1;
+            trace_close(&shared.obs, job.trace_id, "error", "bad_request");
             let _ = job.events.send(JobEvent::Error(coded(
                 ErrorCode::BadRequest,
                 format!("request needs {need} KV tokens; exceeds partition capacity"),
@@ -1158,6 +1267,7 @@ fn admit<'e>(
                 // running should be impossible (the ledger is empty);
                 // fail defensively rather than risk a busy spin.
                 lock(&shared.stats).failed += 1;
+                trace_close(&shared.obs, job.trace_id, "error", "unschedulable");
                 let _ = job.events.send(JobEvent::Error(coded(
                     ErrorCode::EngineFailure,
                     format!("request needs {need} KV tokens but cannot be scheduled"),
@@ -1187,6 +1297,9 @@ fn admit<'e>(
             job.req.spec.scheme = Scheme::VanillaBase;
             job.degraded = true;
             lock(&shared.stats).degraded_admissions += 1;
+            if let Some(id) = job.trace_id {
+                shared.obs.tracer.edge(id, "degraded", "base_only");
+            }
             let _ = job.events.send(JobEvent::Degraded);
         }
 
@@ -1198,6 +1311,18 @@ fn admit<'e>(
             if wait > s.queue_wait_s_max {
                 s.queue_wait_s_max = wait;
             }
+        }
+        // Always-on latency histogram behind `queue_wait_s_mean` (the
+        // `stats` op surfaces its p50/p95/p99); the synthetic
+        // `queue_wait` span anchors the same interval on the timeline.
+        shared.obs.registry.observe("scheduler.queue_wait_s", wait);
+        if let Some(id) = job.trace_id {
+            shared.obs.tracer.span(id, "queue_wait", wait, 0.0);
+            shared.obs.tracer.edge(
+                id,
+                "admitted",
+                &format!("prio={prio:?} attempt={}", job.attempt()),
+            );
         }
         let q = staged.unwrap_or_else(|| {
             TraceGenerator::new(job.req.dataset, job.req.seed).query(job.req.query_index)
@@ -1218,6 +1343,7 @@ fn admit<'e>(
                     continue;
                 }
                 lock(&shared.stats).failed += 1;
+                trace_close(&shared.obs, job.trace_id, "error", code_of(&e).name());
                 let _ = job.events.send(JobEvent::Error(e));
             }
         }
@@ -1251,6 +1377,11 @@ fn schedule_retry(cfg: &DeployConfig, shared: &Shared, prio: Priority, mut job: 
     job.retries += 1;
     let backoff_ms = retry_backoff_ms(cfg.retry_backoff_ms, job.retries);
     job.not_before = Some(Instant::now() + Duration::from_millis(backoff_ms));
+    let detail = format!("attempt={} backoff_ms={backoff_ms}", job.retries);
+    shared.obs.flight.record("scheduler", "retry", &detail);
+    if let Some(id) = job.trace_id {
+        shared.obs.tracer.edge(id, "retried", &detail);
+    }
     let _ = job
         .events
         .send(JobEvent::Retried { attempt: job.retries, backoff_ms });
@@ -1301,6 +1432,7 @@ fn make_task<'e>(
         std::borrow::Cow::Owned(job.req.spec.clone()),
         job.req.sample,
     );
+    let traced = job.trace_id.map(TraceCursor::new);
     Ok(SeqTask {
         job,
         prio,
@@ -1312,6 +1444,7 @@ fn make_task<'e>(
         admitted_at: Instant::now(),
         failed: None,
         ops_executed: 0,
+        traced,
     })
 }
 
@@ -1360,6 +1493,16 @@ fn preempt<'e>(
     let prio = t.prio;
     let mut job = evict_seq(engine, t);
     job.preemptions += 1;
+    shared
+        .obs
+        .flight
+        .record("scheduler", "preempt", &format!("prio={prio:?}"));
+    if let Some(id) = job.trace_id {
+        shared
+            .obs
+            .tracer
+            .edge(id, "preempted", &format!("count={}", job.preemptions));
+    }
     let _ = job.events.send(JobEvent::Preempted);
     let mut q = lock(&shared.queue);
     q.push_front(prio, job);
@@ -1401,6 +1544,12 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
         match failed {
             Some(e) => {
                 lock(&shared.stats).failed += 1;
+                let code = code_of(&e).name();
+                shared
+                    .obs
+                    .flight
+                    .record("scheduler", "job_failed", &format!("code={code}"));
+                trace_close(&shared.obs, job.trace_id, "error", code);
                 let _ = job.events.send(JobEvent::Error(e));
             }
             None => {
@@ -1422,6 +1571,13 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                         s.slo_violations += 1;
                     }
                 }
+                // Always-on latency histograms behind the `stats` op's
+                // mean fields (quantiles ride next to them).
+                let reg = &shared.obs.registry;
+                reg.observe("scheduler.e2e_s", e2e_s);
+                reg.observe("scheduler.ttfs_s", ttfs_s);
+                reg.observe("scheduler.ttfe_s", ttfe_s);
+                trace_close(&shared.obs, job.trace_id, "result", "");
                 let result = JobResult {
                     metrics: qm,
                     scheme: job.req.spec.scheme,
@@ -1433,6 +1589,7 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                     prefix_tokens_reused,
                     retries: job.retries,
                     degraded: job.degraded,
+                    trace_id: job.trace_id,
                 };
                 let _ = job.events.send(JobEvent::Result(Box::new(result)));
             }
@@ -1468,6 +1625,9 @@ mod tests {
         s.degraded_admissions = 3;
         s.shed_jobs = 8;
         s.faults_injected = 13;
+        s.degrade_transitions = 2;
+        s.degrade_mode = 1;
+        s.degrade_last_reason = "queue_depth".to_string();
         let j = s.to_json();
         assert_eq!(j.get("admitted").as_usize(), Some(5));
         assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
@@ -1488,6 +1648,10 @@ mod tests {
         assert_eq!(j.get("degraded_admissions").as_usize(), Some(3));
         assert_eq!(j.get("shed_jobs").as_usize(), Some(8));
         assert_eq!(j.get("faults_injected").as_usize(), Some(13));
+        let d = j.get("degrade");
+        assert_eq!(d.get("mode").as_str(), Some("base_only"));
+        assert_eq!(d.get("transitions").as_usize(), Some(2));
+        assert_eq!(d.get("last_reason").as_str(), Some("queue_depth"));
     }
 
     #[test]

@@ -29,9 +29,44 @@ use crate::coordinator::{
 };
 use crate::engine::{BatchDecode, BatchVerify, Engine, Sequence};
 use crate::metrics::{Phase, QueryMetrics};
+use crate::obs::{Obs, Tracer};
 
 use super::queue::Priority;
 use super::Job;
+
+/// Per-task span derivation state: a snapshot of the task's
+/// `QueryMetrics` phase accumulators at the last committed op.  After
+/// each commit, every accumulator that moved emits one trace span with
+/// the wall/GPU deltas — so span sums reconstruct the request's phase
+/// breakdown from exactly the numbers the result reports, and the
+/// engine/coordinator stay untouched.
+pub(crate) struct TraceCursor {
+    id: u64,
+    wall: BTreeMap<&'static str, f64>,
+    gpu: BTreeMap<&'static str, f64>,
+}
+
+impl TraceCursor {
+    pub fn new(id: u64) -> TraceCursor {
+        TraceCursor { id, wall: BTreeMap::new(), gpu: BTreeMap::new() }
+    }
+
+    /// Emit spans for phase accumulators that changed since the last
+    /// sync (a GPU-only change — e.g. the bonus-token refund — still
+    /// counts), and advance the snapshot.
+    fn sync(&mut self, tracer: &Tracer, qm: &QueryMetrics) {
+        for (&phase, &wall) in qm.phase_wall.iter() {
+            let gpu = qm.phase_gpu.get(phase).copied().unwrap_or(0.0);
+            let prev_w = self.wall.get(phase).copied().unwrap_or(0.0);
+            let prev_g = self.gpu.get(phase).copied().unwrap_or(0.0);
+            if wall != prev_w || gpu != prev_g {
+                tracer.span(self.id, phase, wall - prev_w, gpu - prev_g);
+                self.wall.insert(phase, wall);
+                self.gpu.insert(phase, gpu);
+            }
+        }
+    }
+}
 
 /// One admitted, in-flight sequence.
 pub(crate) struct SeqTask<'e> {
@@ -53,6 +88,9 @@ pub(crate) struct SeqTask<'e> {
     /// restart, so together with [`Job::attempt`] each replay walks a
     /// fresh deterministic fault schedule.
     pub ops_executed: u64,
+    /// Span-derivation snapshot (`None` with tracing off — the only
+    /// cost then is this one branch per commit).
+    pub traced: Option<TraceCursor>,
 }
 
 impl SeqTask<'_> {
@@ -111,7 +149,12 @@ pub(crate) struct TickReport {
 }
 
 /// Advance every runnable task by one engine op, batched by op kind.
-pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) -> TickReport {
+pub(crate) fn tick(
+    engine: &Engine,
+    combo: &Combo,
+    running: &mut [SeqTask<'_>],
+    obs: &Obs,
+) -> TickReport {
     // --- rollbacks run inline (pure KV bookkeeping, no engine pass) ---
     for t in running.iter_mut() {
         if t.failed.is_some() {
@@ -137,6 +180,9 @@ pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) 
             ) {
                 Ok(()) => {
                     t.machine.commit(&mut t.qm);
+                    if let Some(c) = t.traced.as_mut() {
+                        c.sync(&obs.tracer, &t.qm);
+                    }
                     t.flush_events();
                 }
                 Err(e) => {
@@ -243,6 +289,9 @@ pub(crate) fn tick(engine: &Engine, combo: &Combo, running: &mut [SeqTask<'_>]) 
                         crate::coordinator::exec::refund_bonus_gpu(&mut t.qm, gpu_before);
                     }
                     t.machine.commit(&mut t.qm);
+                    if let Some(c) = t.traced.as_mut() {
+                        c.sync(&obs.tracer, &t.qm);
+                    }
                     t.flush_events();
                 }
                 Err(e) => t.failed = Some(e),

@@ -574,6 +574,10 @@ fn handle_connection(
                     shutdown.store(true, Ordering::SeqCst);
                     Some(protocol::ok_response(req.id, crate::util::json::Json::str("bye")))
                 }
+                Op::Metrics => Some(protocol::ok_response(req.id, router.metrics_json())),
+                Op::Trace { target } => {
+                    Some(protocol::ok_response(req.id, router.trace_json(target)))
+                }
                 Op::Cancel { target } => {
                     // Scoped to this connection's sessions by
                     // construction; the ack reports whether the target

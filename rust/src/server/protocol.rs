@@ -59,6 +59,14 @@ pub enum Op {
     /// Abort an in-flight v2 query (by its request id) on this
     /// connection.
     Cancel { target: i64 },
+    /// Observability registry dump: named counters/gauges/histograms
+    /// (with p50/p95/p99), flight-recorder rings + retained dumps, and
+    /// trace counts.
+    Metrics,
+    /// One traced request timeline: the given trace id, or the most
+    /// recently finished when `target` is omitted.  `null` result when
+    /// tracing is off or nothing matches.
+    Trace { target: Option<u64> },
 }
 
 #[derive(Debug, Clone)]
@@ -132,6 +140,19 @@ impl Request {
             "ping" => Op::Ping,
             "stats" => Op::Stats,
             "shutdown" => Op::Shutdown,
+            "metrics" => Op::Metrics,
+            "trace" => {
+                let target = match j.get("target") {
+                    Json::Null => None,
+                    val => match val.as_usize() {
+                        Some(t) => Some(t as u64),
+                        None => anyhow::bail!(
+                            "'trace' target must be a non-negative integer trace id"
+                        ),
+                    },
+                };
+                Op::Trace { target }
+            }
             "cancel" => {
                 let target = j
                     .get("target")
@@ -225,6 +246,9 @@ pub fn job_result_to_json(r: &JobResult) -> Json {
     j.set("prefix_tokens_reused", Json::num(r.prefix_tokens_reused as f64));
     j.set("retries", Json::num(r.retries as f64));
     j.set("degraded", Json::Bool(r.degraded));
+    if let Some(id) = r.trace_id {
+        j.set("trace_id", Json::num(id as f64));
+    }
     j
 }
 
@@ -361,6 +385,24 @@ mod tests {
             Request::parse(r#"{"op":"shutdown"}"#).unwrap().op,
             Op::Shutdown
         ));
+    }
+
+    #[test]
+    fn parses_observability_ops() {
+        assert!(matches!(
+            Request::parse(r#"{"op":"metrics"}"#).unwrap().op,
+            Op::Metrics
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op":"trace"}"#).unwrap().op,
+            Op::Trace { target: None }
+        ));
+        assert!(matches!(
+            Request::parse(r#"{"op":"trace","target":7}"#).unwrap().op,
+            Op::Trace { target: Some(7) }
+        ));
+        assert!(Request::parse(r#"{"op":"trace","target":"latest"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"trace","target":-3}"#).is_err());
     }
 
     #[test]

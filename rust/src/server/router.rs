@@ -93,7 +93,44 @@ impl Router {
         if let Some(exec) = crate::exec::global_if_initialized() {
             j.set("exec", exec.stats().to_json());
         }
+        // Latency quantiles from the always-on registry histograms —
+        // additive next to the existing mean fields (`queue_wait_s_mean`
+        // / `ttfs_s_mean` / `ttfe_s_mean` keep their exact meaning).
+        let obs = self.sched.obs();
+        let mut latency = Json::obj(vec![]);
+        for (key, hist) in [
+            ("queue_wait_s", "scheduler.queue_wait_s"),
+            ("ttfs_s", "scheduler.ttfs_s"),
+            ("ttfe_s", "scheduler.ttfe_s"),
+            ("e2e_s", "scheduler.e2e_s"),
+        ] {
+            if let Some((p50, p95, p99)) = obs.registry.quantiles(hist) {
+                latency.set(
+                    key,
+                    Json::obj(vec![
+                        ("p50", Json::num(p50)),
+                        ("p95", Json::num(p95)),
+                        ("p99", Json::num(p99)),
+                    ]),
+                );
+            }
+        }
+        j.set("latency", latency);
         j
+    }
+
+    /// The `metrics` op payload: full registry dump (counters, gauges,
+    /// histograms with p50/p95/p99), flight-recorder state, trace
+    /// counts.
+    pub fn metrics_json(&self) -> Json {
+        self.sched.obs().metrics_json()
+    }
+
+    /// The `trace` op payload: one traced timeline (`target`, or the
+    /// most recently finished), `null` when tracing is off or nothing
+    /// matches.
+    pub fn trace_json(&self, target: Option<u64>) -> Json {
+        self.sched.obs().tracer.export_json(target)
     }
 
     /// Stop the scheduler: queued and in-flight requests finish, then the
@@ -128,6 +165,7 @@ mod tests {
             prefix_tokens_reused: 64,
             retries: 2,
             degraded: true,
+            trace_id: Some(41),
         };
         let j = job_result_to_json(&r);
         assert_eq!(j.get("scheme").as_str(), Some("spec-reason"));
@@ -137,6 +175,11 @@ mod tests {
         assert_eq!(j.get("prefix_tokens_reused").as_usize(), Some(64));
         assert_eq!(j.get("retries").as_usize(), Some(2));
         assert_eq!(j.get("degraded").as_bool(), Some(true));
+        assert_eq!(j.get("trace_id").as_usize(), Some(41));
         assert!((j.get("queue_wait_s").as_f64().unwrap() - 0.25).abs() < 1e-12);
+        // Without tracing the key is absent entirely (byte-compatible
+        // with the pre-observability wire format).
+        let r = JobResult { trace_id: None, ..r };
+        assert!(job_result_to_json(&r).get("trace_id").is_null());
     }
 }

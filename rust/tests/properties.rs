@@ -12,6 +12,7 @@ use specreason::coordinator::{
 use specreason::eval::{main_combos, run_cell_sim, Cell};
 use specreason::kvcache::{BlockPool, PoolConfig, RadixIndex};
 use specreason::metrics::{GpuClock, Testbed};
+use specreason::obs::Histogram;
 use specreason::semantics::{Dataset, Oracle, TraceGenerator};
 use specreason::util::testing::check;
 
@@ -618,4 +619,52 @@ fn calibration_math_has_highest_acceptance() {
     let math = acc(Dataset::Math500);
     let gpqa = acc(Dataset::Gpqa);
     assert!(math > aime && math > gpqa, "aime {aime} math {math} gpqa {gpqa}");
+}
+
+// ---------------------------------------------------------------------
+// Observability registry invariants
+// ---------------------------------------------------------------------
+
+/// The log2-bucket histogram's quantile estimator over random samples:
+/// monotone in `q`, clamped to the observed `[min, max]`, exact count
+/// and mean, and within one bucket of the exact order statistic — a
+/// factor of 2 above 1µs, 1µs absolute below it (bucket 0 resolution).
+#[test]
+fn prop_histogram_quantiles_bound_the_exact_order_statistics() {
+    check("histogram quantiles", 300, |rng| {
+        let n = rng.range(1, 200);
+        let mut h = Histogram::new();
+        let mut vals: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Span ~9 decades: sub-µs noise up to ~1000s outliers.
+            let exp = rng.below(10) as i32;
+            let mant = rng.range(1, 1000) as f64 / 1000.0;
+            let v = mant * 10f64.powi(exp) * 1e-6;
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(h.count(), n as u64);
+        let mean = vals.iter().sum::<f64>() / n as f64;
+        assert!((h.mean() - mean).abs() <= mean.abs() * 1e-9, "mean {} vs {mean}", h.mean());
+
+        let mut prev = 0.0f64;
+        for q in [0.0, 0.01, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let est = h.quantile(q);
+            assert!(est >= prev, "quantile must be monotone in q (q={q}: {est} < {prev})");
+            prev = est;
+            assert!(
+                est >= vals[0] && est <= vals[n - 1],
+                "q={q}: est {est} outside [{}, {}]",
+                vals[0],
+                vals[n - 1]
+            );
+            // The landing bucket contains the exact order statistic, so
+            // the interpolated estimate is off by at most one log2 band.
+            let target = ((q * n as f64).ceil() as usize).max(1);
+            let exact = vals[target - 1];
+            assert!(est <= 2.0 * exact + 1e-6, "q={q}: est {est} vs exact {exact}");
+            assert!(est >= exact / 2.0 - 1e-6, "q={q}: est {est} vs exact {exact}");
+        }
+    });
 }

@@ -10,11 +10,18 @@
 //!
 //! All tests skip (with a notice) when `artifacts/` is absent, like the
 //! other AOT-dependent suites.
+//!
+//! The observability tests at the bottom pin the tracer's serving
+//! contract: at `max_batch = 1` the trace's edge sequence mirrors the
+//! deterministic `JobEvent` stream and its phase spans reconstruct the
+//! request's own `QueryMetrics`; and turning tracing on leaves every
+//! deterministic metrics field bit-identical to the tracing-off path.
 
 use std::thread;
 use std::time::{Duration, Instant};
 
 use specreason::config::DeployConfig;
+use specreason::obs::SpanKind;
 use specreason::scheduler::{
     code_of, ErrorCode, JobEvent, JobRequest, Priority, Scheduler, SubmitOpts,
 };
@@ -504,4 +511,117 @@ fn wire_cancel_and_v1_coexistence() {
 
     client.shutdown().expect("shutdown");
     handle.join().unwrap();
+}
+
+/// With tracing on at `max_batch = 1`, the finished timeline's edge
+/// sequence mirrors the deterministic `JobEvent` stream exactly, the
+/// synthetic `queue_wait` span lands between `queued` and `admitted`,
+/// and the phase spans reconstruct the request's own `QueryMetrics`
+/// accumulators — summing (within slack) to the measured e2e latency.
+#[test]
+fn trace_spans_mirror_the_deterministic_event_stream() {
+    if !have_artifacts() {
+        eprintln!("skipping trace_spans_mirror_the_deterministic_event_stream: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(1, 96);
+    cfg.obs_trace = true;
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let handle = sched.submit(job(&cfg, Dataset::Math500, 0)).expect("submit");
+    let mut event_kinds: Vec<&'static str> = Vec::new();
+    let result = loop {
+        match handle.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Queued => event_kinds.push("queued"),
+            JobEvent::Admitted => event_kinds.push("admitted"),
+            JobEvent::Step(_) => {}
+            JobEvent::Result(r) => {
+                event_kinds.push("result");
+                break *r;
+            }
+            other => panic!("unexpected event: {other:?}"),
+        }
+    };
+    let id = result.trace_id.expect("tracing on must stamp a trace_id");
+    let tl = sched.obs().tracer.finished(Some(id)).expect("finished timeline retained");
+
+    // Logical sequence numbers are dense and ordered.
+    for (i, s) in tl.spans.iter().enumerate() {
+        assert_eq!(s.seq, i as u64);
+    }
+    // The edge subsequence is exactly the JobEvent lifecycle.
+    let edges: Vec<&str> =
+        tl.spans.iter().filter(|s| s.kind == SpanKind::Edge).map(|s| s.name).collect();
+    assert_eq!(edges, event_kinds, "trace edges mirror the deterministic JobEvent stream");
+    // The synthetic queue_wait span is stamped at admission.
+    let pos = |name: &str| {
+        tl.spans
+            .iter()
+            .position(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing trace record {name}"))
+    };
+    assert!(pos("queued") < pos("queue_wait"));
+    assert!(pos("queue_wait") < pos("admitted"));
+
+    // Phase spans are derived from the same accumulators the result
+    // reports, so the per-phase sums match up to float telescoping.
+    let totals = tl.phase_totals();
+    for (phase, wall) in result.metrics.phase_wall.iter() {
+        let traced = totals.get(phase).map(|t| t.0).unwrap_or(0.0);
+        assert!(
+            (traced - wall).abs() <= wall.abs() * 1e-6 + 1e-9,
+            "phase {phase}: traced wall {traced} vs metrics {wall}"
+        );
+    }
+    for (phase, gpu) in result.metrics.phase_gpu.iter() {
+        let traced = totals.get(phase).map(|t| t.1).unwrap_or(0.0);
+        assert!(
+            (traced - gpu).abs() <= gpu.abs() * 1e-6 + 1e-9,
+            "phase {phase}: traced gpu {traced} vs metrics {gpu}"
+        );
+    }
+    // The whole timeline (queue wait + phase work) telescopes to the
+    // measured end-to-end latency, up to scheduler bookkeeping slack.
+    let covered: f64 = totals.values().map(|t| t.0).sum();
+    assert!(
+        covered <= result.e2e_s * 1.05 + 0.05,
+        "span coverage {covered:.4}s exceeds e2e {:.4}s",
+        result.e2e_s
+    );
+    sched.shutdown();
+}
+
+/// Turning tracing on observes the serving path without changing it:
+/// every deterministic `QueryMetrics` field stays bit-identical to the
+/// tracing-off (seed) path, and `trace_id` mirrors the knob.
+#[test]
+fn tracing_on_stays_bit_identical_to_off() {
+    if !have_artifacts() {
+        eprintln!("skipping tracing_on_stays_bit_identical_to_off: no artifacts/");
+        return;
+    }
+    let n = 3;
+    let run = |obs_trace: bool| -> Vec<specreason::metrics::QueryMetrics> {
+        let mut cfg = deploy(1, 96);
+        cfg.obs_trace = obs_trace;
+        let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+        let out = (0..n)
+            .map(|i| {
+                let r = sched
+                    .submit(job(&cfg, Dataset::Math500, i))
+                    .expect("submit")
+                    .recv_timeout(EVENT_TIMEOUT)
+                    .expect("reply dropped")
+                    .expect("query failed");
+                assert_eq!(r.trace_id.is_some(), obs_trace, "trace_id mirrors the knob");
+                r.metrics
+            })
+            .collect();
+        sched.shutdown();
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    for i in 0..n {
+        assert_deterministic_eq(&on[i], &off[i], &format!("query {i}"));
+    }
 }
