@@ -24,6 +24,12 @@
 //! time-to-first-`step`-frame, mid-flight cancel latency and events per
 //! request land under `"streaming"` in `BENCH_server.json`.
 //!
+//! A **lookahead mode** serves the same workload at `max_batch = 1`
+//! with lookahead pipelining off vs on (`--lookahead 2`), reporting the
+//! GPU-clock speedup from overlapping draft decodes with verify shadows
+//! and the draft-accounting counters under `"lookahead"` — decisions
+//! must be identical in both settings.
+//!
 //! A **shared-prefix mode** serves the same query repeatedly (every
 //! request shares the full prompt) with the prefix KV cache off vs on,
 //! reporting the reuse rate (fraction of requests that adopted a cached
@@ -308,6 +314,91 @@ fn run_prefix_mode(budget: usize, total: usize) -> Json {
     Json::Arr(rows)
 }
 
+/// Lookahead mode: the same closed-loop workload at `max_batch = 1`
+/// with lookahead pipelining off (`k = 0`, the serial baseline) vs on
+/// (`k = 2`), at a low acceptance threshold so drafted steps are mostly
+/// consumed.  Decisions must be identical; the speedup rows report the
+/// GPU-clock saving from hiding draft decodes under verify shadows,
+/// plus the draft-accounting counters.
+fn run_lookahead_mode(budget: usize, total: usize) -> Json {
+    let mut rows = Vec::new();
+    let mut mean_gpu = [0.0f64; 2];
+    let mut decisions: Vec<Vec<(usize, usize, usize)>> = Vec::new();
+    for (idx, k) in [0usize, 2].into_iter().enumerate() {
+        let cfg = DeployConfig {
+            addr: "127.0.0.1:0".into(),
+            token_budget: budget,
+            answer_tokens: 8,
+            max_batch: 1,
+            max_queue: 256,
+            threshold: 2,
+            lookahead_k: k,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+        let spec = cfg.spec_config();
+        let t0 = Instant::now();
+        let mut gpu_sum = 0.0f64;
+        let mut decided = Vec::with_capacity(total);
+        for r in 0..total {
+            let res = sched
+                .submit(JobRequest {
+                    dataset: Dataset::Math500,
+                    query_index: r % 16,
+                    sample: 0,
+                    seed: 0xF16_C,
+                    spec: spec.clone(),
+                    priority: Priority::Normal,
+                })
+                .expect("submit")
+                .recv_timeout(Duration::from_secs(600))
+                .expect("reply dropped")
+                .expect("query failed");
+            gpu_sum += res.metrics.gpu_secs;
+            decided.push((
+                res.metrics.thinking_tokens,
+                res.metrics.steps_total,
+                res.metrics.steps_accepted,
+            ));
+        }
+        let makespan = t0.elapsed().as_secs_f64();
+        let stats = sched.stats();
+        sched.shutdown();
+        mean_gpu[idx] = gpu_sum / total.max(1) as f64;
+        decisions.push(decided);
+        println!(
+            "lookahead k={k}: {total} reqs in {makespan:.2}s, mean gpu {:.3}s, \
+             drafted {}, discarded {}, overlap {:.2}s",
+            mean_gpu[idx],
+            stats.lookahead_drafted_tokens,
+            stats.lookahead_discarded_tokens,
+            stats.lookahead_overlap_gpu_s
+        );
+        if k == 0 {
+            assert_eq!(stats.lookahead_drafted_tokens, 0, "serial must not draft");
+        } else {
+            assert!(stats.lookahead_drafted_tokens > 0, "lookahead must draft");
+        }
+        rows.push(Json::obj(vec![
+            ("lookahead_k", Json::num(k as f64)),
+            ("requests", Json::num(total as f64)),
+            ("throughput_rps", Json::num(total as f64 / makespan)),
+            ("mean_gpu_s", Json::num(mean_gpu[idx])),
+            ("drafted_tokens", Json::num(stats.lookahead_drafted_tokens as f64)),
+            ("discarded_tokens", Json::num(stats.lookahead_discarded_tokens as f64)),
+            ("accepted_ratio", Json::num(stats.lookahead_accepted_ratio())),
+            ("overlap_gpu_s", Json::num(stats.lookahead_overlap_gpu_s)),
+        ]));
+    }
+    assert_eq!(decisions[0], decisions[1], "lookahead must not change any decision");
+    let speedup = if mean_gpu[1] > 0.0 { mean_gpu[0] / mean_gpu[1] } else { 0.0 };
+    println!("lookahead mode: gpu-clock speedup x{speedup:.3} (k=2 vs serial)");
+    Json::obj(vec![
+        ("gpu_speedup_k2_vs_serial", Json::num(speedup)),
+        ("runs", Json::Arr(rows)),
+    ])
+}
+
 /// Latency-breakdown mode: serve requests at `max_batch = 1` with
 /// tracing on and attribute each request's time to its phases from the
 /// trace spans.  The per-phase wall sums must agree with the request's
@@ -520,6 +611,11 @@ fn main() {
     println!("booting schedulers for shared-prefix mode ({prefix_reqs} reqs, cache off/on) ...");
     let prefix_rows = run_prefix_mode(budget, prefix_reqs);
 
+    // --- lookahead mode: draft-ahead pipelining off vs on at serial batch ---
+    let lookahead_reqs = reqs.min(8).max(3);
+    println!("booting schedulers for lookahead mode ({lookahead_reqs} reqs, k 0/2) ...");
+    let lookahead = run_lookahead_mode(budget, lookahead_reqs);
+
     // --- latency-breakdown mode: per-phase time attribution from traces ---
     let breakdown_reqs = reqs.min(6).max(2);
     println!("booting traced scheduler for latency-breakdown mode ({breakdown_reqs} reqs) ...");
@@ -534,6 +630,7 @@ fn main() {
         ("resilience", Json::Arr(resilience_rows)),
         ("speedup_batch8_vs_serial", Json::num(speedup)),
         ("prefix_cache", prefix_rows),
+        ("lookahead", lookahead),
         ("latency_breakdown", breakdown),
         (
             "streaming",

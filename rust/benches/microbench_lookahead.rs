@@ -1,0 +1,187 @@
+//! microbench_lookahead — lookahead pipelining on the simulated backend:
+//! overlap efficiency, wasted-draft ratio and end-to-end speedup vs the
+//! serial (`lookahead_k = 0`) path at `max_batch = 1`.
+//!
+//!   cargo bench --bench microbench_lookahead
+//!   SPECREASON_BENCH_LOOKAHEAD_QUERIES=48 cargo bench --bench microbench_lookahead
+//!
+//! For each depth `k ∈ {0, 1, 2, 4}` the bench drives the same query set
+//! through `run_query` (the serial driver — one sequence, so every
+//! saving comes from hiding draft decodes under the verify shadow) and
+//! reports mean/p50 GPU-clock latency, the accepted-draft ratio, wasted
+//! draft tokens, and the overlap GPU-seconds actually credited.
+//!
+//! Two cells bound the behavior: a **high-acceptance** cell (MATH-500 at
+//! threshold 2 — the paper's §5.2 sweet spot, where nearly every drafted
+//! step is consumed) and a **high-rejection** cell (AIME at threshold 7,
+//! where rejected steps discard their drafted suffixes and the waste
+//! ratio is the interesting number).
+//!
+//! Hard gates (deterministic sim, so these are exact regressions):
+//! final-answer decisions are bit-identical across every `k`, and the
+//! high-acceptance cell at `k = 2` shows ≥ 10% mean e2e reduction vs
+//! serial.  `SPECREASON_BENCH_STRICT=1` additionally gates every `k ≥ 1`
+//! high-acceptance cell.  Emits `BENCH_lookahead.json`.  Sim-only: runs
+//! without `artifacts/`.
+
+use specreason::coordinator::{
+    run_query, AcceptancePolicy, Combo, Scheme, SimBackend, SpecConfig,
+};
+use specreason::metrics::{GpuClock, QueryMetrics, Testbed};
+use specreason::semantics::{Dataset, Oracle, TraceGenerator};
+use specreason::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn strict() -> bool {
+    std::env::var("SPECREASON_BENCH_STRICT").map(|v| v == "1").unwrap_or(false)
+}
+
+fn cfg(threshold: u8, k: usize) -> SpecConfig {
+    SpecConfig {
+        scheme: Scheme::SpecReason,
+        policy: AcceptancePolicy::Static { threshold },
+        token_budget: 704,
+        answer_tokens: 8,
+        lookahead_k: k,
+        ..Default::default()
+    }
+}
+
+/// Run the whole query set at one depth; returns per-query metrics.
+fn run_cell(dataset: Dataset, threshold: u8, k: usize, queries: usize) -> Vec<QueryMetrics> {
+    let oracle = Oracle::default();
+    let combo = Combo::new("qwq-sim", "r1-sim");
+    let cfg = cfg(threshold, k);
+    let gen = TraceGenerator::new(dataset, 0x10_0C_A4EA_D);
+    (0..queries)
+        .map(|i| {
+            let q = gen.query(i);
+            let mut b = SimBackend::new(GpuClock::new(Testbed::A6000x2), "small", "base");
+            run_query(&oracle, &q, &combo, &cfg, &mut b, 0).expect("run_query").metrics
+        })
+        .collect()
+}
+
+fn p50(latencies: &mut [f64]) -> f64 {
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies[latencies.len() / 2]
+}
+
+/// Decisions must be identical to serial at any depth — lookahead is a
+/// scheduling change, never an answer change.
+fn assert_decisions_eq(a: &QueryMetrics, s: &QueryMetrics, ctx: &str) {
+    assert_eq!(a.thinking_tokens, s.thinking_tokens, "{ctx}: thinking_tokens");
+    assert_eq!(a.steps_total, s.steps_total, "{ctx}: steps_total");
+    assert_eq!(a.steps_speculated, s.steps_speculated, "{ctx}: steps_speculated");
+    assert_eq!(a.steps_accepted, s.steps_accepted, "{ctx}: steps_accepted");
+    assert_eq!(a.verify_scores, s.verify_scores, "{ctx}: verify_scores");
+    assert_eq!(a.answer_correct, s.answer_correct, "{ctx}: answer_correct");
+}
+
+fn bench_cell(name: &str, dataset: Dataset, threshold: u8, queries: usize) -> Json {
+    let serial = run_cell(dataset, threshold, 0, queries);
+    let serial_mean = serial.iter().map(|m| m.gpu_secs).sum::<f64>() / queries as f64;
+    let mut rows = Vec::new();
+    for k in [0usize, 1, 2, 4] {
+        let runs = run_cell(dataset, threshold, k, queries);
+        let mut drafted = 0u64;
+        let mut discarded = 0u64;
+        let mut overlap = 0.0f64;
+        let mut lats: Vec<f64> = Vec::with_capacity(queries);
+        for (i, m) in runs.iter().enumerate() {
+            assert_decisions_eq(m, &serial[i], &format!("{name} k={k} query {i}"));
+            drafted += m.lookahead_drafted_tokens as u64;
+            discarded += m.lookahead_discarded_tokens as u64;
+            overlap += m.lookahead_overlap_gpu;
+            lats.push(m.gpu_secs);
+        }
+        let mean = lats.iter().sum::<f64>() / queries as f64;
+        let mean_speedup = serial_mean / mean;
+        let mut serial_lats: Vec<f64> = serial.iter().map(|m| m.gpu_secs).collect();
+        let p50_speedup = p50(&mut serial_lats) / p50(&mut lats);
+        let waste = if drafted == 0 { 0.0 } else { discarded as f64 / drafted as f64 };
+        if k == 0 {
+            assert_eq!(drafted, 0, "{name}: serial must not draft");
+            assert_eq!(overlap, 0.0, "{name}: serial must not overlap");
+        } else {
+            assert!(drafted > 0, "{name} k={k}: lookahead must draft");
+            assert!(overlap > 0.0, "{name} k={k}: some draft must land in a verify shadow");
+        }
+        println!(
+            "{name} k={k}: mean {mean:.3}s (x{mean_speedup:.3} vs serial), p50 \
+             x{p50_speedup:.3}, drafted {drafted}, waste {:.1}%, overlap {overlap:.2}s",
+            100.0 * waste
+        );
+        rows.push(Json::obj(vec![
+            ("k", Json::num(k as f64)),
+            ("mean_gpu_s", Json::num(mean)),
+            ("mean_speedup", Json::num(mean_speedup)),
+            ("p50_speedup", Json::num(p50_speedup)),
+            ("drafted_tokens", Json::num(drafted as f64)),
+            ("discarded_tokens", Json::num(discarded as f64)),
+            ("accepted_draft_ratio", Json::num(1.0 - waste)),
+            ("wasted_draft_ratio", Json::num(waste)),
+            ("overlap_gpu_s", Json::num(overlap)),
+        ]))
+    }
+    Json::obj(vec![
+        ("cell", Json::str(name)),
+        ("dataset", Json::str(dataset.name())),
+        ("threshold", Json::num(threshold as f64)),
+        ("queries", Json::num(queries as f64)),
+        ("serial_mean_gpu_s", Json::num(serial_mean)),
+        ("sweep", Json::Arr(rows)),
+    ])
+}
+
+/// Mean e2e reduction (%) of the depth-`k` row vs serial, from a cell
+/// report produced by [`bench_cell`].
+fn reduction_pct(cell: &Json, k: usize) -> f64 {
+    let serial_mean = cell.get("serial_mean_gpu_s").as_f64().unwrap();
+    for row in match cell.get("sweep") {
+        Json::Arr(rows) => rows,
+        _ => panic!("sweep must be an array"),
+    } {
+        if row.get("k").as_f64() == Some(k as f64) {
+            let mean = row.get("mean_gpu_s").as_f64().unwrap();
+            return 100.0 * (1.0 - mean / serial_mean);
+        }
+    }
+    panic!("no k={k} row");
+}
+
+fn main() {
+    let queries = env_usize("SPECREASON_BENCH_LOOKAHEAD_QUERIES", 24);
+    println!("microbench_lookahead: {queries} queries per cell (simulated backend)");
+
+    let high_accept = bench_cell("math500-accept", Dataset::Math500, 2, queries);
+    let high_reject = bench_cell("aime-reject", Dataset::Aime, 7, queries);
+
+    // The headline gate: at k = 2 the high-acceptance cell must hide
+    // enough draft work under verify shadows to cut ≥ 10% of mean e2e.
+    let headline = reduction_pct(&high_accept, 2);
+    println!("headline (math500, threshold 2, k=2): {headline:.1}% mean e2e reduction");
+    assert!(
+        headline >= 10.0,
+        "lookahead k=2 must cut >= 10% mean e2e on the high-acceptance cell, got {headline:.1}%"
+    );
+    if strict() {
+        for k in [1usize, 4] {
+            let r = reduction_pct(&high_accept, k);
+            assert!(r >= 10.0, "strict: k={k} reduction {r:.1}% < 10%");
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("lookahead")),
+        ("queries_per_cell", Json::num(queries as f64)),
+        ("headline_reduction_pct", Json::num(headline)),
+        ("cells", Json::Arr(vec![high_accept, high_reject])),
+    ]);
+    let out_path = "BENCH_lookahead.json";
+    std::fs::write(out_path, report.to_string_pretty()).expect("write BENCH_lookahead.json");
+    println!("wrote {out_path}");
+}

@@ -45,6 +45,12 @@ pub struct DeployConfig {
     pub answer_tokens: usize,
     pub verify_template_len: usize,
     pub draft_k: usize,
+    /// Lookahead pipelining depth (`serve --lookahead`): while the base
+    /// model verifies step N, keep drafting steps N+1..N+k from the
+    /// unverified frontier with the small model.  0 (the default) is
+    /// bit-identical serial behavior; requires a step-speculating
+    /// scheme.  Degrade's base-only mode zeroes it per admission.
+    pub lookahead_k: usize,
     /// Admission queue bound (backpressure beyond this).
     pub max_queue: usize,
     /// Connection-handler threads.
@@ -143,6 +149,7 @@ impl Default for DeployConfig {
             answer_tokens: spec.answer_tokens,
             verify_template_len: spec.verify_template_len,
             draft_k: spec.draft_k,
+            lookahead_k: spec.lookahead_k,
             max_queue: 64,
             io_threads: 4,
             max_batch: 1,
@@ -231,6 +238,9 @@ impl DeployConfig {
         if let Some(v) = j.get("draft_k").as_usize() {
             anyhow::ensure!(v >= 1, "draft_k must be >= 1");
             c.draft_k = v;
+        }
+        if let Some(v) = j.get("lookahead_k").as_usize() {
+            c.lookahead_k = v;
         }
         if let Some(v) = j.get("max_queue").as_usize() {
             c.max_queue = v;
@@ -335,6 +345,32 @@ impl DeployConfig {
         );
         anyhow::ensure!(self.obs_trace_keep >= 1, "obs_trace_keep must be >= 1");
         anyhow::ensure!(self.obs_flight_events >= 1, "obs_flight_events must be >= 1");
+        // Incoherent knob combos are structured `bad_request` errors
+        // (`code_of` classifies them; the server surfaces the code on
+        // the wire) rather than silently accepted contradictions.
+        if self.lookahead_k > 0 && !self.scheme.speculates_steps() {
+            return Err(crate::scheduler::coded(
+                crate::scheduler::ErrorCode::BadRequest,
+                format!(
+                    "lookahead_k = {} needs a step-speculating scheme, but '{}' pins \
+                     generation base-only — there is no speculation to pipeline \
+                     (set lookahead_k to 0 or use spec-reason / spec-reason+decode)",
+                    self.lookahead_k,
+                    self.scheme.name()
+                ),
+            ));
+        }
+        if self.prefix_cache_blocks > 0 && !self.prefix_cache {
+            return Err(crate::scheduler::coded(
+                crate::scheduler::ErrorCode::BadRequest,
+                format!(
+                    "prefix_cache_blocks = {} is set while prefix_cache is false; the \
+                     budget only applies to the shared-prefix cache (enable \
+                     prefix_cache or drop the budget)",
+                    self.prefix_cache_blocks
+                ),
+            ));
+        }
         Ok(())
     }
 
@@ -367,6 +403,7 @@ impl DeployConfig {
             answer_tokens: self.answer_tokens,
             verify_template_len: self.verify_template_len,
             draft_k: self.draft_k,
+            lookahead_k: self.lookahead_k,
         }
     }
 }
@@ -540,6 +577,48 @@ mod tests {
         )
         .is_err());
         assert!(DeployConfig::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn parses_lookahead_knob() {
+        let c = DeployConfig::from_json_str(r#"{"lookahead_k": 3}"#).unwrap();
+        assert_eq!(c.lookahead_k, 3);
+        assert_eq!(c.spec_config().lookahead_k, 3);
+        // Default stays serial.
+        assert_eq!(DeployConfig::default().lookahead_k, 0);
+    }
+
+    #[test]
+    fn rejects_lookahead_with_base_only_scheme() {
+        // A base-only pinned scheme leaves nothing to pipeline.
+        let err = DeployConfig::from_json_str(r#"{"scheme": "vanilla-base", "lookahead_k": 2}"#)
+            .unwrap_err();
+        assert_eq!(
+            crate::scheduler::code_of(&err),
+            crate::scheduler::ErrorCode::BadRequest
+        );
+        // Non-step-speculating decode-only scheme is equally incoherent.
+        assert!(
+            DeployConfig::from_json_str(r#"{"scheme": "spec-decode", "lookahead_k": 1}"#).is_err()
+        );
+        // Step-speculating schemes accept the knob.
+        assert!(DeployConfig::from_json_str(
+            r#"{"scheme": "spec-reason+decode", "lookahead_k": 4}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn rejects_prefix_cache_blocks_without_prefix_cache() {
+        let err = DeployConfig::from_json_str(r#"{"prefix_cache_blocks": 128}"#).unwrap_err();
+        assert_eq!(
+            crate::scheduler::code_of(&err),
+            crate::scheduler::ErrorCode::BadRequest
+        );
+        assert!(DeployConfig::from_json_str(
+            r#"{"prefix_cache": true, "prefix_cache_blocks": 128}"#
+        )
+        .is_ok());
     }
 
     #[test]

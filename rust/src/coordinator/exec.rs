@@ -57,6 +57,45 @@ pub fn refund_bonus_gpu(qm: &mut QueryMetrics, gpu_before: f64) {
     }
 }
 
+/// GPU seconds accumulated so far in the lookahead-draft phase bucket.
+/// Sampled before a draft-ahead decode so the credit below can bound
+/// its refund to exactly that decode's charge.
+pub fn lookahead_gpu(qm: &QueryMetrics) -> f64 {
+    qm.phase_gpu.get(Phase::LookaheadDraft.name()).copied().unwrap_or(0.0)
+}
+
+/// Arm the verify-overlap window: record how many GPU seconds the
+/// verification pass that just ran cost (`gpu_before` is `qm.gpu_secs`
+/// sampled just before it).  Subsequent draft-ahead decodes run *under*
+/// that pass on real hardware, so up to this much of their cost is
+/// refunded by [`credit_draft_overlap`].  Writes only the transient
+/// scratch field — at `lookahead_k = 0` nothing ever consumes it and
+/// every reported metric stays bit-identical.
+pub fn arm_overlap_window(qm: &mut QueryMetrics, gpu_before: f64) {
+    qm.lookahead_window_gpu = (qm.gpu_secs - gpu_before).max(0.0);
+}
+
+/// Refund the part of a draft-ahead decode hidden under the in-flight
+/// verification window.  `draft_gpu_before` is [`lookahead_gpu`] sampled
+/// just before the decode; the refund is bounded by both the decode's
+/// own charge and the remaining window, so catch-up prefill and any
+/// other phase is never credited.  Mirrors `refund_bonus_gpu`'s
+/// sample-execute-refund idiom.  Returns the refunded GPU seconds.
+pub fn credit_draft_overlap(qm: &mut QueryMetrics, draft_gpu_before: f64) -> f64 {
+    let bucket = Phase::LookaheadDraft.name();
+    let spent = qm.phase_gpu.get(bucket).copied().unwrap_or(0.0) - draft_gpu_before;
+    let refund = spent.min(qm.lookahead_window_gpu).max(0.0);
+    if refund > 0.0 {
+        qm.gpu_secs -= refund;
+        if let Some(v) = qm.phase_gpu.get_mut(bucket) {
+            *v -= refund;
+        }
+        qm.lookahead_window_gpu -= refund;
+        qm.lookahead_overlap_gpu += refund;
+    }
+    refund
+}
+
 /// `engine_op`-site fault gate: consulted once per front op *before*
 /// execution, so a fired fault fails the step with the sequence still
 /// at its pre-op state (the retry path rolls back and replays from the
@@ -116,6 +155,15 @@ pub fn execute_op(
             let seed = seeds.next();
             engine.decode(seq, base, 1, seed, Phase::SpecVerify, qm)?;
             refund_bonus_gpu(qm, gpu_before);
+            Ok(())
+        }
+        EngineOp::DraftAhead { n } => {
+            // Lookahead draft: a small-model decode whose cost overlaps
+            // the verification pass in flight — refund the hidden part.
+            let draft_before = lookahead_gpu(qm);
+            let seed = seeds.next();
+            engine.decode(seq, small, n, seed, Phase::LookaheadDraft, qm)?;
+            credit_draft_overlap(qm, draft_before);
             Ok(())
         }
         EngineOp::Rollback { n } => {

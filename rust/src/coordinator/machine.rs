@@ -26,6 +26,7 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use super::backend::{Backend, Role};
+use super::exec::{arm_overlap_window, credit_draft_overlap, lookahead_gpu};
 use super::policy::StepContext;
 use super::{Combo, QueryOutcome, Scheme, SpecConfig};
 use crate::metrics::{Phase, QueryMetrics};
@@ -51,6 +52,14 @@ pub enum EngineOp {
     Rollback { n: usize },
     /// Decode the final answer (`n` tokens) after `</think>`.
     Finish { role: Role, n: usize },
+    /// Lookahead pipelining: small-model decode of `n` tokens for a
+    /// *future* step, drafted from the unverified frontier while the
+    /// base model's verification pass is in flight.  Its GPU cost is
+    /// refunded up to the armed verify-overlap window (the work hides
+    /// under the verification on real hardware); the drafted tokens
+    /// stay un-speculated until the step they belong to consumes them,
+    /// and unwind through `Rollback` on rejection or pipeline break.
+    DraftAhead { n: usize },
 }
 
 impl EngineOp {
@@ -59,11 +68,23 @@ impl EngineOp {
         match *self {
             EngineOp::Decode { role, n, phase } => backend.decode(role, n, phase),
             EngineOp::VerifyPass { template_len, phase } => {
-                backend.verify_pass(template_len, phase)
+                // Arm the verify-overlap window: draft-ahead decodes
+                // planned behind this pass may hide under its GPU span.
+                // Writes only transient scratch — inert at lookahead 0.
+                let gpu_before = backend.metrics_mut().gpu_secs;
+                backend.verify_pass(template_len, phase)?;
+                arm_overlap_window(backend.metrics_mut(), gpu_before);
+                Ok(())
             }
             EngineOp::BonusToken => backend.bonus_token(),
             EngineOp::Rollback { n } => backend.rollback(n),
             EngineOp::Finish { role, n } => backend.finish(role, n),
+            EngineOp::DraftAhead { n } => {
+                let draft_before = lookahead_gpu(backend.metrics_mut());
+                backend.decode(Role::Small, n, Phase::LookaheadDraft)?;
+                credit_draft_overlap(backend.metrics_mut(), draft_before);
+                Ok(())
+            }
         }
     }
 }
@@ -76,6 +97,9 @@ pub enum TaskPhase {
     Verify,
     Fallback,
     Answer,
+    /// Lookahead draft of a future step (optimistic frontier work that
+    /// piggybacks on the same tick as the verify it hides under).
+    Draft,
     Done,
 }
 
@@ -91,6 +115,16 @@ pub enum StepKind {
     /// The base-quality generator rendered the step (either the
     /// speculation was rejected, or the scheme never speculated it).
     Fallback,
+    /// Lookahead pipelining: the small model drafted this *future* step
+    /// from the unverified frontier while an earlier step's
+    /// verification was still in flight.
+    Drafted,
+    /// A previously drafted step was consumed as the speculation for
+    /// its step and the verifier accepted it (a lookahead hit).
+    DraftAccepted,
+    /// A drafted step was rolled back unverified (the step it was
+    /// drafted behind was rejected, or the pipeline broke).
+    DraftDiscarded,
 }
 
 impl StepKind {
@@ -99,6 +133,9 @@ impl StepKind {
             StepKind::Speculated => "speculated",
             StepKind::Accepted => "accepted",
             StepKind::Fallback => "fallback",
+            StepKind::Drafted => "drafted",
+            StepKind::DraftAccepted => "draft_accepted",
+            StepKind::DraftDiscarded => "draft_discarded",
         }
     }
 }
@@ -135,6 +172,10 @@ enum Effect {
     Scored { score: u8, accepted_len: Option<usize> },
     BaseTokens { len: usize },
     Draft { proposed: usize, accepted: usize },
+    /// Lookahead pipelining: tokens drafted ahead of verification.
+    DraftedAhead { tokens: usize },
+    /// Lookahead pipelining: drafted tokens rolled back unverified.
+    DraftDiscarded { tokens: usize },
     StepDone,
     Finalize,
     /// Publish a step event when the carrying op commits (drained by the
@@ -166,6 +207,12 @@ pub struct StepMachine<'o> {
     steps_by_small: usize,
     steps_by_base: usize,
     traj: Trajectory,
+    /// Lookahead pipelining: optimistically drafted future steps
+    /// `(step index, drafted len)` in step order — the unverified
+    /// frontier sitting above `thinking` in the KV cache.
+    drafted: VecDeque<(usize, usize)>,
+    /// Total tokens in `drafted` (size of the optimistic frontier).
+    drafted_tokens: usize,
     pending: VecDeque<(EngineOp, Vec<Effect>)>,
     /// Step events whose carrying op has committed, awaiting a driver
     /// drain (the serial driver never drains; the vec stays bounded by
@@ -203,6 +250,8 @@ impl<'o> StepMachine<'o> {
             steps_by_small: 0,
             steps_by_base: 0,
             traj: Trajectory::default(),
+            drafted: VecDeque::new(),
+            drafted_tokens: 0,
             pending: VecDeque::new(),
             events: Vec::new(),
             answer_planned: false,
@@ -231,6 +280,7 @@ impl<'o> StepMachine<'o> {
             Some(EngineOp::Finish { .. }) | Some(EngineOp::Decode { phase: Phase::Answer, .. }) => {
                 TaskPhase::Answer
             }
+            Some(EngineOp::DraftAhead { .. }) => TaskPhase::Draft,
             Some(_) => TaskPhase::Fallback,
         }
     }
@@ -258,6 +308,8 @@ impl<'o> StepMachine<'o> {
                     qm.draft_tokens_proposed += proposed;
                     qm.draft_tokens_accepted += accepted;
                 }
+                Effect::DraftedAhead { tokens } => qm.lookahead_drafted_tokens += tokens,
+                Effect::DraftDiscarded { tokens } => qm.lookahead_discarded_tokens += tokens,
                 Effect::StepDone => qm.steps_total += 1,
                 Effect::Finalize => {
                     qm.answer_correct = self.answer_correct;
@@ -349,17 +401,40 @@ impl<'o> StepMachine<'o> {
             // --- small model speculates the step (§4.1 stage 1) ---
             let intended = self.oracle.step_tokens(&self.q, step, self.att0, &self.combo.small);
             let len = intended.min(remaining);
-            self.push(
-                EngineOp::Decode { role: Role::Small, n: len, phase: Phase::Speculate },
-                Some(Effect::Speculated),
-            );
-            self.attach(Effect::Emit(StepEvent {
-                step,
-                kind: StepKind::Speculated,
-                score: None,
-                effective_threshold: Some(thr),
-                tokens: len,
-            }));
+            // Lookahead: if this step was already drafted ahead under an
+            // earlier verification window, its tokens are sitting on the
+            // frontier — consume them instead of decoding again.  The
+            // drafted length always matches the serial plan (drafts only
+            // survive clean accepts, so the optimistic frontier equals
+            // the settled one and both plans saw the same remaining
+            // budget); the mismatch arm discards defensively so a future
+            // regression degrades to serial behavior instead of
+            // corrupting the KV mirror.
+            let consumed = match self.drafted.front().copied() {
+                Some((dstep, dlen)) if dstep == step && dlen == len => {
+                    self.drafted.pop_front();
+                    self.drafted_tokens -= dlen;
+                    true
+                }
+                Some(_) => {
+                    self.plan_draft_discard();
+                    false
+                }
+                None => false,
+            };
+            if !consumed {
+                self.push(
+                    EngineOp::Decode { role: Role::Small, n: len, phase: Phase::Speculate },
+                    Some(Effect::Speculated),
+                );
+                self.attach(Effect::Emit(StepEvent {
+                    step,
+                    kind: StepKind::Speculated,
+                    score: None,
+                    effective_threshold: Some(thr),
+                    tokens: len,
+                }));
+            }
             self.thinking += len;
 
             // --- base model assesses it in one prefill-only pass ---
@@ -377,6 +452,19 @@ impl<'o> StepMachine<'o> {
                     accepted_len: if accepted { Some(len) } else { None },
                 }),
             );
+            if consumed {
+                // The speculation effects ride the verify op: drafted
+                // tokens only *become* this step's speculation once the
+                // pass that judges them runs.
+                self.attach(Effect::Speculated);
+                self.attach(Effect::Emit(StepEvent {
+                    step,
+                    kind: StepKind::Speculated,
+                    score: None,
+                    effective_threshold: Some(thr),
+                    tokens: len,
+                }));
+            }
             if accepted {
                 self.attach(Effect::Emit(StepEvent {
                     step,
@@ -385,9 +473,22 @@ impl<'o> StepMachine<'o> {
                     effective_threshold: Some(thr),
                     tokens: len,
                 }));
+                if consumed {
+                    self.attach(Effect::Emit(StepEvent {
+                        step,
+                        kind: StepKind::DraftAccepted,
+                        score: Some(score),
+                        effective_threshold: Some(thr),
+                        tokens: len,
+                    }));
+                }
             } else {
                 rejected_score = Some(score);
             }
+
+            // While this verification is in flight, keep drafting future
+            // steps from the unverified frontier (lookahead pipelining).
+            self.plan_lookahead_drafts();
 
             if accepted {
                 // Accepted: the step stands; trajectory absorbs its quality.
@@ -402,6 +503,10 @@ impl<'o> StepMachine<'o> {
                     &self.combo.small,
                 );
                 if extra > 0 && self.thinking + extra <= budget {
+                    // Pipeline break: reflection tokens land above the
+                    // frontier, and rollback is strictly LIFO — unwind
+                    // every outstanding draft first.
+                    self.plan_draft_discard();
                     self.push(
                         EngineOp::Decode { role: Role::Small, n: extra, phase: Phase::Speculate },
                         None,
@@ -411,7 +516,10 @@ impl<'o> StepMachine<'o> {
                 self.steps_completed += 1;
                 done = true;
             } else {
-                // Rejected: discard the speculated step's tokens and KV.
+                // Rejected: the drafted suffix sits above the speculated
+                // step in the KV, so discard it first (LIFO), then the
+                // step's own tokens.
+                self.plan_draft_discard();
                 self.push(EngineOp::Rollback { n: len }, None);
                 self.thinking -= len;
             }
@@ -525,7 +633,76 @@ impl<'o> StepMachine<'o> {
         }
     }
 
+    /// Lookahead pipelining (§ ISSUE 8): extend the optimistic draft
+    /// frontier behind the verification pass that was just planned.
+    /// Drafted lengths come from the same pure oracle function of
+    /// (query, step, attempt) the serial plan uses, so a surviving
+    /// draft always matches the speculation it later replaces, and the
+    /// optimistic frontier never exceeds the token budget (the drafted
+    /// suffix stays inside the sequence's worst-case KV reservation).
+    fn plan_lookahead_drafts(&mut self) {
+        let k = self.cfg.lookahead_k;
+        if k == 0 || !self.cfg.scheme.speculates_steps() {
+            return;
+        }
+        let mut next = self.step + 1 + self.drafted.len();
+        let mut optimistic = self.thinking + self.drafted_tokens;
+        while self.drafted.len() < k
+            && next < self.plan_len
+            && optimistic + MIN_STEP_TOKENS <= self.cfg.token_budget
+        {
+            let intended = self.oracle.step_tokens(&self.q, next, self.att0, &self.combo.small);
+            let len = intended.min(self.cfg.token_budget - optimistic);
+            self.push(
+                EngineOp::DraftAhead { n: len },
+                Some(Effect::DraftedAhead { tokens: len }),
+            );
+            self.attach(Effect::Emit(StepEvent {
+                step: next,
+                kind: StepKind::Drafted,
+                score: None,
+                effective_threshold: None,
+                tokens: len,
+            }));
+            self.drafted.push_back((next, len));
+            self.drafted_tokens += len;
+            optimistic += len;
+            next += 1;
+        }
+    }
+
+    /// Unwind the entire drafted suffix (rejection, pipeline break, or
+    /// defensive mismatch): one O(1) KV rollback covering every drafted
+    /// token, with a discard event per abandoned step.  No-op when the
+    /// frontier is empty, so the serial plan never sees it.
+    fn plan_draft_discard(&mut self) {
+        if self.drafted_tokens == 0 {
+            return;
+        }
+        let total = self.drafted_tokens;
+        self.push(
+            EngineOp::Rollback { n: total },
+            Some(Effect::DraftDiscarded { tokens: total }),
+        );
+        while let Some((dstep, dlen)) = self.drafted.pop_front() {
+            self.attach(Effect::Emit(StepEvent {
+                step: dstep,
+                kind: StepKind::DraftDiscarded,
+                score: None,
+                effective_threshold: None,
+                tokens: dlen,
+            }));
+        }
+        self.drafted_tokens = 0;
+    }
+
     fn plan_answer(&mut self) {
+        // The answer decodes on the settled CoT only — any outstanding
+        // drafted suffix must unwind first.  (Unreachable in practice:
+        // drafts only survive clean accepts, whose budget condition
+        // matches the refill gate — but the answer must never decode on
+        // top of unverified tokens, so keep the guard.)
+        self.plan_draft_discard();
         self.answer_planned = true;
         self.traj.finalize();
         self.completion = self.steps_completed as f64 / self.plan_len.max(1) as f64;
@@ -720,6 +897,162 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Drive a machine with an explicit lookahead depth, collecting the
+    /// op stream, final metrics and the full step-event sequence.
+    fn drive_lookahead(
+        scheme: Scheme,
+        seed: u64,
+        k: usize,
+    ) -> (Vec<EngineOp>, QueryMetrics, Vec<StepEvent>) {
+        let oracle = Oracle::default();
+        let q = TraceGenerator::new(Dataset::Math500, seed).query(0);
+        let cfg = SpecConfig { scheme, lookahead_k: k, ..Default::default() };
+        let mut b = sim();
+        b.begin(&q).unwrap();
+        let mut m =
+            StepMachine::new(&oracle, Cow::Owned(q), Cow::Owned(combo()), Cow::Owned(cfg), 0);
+        let mut ops = Vec::new();
+        let mut events = Vec::new();
+        while let Some(op) = m.peek() {
+            op.apply(&mut b).unwrap();
+            m.commit(b.metrics_mut());
+            events.extend(m.take_events());
+            ops.push(op);
+        }
+        (ops, b.metrics_mut().clone(), events)
+    }
+
+    #[test]
+    fn lookahead_zero_is_bit_identical_to_default() {
+        // lookahead_k = 0 (the default) must not change one bit of the
+        // op stream or the GPU clock — the serial ping-pong exactly.
+        for seed in [3u64, 4, 7, 11] {
+            let (ops_default, qm_default, _) = drive(Scheme::SpecReason, seed);
+            let (ops0, qm0, _) = drive_lookahead(Scheme::SpecReason, seed, 0);
+            assert_eq!(ops0, ops_default, "seed {seed}");
+            assert_eq!(qm0.gpu_secs.to_bits(), qm_default.gpu_secs.to_bits(), "seed {seed}");
+            assert!(ops0.iter().all(|op| !matches!(op, EngineOp::DraftAhead { .. })));
+            assert_eq!(qm0.lookahead_drafted_tokens, 0);
+            assert_eq!(qm0.lookahead_discarded_tokens, 0);
+            assert_eq!(qm0.lookahead_overlap_gpu, 0.0);
+            assert!(!qm0.phase_gpu.contains_key(Phase::LookaheadDraft.name()));
+        }
+    }
+
+    #[test]
+    fn lookahead_preserves_every_decision_metric() {
+        // Drafted-ahead steps reuse the exact serial oracle decisions,
+        // so at any depth only the GPU accounting may move — never the
+        // steps, scores, tokens or the final answer.
+        let mut total_overlap = 0.0;
+        let mut total_drafted = 0usize;
+        for seed in [3u64, 4, 7, 11] {
+            let (_, qm0, _) = drive_lookahead(Scheme::SpecReason, seed, 0);
+            for k in [1usize, 2, 4] {
+                let (_, qmk, _) = drive_lookahead(Scheme::SpecReason, seed, k);
+                assert_eq!(qmk.steps_total, qm0.steps_total, "seed {seed} k {k}");
+                assert_eq!(qmk.steps_speculated, qm0.steps_speculated, "seed {seed} k {k}");
+                assert_eq!(qmk.steps_accepted, qm0.steps_accepted, "seed {seed} k {k}");
+                assert_eq!(qmk.verify_scores, qm0.verify_scores, "seed {seed} k {k}");
+                assert_eq!(qmk.thinking_tokens, qm0.thinking_tokens, "seed {seed} k {k}");
+                assert_eq!(qmk.tokens_base, qm0.tokens_base, "seed {seed} k {k}");
+                assert_eq!(
+                    qmk.tokens_small_accepted, qm0.tokens_small_accepted,
+                    "seed {seed} k {k}"
+                );
+                assert_eq!(qmk.answer_correct, qm0.answer_correct, "seed {seed} k {k}");
+                assert!(
+                    qmk.lookahead_discarded_tokens <= qmk.lookahead_drafted_tokens,
+                    "seed {seed} k {k}"
+                );
+                total_overlap += qmk.lookahead_overlap_gpu;
+                total_drafted += qmk.lookahead_drafted_tokens;
+            }
+        }
+        // Across the sweep the pipeline must actually fire: drafts were
+        // planned and some of their cost hid under verify windows.
+        assert!(total_drafted > 0);
+        assert!(total_overlap > 0.0);
+    }
+
+    #[test]
+    fn lookahead_rollback_restores_backend_frontier() {
+        // Whatever interleaving of draft growth and discard a seed
+        // produces, the backend's KV mirror must land exactly where the
+        // serial run lands: thinking + answer tokens, nothing drafted
+        // left resident.
+        for scheme in Scheme::all() {
+            for seed in [4u64, 7] {
+                let oracle = Oracle::default();
+                let q = TraceGenerator::new(Dataset::Aime, seed).query(1);
+                let cfg =
+                    SpecConfig { scheme, lookahead_k: 3, ..Default::default() };
+                let mut b = sim();
+                b.begin(&q).unwrap();
+                let mut m = StepMachine::new(
+                    &oracle,
+                    Cow::Owned(q),
+                    Cow::Owned(combo()),
+                    Cow::Owned(cfg.clone()),
+                    0,
+                );
+                while let Some(op) = m.peek() {
+                    op.apply(&mut b).unwrap();
+                    m.commit(b.metrics_mut());
+                }
+                assert_eq!(
+                    b.thinking_tokens(),
+                    b.metrics_mut().thinking_tokens + cfg.answer_tokens,
+                    "{scheme:?} seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookahead_event_taxonomy_is_consistent() {
+        // Every draft_accepted / draft_discarded event refers to a step
+        // that was previously drafted with the same token count, and
+        // token totals tie out with the metric counters.
+        let mut saw_accept = false;
+        for seed in [3u64, 4, 7, 11] {
+            let (_, qm, events) = drive_lookahead(Scheme::SpecReason, seed, 2);
+            let drafted: Vec<(usize, usize)> = events
+                .iter()
+                .filter(|e| e.kind == StepKind::Drafted)
+                .map(|e| (e.step, e.tokens))
+                .collect();
+            let drafted_total: usize = drafted.iter().map(|&(_, t)| t).sum();
+            assert_eq!(drafted_total, qm.lookahead_drafted_tokens, "seed {seed}");
+            let discarded_total: usize = events
+                .iter()
+                .filter(|e| e.kind == StepKind::DraftDiscarded)
+                .map(|e| e.tokens)
+                .sum();
+            assert_eq!(discarded_total, qm.lookahead_discarded_tokens, "seed {seed}");
+            for e in &events {
+                match e.kind {
+                    StepKind::DraftAccepted | StepKind::DraftDiscarded => {
+                        assert!(
+                            drafted.contains(&(e.step, e.tokens)),
+                            "seed {seed}: {:?} for a step never drafted",
+                            e.kind
+                        );
+                        if e.kind == StepKind::DraftAccepted {
+                            saw_accept = true;
+                            assert!(e.score.is_some());
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // Event streams stay deterministic under lookahead.
+            let (_, _, events2) = drive_lookahead(Scheme::SpecReason, seed, 2);
+            assert_eq!(events, events2);
+        }
+        assert!(saw_accept, "no draft was ever consumed+accepted across the sweep");
     }
 
     #[test]

@@ -119,6 +119,11 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     let cmd = exec_opts(common_opts(Command::new("specreason serve", "start the TCP server")))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
         .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"))
+        .opt(
+            "lookahead",
+            "draft up to k future steps while the base model verifies (0 = serial)",
+            None,
+        )
         .opt("seed", "default workload seed for requests that omit one", None)
         .flag(
             "prefix-cache",
@@ -147,6 +152,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     let mut cfg = deploy_from(&args)?;
     cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
+    cfg.lookahead_k = args.usize("lookahead", cfg.lookahead_k)?;
     cfg.seed = args.u64("seed", cfg.seed)?;
     if args.flag("prefix-cache") {
         cfg.prefix_cache = true;

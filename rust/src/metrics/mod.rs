@@ -32,6 +32,9 @@ pub enum Phase {
     SpecDraft,
     /// Token-level speculative decoding: base verification pass.
     SpecVerify,
+    /// Lookahead pipelining: small model drafting future steps while a
+    /// base-model verification is in flight (PR 8).
+    LookaheadDraft,
 }
 
 impl Phase {
@@ -45,6 +48,7 @@ impl Phase {
             Phase::Answer => "answer",
             Phase::SpecDraft => "spec_draft",
             Phase::SpecVerify => "spec_verify",
+            Phase::LookaheadDraft => "lookahead_draft",
         }
     }
 }
@@ -127,6 +131,17 @@ pub struct QueryMetrics {
     pub answer_correct: bool,
     /// Utility scores assigned by the verifier (for Fig. 7).
     pub verify_scores: Vec<u8>,
+    /// Lookahead pipelining: tokens drafted ahead of verification.
+    pub lookahead_drafted_tokens: usize,
+    /// Lookahead pipelining: drafted tokens discarded unverified (waste).
+    pub lookahead_discarded_tokens: usize,
+    /// GPU seconds of draft work hidden under in-flight verification
+    /// (refunded from `gpu_secs` — the pipelining win).
+    pub lookahead_overlap_gpu: f64,
+    /// Transient executor scratch: the GPU span of the most recent
+    /// verification pass, armed at verify time and consumed by the next
+    /// draft-ahead credit.  Not a reported metric.
+    pub lookahead_window_gpu: f64,
 }
 
 impl QueryMetrics {
@@ -158,6 +173,14 @@ impl QueryMetrics {
             return 0.0;
         }
         self.draft_tokens_accepted as f64 / self.draft_tokens_proposed as f64
+    }
+
+    /// Fraction of lookahead-drafted tokens discarded unverified.
+    pub fn lookahead_waste_ratio(&self) -> f64 {
+        if self.lookahead_drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.lookahead_discarded_tokens as f64 / self.lookahead_drafted_tokens as f64
     }
 }
 

@@ -534,6 +534,15 @@ pub struct RouterStats {
     /// `queue_severe` / `queue_depth` / `retry_storm` / `kv_blocked` /
     /// `recovered`.
     pub degrade_last_reason: String,
+    /// Lookahead pipelining (`lookahead_k > 0`): tokens drafted ahead of
+    /// verification, summed over completed requests.
+    pub lookahead_drafted_tokens: u64,
+    /// Lookahead pipelining: drafted tokens discarded unverified (the
+    /// pipelining waste).
+    pub lookahead_discarded_tokens: u64,
+    /// GPU seconds of draft work hidden under in-flight verification,
+    /// summed over completed requests (the pipelining win).
+    pub lookahead_overlap_gpu_s: f64,
 }
 
 impl RouterStats {
@@ -612,7 +621,36 @@ impl RouterStats {
                     ("last_reason", Json::str(&self.degrade_last_reason)),
                 ]),
             ),
+            // Additive, same pattern as `degrade`: draft-hit/waste
+            // accounting for lookahead pipelining.
+            (
+                "lookahead",
+                Json::obj(vec![
+                    (
+                        "drafted_tokens",
+                        Json::num(self.lookahead_drafted_tokens as f64),
+                    ),
+                    (
+                        "discarded_tokens",
+                        Json::num(self.lookahead_discarded_tokens as f64),
+                    ),
+                    ("accepted_ratio", Json::num(self.lookahead_accepted_ratio())),
+                    ("overlap_gpu_s", Json::num(self.lookahead_overlap_gpu_s)),
+                ]),
+            ),
         ])
+    }
+
+    /// Fraction of lookahead-drafted tokens that survived to be consumed
+    /// by the step they were drafted for (1 − waste ratio); 0 when
+    /// nothing was drafted.
+    pub fn lookahead_accepted_ratio(&self) -> f64 {
+        if self.lookahead_drafted_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.lookahead_discarded_tokens as f64
+                / self.lookahead_drafted_tokens as f64
+        }
     }
 }
 
@@ -984,6 +1022,9 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
                 reg.gauge_set("prefix.cached_blocks", ps.cached_blocks as f64);
                 reg.gauge_set("prefix.shared_blocks", ps.shared_blocks as f64);
                 reg.gauge_set("faults.injected_total", injected as f64);
+                if s.lookahead_drafted_tokens > 0 {
+                    reg.gauge_set("lookahead.accepted_ratio", s.lookahead_accepted_ratio());
+                }
             }
             if injected > last_faults {
                 shared.obs.flight.record(
@@ -1295,6 +1336,9 @@ fn admit<'e>(
                 != DegradeMode::Normal
         {
             job.req.spec.scheme = Scheme::VanillaBase;
+            // Base-only mode has nothing to pipeline: lookahead rides
+            // step speculation, so the pin disables it with the scheme.
+            job.req.spec.lookahead_k = 0;
             job.degraded = true;
             lock(&shared.stats).degraded_admissions += 1;
             if let Some(id) = job.trace_id {
@@ -1570,6 +1614,9 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                     if cfg.slo_ms > 0 && e2e_s * 1000.0 > cfg.slo_ms as f64 {
                         s.slo_violations += 1;
                     }
+                    s.lookahead_drafted_tokens += qm.lookahead_drafted_tokens as u64;
+                    s.lookahead_discarded_tokens += qm.lookahead_discarded_tokens as u64;
+                    s.lookahead_overlap_gpu_s += qm.lookahead_overlap_gpu;
                 }
                 // Always-on latency histograms behind the `stats` op's
                 // mean fields (quantiles ride next to them).
@@ -1577,6 +1624,20 @@ fn finalize(engine: &Engine, cfg: &DeployConfig, shared: &Shared, running: &mut 
                 reg.observe("scheduler.e2e_s", e2e_s);
                 reg.observe("scheduler.ttfs_s", ttfs_s);
                 reg.observe("scheduler.ttfe_s", ttfe_s);
+                // Lookahead draft-hit/waste accounting (inert at k = 0:
+                // nothing was drafted, so nothing is recorded and the
+                // registry dump stays bit-identical).
+                if qm.lookahead_drafted_tokens > 0 {
+                    reg.counter_add(
+                        "lookahead.drafted_tokens",
+                        qm.lookahead_drafted_tokens as u64,
+                    );
+                    reg.counter_add(
+                        "lookahead.discarded_tokens",
+                        qm.lookahead_discarded_tokens as u64,
+                    );
+                    reg.observe("lookahead.overlap_gpu_s", qm.lookahead_overlap_gpu);
+                }
                 trace_close(&shared.obs, job.trace_id, "result", "");
                 let result = JobResult {
                     metrics: qm,
@@ -1628,6 +1689,9 @@ mod tests {
         s.degrade_transitions = 2;
         s.degrade_mode = 1;
         s.degrade_last_reason = "queue_depth".to_string();
+        s.lookahead_drafted_tokens = 200;
+        s.lookahead_discarded_tokens = 50;
+        s.lookahead_overlap_gpu_s = 1.5;
         let j = s.to_json();
         assert_eq!(j.get("admitted").as_usize(), Some(5));
         assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
@@ -1652,6 +1716,11 @@ mod tests {
         assert_eq!(d.get("mode").as_str(), Some("base_only"));
         assert_eq!(d.get("transitions").as_usize(), Some(2));
         assert_eq!(d.get("last_reason").as_str(), Some("queue_depth"));
+        let la = j.get("lookahead");
+        assert_eq!(la.get("drafted_tokens").as_usize(), Some(200));
+        assert_eq!(la.get("discarded_tokens").as_usize(), Some(50));
+        assert!((la.get("accepted_ratio").as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert!((la.get("overlap_gpu_s").as_f64().unwrap() - 1.5).abs() < 1e-12);
     }
 
     #[test]

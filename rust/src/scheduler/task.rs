@@ -13,7 +13,11 @@
 //! * verification ops (templated §4.1 scoring and spec-decode catch-up) →
 //!   [`Engine::scored_prefill_batch`];
 //! * rollbacks (pure KV bookkeeping, no compute) execute inline before
-//!   the batches are composed.
+//!   the batches are composed;
+//! * lookahead draft-ahead ops run in follow-on sub-rounds *within the
+//!   same tick*, so a sequence whose verification just committed
+//!   contributes both that verify and its optimistic draft suffix to
+//!   one scheduling step (inert at `lookahead_k = 0`).
 //!
 //! Per-task op order is exactly the machine's plan order, and each task's
 //! ops run on its own sequence, so a task's results are independent of
@@ -24,8 +28,8 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::coordinator::{
-    execute_op, inject_op_fault, verify_template, Combo, EngineOp, Role, SeedStream, StepMachine,
-    TaskPhase,
+    arm_overlap_window, credit_draft_overlap, execute_op, inject_op_fault, lookahead_gpu,
+    verify_template, Combo, EngineOp, Role, SeedStream, StepMachine, TaskPhase,
 };
 use crate::engine::{BatchDecode, BatchVerify, Engine, Sequence};
 use crate::metrics::{Phase, QueryMetrics};
@@ -209,12 +213,24 @@ pub(crate) fn tick(
     // pass), so the charge is subtracted once the batch returns, exactly
     // like the serial executor does.
     let mut bonus_before: Vec<(usize, f64)> = Vec::new();
+    // `gpu_secs` before each composed verify pass, parallel to
+    // `verify_idx`: once the pass commits, its span arms the task's
+    // verify-overlap window (the same sample-execute-arm sequence the
+    // serial executor runs) so this tick's lookahead draft sub-rounds
+    // below can refund work hidden under it.
+    let mut verify_before: Vec<f64> = Vec::new();
     for (i, t) in running.iter_mut().enumerate() {
         if t.failed.is_some() {
             continue;
         }
         let tphase = t.machine.phase();
         let Some(op) = t.machine.peek() else { continue };
+        if matches!(op, EngineOp::DraftAhead { .. }) {
+            // Lookahead drafts run in the sub-rounds below (after their
+            // verify has committed and armed the window); skipping here
+            // keeps the fault-site op index gated exactly once per op.
+            continue;
+        }
         if !t.gate_front_op(engine) {
             continue;
         }
@@ -232,6 +248,7 @@ pub(crate) fn tick(
                     verify_template(engine, template_len)
                 };
                 t.note_first_op();
+                verify_before.push(t.qm.gpu_secs);
                 verify_reqs.push(BatchVerify {
                     seq: &mut t.seq,
                     model: &combo.base,
@@ -264,7 +281,7 @@ pub(crate) fn tick(
     }
 
     let [spec_group, fallback_group, answer_group] = decode_groups;
-    let stepped = verify_idx.len()
+    let mut stepped = verify_idx.len()
         + spec_group.1.len()
         + fallback_group.1.len()
         + answer_group.1.len();
@@ -302,6 +319,71 @@ pub(crate) fn tick(
     commit(&spec_group.1, drop_payload(spec_results));
     commit(&fallback_group.1, drop_payload(fallback_results));
     commit(&answer_group.1, drop_payload(answer_results));
+
+    // --- arm each committed verify's overlap window (serial parity:
+    // `EngineOp::apply` does the same around `backend.verify_pass`) ---
+    for (k, &i) in verify_idx.iter().enumerate() {
+        let t = &mut running[i];
+        if t.failed.is_none() {
+            arm_overlap_window(&mut t.qm, verify_before[k]);
+        }
+    }
+
+    // --- lookahead draft sub-rounds: a sequence whose verify committed
+    // above immediately contributes its draft-ahead ops to follow-on
+    // small-model decode batches *within the same tick*, so one
+    // sequence's verify and drafts share a scheduling step.  Each
+    // sub-round advances every drafting task by one DraftAhead op; the
+    // loop runs at most `lookahead_k` times and composes nothing at all
+    // when lookahead is off (bit-identical tick).  ---
+    loop {
+        let mut draft_reqs: Vec<BatchDecode<'_>> = Vec::new();
+        let mut draft_idx: Vec<usize> = Vec::new();
+        let mut draft_before: Vec<f64> = Vec::new();
+        for (i, t) in running.iter_mut().enumerate() {
+            if t.failed.is_some() {
+                continue;
+            }
+            let Some(EngineOp::DraftAhead { n }) = t.machine.peek() else { continue };
+            if !t.gate_front_op(engine) {
+                continue;
+            }
+            t.note_first_op();
+            let seed = t.seeds.next();
+            draft_before.push(lookahead_gpu(&t.qm));
+            draft_reqs.push(BatchDecode {
+                seq: &mut t.seq,
+                model: combo.small.as_str(),
+                n,
+                seed,
+                phase: Phase::LookaheadDraft,
+                qm: &mut t.qm,
+            });
+            draft_idx.push(i);
+        }
+        if draft_idx.is_empty() {
+            break;
+        }
+        let draft_results = engine.decode_batch(draft_reqs);
+        for (k, r) in drop_payload(draft_results).into_iter().enumerate() {
+            let t = &mut running[draft_idx[k]];
+            match r {
+                Ok(()) => {
+                    // Refund the part of the draft hidden under the
+                    // armed verify window (same arithmetic as the
+                    // serial executor, so metrics parity holds).
+                    credit_draft_overlap(&mut t.qm, draft_before[k]);
+                    t.machine.commit(&mut t.qm);
+                    if let Some(c) = t.traced.as_mut() {
+                        c.sync(&obs.tracer, &t.qm);
+                    }
+                    t.flush_events();
+                    stepped += 1;
+                }
+                Err(e) => t.failed = Some(e),
+            }
+        }
+    }
 
     TickReport { stepped }
 }

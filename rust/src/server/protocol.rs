@@ -331,6 +331,9 @@ pub fn metrics_to_json(m: &QueryMetrics, scheme: Scheme) -> Json {
         ("steps_accepted", Json::num(m.steps_accepted as f64)),
         ("acceptance_rate", Json::num(m.acceptance_rate())),
         ("offload_ratio", Json::num(m.offload_ratio())),
+        ("lookahead_drafted_tokens", Json::num(m.lookahead_drafted_tokens as f64)),
+        ("lookahead_discarded_tokens", Json::num(m.lookahead_discarded_tokens as f64)),
+        ("lookahead_overlap_gpu_s", Json::num(m.lookahead_overlap_gpu)),
         ("phase_wall", phases),
     ])
 }
@@ -564,5 +567,7 @@ mod tests {
         let j = metrics_to_json(&m, Scheme::SpecReason);
         assert_eq!(j.get("correct").as_bool(), Some(true));
         assert_eq!(j.get("thinking_tokens").as_usize(), Some(321));
+        assert_eq!(j.get("lookahead_drafted_tokens").as_usize(), Some(0));
+        assert_eq!(j.get("lookahead_overlap_gpu_s").as_f64(), Some(0.0));
     }
 }

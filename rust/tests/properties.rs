@@ -539,6 +539,109 @@ fn prop_determinism_across_runs() {
     });
 }
 
+/// Lookahead pipelining conservation: across random schemes, datasets,
+/// knobs and depths `k`, draft-frontier grow/rollback interleavings —
+/// including a preemption-style fault injected at a random op boundary
+/// with drafts outstanding — never change a decision, never leak
+/// frontier tokens, and always unwind to the exact pre-admission
+/// backend state.
+#[test]
+fn prop_lookahead_frontier_conservation_under_faults() {
+    use specreason::coordinator::{Backend, EngineOp, StepMachine};
+    use std::borrow::Cow;
+
+    let oracle = Oracle::default();
+    check("lookahead frontier conservation", 120, |rng| {
+        let dataset = Dataset::all()[rng.below(3)];
+        let scheme = [Scheme::SpecReason, Scheme::SpecReasonPlusDecode][rng.below(2)];
+        let k = rng.below(5); // 0..=4, 0 = serial control
+        let cfg = SpecConfig {
+            scheme,
+            policy: AcceptancePolicy::Static { threshold: rng.range(0, 9) as u8 },
+            token_budget: rng.range(64, 512),
+            lookahead_k: k,
+            ..Default::default()
+        };
+        let serial_cfg = SpecConfig { lookahead_k: 0, ..cfg.clone() };
+        let combo = Combo::new("qwq-sim", "r1-sim");
+        let q = TraceGenerator::new(dataset, rng.next_u64()).query(rng.below(16));
+        let sample = rng.below(4);
+        let sim = || SimBackend::new(GpuClock::new(Testbed::A6000x2), "small", "base");
+
+        // Serial reference run.
+        let mut b0 = sim();
+        let serial = run_query(&oracle, &q, &combo, &serial_cfg, &mut b0, sample).unwrap();
+
+        // Faulted pipelined run: drive the machine by hand and, at a
+        // random op boundary, abort like the scheduler's preemption
+        // rollback — unwind the whole generated frontier (verified
+        // prefix + drafted suffix) through the rollback op.
+        let abort_after = rng.below(40);
+        let mut b = sim();
+        b.begin(&q).unwrap();
+        let mut m = StepMachine::new(
+            &oracle,
+            Cow::Borrowed(&q),
+            Cow::Borrowed(&combo),
+            Cow::Borrowed(&cfg),
+            sample,
+        );
+        let mut ops = 0usize;
+        let mut saw_draft_at_abort = false;
+        while let Some(op) = m.peek() {
+            if ops == abort_after {
+                saw_draft_at_abort = matches!(op, EngineOp::DraftAhead { .. });
+                break;
+            }
+            op.apply(&mut b).unwrap();
+            m.commit(b.metrics_mut());
+            // The frontier (including unverified drafts) never outgrows
+            // the budget plus the answer suffix.
+            assert!(
+                b.thinking_tokens() <= cfg.token_budget + cfg.answer_tokens,
+                "frontier {} > budget {} + answer {}",
+                b.thinking_tokens(),
+                cfg.token_budget,
+                cfg.answer_tokens
+            );
+            ops += 1;
+        }
+        let frontier = b.thinking_tokens();
+        if frontier > 0 {
+            EngineOp::Rollback { n: frontier }.apply(&mut b).unwrap();
+        }
+        assert_eq!(
+            b.thinking_tokens(),
+            0,
+            "rollback of the full frontier must restore the prompt-only state \
+             (aborted at op {abort_after}, drafted front: {saw_draft_at_abort})"
+        );
+        // Accounting conservation even on the aborted partial run.
+        let qm = b.metrics_mut();
+        assert!(qm.lookahead_discarded_tokens <= qm.lookahead_drafted_tokens);
+
+        // Replay from scratch (the scheduler's restart path) and a
+        // straight-through pipelined run must both reproduce the serial
+        // decisions exactly.
+        for label in ["replay", "straight"] {
+            let mut b1 = sim();
+            let out = run_query(&oracle, &q, &combo, &cfg, &mut b1, sample).unwrap();
+            let (a, s) = (&out.metrics, &serial.metrics);
+            assert_eq!(a.thinking_tokens, s.thinking_tokens, "{label}: thinking");
+            assert_eq!(a.steps_total, s.steps_total, "{label}: steps_total");
+            assert_eq!(a.steps_speculated, s.steps_speculated, "{label}: speculated");
+            assert_eq!(a.steps_accepted, s.steps_accepted, "{label}: accepted");
+            assert_eq!(a.verify_scores, s.verify_scores, "{label}: scores");
+            assert_eq!(a.answer_correct, s.answer_correct, "{label}: correctness");
+            assert!(a.lookahead_discarded_tokens <= a.lookahead_drafted_tokens, "{label}");
+            if k == 0 {
+                assert_eq!(a.lookahead_drafted_tokens, 0, "{label}: serial must not draft");
+                assert_eq!(a.gpu_secs.to_bits(), s.gpu_secs.to_bits(), "{label}: k=0 bits");
+            }
+        }
+    });
+}
+
 // ---------------------------------------------------------------------
 // Calibration regression: the sim must stay inside the paper's bands.
 // (Seeds fixed; these are statistical but deterministic.)

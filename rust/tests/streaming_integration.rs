@@ -625,3 +625,212 @@ fn tracing_on_stays_bit_identical_to_off() {
         assert_deterministic_eq(&on[i], &off[i], &format!("query {i}"));
     }
 }
+
+/// Compare every *decision* field of two `QueryMetrics` — the subset
+/// that lookahead pipelining must never change (GPU-clock totals
+/// legitimately differ: overlapped drafts refund verify-shadow time).
+fn assert_decisions_eq(
+    a: &specreason::metrics::QueryMetrics,
+    b: &specreason::metrics::QueryMetrics,
+    ctx: &str,
+) {
+    assert_eq!(a.thinking_tokens, b.thinking_tokens, "{ctx}: thinking_tokens");
+    assert_eq!(a.steps_total, b.steps_total, "{ctx}: steps_total");
+    assert_eq!(a.steps_speculated, b.steps_speculated, "{ctx}: steps_speculated");
+    assert_eq!(a.steps_accepted, b.steps_accepted, "{ctx}: steps_accepted");
+    assert_eq!(a.verify_scores, b.verify_scores, "{ctx}: verify_scores");
+    assert_eq!(a.answer_correct, b.answer_correct, "{ctx}: answer_correct");
+}
+
+/// `lookahead_k = 0` (the default) is the serial serving path,
+/// bit-for-bit: re-runs are bit-identical, no `lookahead_draft` phase
+/// bucket ever appears, and the draft counters stay zero.  With
+/// `lookahead_k = 2` on the same workload every decision metric is
+/// unchanged while drafts demonstrably flow.
+#[test]
+fn lookahead_zero_is_serial_and_k_preserves_decisions() {
+    if !have_artifacts() {
+        eprintln!("skipping lookahead_zero_is_serial_and_k_preserves_decisions: no artifacts/");
+        return;
+    }
+    let n = 3;
+    let run = |k: usize| -> Vec<specreason::metrics::QueryMetrics> {
+        let mut cfg = deploy(1, 96);
+        cfg.lookahead_k = k;
+        let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+        let out: Vec<_> = (0..n)
+            .map(|i| {
+                sched
+                    .submit(job(&cfg, Dataset::Math500, i))
+                    .expect("submit")
+                    .recv_timeout(EVENT_TIMEOUT)
+                    .expect("reply dropped")
+                    .expect("query failed")
+                    .metrics
+            })
+            .collect();
+        if k > 0 {
+            let s = sched.stats();
+            assert!(s.lookahead_drafted_tokens > 0, "k={k} must draft");
+            assert!(s.lookahead_discarded_tokens <= s.lookahead_drafted_tokens);
+        }
+        sched.shutdown();
+        out
+    };
+    let serial_a = run(0);
+    let serial_b = run(0);
+    let pipelined = run(2);
+    for i in 0..n {
+        // Serial path is bit-identical across runs (the k = 0 contract).
+        assert_deterministic_eq(&serial_a[i], &serial_b[i], &format!("serial rerun {i}"));
+        assert!(
+            !serial_a[i].phase_gpu.contains_key("lookahead_draft"),
+            "serial run {i} must never open a lookahead_draft phase"
+        );
+        assert_eq!(serial_a[i].lookahead_drafted_tokens, 0, "serial run {i}");
+        assert_eq!(serial_a[i].lookahead_discarded_tokens, 0, "serial run {i}");
+        // Pipelined path changes scheduling, never answers.
+        assert_decisions_eq(&pipelined[i], &serial_a[i], &format!("k=2 vs serial {i}"));
+    }
+    assert!(
+        pipelined.iter().any(|m| m.lookahead_overlap_gpu > 0.0),
+        "k=2 must overlap at least one draft with a verify shadow"
+    );
+}
+
+/// Rejected (and cancelled) draft suffixes unwind through the
+/// preemption-rollback path: after completion *and* after a mid-flight
+/// cancel with drafts outstanding, the KV reservation ledger and the
+/// prefix-cache refcount gauges return to the exact serial baseline,
+/// and drafted blocks never publish into the prefix cache.
+#[test]
+fn lookahead_rejected_drafts_return_kv_and_ledger_to_baseline() {
+    if !have_artifacts() {
+        eprintln!(
+            "skipping lookahead_rejected_drafts_return_kv_and_ledger_to_baseline: no artifacts/"
+        );
+        return;
+    }
+    let mut cfg = deploy(1, 256);
+    cfg.prefix_cache = true;
+    cfg.lookahead_k = 3;
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    assert_eq!(sched.stats().kv_reserved_blocks, 0, "pre-admission baseline");
+
+    let wait_baseline = |ctx: &str| {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let s = sched.stats();
+            if s.kv_reserved_blocks == 0 && s.running == 0 && s.prefix_blocks_shared == 0 {
+                break s;
+            }
+            assert!(Instant::now() < deadline, "{ctx}: never returned to baseline");
+            thread::sleep(Duration::from_millis(5));
+        }
+    };
+
+    // First job runs to completion with drafting on; the default
+    // threshold rejects some speculations, so discarded suffixes are
+    // exercised on the way.
+    let r1 = sched
+        .submit(job(&cfg, Dataset::Aime, 0))
+        .expect("submit first")
+        .recv_timeout(EVENT_TIMEOUT)
+        .expect("reply dropped")
+        .expect("first query failed");
+    assert!(r1.metrics.lookahead_drafted_tokens > 0, "lookahead must engage");
+    let base = wait_baseline("after completion");
+    let cached_after_first = base.prefix_cached_blocks;
+    assert!(cached_after_first > 0, "the prompt prefix must be cached");
+
+    // Second job: cancel mid-flight while the drafted frontier is live.
+    // The rollback must drain drafted KV too — same baseline, and the
+    // cache gauge is untouched (drafted blocks never published).
+    let second = sched.submit(job(&cfg, Dataset::Aime, 0)).expect("submit second");
+    loop {
+        match second.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Step(_) => break,
+            JobEvent::Queued | JobEvent::Admitted => continue,
+            other => panic!("unexpected pre-step event: {other:?}"),
+        }
+    }
+    assert!(sched.stats().kv_reserved_blocks > 0);
+    second.cancel();
+    loop {
+        match second.next_event_timeout(EVENT_TIMEOUT).expect("event") {
+            JobEvent::Cancelled => break,
+            ev if ev.is_terminal() => panic!("wrong terminal after cancel: {ev:?}"),
+            _ => continue,
+        }
+    }
+    let after_cancel = wait_baseline("after cancel with drafts outstanding");
+    assert_eq!(after_cancel.cancelled, 1);
+    assert_eq!(
+        after_cancel.prefix_cached_blocks, cached_after_first,
+        "drafted frontier blocks must never publish into the prefix cache"
+    );
+
+    // The engine stays healthy: a fresh identical request completes and
+    // its decisions match the first run exactly.
+    let r3 = sched
+        .submit(job(&cfg, Dataset::Aime, 0))
+        .expect("submit third")
+        .recv_timeout(EVENT_TIMEOUT)
+        .expect("reply dropped")
+        .expect("third query failed");
+    assert_decisions_eq(&r3.metrics, &r1.metrics, "post-cancel rerun");
+    sched.shutdown();
+}
+
+/// Under lookahead every job still emits exactly one terminal event,
+/// draft lifecycle events (`drafted` / `draft_accepted` /
+/// `draft_discarded`) flow through the stream, and their token
+/// accounting is conserved: every accepted or discarded draft was
+/// drafted first.
+#[test]
+fn lookahead_jobs_emit_exactly_one_terminal_event() {
+    if !have_artifacts() {
+        eprintln!("skipping lookahead_jobs_emit_exactly_one_terminal_event: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(2, 96);
+    cfg.lookahead_k = 2;
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let handles: Vec<_> = (0..4)
+        .map(|i| sched.submit(job(&cfg, Dataset::Math500, i)).expect("submit"))
+        .collect();
+    let mut total_drafted = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let mut drafted = 0usize;
+        let mut resolved = 0usize;
+        let mut terminals = 0usize;
+        loop {
+            let ev = h.next_event_timeout(EVENT_TIMEOUT).expect("event");
+            let terminal = ev.is_terminal();
+            match &ev {
+                JobEvent::Step(s) => match s.kind.name() {
+                    "drafted" => drafted += s.tokens,
+                    "draft_accepted" | "draft_discarded" => resolved += s.tokens,
+                    _ => {}
+                },
+                JobEvent::Result(_) => {}
+                JobEvent::Queued | JobEvent::Admitted => {}
+                other => panic!("job {i}: unexpected event {other:?}"),
+            }
+            if terminal {
+                terminals += 1;
+                break;
+            }
+        }
+        assert_eq!(terminals, 1, "job {i}");
+        // The stream is closed after the terminal: no trailing events.
+        assert!(
+            h.next_event_timeout(Duration::from_millis(200)).is_err(),
+            "job {i}: events after the terminal"
+        );
+        assert!(resolved <= drafted, "job {i}: resolved {resolved} > drafted {drafted}");
+        total_drafted += drafted;
+    }
+    assert!(total_drafted > 0, "lookahead must draft across the batch");
+    sched.shutdown();
+}
