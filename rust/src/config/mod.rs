@@ -320,6 +320,52 @@ impl DeployConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        // Exhaustive destructure: adding a DeployConfig field without
+        // deciding its validation story fails to compile here (and
+        // trips speclint's d4-drift gate).  Fields bound to `_` are
+        // free-form by design: any value a caller can express is legal.
+        let DeployConfig {
+            artifacts_dir: _,
+            base_model: _,
+            small_model: _,
+            addr: _,
+            kv_block_size: _,
+            kv_seqs_per_model: _,
+            prefix_cache: _,
+            prefix_cache_blocks: _,
+            temperature: _,
+            seed: _,
+            scheme: _,
+            threshold: _,
+            first_n_base: _,
+            token_budget: _,
+            answer_tokens: _,
+            verify_template_len: _,
+            draft_k: _,
+            lookahead_k: _,
+            max_queue: _,
+            io_threads: _,
+            max_batch: _,
+            preempt: _,
+            slo_ms: _,
+            exec: _,
+            fault_plan: _,
+            max_step_retries: _,
+            retry_backoff_ms: _,
+            degrade: _,
+            degrade_queue_hiwater: _,
+            degrade_shed_hiwater: _,
+            degrade_enter_ticks: _,
+            degrade_exit_ticks: _,
+            degrade_retry_storm: _,
+            degrade_retry_after_ms: _,
+            idle_poll_ms: _,
+            stream_poll_ms: _,
+            obs_trace: _,
+            obs_trace_dir: _,
+            obs_trace_keep: _,
+            obs_flight_events: _,
+        } = self;
         anyhow::ensure!(self.token_budget >= 16, "token_budget too small");
         anyhow::ensure!(self.kv_block_size >= 1, "kv_block_size must be >= 1");
         anyhow::ensure!(

@@ -84,6 +84,10 @@ impl Default for EngineConfig {
 // raw pointers inside the xla wrapper types are what block the auto
 // impls.
 unsafe impl Send for Engine {}
+// SAFETY: shared references only reach PJRT through its synchronized
+// client (see the Send justification above); every &self method that
+// mutates crate-side state (kv_mgr, seq counter, clock) does so through
+// a Mutex or atomic, so &Engine is safe to share across threads.
 unsafe impl Sync for Engine {}
 
 // SAFETY: a Sequence owns its Literals exclusively; moving them between

@@ -585,7 +585,11 @@ impl BlockPool {
                 owners[b as usize] += 1;
             }
         }
-        let mut seen_free = std::collections::HashSet::new();
+        // BTreeSet (not HashSet): membership-only today, but a
+        // RandomState-keyed container in the KV ledger is a d1-nondet
+        // hazard the moment someone iterates it — keep the whole
+        // decision path ordered by construction.
+        let mut seen_free = std::collections::BTreeSet::new();
         for &b in &self.free {
             assert!(seen_free.insert(b), "block {b} on the free list twice");
             assert_eq!(owners[b as usize], 0, "free block {b} still owned");

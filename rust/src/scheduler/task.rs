@@ -128,6 +128,8 @@ impl SeqTask<'_> {
     /// timestamp survives preemption restarts).
     pub fn note_first_op(&mut self) {
         if self.job.first_op_at.is_none() {
+            // speclint: allow(d1-nondet) — TTFS metric timestamp only;
+            // never read by StepMachine/policy decisions.
             self.job.first_op_at = Some(Instant::now());
         }
     }
@@ -138,6 +140,8 @@ impl SeqTask<'_> {
     pub fn flush_events(&mut self) {
         for ev in self.machine.take_events() {
             if self.job.first_event_at.is_none() {
+                // speclint: allow(d1-nondet) — TTFE metric timestamp
+                // only; the event payload it stamps is already decided.
                 self.job.first_event_at = Some(Instant::now());
             }
             let _ = self.job.events.send(super::JobEvent::Step(ev));

@@ -1,0 +1,18 @@
+pub struct Clock;
+
+impl Clock {
+    pub fn stamp(&self) -> u128 {
+        // speclint: allow(d1-nondet) — fixture: metric-only timestamp, never branches.
+        std::time::Instant::now().elapsed().as_nanos()
+    }
+
+    pub fn bad(&self) -> u128 {
+        // speclint: allow(d1-nondet)
+        std::time::Instant::now().elapsed().as_nanos()
+    }
+
+    pub fn worse(&self) -> u128 {
+        // speclint: allow(d9-bogus) — not a rule
+        std::time::Instant::now().elapsed().as_nanos()
+    }
+}

@@ -1,0 +1,16 @@
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct Policy {
+    pub scores: HashMap<u64, u64>,
+}
+
+impl Policy {
+    pub fn decide(&self, step: usize) -> bool {
+        let t0 = Instant::now();
+        let tid = std::thread::current();
+        let knob = std::env::var("SPECLINT_FIXTURE").ok();
+        step % 2 == 0 && t0.elapsed().as_nanos() % 2 == 0
+            && knob.is_none() && format!("{:?}", tid).is_empty()
+    }
+}

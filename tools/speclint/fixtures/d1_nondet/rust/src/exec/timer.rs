@@ -1,0 +1,7 @@
+// Out of d1 scope: exec/ is free to read the clock (it feeds metrics,
+// not decisions), so this file must produce no findings.
+use std::time::Instant;
+
+pub fn stamp() -> u128 {
+    Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,21 @@
+use std::sync::{Mutex, MutexGuard};
+
+pub struct Alpha {
+    pub alpha: Mutex<u64>,
+}
+
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Alpha {
+    pub fn alpha_then_beta(&self, b: &Beta) {
+        let g = lock(&self.alpha);
+        beta_side(b, *g);
+    }
+}
+
+pub fn alpha_side(a: &Alpha, v: u64) {
+    let mut g = lock(&a.alpha);
+    *g += v;
+}

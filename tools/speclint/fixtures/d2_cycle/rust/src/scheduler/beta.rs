@@ -1,0 +1,17 @@
+use std::sync::Mutex;
+
+pub struct Beta {
+    pub beta: Mutex<u64>,
+}
+
+pub fn beta_side(b: &Beta, v: u64) {
+    let mut g = lock(&b.beta);
+    *g += v;
+}
+
+impl Beta {
+    pub fn beta_then_alpha(&self, a: &Alpha) {
+        let g = lock(&self.beta);
+        alpha_side(a, *g);
+    }
+}

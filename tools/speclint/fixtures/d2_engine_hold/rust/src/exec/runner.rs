@@ -1,0 +1,21 @@
+use std::sync::Mutex;
+
+pub static STATS: Mutex<u64> = Mutex::new(0);
+
+fn decode_batch(n: u64) -> u64 {
+    n + 1
+}
+
+pub fn step() {
+    let mut g = STATS.lock().unwrap_or_else(|e| e.into_inner());
+    *g = decode_batch(*g);
+}
+
+pub fn step_indirect() {
+    let g = STATS.lock().unwrap_or_else(|e| e.into_inner());
+    helper(*g);
+}
+
+fn helper(n: u64) {
+    decode_batch(n);
+}

@@ -1,0 +1,12 @@
+pub fn read_one(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for one byte.
+    unsafe { *p }
+}
+
+pub fn read_two(p: *const u8) -> u8 {
+    unsafe { *p.add(1) }
+}
+
+pub unsafe fn raw_len(p: *const u8) -> usize {
+    p as usize
+}

@@ -1,0 +1,18 @@
+#[derive(Default)]
+pub struct DeployConfig {
+    pub max_batch: usize,
+    pub mystery_knob: usize,
+}
+
+impl DeployConfig {
+    pub fn from_json_str(_s: &str) -> Result<Self, String> {
+        let mut c = Self::default();
+        c.max_batch = 9;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let DeployConfig { max_batch: _, .. } = self;
+        Ok(())
+    }
+}

@@ -1,0 +1,10 @@
+pub struct RouterStats {
+    pub enqueued: u64,
+    pub ghost_counter: u64,
+}
+
+impl RouterStats {
+    pub fn to_json(&self) -> String {
+        format!("{{\"enqueued\":{}}}", self.enqueued)
+    }
+}

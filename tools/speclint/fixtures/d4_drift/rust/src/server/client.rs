@@ -1,0 +1,10 @@
+pub enum WireEvent {
+    Token,
+}
+
+pub fn parse(kind: &str) -> Option<WireEvent> {
+    match kind {
+        "token" => Some(WireEvent::Token),
+        _ => None,
+    }
+}

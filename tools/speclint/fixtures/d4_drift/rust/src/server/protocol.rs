@@ -1,0 +1,15 @@
+pub struct Json;
+
+impl Json {
+    pub fn str(_s: &str) -> Json {
+        Json
+    }
+}
+
+pub fn token_frame() -> Vec<(&'static str, Json)> {
+    vec![("event", Json::str("token"))]
+}
+
+pub fn mystery_frame() -> Vec<(&'static str, Json)> {
+    vec![("event", Json::str("mystery_event"))]
+}

@@ -1,0 +1,5 @@
+#[test]
+fn stream_kinds() {
+    let seen = "WireEvent::Token";
+    assert!(!seen.is_empty());
+}

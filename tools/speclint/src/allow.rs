@@ -1,0 +1,163 @@
+//! Inline allowlist directives:
+//!
+//! ```text
+//! // speclint: allow(<rule>) — <justification>
+//! ```
+//!
+//! A directive on its own comment line targets the next code line; a
+//! trailing directive targets its own line.  The justification is
+//! mandatory — an allow without one is itself a blocking finding
+//! (`allow-syntax`), as is an unknown rule name.  Accepted separators
+//! before the justification: `—`, `--`, `-`, `:`.
+
+use crate::diag::{Diag, ALLOW_SYNTAX, RULES};
+use crate::lex::SourceFile;
+
+/// A validated allow directive: suppress `rule` findings on `target`.
+pub struct Allow {
+    pub rule: String,
+    pub target: usize,
+}
+
+/// Parse every directive in a file; malformed ones become diagnostics.
+pub fn parse(sf: &SourceFile) -> (Vec<Allow>, Vec<Diag>) {
+    let mut allows = Vec::new();
+    let mut diags = Vec::new();
+    for c in &sf.comments {
+        let Some(idx) = c.text.find("speclint:") else {
+            continue;
+        };
+        let line = sf.line_of(c.pos);
+        let rest = c.text[idx + "speclint:".len()..].trim();
+        let (Some(open), Some(close)) = (rest.find("allow("), rest.find(')')) else {
+            diags.push(Diag::new(
+                &sf.rel,
+                line,
+                ALLOW_SYNTAX,
+                "malformed speclint directive (expected `speclint: allow(<rule>) — <justification>`)"
+                    .to_string(),
+            ));
+            continue;
+        };
+        if open != 0 || close < open {
+            diags.push(Diag::new(
+                &sf.rel,
+                line,
+                ALLOW_SYNTAX,
+                "malformed speclint directive (expected `speclint: allow(<rule>) — <justification>`)"
+                    .to_string(),
+            ));
+            continue;
+        }
+        let rule = rest["allow(".len()..close].trim().to_string();
+        let tail = rest[close + 1..].trim();
+        let mut justification = "";
+        for sep in ["—", "--", "-", ":"] {
+            if let Some(j) = tail.strip_prefix(sep) {
+                justification = j.trim();
+                break;
+            }
+        }
+        if !RULES.contains(&rule.as_str()) {
+            diags.push(Diag::new(
+                &sf.rel,
+                line,
+                ALLOW_SYNTAX,
+                format!(
+                    "unknown rule '{rule}' in allow directive (known: {})",
+                    RULES.join(", ")
+                ),
+            ));
+            continue;
+        }
+        if justification.is_empty() {
+            diags.push(Diag::new(
+                &sf.rel,
+                line,
+                ALLOW_SYNTAX,
+                format!("allow({rule}) needs a written justification after a separator"),
+            ));
+            continue;
+        }
+        if let Some(target) = target_line(sf, line) {
+            allows.push(Allow { rule, target });
+        }
+    }
+    (allows, diags)
+}
+
+/// The code line a directive at `line` applies to: its own line when
+/// code precedes the comment, else the next non-blank non-comment line.
+fn target_line(sf: &SourceFile, line: usize) -> Option<usize> {
+    let raw = sf.raw_line(line);
+    let before = match raw.find("//") {
+        Some(p) => &raw[..p],
+        None => "",
+    };
+    if !before.trim().is_empty() {
+        return Some(line);
+    }
+    for ln in (line + 1)..=sf.num_lines() {
+        let t = sf.raw_line(ln).trim();
+        if t.is_empty() || t.starts_with("//") {
+            continue;
+        }
+        return Some(ln);
+    }
+    None
+}
+
+/// Drop findings targeted by a matching allow; `allow-syntax` findings
+/// are never suppressible.
+pub fn suppress(diags: Vec<Diag>, allows: &[(String, Vec<Allow>)]) -> Vec<Diag> {
+    diags
+        .into_iter()
+        .filter(|d| {
+            if d.rule == ALLOW_SYNTAX {
+                return true;
+            }
+            !allows.iter().any(|(file, list)| {
+                *file == d.file
+                    && list.iter().any(|a| a.rule == d.rule && a.target == d.line)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directive_targets_next_code_line_and_needs_justification() {
+        let src = "\
+fn f() {
+    // speclint: allow(d1-nondet) — fixture reason
+    let _t = 1;
+    // speclint: allow(d1-nondet)
+    let _u = 2;
+    let _v = 3; // speclint: allow(d2-locks) -- trailing ok
+}
+";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        let (allows, diags) = parse(&sf);
+        assert_eq!(allows.len(), 2);
+        assert_eq!(allows[0].rule, "d1-nondet");
+        assert_eq!(allows[0].target, 3);
+        assert_eq!(allows[1].rule, "d2-locks");
+        assert_eq!(allows[1].target, 6);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 4);
+        assert!(diags[0].msg.contains("justification"));
+    }
+
+    #[test]
+    fn unknown_rule_is_a_finding() {
+        let src = "// speclint: allow(d9-bogus) — nope\nfn g() {}\n";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        let (allows, diags) = parse(&sf);
+        assert!(allows.is_empty());
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("unknown rule"));
+    }
+}

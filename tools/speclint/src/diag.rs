@@ -1,0 +1,33 @@
+//! Diagnostics: one finding per invariant violation, with stable
+//! ordering so CI output is deterministic.
+
+use std::fmt;
+
+/// Rule identifiers, as used in diagnostics and allow directives.
+pub const RULES: [&str; 4] = ["d1-nondet", "d2-locks", "d3-unsafe", "d4-drift"];
+
+/// Pseudo-rule for malformed/unjustified allow directives (cannot be
+/// allowlisted away, by construction).
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// One finding.  Field order gives the derived `Ord` the reporting
+/// order: file, then line, then rule, then message.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diag {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn new(file: &str, line: usize, rule: &'static str, msg: String) -> Diag {
+        Diag { file: file.to_string(), line, rule, msg }
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}

@@ -1,0 +1,279 @@
+//! Lexical layer: comment/string-aware masking of Rust source.
+//!
+//! `speclint` is deliberately dependency-free (the offline toolchain has
+//! no registry for `syn`), so every rule runs over a *masked* copy of
+//! each file: comments and string/char-literal contents are blanked with
+//! spaces (newlines kept, byte offsets preserved) so token scans can
+//! never match inside a doc comment or a log message.  Comments are
+//! collected separately for the `SAFETY:`/allowlist rules.
+
+/// Is `b` part of a Rust identifier?
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// A `//` or `/* */` comment, with the byte offset where it starts.
+pub struct Comment {
+    pub pos: usize,
+    pub text: String,
+}
+
+/// One scanned source file: raw text, masked bytes, comments, line map.
+pub struct SourceFile {
+    /// Path relative to the lint root, `/`-separated.
+    pub rel: String,
+    pub text: String,
+    pub masked: Vec<u8>,
+    pub comments: Vec<Comment>,
+    line_starts: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn new(rel: String, text: String) -> SourceFile {
+        let (masked, spans) = mask(text.as_bytes());
+        let comments = spans
+            .into_iter()
+            .map(|(a, b)| Comment {
+                pos: a,
+                text: String::from_utf8_lossy(&text.as_bytes()[a..b]).into_owned(),
+            })
+            .collect();
+        let mut line_starts = vec![0usize];
+        for (i, b) in text.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        SourceFile { rel, text, masked, comments, line_starts }
+    }
+
+    /// 1-based line number containing byte offset `pos`.
+    pub fn line_of(&self, pos: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= pos)
+    }
+
+    pub fn num_lines(&self) -> usize {
+        self.line_starts.len()
+    }
+
+    /// Raw text of 1-based line `line` (without the newline).
+    pub fn raw_line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = if line < self.line_starts.len() {
+            self.line_starts[line] - 1
+        } else {
+            self.text.len()
+        };
+        &self.text[start..end]
+    }
+}
+
+/// Blank comments and string/char-literal contents with spaces.
+/// Returns the masked bytes plus the (start, end) span of each comment.
+fn mask(src: &[u8]) -> (Vec<u8>, Vec<(usize, usize)>) {
+    let n = src.len();
+    let mut out = src.to_vec();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = src[i];
+        if c == b'/' && i + 1 < n && src[i + 1] == b'/' {
+            let start = i;
+            let mut j = i;
+            while j < n && src[j] != b'\n' {
+                out[j] = b' ';
+                j += 1;
+            }
+            comments.push((start, j));
+            i = j;
+        } else if c == b'/' && i + 1 < n && src[i + 1] == b'*' {
+            // Rust block comments nest.
+            let start = i;
+            let mut depth = 1usize;
+            out[i] = b' ';
+            out[i + 1] = b' ';
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'/' && j + 1 < n && src[j + 1] == b'*' {
+                    depth += 1;
+                    out[j] = b' ';
+                    out[j + 1] = b' ';
+                    j += 2;
+                } else if src[j] == b'*' && j + 1 < n && src[j + 1] == b'/' {
+                    depth -= 1;
+                    out[j] = b' ';
+                    out[j + 1] = b' ';
+                    j += 2;
+                } else {
+                    if src[j] != b'\n' {
+                        out[j] = b' ';
+                    }
+                    j += 1;
+                }
+            }
+            comments.push((start, j));
+            i = j;
+        } else if c == b'"' {
+            // String literal: blank the contents, keep the quotes.
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' {
+                    out[j] = b' ';
+                    if j + 1 < n && src[j + 1] != b'\n' {
+                        out[j + 1] = b' ';
+                    }
+                    j += 2;
+                    continue;
+                }
+                if src[j] == b'"' {
+                    break;
+                }
+                if src[j] != b'\n' {
+                    out[j] = b' ';
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else if c == b'r' && (i == 0 || !is_ident(src[i - 1])) {
+            // Raw string r"..." / r#"..."# (any hash count).
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && src[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && src[j] == b'"' {
+                j += 1;
+                // Find closing `"###...` with the same hash count.
+                let mut end = n;
+                let mut k = j;
+                while k < n {
+                    if src[k] == b'"' {
+                        let mut h = 0usize;
+                        while k + 1 + h < n && src[k + 1 + h] == b'#' && h < hashes {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            end = k;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                let close_end = (end + 1 + hashes).min(n);
+                for m in (i + 1)..close_end {
+                    if src[m] != b'\n' {
+                        out[m] = b' ';
+                    }
+                }
+                i = close_end;
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            // Char literal vs lifetime.
+            if i + 1 < n && src[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && src[j] != b'\'' {
+                    out[j] = b' ';
+                    j += 1;
+                }
+                out[i + 1] = b' ';
+                i = j + 1;
+            } else if i + 2 < n && src[i + 2] == b'\'' {
+                out[i + 1] = b' ';
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    (out, comments)
+}
+
+/// Naive substring search (hot enough for a lint pass over ~70 files).
+pub fn find_sub(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() || from > hay.len() - needle.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Does `hay[pos..]` start with `w` as a whole identifier word?
+pub fn word_at(hay: &[u8], pos: usize, w: &[u8]) -> bool {
+    if pos + w.len() > hay.len() || &hay[pos..pos + w.len()] != w {
+        return false;
+    }
+    if pos > 0 && is_ident(hay[pos - 1]) {
+        return false;
+    }
+    let end = pos + w.len();
+    let last = *w.last().unwrap();
+    if is_ident(last) && end < hay.len() && is_ident(hay[end]) {
+        return false;
+    }
+    true
+}
+
+/// First word-bounded occurrence of `w` at or after `from`.
+pub fn find_word(hay: &[u8], w: &[u8], from: usize) -> Option<usize> {
+    let mut i = from;
+    while let Some(p) = find_sub(hay, w, i) {
+        if word_at(hay, p, w) {
+            return Some(p);
+        }
+        i = p + 1;
+    }
+    None
+}
+
+/// Does `hay` contain `w` as a whole word anywhere?
+pub fn contains_word(hay: &[u8], w: &[u8]) -> bool {
+    find_word(hay, w, 0).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = "let x = \"HashMap\"; // HashMap here\nlet y = 1;";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        assert!(!contains_word(&sf.masked, b"HashMap"));
+        assert!(contains_word(&sf.masked, b"let"));
+        assert_eq!(sf.comments.len(), 1);
+        assert!(sf.comments[0].text.contains("HashMap here"));
+    }
+
+    #[test]
+    fn masks_raw_strings_and_chars_keeps_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let r = r#\"Instant::now\"#; }";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        assert!(!contains_word(&sf.masked, b"Instant"));
+        // The lifetime ident survives masking.
+        assert!(find_sub(&sf.masked, b"'a", 0).is_some());
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn ok() {}";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        assert!(!contains_word(&sf.masked, b"inner"));
+        assert!(contains_word(&sf.masked, b"ok"));
+    }
+
+    #[test]
+    fn line_mapping() {
+        let sf = SourceFile::new("t.rs".into(), "a\nbb\nccc\n".into());
+        assert_eq!(sf.line_of(0), 1);
+        assert_eq!(sf.line_of(2), 2);
+        assert_eq!(sf.line_of(5), 3);
+        assert_eq!(sf.raw_line(2), "bb");
+    }
+}

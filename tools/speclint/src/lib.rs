@@ -1,0 +1,82 @@
+//! speclint — repo-native static analysis for the SpecReason serving
+//! stack.  Machine-checks the invariants the docs promise in prose:
+//!
+//! * **d1-nondet** — decision-path modules take no ambient input
+//!   (wall clock, hasher randomness, env, thread identity);
+//! * **d2-locks** — the lock graph across scheduler/kvcache/exec/obs is
+//!   acyclic and no EngineOp executes under a held lock;
+//! * **d3-unsafe** — every `unsafe` carries a `// SAFETY:` comment;
+//! * **d4-drift** — DeployConfig fields, v2 wire-event kinds, and
+//!   RouterStats counters stay in sync with their N mirror sites.
+//!
+//! Findings are suppressed only by an inline
+//! `// speclint: allow(<rule>) — <justification>` directive; the
+//! justification is mandatory and malformed directives are themselves
+//! blocking (`allow-syntax`).  Dependency-free by design: the offline
+//! toolchain has no crate registry, so the "parser" is a masking lexer
+//! plus brace matching (see `lex`/`model`).
+
+pub mod allow;
+pub mod diag;
+pub mod lex;
+pub mod model;
+pub mod rules;
+
+use std::path::Path;
+
+use diag::Diag;
+use lex::SourceFile;
+
+/// Load every `.rs` file under `rust/src` and `rust/tests`, sorted so
+/// output is independent of directory-iteration order.
+pub fn collect(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    for base in ["rust/src", "rust/tests"] {
+        let dir = root.join(base);
+        if dir.is_dir() {
+            walk(&dir, root, &mut files)?;
+        }
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(files)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile::new(rel, std::fs::read_to_string(&p)?));
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over the tree at `root`; returns sorted, allowlist-
+/// filtered findings.
+pub fn run(root: &Path) -> std::io::Result<Vec<Diag>> {
+    let files = collect(root)?;
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut allows: Vec<(String, Vec<allow::Allow>)> = Vec::new();
+    for sf in &files {
+        let (a, adiags) = allow::parse(sf);
+        allows.push((sf.rel.clone(), a));
+        diags.extend(adiags);
+        diags.extend(rules::d1_nondet::check(sf));
+        diags.extend(rules::d3_unsafe::check(sf));
+    }
+    diags.extend(rules::d2_locks::check(&files));
+    diags.extend(rules::d4_drift::check(&files, root));
+    let mut out = allow::suppress(diags, &allows);
+    out.sort();
+    out.dedup();
+    Ok(out)
+}

@@ -1,0 +1,60 @@
+//! CLI: `cargo run -p speclint -- --check [--root PATH]`
+//!
+//! Exit 0 when the tree is clean, 1 when any finding (or an IO error)
+//! remains.  Root resolution: `--root` wins; else the current directory
+//! if it contains `rust/src`; else the workspace root relative to this
+//! crate's manifest (so the command works from any subdirectory).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ! {
+    eprintln!("usage: speclint [--check] [--root PATH]");
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => {} // the only mode; accepted for CI readability
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => usage(),
+            },
+            "--help" | "-h" => usage(),
+            other => {
+                eprintln!("speclint: unknown argument `{other}`");
+                usage();
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        if cwd.join("rust/src").is_dir() {
+            cwd
+        } else {
+            // tools/speclint -> workspace root
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+        }
+    });
+
+    match speclint::run(&root) {
+        Ok(diags) if diags.is_empty() => {
+            println!("speclint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            println!("speclint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("speclint: io error under {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Structural layer: function boundaries and struct fields, recovered
+//! from masked source with brace matching (no full parser needed — the
+//! rules only care about *which function* a token sits in and *which
+//! fields* a struct declares).
+
+use crate::lex::{find_word, is_ident, SourceFile};
+
+/// A `fn` item: name plus the byte span of its `{ ... }` body in the
+/// masked text.  Nested fns are reported both standalone and as part of
+/// their parent's body (acceptable over-approximation for these rules).
+#[derive(Clone)]
+pub struct FnDef {
+    pub name: String,
+    pub sig_pos: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// All `fn` items in a masked file, in source order.
+pub fn functions(masked: &[u8]) -> Vec<FnDef> {
+    let mut fns = Vec::new();
+    let n = masked.len();
+    let mut i = 0usize;
+    while let Some(p) = find_word(masked, b"fn", i) {
+        let mut j = p + 2;
+        while j < n && (masked[j] == b' ' || masked[j] == b'\t' || masked[j] == b'\n') {
+            j += 1;
+        }
+        let name_start = j;
+        while j < n && is_ident(masked[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            // `fn(` pointer type or similar — not an item.
+            i = p + 2;
+            continue;
+        }
+        let name = String::from_utf8_lossy(&masked[name_start..j]).into_owned();
+        // First `{` opens the body; `;` first means a bodiless decl.
+        let mut k = j;
+        while k < n && masked[k] != b'{' && masked[k] != b';' {
+            k += 1;
+        }
+        if k >= n || masked[k] == b';' {
+            i = j;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut m = k;
+        while m < n {
+            if masked[m] == b'{' {
+                depth += 1;
+            } else if masked[m] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            m += 1;
+        }
+        fns.push(FnDef { name, sig_pos: p, body_start: k, body_end: (m + 1).min(n) });
+        i = j; // resume right after the name so nested fns are found too
+    }
+    fns
+}
+
+/// Masked body text of the first `fn` named `name` in the file.
+pub fn fn_body<'a>(sf: &'a SourceFile, name: &str) -> Option<(&'a [u8], FnDef)> {
+    functions(&sf.masked)
+        .into_iter()
+        .find(|f| f.name == name)
+        .map(|f| (&sf.masked[f.body_start..f.body_end], f))
+}
+
+/// `pub` field names (with their 1-based lines) of `struct name`.
+pub fn struct_fields(sf: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let needle: Vec<u8> = format!("struct {name}").into_bytes();
+    let Some(p) = find_word(&sf.masked, &needle, 0) else {
+        return Vec::new();
+    };
+    let n = sf.masked.len();
+    let mut k = p;
+    while k < n && sf.masked[k] != b'{' && sf.masked[k] != b';' {
+        k += 1;
+    }
+    if k >= n || sf.masked[k] == b';' {
+        return Vec::new();
+    }
+    let mut depth = 0i64;
+    let mut m = k;
+    while m < n {
+        if sf.masked[m] == b'{' {
+            depth += 1;
+        } else if sf.masked[m] == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        m += 1;
+    }
+    let body = String::from_utf8_lossy(&sf.masked[k..m]).into_owned();
+    let mut fields = Vec::new();
+    let mut line = sf.line_of(k);
+    for ln in body.split('\n') {
+        let t = ln.trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let fname = rest[..colon].trim();
+                if !fname.is_empty() && fname.bytes().all(is_ident) {
+                    fields.push((fname.to_string(), line));
+                }
+            }
+        }
+        line += 1;
+    }
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::SourceFile;
+
+    #[test]
+    fn finds_functions_and_bodies() {
+        let src = "impl A {\n  fn one(&self) -> usize { 1 }\n}\nfn two() { { } }\nfn decl();\n";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        let fns = functions(&sf.masked);
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["one", "two"]);
+        let (body, _) = fn_body(&sf, "two").unwrap();
+        assert_eq!(std::str::from_utf8(body).unwrap(), "{ { } }");
+    }
+
+    #[test]
+    fn extracts_struct_fields() {
+        let src = "pub struct S {\n  pub a: usize,\n  b: u64,\n  pub long_name: Vec<u8>,\n}\n";
+        let sf = SourceFile::new("t.rs".into(), src.into());
+        let f = struct_fields(&sf, "S");
+        assert_eq!(
+            f.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["a", "long_name"]
+        );
+        assert_eq!(f[0].1, 2);
+        assert_eq!(f[1].1, 4);
+    }
+}

@@ -1,0 +1,68 @@
+//! D1 — nondeterminism sources in decision-path modules.
+//!
+//! Serving decisions must be pure functions of `(oracle, query, step,
+//! attempt, model)` so sweeps merge bit-identically and chaos runs
+//! replay exactly.  Inside the declared decision modules, any ambient
+//! input — wall clock, hasher-randomized containers, environment,
+//! thread identity — is a blocking finding.  Wall-clock *metrics* in
+//! those files must carry an explicit justified allowlist, which is the
+//! point: the exemption is written down next to the read.
+
+use crate::diag::Diag;
+use crate::lex::{is_ident, SourceFile};
+
+/// Files whose whole body is decision-path.
+const FILES: [&str; 5] = [
+    "rust/src/coordinator/machine.rs",
+    "rust/src/coordinator/policy.rs",
+    "rust/src/scheduler/task.rs",
+    "rust/src/kvcache/prefix.rs",
+    "rust/src/kvcache/mod.rs",
+];
+
+/// Directories whose every file is decision-path.
+const DIRS: [&str; 2] = ["rust/src/semantics/", "rust/src/faults/"];
+
+const PATTERNS: [(&str, &str); 8] = [
+    ("Instant::now", "wall-clock read"),
+    ("SystemTime", "wall-clock read"),
+    ("HashMap", "RandomState-keyed map (nondeterministic iteration order)"),
+    ("HashSet", "RandomState-keyed set (nondeterministic iteration order)"),
+    ("RandomState", "random hasher state"),
+    ("env::var", "environment read"),
+    ("var_os", "environment read"),
+    ("thread::current", "thread-identity dependence"),
+];
+
+pub fn check(sf: &SourceFile) -> Vec<Diag> {
+    let in_scope =
+        FILES.contains(&sf.rel.as_str()) || DIRS.iter().any(|d| sf.rel.starts_with(d));
+    if !in_scope {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (pat, why) in PATTERNS {
+        let pb = pat.as_bytes();
+        let mut i = 0usize;
+        while let Some(p) = crate::lex::find_sub(&sf.masked, pb, i) {
+            let pre_ok = p == 0 || !is_ident(sf.masked[p - 1]);
+            let end = p + pb.len();
+            let last = *pb.last().unwrap();
+            let post_ok = !is_ident(last) || end >= sf.masked.len() || !is_ident(sf.masked[end]);
+            if pre_ok && post_ok {
+                out.push(Diag::new(
+                    &sf.rel,
+                    sf.line_of(p),
+                    "d1-nondet",
+                    format!(
+                        "`{pat}` in a decision-path module: {why}; decisions must be pure \
+                         in (oracle, query, step, attempt, model) — move it behind the \
+                         obs/timing boundary or allowlist with a justification"
+                    ),
+                ));
+            }
+            i = end;
+        }
+    }
+    out
+}

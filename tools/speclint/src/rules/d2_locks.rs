@@ -1,0 +1,537 @@
+//! D2 — lock-order discipline across the serving path.
+//!
+//! Extracts each function's lock-acquisition sequence (the repo's free
+//! `lock(&...)` poison-tolerant helper, `.lock()` method calls, and
+//! `.read()`/`.write()` on known `RwLock` fields), distinguishes
+//! *held* acquisitions (`let` bindings, alive until their scope closes)
+//! from *transient* ones (temporaries dropped at the end of the
+//! statement), then builds a lock graph:
+//!
+//! * an intra-function edge `A -> B` whenever `B` is acquired while `A`
+//!   is held;
+//! * an interprocedural edge whenever a function holding `A` calls a
+//!   (uniquely named) function whose closure acquires `B`.
+//!
+//! A cycle in that graph is a deadlock-in-waiting; a path from a
+//! lock-holding region into an EngineOp execution
+//! (`execute_op` / `decode_batch` / `scored_prefill_batch`) serializes
+//! device work behind a mutex.  Both are blocking findings.
+//!
+//! Interprocedural propagation is deliberately restricted to functions
+//! whose bare name is unique across the scanned files — a collision
+//! (two `tick`s) would merge unrelated summaries and manufacture false
+//! edges.  Locks are keyed `file::name`, so a same-named lock in two
+//! files stays two nodes; cross-file cycles still surface through call
+//! edges.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::diag::Diag;
+use crate::lex::{find_sub, is_ident, word_at, SourceFile};
+use crate::model::{functions, FnDef};
+
+/// Directories on the serving path whose locking we model.
+const DIRS: [&str; 4] = [
+    "rust/src/scheduler/",
+    "rust/src/kvcache/",
+    "rust/src/exec/",
+    "rust/src/obs/",
+];
+
+/// Engine execution entry points that must never run under a lock.
+const ENGINE_OPS: [&str; 3] = ["execute_op", "decode_batch", "scored_prefill_batch"];
+
+/// Identifiers followed by `(` that are not user function calls.
+const KEYWORDS: [&str; 39] = [
+    "if", "while", "for", "match", "return", "let", "fn", "loop", "else", "move", "in",
+    "as", "mut", "ref", "pub", "use", "impl", "struct", "enum", "Some", "None", "Ok",
+    "Err", "Box", "Vec", "String", "assert", "panic", "vec", "format", "println",
+    "eprintln", "write", "writeln", "matches", "assert_eq", "assert_ne", "debug_assert",
+    "unreachable",
+];
+
+type FnKey = (String, String, usize); // (file, fn name, signature offset)
+
+#[derive(Default)]
+struct Summary {
+    /// Closure of lock ids this fn may acquire (grows in the fixpoint).
+    locks: BTreeSet<String>,
+    /// May this fn (transitively) execute an EngineOp?
+    engine: bool,
+    /// callee name -> (lock ids held at some call site, first call site).
+    calls: BTreeMap<String, (BTreeSet<String>, usize)>,
+    /// Intra-function edges: (held, acquired, acquisition site).
+    edges: Vec<(String, String, usize)>,
+    /// Direct EngineOp calls under a held lock: (call site, held ids).
+    engine_holds: Vec<(usize, BTreeSet<String>)>,
+}
+
+/// Reduce a lock expression to its identifying name: strip `&`/`*`/`mut`,
+/// take the last `.`/`::` path segment, cut any call/index suffix.
+fn norm_lock_id(expr: &str) -> String {
+    let mut e = expr.trim();
+    loop {
+        if let Some(r) = e.strip_prefix('&') {
+            e = r.trim_start();
+        } else if let Some(r) = e.strip_prefix('*') {
+            e = r.trim_start();
+        } else if let Some(r) = e.strip_prefix("mut ") {
+            e = r.trim_start();
+        } else {
+            break;
+        }
+    }
+    let mut parts: Vec<&str> = Vec::new();
+    let b = e.as_bytes();
+    let (mut start, mut i) = (0usize, 0usize);
+    while i < b.len() {
+        if b[i] == b'.' {
+            parts.push(&e[start..i]);
+            start = i + 1;
+            i += 1;
+        } else if b[i] == b':' && i + 1 < b.len() && b[i + 1] == b':' {
+            parts.push(&e[start..i]);
+            start = i + 2;
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    parts.push(&e[start..]);
+    let mut last = *parts.last().unwrap();
+    if last.is_empty() && parts.len() > 1 {
+        last = parts[parts.len() - 2];
+    }
+    for cut in ['(', '['] {
+        if let Some(p) = last.find(cut) {
+            last = &last[..p];
+        }
+    }
+    let t = last.trim();
+    if t.is_empty() { "?".to_string() } else { t.to_string() }
+}
+
+/// Walk back from the `.` of `.lock()` to recover the receiver expr.
+fn receiver_of(body: &[u8], dotpos: usize) -> String {
+    let mut j = dotpos;
+    let mut depth = 0i64;
+    while j > 0 {
+        let c = body[j - 1];
+        if c == b')' || c == b']' {
+            depth += 1;
+            j -= 1;
+        } else if c == b'(' || c == b'[' {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+            j -= 1;
+        } else if depth > 0 {
+            j -= 1;
+        } else if is_ident(c) || c == b'.' || c == b':' {
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    String::from_utf8_lossy(&body[j..dotpos]).into_owned()
+}
+
+/// Is the acquisition at `pos` a binding (guard held to end of scope)?
+/// `let`-statements hold; `if`/`while` heads and bare expressions drop
+/// the temporary guard at the end of the statement.
+fn is_held_stmt(body: &[u8], pos: usize) -> bool {
+    let mut j = pos;
+    while j > 0 {
+        let c = body[j - 1];
+        if c == b';' || c == b'{' || c == b'}' {
+            break;
+        }
+        j -= 1;
+    }
+    let mut toks: Vec<&str> = Vec::new();
+    let seg = &body[j..pos];
+    let mut k = 0usize;
+    while k < seg.len() {
+        if is_ident(seg[k]) {
+            let s = k;
+            while k < seg.len() && is_ident(seg[k]) {
+                k += 1;
+            }
+            toks.push(std::str::from_utf8(&seg[s..k]).unwrap_or(""));
+        } else {
+            k += 1;
+        }
+    }
+    if matches!(toks.first(), Some(&"if") | Some(&"while")) {
+        return false;
+    }
+    toks.contains(&"let")
+}
+
+/// Field names declared with a `RwLock<...>` type in this file.
+fn rwlock_fields(sf: &SourceFile) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut i = 0usize;
+    while let Some(p) = find_sub(&sf.masked, b"RwLock<", i) {
+        let mut j = p;
+        while j > 0 && sf.masked[j - 1] != b'\n' {
+            j -= 1;
+        }
+        let line = String::from_utf8_lossy(&sf.masked[j..p]).into_owned();
+        if let Some(colon) = line.find(':') {
+            if let Some(name) = line[..colon].split_whitespace().last() {
+                if !name.is_empty() {
+                    out.insert(name.to_string());
+                }
+            }
+        }
+        i = p + 7;
+    }
+    out
+}
+
+fn acquire(
+    s: &mut Summary,
+    held: &mut Vec<(String, i64)>,
+    depth: i64,
+    rel: &str,
+    lock_id: String,
+    pos: usize,
+    keep: bool,
+) {
+    let qid = format!("{rel}::{lock_id}");
+    for (h, _) in held.iter() {
+        if *h != qid {
+            s.edges.push((h.clone(), qid.clone(), pos));
+        }
+    }
+    s.locks.insert(qid.clone());
+    if keep {
+        held.push((qid, depth));
+    }
+}
+
+fn scan_fn(sf: &SourceFile, f: &FnDef, rwf: &BTreeSet<String>) -> Summary {
+    let body = &sf.masked[f.body_start..f.body_end];
+    let n = body.len();
+    let mut s = Summary::default();
+    let mut held: Vec<(String, i64)> = Vec::new();
+    let mut depth = 0i64;
+    let mut i = 0usize;
+    while i < n {
+        let c = body[i];
+        if c == b'{' {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if c == b'}' {
+            depth -= 1;
+            while held.last().map_or(false, |h| h.1 > depth) {
+                held.pop();
+            }
+            i += 1;
+            continue;
+        }
+        // Free helper: lock(&EXPR).  `word_at` excludes ident prefixes;
+        // a leading `.` means it's the method form, handled below.
+        if c == b'l'
+            && word_at(body, i, b"lock")
+            && body.get(i + 4) == Some(&b'(')
+            && (i == 0 || body[i - 1] != b'.')
+        {
+            let mut j = i + 5;
+            let mut d = 1i64;
+            while j < n && d > 0 {
+                if body[j] == b'(' {
+                    d += 1;
+                } else if body[j] == b')' {
+                    d -= 1;
+                }
+                j += 1;
+            }
+            let arg_end = j.saturating_sub(1).max(i + 5);
+            let arg = String::from_utf8_lossy(&body[i + 5..arg_end]).into_owned();
+            let keep = is_held_stmt(body, i);
+            acquire(&mut s, &mut held, depth, &sf.rel, norm_lock_id(&arg), f.body_start + i, keep);
+            i = j;
+            continue;
+        }
+        if c == b'.' {
+            let meth = if body[i..].starts_with(b".lock()") {
+                Some("lock")
+            } else if body[i..].starts_with(b".read()") {
+                Some("read")
+            } else if body[i..].starts_with(b".write()") {
+                Some("write")
+            } else {
+                None
+            };
+            if let Some(m) = meth {
+                let rid = norm_lock_id(&receiver_of(body, i));
+                // `.read()`/`.write()` are everywhere (io, iterators);
+                // only count them on known RwLock fields.
+                if (m == "read" || m == "write") && !rwf.contains(&rid) {
+                    i += 1;
+                    continue;
+                }
+                let keep = is_held_stmt(body, i);
+                acquire(&mut s, &mut held, depth, &sf.rel, rid, f.body_start + i, keep);
+                i += m.len() + 3;
+                continue;
+            }
+        }
+        // Call detection: bare `ident(`.
+        if is_ident(c) && (i == 0 || !is_ident(body[i - 1])) {
+            let mut j = i;
+            while j < n && is_ident(body[j]) {
+                j += 1;
+            }
+            let name = std::str::from_utf8(&body[i..j]).unwrap_or("");
+            if j < n
+                && body[j] == b'('
+                && !name.is_empty()
+                && !name.as_bytes()[0].is_ascii_digit()
+            {
+                if ENGINE_OPS.contains(&name) {
+                    s.engine = true;
+                    if !held.is_empty() {
+                        s.engine_holds.push((
+                            f.body_start + i,
+                            held.iter().map(|(h, _)| h.clone()).collect(),
+                        ));
+                    }
+                } else if !KEYWORDS.contains(&name) && name != "lock" {
+                    let entry = s
+                        .calls
+                        .entry(name.to_string())
+                        .or_insert_with(|| (BTreeSet::new(), f.body_start + i));
+                    for (h, _) in &held {
+                        entry.0.insert(h.clone());
+                    }
+                }
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    s
+}
+
+fn dfs_cycles(
+    v: &str,
+    graph: &BTreeMap<String, BTreeSet<String>>,
+    color: &mut BTreeMap<String, u8>,
+    stack: &mut Vec<String>,
+    cycles: &mut Vec<Vec<String>>,
+) {
+    color.insert(v.to_string(), 1);
+    stack.push(v.to_string());
+    if let Some(succ) = graph.get(v) {
+        for w in succ {
+            match color.get(w).copied().unwrap_or(0) {
+                1 => {
+                    if let Some(idx) = stack.iter().position(|x| x == w) {
+                        let mut cyc: Vec<String> = stack[idx..].to_vec();
+                        cyc.push(w.clone());
+                        cycles.push(cyc);
+                    }
+                }
+                0 => dfs_cycles(w, graph, color, stack, cycles),
+                _ => {}
+            }
+        }
+    }
+    stack.pop();
+    color.insert(v.to_string(), 2);
+}
+
+/// Whole-program check over every scanned file.
+pub fn check(files: &[SourceFile]) -> Vec<Diag> {
+    let scanned: Vec<&SourceFile> = files
+        .iter()
+        .filter(|sf| DIRS.iter().any(|d| sf.rel.starts_with(d)))
+        .collect();
+    let by_rel: BTreeMap<&str, &SourceFile> =
+        scanned.iter().map(|sf| (sf.rel.as_str(), *sf)).collect();
+    let line_at = |rel: &str, pos: usize| -> usize {
+        by_rel.get(rel).map(|sf| sf.line_of(pos)).unwrap_or(0)
+    };
+
+    let mut sums: BTreeMap<FnKey, Summary> = BTreeMap::new();
+    let mut by_name: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for sf in &scanned {
+        let rwf = rwlock_fields(sf);
+        for f in functions(&sf.masked) {
+            // `fn lock` items ARE the acquisition helpers; scanning their
+            // bodies would self-report, and call edges to them are the
+            // acquisitions themselves.
+            if f.name == "lock" {
+                continue;
+            }
+            let s = scan_fn(sf, &f, &rwf);
+            let key: FnKey = (sf.rel.clone(), f.name.clone(), f.sig_pos);
+            by_name.entry(f.name.clone()).or_default().push(key.clone());
+            sums.insert(key, s);
+        }
+    }
+
+    // Fixpoint: propagate lock closure + engine reachability up call
+    // edges.  Unique-name targets only (see module docs).
+    let keys: Vec<FnKey> = sums.keys().cloned().collect();
+    for _ in 0..keys.len() + 2 {
+        let mut changed = false;
+        for key in &keys {
+            let callees: Vec<String> = sums[key].calls.keys().cloned().collect();
+            for callee in callees {
+                let Some(ts) = by_name.get(&callee) else { continue };
+                if ts.len() != 1 || ts[0] == *key {
+                    continue;
+                }
+                let (tlocks, tengine) = {
+                    let t = &sums[&ts[0]];
+                    (t.locks.clone(), t.engine)
+                };
+                let s = sums.get_mut(key).unwrap();
+                let before = s.locks.len();
+                s.locks.extend(tlocks);
+                if s.locks.len() != before {
+                    changed = true;
+                }
+                if tengine && !s.engine {
+                    s.engine = true;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Assemble the lock graph and the engine-under-lock findings.
+    let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    let mut diags: Vec<Diag> = Vec::new();
+    for ((rel, name, _), s) in &sums {
+        for (a, b, pos) in &s.edges {
+            edges
+                .entry((a.clone(), b.clone()))
+                .or_insert((rel.clone(), *pos));
+        }
+        for (callee, (heldset, pos)) in &s.calls {
+            if heldset.is_empty() {
+                continue;
+            }
+            let Some(ts) = by_name.get(callee) else { continue };
+            if ts.len() != 1 {
+                continue;
+            }
+            let t = &sums[&ts[0]];
+            for l in &t.locks {
+                for h in heldset {
+                    if h != l {
+                        edges
+                            .entry((h.clone(), l.clone()))
+                            .or_insert((rel.clone(), *pos));
+                    }
+                }
+            }
+            if t.engine {
+                let held: Vec<&str> = heldset.iter().map(|s| s.as_str()).collect();
+                diags.push(Diag::new(
+                    rel,
+                    line_at(rel, *pos),
+                    "d2-locks",
+                    format!(
+                        "fn `{name}` reaches an EngineOp execution via `{callee}` while \
+                         holding [{}] — device work must not run under a lock",
+                        held.join(", ")
+                    ),
+                ));
+            }
+        }
+        for (pos, heldids) in &s.engine_holds {
+            let held: Vec<&str> = heldids.iter().map(|s| s.as_str()).collect();
+            diags.push(Diag::new(
+                rel,
+                line_at(rel, *pos),
+                "d2-locks",
+                format!(
+                    "fn `{name}` executes an EngineOp while holding [{}] — device work \
+                     must not run under a lock",
+                    held.join(", ")
+                ),
+            ));
+        }
+    }
+
+    // Cycle detection over the full graph.
+    let mut graph: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        graph.entry(a.clone()).or_default().insert(b.clone());
+        graph.entry(b.clone()).or_default();
+    }
+    let mut color: BTreeMap<String, u8> = BTreeMap::new();
+    let mut cycles: Vec<Vec<String>> = Vec::new();
+    let nodes: Vec<String> = graph.keys().cloned().collect();
+    for v in &nodes {
+        if color.get(v).copied().unwrap_or(0) == 0 {
+            let mut stack = Vec::new();
+            dfs_cycles(v, &graph, &mut color, &mut stack, &mut cycles);
+        }
+    }
+    for cyc in cycles {
+        let (a, b) = (cyc[0].clone(), cyc.get(1).cloned().unwrap_or_else(|| cyc[0].clone()));
+        let fallback_rel = a.split("::").next().unwrap_or("").to_string();
+        let (rel, pos) = edges
+            .get(&(a, b))
+            .cloned()
+            .unwrap_or((fallback_rel, 0));
+        let line = line_at(&rel, pos);
+        diags.push(Diag::new(
+            &rel,
+            line,
+            "d2-locks",
+            format!("lock-order cycle: {}", cyc.join(" -> ")),
+        ));
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_strips_refs_and_paths() {
+        assert_eq!(norm_lock_id("&self.inner"), "inner");
+        assert_eq!(norm_lock_id("&mut crate::exec::GLOBAL"), "GLOBAL");
+        assert_eq!(norm_lock_id("self.queues[i]"), "queues");
+        assert_eq!(norm_lock_id("*guard"), "guard");
+    }
+
+    #[test]
+    fn intra_fn_edge_and_engine_hold() {
+        let src = "\
+fn step() {
+    let g = lock(&self.queue);
+    let s = lock(&self.stats);
+    decode_batch(g);
+}
+fn peek() {
+    if lock(&self.queue).is_empty() { return; }
+    decode_batch(0);
+}
+";
+        let sf = SourceFile::new("rust/src/scheduler/mod.rs".into(), src.into());
+        let diags = check(std::slice::from_ref(&sf));
+        // `step` holds queue+stats across decode_batch; `peek`'s guard is
+        // transient (dropped before the call) so only `step` fires.
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 4);
+        assert!(diags[0].msg.contains("`step`"));
+        assert!(diags[0].msg.contains("queue"));
+    }
+}

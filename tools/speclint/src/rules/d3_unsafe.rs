@@ -1,0 +1,71 @@
+//! D3 — unsafe hygiene: every `unsafe` token (block, fn, impl) must be
+//! covered by a `// SAFETY:` comment, either trailing on the same line
+//! or somewhere in the contiguous `//` comment block immediately above.
+
+use crate::diag::Diag;
+use crate::lex::{find_word, SourceFile};
+
+pub fn check(sf: &SourceFile) -> Vec<Diag> {
+    if !sf.rel.starts_with("rust/src/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = find_word(&sf.masked, b"unsafe", i) {
+        let line = sf.line_of(p);
+        let mut ok = sf
+            .comments
+            .iter()
+            .any(|c| sf.line_of(c.pos) == line && c.text.contains("SAFETY:"));
+        if !ok {
+            let mut ln = line.saturating_sub(1);
+            while ln >= 1 {
+                let t = sf.raw_line(ln).trim();
+                if let Some(body) = t.strip_prefix("//") {
+                    if body.contains("SAFETY:") {
+                        ok = true;
+                        break;
+                    }
+                    ln -= 1;
+                    continue;
+                }
+                break;
+            }
+        }
+        if !ok {
+            out.push(Diag::new(
+                &sf.rel,
+                line,
+                "d3-unsafe",
+                "`unsafe` without a `// SAFETY:` comment (same line or the contiguous \
+                 comment block above)"
+                    .to_string(),
+            ));
+        }
+        i = p + 6;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documented_unsafe_passes_undocumented_fails() {
+        let src = "\
+// SAFETY: ptr is valid for the batch lifetime.
+unsafe { go(p) }
+fn f() {
+    unsafe { go(q) }
+}
+// unrelated comment
+// SAFETY: covered by block above
+unsafe impl Send for T {}
+";
+        let sf = SourceFile::new("rust/src/x.rs".into(), src.into());
+        let d = check(&sf);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 4);
+    }
+}

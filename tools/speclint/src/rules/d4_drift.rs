@@ -1,0 +1,198 @@
+//! D4 — wire/config contract drift.  Three contracts, each with one
+//! source of truth and N places that must track it:
+//!
+//! * every `DeployConfig` field must be ingested in `from_json_str`,
+//!   mentioned in `validate()` (an exhaustive destructure counts — that
+//!   is the point of it), and documented in a README knob-table row;
+//! * every v2 protocol event kind emitted by `protocol.rs` must have a
+//!   parse arm in `client.rs` and a `WireEvent::` match in the
+//!   streaming integration test;
+//! * every `RouterStats` counter must surface in the `stats` op JSON
+//!   (`to_json`, including helpers it calls).
+//!
+//! Each sub-check skips silently when its source-of-truth file is
+//! absent, so fixture trees can exercise one contract at a time.
+
+use std::path::Path;
+
+use crate::diag::Diag;
+use crate::lex::{is_ident, SourceFile};
+use crate::model::{fn_body, struct_fields};
+
+/// Word-bounded containment over masked text.
+fn word_in(text: &[u8], word: &str) -> bool {
+    crate::lex::contains_word(text, word.as_bytes())
+}
+
+pub fn check(files: &[SourceFile], root: &Path) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let by_rel = |rel: &str| files.iter().find(|sf| sf.rel == rel);
+
+    // ---- DeployConfig: from_json_str + validate + README knob table.
+    if let Some(cfg) = by_rel("rust/src/config/mod.rs") {
+        let readme_rows = std::fs::read_to_string(root.join("README.md"))
+            .map(|t| {
+                t.lines()
+                    .filter(|l| l.trim_start().starts_with('|'))
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            })
+            .unwrap_or_default();
+        let fj = fn_body(cfg, "from_json_str");
+        let val = fn_body(cfg, "validate");
+        for (name, line) in struct_fields(cfg, "DeployConfig") {
+            if let Some((body, _)) = &fj {
+                if !word_in(body, &name) {
+                    diags.push(Diag::new(
+                        &cfg.rel,
+                        line,
+                        "d4-drift",
+                        format!(
+                            "DeployConfig field `{name}` is not handled in from_json_str \
+                             (the `--config` ingestion surface)"
+                        ),
+                    ));
+                }
+            }
+            if let Some((body, _)) = &val {
+                if !word_in(body, &name) {
+                    diags.push(Diag::new(
+                        &cfg.rel,
+                        line,
+                        "d4-drift",
+                        format!(
+                            "DeployConfig field `{name}` is not mentioned in validate() \
+                             (add a check or list it in the exhaustive destructure)"
+                        ),
+                    ));
+                }
+            }
+            if !readme_rows.is_empty() && !readme_rows.contains(&format!("`{name}`")) {
+                diags.push(Diag::new(
+                    &cfg.rel,
+                    line,
+                    "d4-drift",
+                    format!("DeployConfig field `{name}` has no row in a README knob table"),
+                ));
+            }
+        }
+    }
+
+    // ---- Protocol v2 event kinds: client parse arm + streaming match.
+    if let Some(proto) = by_rel("rust/src/server/protocol.rs") {
+        let client = by_rel("rust/src/server/client.rs");
+        let streaming = by_rel("rust/tests/streaming_integration.rs");
+        let needle = "\"event\", Json::str(\"";
+        let mut kinds: Vec<(String, usize)> = Vec::new();
+        let mut i = 0usize;
+        while let Some(off) = proto.text[i..].find(needle) {
+            let start = i + off + needle.len();
+            let Some(endq) = proto.text[start..].find('"') else { break };
+            let kind = proto.text[start..start + endq].to_string();
+            if !kinds.iter().any(|(k, _)| *k == kind) {
+                kinds.push((kind, proto.line_of(i + off)));
+            }
+            i = start + endq;
+        }
+        for (kind, line) in kinds {
+            if let Some(cl) = client {
+                if !cl.text.contains(&format!("\"{kind}\" =>")) {
+                    diags.push(Diag::new(
+                        &proto.rel,
+                        line,
+                        "d4-drift",
+                        format!("v2 event kind \"{kind}\" has no WireEvent parse arm in client.rs"),
+                    ));
+                }
+            }
+            let variant: String = kind
+                .chars()
+                .next()
+                .map(|c| c.to_ascii_uppercase().to_string() + &kind[1..])
+                .unwrap_or_default();
+            if let Some(st) = streaming {
+                if !st.text.contains(&format!("WireEvent::{variant}")) {
+                    diags.push(Diag::new(
+                        &proto.rel,
+                        line,
+                        "d4-drift",
+                        format!(
+                            "v2 event kind \"{kind}\" (WireEvent::{variant}) is never \
+                             matched in streaming_integration.rs"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- RouterStats counters surface in the stats-op JSON.
+    if let Some(sched) = by_rel("rust/src/scheduler/mod.rs") {
+        if let Some((tj, _)) = fn_body(sched, "to_json") {
+            // Include the bodies of `self.<helper>()` methods to_json
+            // calls — derived stats (means, rates) surface through them.
+            let mut combined: Vec<u8> = tj.to_vec();
+            let mut i = 0usize;
+            while let Some(p) = crate::lex::find_sub(tj, b"self.", i) {
+                let mut j = p + 5;
+                while j < tj.len() && is_ident(tj[j]) {
+                    j += 1;
+                }
+                if j < tj.len() && tj[j] == b'(' {
+                    let m = String::from_utf8_lossy(&tj[p + 5..j]).into_owned();
+                    if let Some((hb, _)) = fn_body(sched, &m) {
+                        combined.extend_from_slice(hb);
+                    }
+                }
+                i = j.max(p + 5);
+            }
+            for (name, line) in struct_fields(sched, "RouterStats") {
+                if !word_in(&combined, &name) {
+                    diags.push(Diag::new(
+                        &sched.rel,
+                        line,
+                        "d4-drift",
+                        format!(
+                            "RouterStats field `{name}` never surfaces in to_json \
+                             (the `stats` op JSON)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::SourceFile;
+
+    #[test]
+    fn config_field_missing_from_validate_fires() {
+        let cfg = "\
+pub struct DeployConfig {
+    pub max_batch: usize,
+    pub mystery_knob: usize,
+}
+impl DeployConfig {
+    pub fn from_json_str(_s: &str) -> Self {
+        let mut c = Self { max_batch: 1, mystery_knob: 0 };
+        c.max_batch = 2;
+        c
+    }
+    pub fn validate(&self) {
+        let DeployConfig { max_batch: _, .. } = self;
+    }
+}
+";
+        let sf = SourceFile::new("rust/src/config/mod.rs".into(), cfg.into());
+        // No README at this root -> README sub-check silently skipped.
+        let d = check(std::slice::from_ref(&sf), Path::new("/nonexistent-speclint-root"));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 3);
+        assert!(d[0].msg.contains("validate"));
+    }
+}

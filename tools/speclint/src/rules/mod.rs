@@ -1,0 +1,7 @@
+//! The four rule families.  D1/D3 are per-file scans; D2/D4 are
+//! whole-program (they need cross-file context).
+
+pub mod d1_nondet;
+pub mod d2_locks;
+pub mod d3_unsafe;
+pub mod d4_drift;

@@ -1,0 +1,77 @@
+//! Expected-diagnostic tests: each fixture is a mini source tree with
+//! an `EXPECTED.txt` listing `file:line rule` per finding (duplicates
+//! meaningful, `#` comments ignored).  Plus the meta-test that matters
+//! most: the real tree at the workspace root lints clean.
+
+use std::path::{Path, PathBuf};
+
+fn fixture_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+}
+
+fn run_fixture(name: &str) -> Vec<String> {
+    speclint::run(&fixture_root(name))
+        .unwrap()
+        .into_iter()
+        .map(|d| format!("{}:{} {}", d.file, d.line, d.rule))
+        .collect()
+}
+
+fn expected(name: &str) -> Vec<String> {
+    std::fs::read_to_string(fixture_root(name).join("EXPECTED.txt"))
+        .unwrap()
+        .lines()
+        .map(|l| l.trim().to_string())
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .collect()
+}
+
+fn check(name: &str) {
+    let got = run_fixture(name);
+    let want = expected(name);
+    assert_eq!(
+        got, want,
+        "fixture `{name}` diagnostics diverged\n  got:  {got:#?}\n  want: {want:#?}"
+    );
+}
+
+#[test]
+fn d1_nondet_scope_and_patterns() {
+    check("d1_nondet");
+}
+
+#[test]
+fn allowlist_suppression_and_syntax() {
+    check("allowlist");
+}
+
+#[test]
+fn d2_cross_file_lock_cycle() {
+    check("d2_cycle");
+}
+
+#[test]
+fn d2_engine_op_under_lock() {
+    check("d2_engine_hold");
+}
+
+#[test]
+fn d3_undocumented_unsafe() {
+    check("d3_unsafe");
+}
+
+#[test]
+fn d4_contract_drift() {
+    check("d4_drift");
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let diags = speclint::run(&root).unwrap();
+    assert!(
+        diags.is_empty(),
+        "speclint findings in the real tree (fix or allowlist with a justification):\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
