@@ -1,0 +1,385 @@
+//! microbench_router — the multi-replica serving tier against the real
+//! engine: prefix-affinity hit rate vs hash-only placement, and
+//! aggregate admitted throughput as the replica count grows 1 → 2 → 4.
+//!
+//!   cargo bench --bench microbench_router
+//!   SPECREASON_BENCH_ROUTER_GROUPS=6 cargo bench --bench microbench_router
+//!
+//! **Affinity comparison** (the gate).  Consistent hashing over the
+//! prompt's leading blocks already co-locates identical prompts, so a
+//! naive repeat workload cannot distinguish the two modes.  What hashing
+//! *cannot* do is follow warmth that moved: once a spill serves a prompt
+//! off its hash target, hash-only placement keeps pointing at the (cold)
+//! hash replica while affinity probes find the replica actually holding
+//! the blocks.  The bench constructs that migration deterministically:
+//!
+//!   1. a long "blocker" job occupies its hash-target replica `rx`;
+//!   2. G distinct prompts *chosen to hash to `rx`* (via the router's
+//!      own public `hash_pick`) are served once each — the watermark
+//!      spills every one onto a cold replica, so their KV blocks live
+//!      off-hash;
+//!   3. the blocker is cancelled, the fleet quiesces, and the G prompts
+//!      are repeated for K cycles at load 0 (no spill pressure).
+//!
+//! In phase 3, affinity routes every repeat to the warm replica; hash
+//! placement pays a cold first cycle per migrated prompt.  Gate: the
+//! affinity run's phase-3 `prefix_hits` delta strictly exceeds the
+//! hash-only run's.
+//!
+//! **Throughput sweep**: a burst of distinct queries through fleets of
+//! 1, 2 and 4 replicas; reports aggregate jobs/s and the placement
+//! counters (advisory — no gate; engine replicas share the host CPU).
+//!
+//! Requires `artifacts/`; without it a skip-marker JSON is emitted.
+
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::scheduler::replica::{hash_pick, ReplicaRouter};
+use specreason::scheduler::{JobEvent, JobRequest, Priority};
+use specreason::semantics::{Dataset, TraceGenerator};
+use specreason::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn base_cfg(replicas: usize) -> DeployConfig {
+    DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: 96,
+        answer_tokens: 8,
+        max_batch: 2,
+        max_queue: 64,
+        replicas,
+        prefix_cache: true,
+        ..Default::default()
+    }
+}
+
+fn job(cfg: &DeployConfig, seed: u64, index: usize) -> JobRequest {
+    JobRequest {
+        dataset: Dataset::Math500,
+        query_index: index,
+        sample: 0,
+        seed,
+        spec: cfg.spec_config(),
+        priority: Priority::Normal,
+    }
+}
+
+/// Drain to the terminal event; panics on anything but a clean result.
+fn drain(handle: specreason::scheduler::JobHandle, ctx: &str) {
+    loop {
+        match handle
+            .next_event_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|e| panic!("{ctx}: event stream died: {e}"))
+        {
+            JobEvent::Result(_) => return,
+            JobEvent::Error(e) => panic!("{ctx}: job failed: {e:#}"),
+            JobEvent::Cancelled => panic!("{ctx}: unexpected cancellation"),
+            _ => {}
+        }
+    }
+}
+
+/// Drain a cancelled handle: accept either the cancellation or a clean
+/// result (the cancel may race natural completion).
+fn drain_cancelled(handle: specreason::scheduler::JobHandle, ctx: &str) {
+    loop {
+        match handle
+            .next_event_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|e| panic!("{ctx}: event stream died: {e}"))
+        {
+            JobEvent::Result(_) | JobEvent::Cancelled => return,
+            JobEvent::Error(e) => panic!("{ctx}: job failed: {e:#}"),
+            _ => {}
+        }
+    }
+}
+
+/// Block until no replica has queued or running work.
+fn wait_quiesce(fleet: &ReplicaRouter, ctx: &str) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let s = fleet.stats();
+        if s.running == 0 && s.queue_depth == 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{ctx}: fleet never quiesced");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Find `count` query indexes whose cold (hash) placement is replica
+/// `rx`, skipping `exclude` — the migration workload's prompt groups.
+fn groups_hashing_to(
+    cfg: &DeployConfig,
+    seed: u64,
+    replicas: usize,
+    rx: usize,
+    exclude: usize,
+    count: usize,
+) -> Vec<usize> {
+    let gen = TraceGenerator::new(Dataset::Math500, seed);
+    let mut picked = Vec::with_capacity(count);
+    for index in 0..10_000 {
+        if index == exclude {
+            continue;
+        }
+        let prompt = gen.query(index).prompt;
+        if hash_pick(&prompt, cfg.kv_block_size, replicas) == rx {
+            picked.push(index);
+            if picked.len() == count {
+                return picked;
+            }
+        }
+    }
+    panic!("no {count} indexes hash to replica {rx} in 10k candidates");
+}
+
+struct ModeRun {
+    phase1_spills: u64,
+    hits_delta: u64,
+    tokens_delta: u64,
+    affinity_hits: u64,
+    hash_placements: u64,
+    spills: u64,
+    per_replica_completed: Vec<u64>,
+}
+
+/// One comparison run: migrate G prompt groups off their common hash
+/// target, then measure phase-3 prefix reuse over K repeat cycles.
+fn run_mode(
+    replicas: usize,
+    affinity: bool,
+    seed: u64,
+    blocker_index: usize,
+    blocker_budget: usize,
+    groups: &[usize],
+    cycles: usize,
+) -> ModeRun {
+    let mut cfg = base_cfg(replicas);
+    cfg.replica_affinity = affinity;
+    cfg.replica_spill_watermark = 1;
+    cfg.validate().expect("valid config");
+    let fleet = ReplicaRouter::start(cfg.clone()).expect("fleet start");
+    let mode = if affinity { "affinity" } else { "hash-only" };
+
+    // Phase 1: park the blocker on its hash target.
+    let mut blocker = job(&cfg, seed, blocker_index);
+    blocker.spec.token_budget = blocker_budget;
+    let bh = fleet.submit(blocker).expect("submit blocker");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while fleet.stats().running == 0 {
+        assert!(Instant::now() < deadline, "{mode}: blocker never started running");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Phase 2: first serve of each group spills off the watermarked
+    // hash target — their KV blocks land on a cold replica.
+    for (i, &g) in groups.iter().enumerate() {
+        let h = fleet.submit(job(&cfg, seed, g)).expect("submit group");
+        drain(h, &format!("{mode}: phase-2 group {i}"));
+    }
+    let phase1_spills = fleet.stats().replica_spills;
+
+    bh.cancel();
+    drain_cancelled(bh, &format!("{mode}: blocker"));
+    wait_quiesce(&fleet, mode);
+    // The groups' blocks enter the radix indexes at sequence release,
+    // which can land after the result event — make sure every group's
+    // prompt is probeable on some replica before the repeat cycles.
+    let gen = TraceGenerator::new(Dataset::Math500, seed);
+    for &g in groups {
+        let prompt = gen.query(g).prompt;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !fleet
+            .schedulers()
+            .iter()
+            .any(|s| s.engine().prefix_probe(&prompt).values().sum::<usize>() > 0)
+        {
+            assert!(Instant::now() < deadline, "{mode}: group {g} prefix never published");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    // Phase 3: sequential repeats at load 0 — no spill pressure, so the
+    // two modes differ only in where placement *points*.
+    let before = fleet.stats();
+    for cycle in 0..cycles {
+        for (i, &g) in groups.iter().enumerate() {
+            let h = fleet.submit(job(&cfg, seed, g)).expect("submit repeat");
+            drain(h, &format!("{mode}: cycle {cycle} group {i}"));
+            wait_quiesce(&fleet, mode);
+        }
+    }
+    let after = fleet.stats();
+    let per_replica_completed =
+        fleet.replica_stats().iter().map(|s| s.completed).collect();
+    let run = ModeRun {
+        phase1_spills,
+        hits_delta: after.prefix_hits - before.prefix_hits,
+        tokens_delta: after.prefix_tokens_reused - before.prefix_tokens_reused,
+        affinity_hits: after.replica_affinity_hits,
+        hash_placements: after.replica_hash_placements,
+        spills: after.replica_spills,
+        per_replica_completed,
+    };
+    fleet.shutdown();
+    run
+}
+
+fn mode_json(mode: &str, run: &ModeRun, requests: usize) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("phase1_spills", Json::num(run.phase1_spills as f64)),
+        ("phase3_requests", Json::num(requests as f64)),
+        ("phase3_prefix_hits", Json::num(run.hits_delta as f64)),
+        ("phase3_prefix_tokens_reused", Json::num(run.tokens_delta as f64)),
+        (
+            "phase3_hit_rate",
+            Json::num(run.hits_delta as f64 / requests.max(1) as f64),
+        ),
+        ("affinity_hits", Json::num(run.affinity_hits as f64)),
+        ("hash_placements", Json::num(run.hash_placements as f64)),
+        ("spills", Json::num(run.spills as f64)),
+        (
+            "per_replica_completed",
+            Json::arr(run.per_replica_completed.iter().map(|&c| Json::num(c as f64))),
+        ),
+    ])
+}
+
+/// Affinity-vs-hash comparison at one replica count; returns the cell
+/// report and asserts the gate.
+fn compare_cell(replicas: usize, groups_n: usize, cycles: usize) -> Json {
+    let seed = 0x0_70_0735u64;
+    let blocker_index = 10_000;
+    let blocker_budget = env_usize("SPECREASON_BENCH_ROUTER_BLOCKER_BUDGET", 4096);
+    let cfg = base_cfg(replicas);
+    let rx = hash_pick(
+        &TraceGenerator::new(Dataset::Math500, seed).query(blocker_index).prompt,
+        cfg.kv_block_size,
+        replicas,
+    );
+    let groups = groups_hashing_to(&cfg, seed, replicas, rx, blocker_index, groups_n);
+    println!(
+        "router compare r={replicas}: blocker on replica {rx}, groups {groups:?}, \
+         {cycles} repeat cycles"
+    );
+
+    let requests = groups.len() * cycles;
+    let aff = run_mode(replicas, true, seed, blocker_index, blocker_budget, &groups, cycles);
+    let hash = run_mode(replicas, false, seed, blocker_index, blocker_budget, &groups, cycles);
+    println!(
+        "router compare r={replicas}: affinity hits {} ({} tokens) vs hash-only {} \
+         ({} tokens) over {requests} repeats",
+        aff.hits_delta, aff.tokens_delta, hash.hits_delta, hash.tokens_delta
+    );
+
+    // Without migration both modes tie (hashing co-locates repeats); the
+    // blocker must hold its replica long enough for the spills to land.
+    assert!(
+        hash.phase1_spills >= 1,
+        "r={replicas}: no phase-1 spill — raise SPECREASON_BENCH_ROUTER_BLOCKER_BUDGET \
+         (blocker finished before the groups were placed)"
+    );
+    // The gate: affinity recovers reuse that hash-only placement loses.
+    assert!(
+        aff.hits_delta > hash.hits_delta,
+        "r={replicas}: affinity prefix hits ({}) must strictly exceed hash-only ({})",
+        aff.hits_delta,
+        hash.hits_delta
+    );
+    assert!(
+        aff.tokens_delta >= hash.tokens_delta,
+        "r={replicas}: affinity reused fewer prefix tokens ({}) than hash-only ({})",
+        aff.tokens_delta,
+        hash.tokens_delta
+    );
+
+    Json::obj(vec![
+        ("replicas", Json::num(replicas as f64)),
+        ("groups", Json::num(groups.len() as f64)),
+        ("cycles", Json::num(cycles as f64)),
+        ("modes", Json::Arr(vec![
+            mode_json("affinity", &aff, requests),
+            mode_json("hash-only", &hash, requests),
+        ])),
+    ])
+}
+
+/// Aggregate admitted throughput for a burst of distinct queries.
+fn throughput_cell(replicas: usize, requests: usize) -> Json {
+    let mut cfg = base_cfg(replicas);
+    cfg.replica_spill_watermark = 2;
+    cfg.validate().expect("valid config");
+    let fleet = ReplicaRouter::start(cfg.clone()).expect("fleet start");
+    let start = Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|i| fleet.submit(job(&cfg, 0x7_4B0A7u64, i)).expect("submit"))
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        drain(h, &format!("throughput r={replicas} job {i}"));
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let s = fleet.stats();
+    assert_eq!(s.completed as usize, requests);
+    let admitted: Vec<u64> = fleet.replica_stats().iter().map(|r| r.admitted).collect();
+    fleet.shutdown();
+    let jobs_per_s = requests as f64 / wall.max(1e-9);
+    println!(
+        "router throughput r={replicas}: {requests} jobs in {wall:.2}s \
+         ({jobs_per_s:.2} jobs/s), per-replica admitted {admitted:?}"
+    );
+    Json::obj(vec![
+        ("replicas", Json::num(replicas as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("wall_s", Json::num(wall)),
+        ("jobs_per_s", Json::num(jobs_per_s)),
+        ("affinity_hits", Json::num(s.replica_affinity_hits as f64)),
+        ("hash_placements", Json::num(s.replica_hash_placements as f64)),
+        ("spills", Json::num(s.replica_spills as f64)),
+        ("per_replica_admitted", Json::arr(admitted.iter().map(|&a| Json::num(a as f64)))),
+    ])
+}
+
+fn main() {
+    let out_path = "BENCH_router.json";
+    if !have_artifacts() {
+        let marker = Json::obj(vec![
+            ("bench", Json::str("router")),
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::str("no artifacts/ (AOT compile not run)")),
+        ]);
+        std::fs::write(out_path, marker.to_string_pretty()).expect("write skip marker");
+        println!("microbench_router: skipped (no artifacts/), wrote {out_path}");
+        return;
+    }
+
+    let groups = env_usize("SPECREASON_BENCH_ROUTER_GROUPS", 4);
+    let cycles = env_usize("SPECREASON_BENCH_ROUTER_CYCLES", 2);
+    let reqs = env_usize("SPECREASON_BENCH_ROUTER_REQS", 8);
+
+    let mut cells = vec![compare_cell(2, groups, cycles)];
+    if env_usize("SPECREASON_BENCH_ROUTER_COMPARE_R4", 0) == 1 {
+        cells.push(compare_cell(4, groups, cycles));
+    }
+    let sweep: Vec<Json> = [1usize, 2, 4]
+        .iter()
+        .map(|&r| throughput_cell(r, reqs))
+        .collect();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("router")),
+        ("comparison", Json::Arr(cells)),
+        ("throughput", Json::Arr(sweep)),
+    ]);
+    std::fs::write(out_path, report.to_string_pretty()).expect("write BENCH_router.json");
+    println!("wrote {out_path}");
+}

@@ -63,6 +63,23 @@ pub struct DeployConfig {
     /// Allow the scheduler to evict a lower-priority in-flight sequence
     /// when a higher class would otherwise starve.
     pub preempt: bool,
+    /// Engine replicas behind the serving endpoint (`serve --replicas`).
+    /// `1` (the default) runs the single scheduler directly —
+    /// bit-identical to the pre-replica path; `N ≥ 2` spawns N
+    /// schedulers (each with its own engine and KV partitions) behind
+    /// the prefix-affinity replica router.
+    pub replicas: usize,
+    /// Prefix-affinity placement: probe every replica's radix prefix
+    /// index and place a request on the replica already holding the
+    /// longest cached prefix of its prompt, falling back to a
+    /// consistent hash over the prompt's leading blocks when nothing is
+    /// resident.  Off: hash placement only.  Irrelevant at
+    /// `replicas = 1`.
+    pub replica_affinity: bool,
+    /// Per-replica load (queued + running) past which a placement
+    /// spills to the least-loaded replica instead.  0 (the default)
+    /// disables spill.
+    pub replica_spill_watermark: usize,
     /// End-to-end latency SLO in milliseconds (0 disables the counter);
     /// completions slower than this increment `slo_violations`.
     pub slo_ms: u64,
@@ -154,6 +171,9 @@ impl Default for DeployConfig {
             io_threads: 4,
             max_batch: 1,
             preempt: true,
+            replicas: 1,
+            replica_affinity: true,
+            replica_spill_watermark: 0,
             slo_ms: 0,
             exec: ExecConfig::default(),
             fault_plan: FaultPlan::none(),
@@ -255,6 +275,15 @@ impl DeployConfig {
         if let Some(v) = j.get("preempt").as_bool() {
             c.preempt = v;
         }
+        if let Some(v) = j.get("replicas").as_usize() {
+            c.replicas = v;
+        }
+        if let Some(v) = j.get("replica_affinity").as_bool() {
+            c.replica_affinity = v;
+        }
+        if let Some(v) = j.get("replica_spill_watermark").as_usize() {
+            c.replica_spill_watermark = v;
+        }
         if let Some(v) = j.get("slo_ms").as_usize() {
             c.slo_ms = v as u64;
         }
@@ -347,6 +376,9 @@ impl DeployConfig {
             io_threads: _,
             max_batch: _,
             preempt: _,
+            replicas: _,
+            replica_affinity: _,
+            replica_spill_watermark: _,
             slo_ms: _,
             exec: _,
             fault_plan: _,
@@ -373,6 +405,7 @@ impl DeployConfig {
             "base and small model must differ"
         );
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(self.replicas >= 1, "replicas must be >= 1");
         anyhow::ensure!(
             self.exec.workers != Some(0),
             "threads must be >= 1 (omit it for auto: SPECREASON_BENCH_THREADS or \
@@ -519,6 +552,25 @@ mod tests {
         assert_eq!(c.slo_ms, 30000);
         assert_eq!(c.max_queue, 128);
         assert!(DeployConfig::from_json_str(r#"{"max_batch": 0}"#).is_err());
+    }
+
+    #[test]
+    fn parses_replica_knobs() {
+        let c = DeployConfig::from_json_str(
+            r#"{"replicas": 4, "replica_affinity": false,
+                "replica_spill_watermark": 16}"#,
+        )
+        .unwrap();
+        assert_eq!(c.replicas, 4);
+        assert!(!c.replica_affinity);
+        assert_eq!(c.replica_spill_watermark, 16);
+        // Default: one replica (bit-identical single-scheduler path),
+        // affinity armed for when replicas rise, spill off.
+        let d = DeployConfig::default();
+        assert_eq!(d.replicas, 1);
+        assert!(d.replica_affinity);
+        assert_eq!(d.replica_spill_watermark, 0);
+        assert!(DeployConfig::from_json_str(r#"{"replicas": 0}"#).is_err());
     }
 
     #[test]

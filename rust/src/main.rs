@@ -120,6 +120,11 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
         .opt("max-batch", "in-flight sequences batched per engine step (1 = serial)", Some("1"))
         .opt(
+            "replicas",
+            "engine replicas behind prefix-affinity placement (1 = single-scheduler path)",
+            Some("1"),
+        )
+        .opt(
             "lookahead",
             "draft up to k future steps while the base model verifies (0 = serial)",
             None,
@@ -152,6 +157,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     let mut cfg = deploy_from(&args)?;
     cfg.addr = args.get_or("addr", &cfg.addr.clone()).to_string();
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
+    cfg.replicas = args.usize("replicas", cfg.replicas)?;
     cfg.lookahead_k = args.usize("lookahead", cfg.lookahead_k)?;
     cfg.seed = args.u64("seed", cfg.seed)?;
     if args.flag("prefix-cache") {
@@ -171,8 +177,12 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     apply_exec_opts(&mut cfg, &args)?;
     cfg.validate()?;
     eprintln!(
-        "[serve] loading {} + {} from {} ...",
-        cfg.base_model, cfg.small_model, cfg.artifacts_dir
+        "[serve] loading {} + {} from {} ({} replica{}) ...",
+        cfg.base_model,
+        cfg.small_model,
+        cfg.artifacts_dir,
+        cfg.replicas,
+        if cfg.replicas == 1 { "" } else { "s" }
     );
     let server = Server::bind(cfg)?;
     eprintln!("[serve] listening on {}", server.addr);

@@ -112,6 +112,25 @@ impl Histogram {
         self.max
     }
 
+    /// Fold another histogram into this one: buckets and counts add,
+    /// min/max widen.  Quantiles of the merge are exact at the shared
+    /// log2 bucket resolution (both sides use the same fixed buckets),
+    /// which is why replica registries merge *typed* instead of at the
+    /// JSON level — dumped p50/p95/p99 cannot be added after the fact.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, n) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += n;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
     /// Summary object: count, mean, min/max, p50/p95/p99.
     pub fn to_json(&self) -> Json {
         let (min, max) = if self.count == 0 { (0.0, 0.0) } else { (self.min, self.max) };
@@ -218,6 +237,34 @@ impl Registry {
         }
     }
 
+    /// Fold another registry into this one, name by name: counters add,
+    /// gauges add (replica gauges measure disjoint resources — queue
+    /// depths, KV ledgers — so the fleet total is their sum), histograms
+    /// merge bucket-wise.  Names only one side holds are copied; a
+    /// type mismatch keeps this side's metric (mirrors the write-path
+    /// mismatch policy).  Deterministic: BTreeMap iteration is ordered.
+    pub fn merge_from(&self, other: &Registry) {
+        let theirs = other.lock();
+        let mut mine = self.lock();
+        for (name, metric) in theirs.iter() {
+            match (mine.get_mut(name), metric) {
+                (Some(Metric::Counter(a)), Metric::Counter(b)) => *a += b,
+                (Some(Metric::Gauge(a)), Metric::Gauge(b)) => *a += b,
+                (Some(Metric::Histogram(a)), Metric::Histogram(b)) => a.merge(b),
+                (Some(_), _) => {}
+                (None, Metric::Counter(b)) => {
+                    mine.insert(name.clone(), Metric::Counter(*b));
+                }
+                (None, Metric::Gauge(b)) => {
+                    mine.insert(name.clone(), Metric::Gauge(*b));
+                }
+                (None, Metric::Histogram(b)) => {
+                    mine.insert(name.clone(), Metric::Histogram(b.clone()));
+                }
+            }
+        }
+    }
+
     /// Full registry dump, deterministically ordered by name.
     pub fn to_json(&self) -> Json {
         let m = self.lock();
@@ -300,6 +347,63 @@ mod tests {
         assert_eq!(j.get("jobs").get("value").as_usize(), Some(5));
         assert_eq!(j.get("depth").get("value").as_f64(), Some(4.0));
         assert_eq!(j.get("lat").get("count").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn histogram_merge_adds_buckets_and_widens_bounds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=100u64 {
+            a.record(i as f64 / 1000.0); // 1ms .. 100ms
+            b.record(i as f64 / 100.0); // 10ms .. 1s
+        }
+        // Reference: one histogram fed both sample sets.
+        let mut both = Histogram::new();
+        for i in 1..=100u64 {
+            both.record(i as f64 / 1000.0);
+            both.record(i as f64 / 100.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.count(), both.count());
+        assert!((a.mean() - both.mean()).abs() < 1e-12);
+        // Same buckets in, same quantiles out: the merge is exact at
+        // bucket resolution, not an approximation.
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+        // Merging into an empty histogram is a copy.
+        let mut empty = Histogram::new();
+        empty.merge(&both);
+        assert_eq!(empty.count(), both.count());
+        assert_eq!(empty.quantile(0.5), both.quantile(0.5));
+    }
+
+    #[test]
+    fn registry_merge_folds_counters_gauges_histograms() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.counter_add("jobs", 2);
+        b.counter_add("jobs", 3);
+        b.counter_add("only_b", 7);
+        a.gauge_set("depth", 4.0);
+        b.gauge_set("depth", 6.0);
+        a.observe("lat", 0.010);
+        b.observe("lat", 0.020);
+        b.observe("lat", 0.040);
+        a.merge_from(&b);
+        assert_eq!(a.counter_get("jobs"), 5);
+        assert_eq!(a.counter_get("only_b"), 7);
+        let j = a.to_json();
+        assert_eq!(j.get("depth").get("value").as_f64(), Some(10.0));
+        assert_eq!(j.get("lat").get("count").as_usize(), Some(3));
+        // The donor registry is untouched.
+        assert_eq!(b.counter_get("jobs"), 3);
+        // Type mismatches keep the receiving side's metric.
+        let c = Registry::new();
+        c.gauge_set("jobs", 9.0);
+        a.merge_from(&c);
+        assert_eq!(a.counter_get("jobs"), 5);
     }
 
     #[test]

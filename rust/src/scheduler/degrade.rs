@@ -195,6 +195,68 @@ impl DegradeController {
     }
 }
 
+/// Smoothed completions-per-second estimator behind the shed
+/// retry-after hint.  Pure: the composer supplies the cumulative
+/// completed counter and its own measured elapsed seconds, so the
+/// tracker itself reads no clock and unit tests drive it exactly.
+#[derive(Debug, Default)]
+pub struct DrainTracker {
+    /// Cumulative completed counter at the previous sample.
+    last_completed: u64,
+    /// EWMA of completions per second; 0 until the first completion.
+    rate_ewma: f64,
+    primed: bool,
+}
+
+impl DrainTracker {
+    /// EWMA smoothing factor per sample: heavy enough that one quiet
+    /// composer iteration (often < 1 ms) cannot zero the estimate, light
+    /// enough that a real throughput change shows within ~10 samples.
+    const ALPHA: f64 = 0.2;
+
+    /// Feed one sample (cumulative completions, seconds since the last
+    /// sample) and return the smoothed drain rate in completions/sec.
+    pub fn note(&mut self, completed_total: u64, dt_s: f64) -> f64 {
+        let delta = completed_total.saturating_sub(self.last_completed);
+        self.last_completed = completed_total;
+        if dt_s <= 0.0 {
+            return self.rate_ewma;
+        }
+        let inst = delta as f64 / dt_s;
+        if !self.primed {
+            // First sample with real elapsed time seeds the EWMA so the
+            // estimate does not spend ~1/ALPHA samples climbing from 0.
+            self.rate_ewma = inst;
+            self.primed = true;
+        } else {
+            self.rate_ewma += Self::ALPHA * (inst - self.rate_ewma);
+        }
+        self.rate_ewma
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate_ewma
+    }
+}
+
+/// Derive the shed retry-after hint from the observed drain rate: the
+/// estimated seconds until the current backlog clears
+/// (`queue_depth / drain_per_s`), clamped to `[base_ms, 30_000]`.
+/// `base_ms` (the configured constant) is the floor — the hint can only
+/// get *more* patient than the operator's minimum, never less — and an
+/// unknown drain rate (no completions observed yet) falls back to the
+/// floor rather than quoting infinity.  Monotone non-decreasing in
+/// `queue_depth` for a fixed rate.
+pub fn derive_retry_after_ms(base_ms: u64, queue_depth: usize, drain_per_s: f64) -> u64 {
+    const CAP_MS: u64 = 30_000;
+    let floor = base_ms.min(CAP_MS);
+    if drain_per_s <= 0.0 || queue_depth == 0 {
+        return floor;
+    }
+    let clear_ms = (queue_depth as f64 / drain_per_s) * 1000.0;
+    (clear_ms as u64).clamp(floor, CAP_MS)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +402,63 @@ mod tests {
             c.observe(0, 0, true);
         }
         assert_eq!(c.take_transition().unwrap().reason, "kv_blocked");
+    }
+
+    // Satellite regression (shed retry-after hint): the hint must track
+    // backlog ÷ drain rate instead of quoting a constant.
+    #[test]
+    fn retry_after_is_monotone_in_backlog() {
+        let base = 250;
+        let rate = 4.0; // completions per second
+        let mut prev = 0;
+        for depth in [0usize, 1, 2, 4, 8, 16, 64, 256] {
+            let hint = derive_retry_after_ms(base, depth, rate);
+            assert!(
+                hint >= prev,
+                "hint must be monotone in backlog: depth={depth} gave {hint} < {prev}"
+            );
+            prev = hint;
+        }
+        // 8 queued at 4/s ≈ 2 s to clear.
+        assert_eq!(derive_retry_after_ms(base, 8, rate), 2_000);
+        // A faster drain shortens the hint (down to the configured floor).
+        assert!(
+            derive_retry_after_ms(base, 8, 16.0) < derive_retry_after_ms(base, 8, 4.0)
+        );
+        assert_eq!(derive_retry_after_ms(base, 1, 1000.0), base);
+    }
+
+    #[test]
+    fn retry_after_clamps_to_sane_bounds() {
+        // No drain signal yet: fall back to the configured floor.
+        assert_eq!(derive_retry_after_ms(250, 100, 0.0), 250);
+        // Empty queue: the floor, whatever the rate.
+        assert_eq!(derive_retry_after_ms(250, 0, 4.0), 250);
+        // Enormous backlog over a trickle drain: capped at 30 s.
+        assert_eq!(derive_retry_after_ms(250, 1_000_000, 0.001), 30_000);
+        // A floor above the cap cannot push the hint past it.
+        assert_eq!(derive_retry_after_ms(60_000, 4, 4.0), 30_000);
+    }
+
+    #[test]
+    fn drain_tracker_smooths_completions_per_second() {
+        let mut t = DrainTracker::default();
+        // No time elapsed: no estimate yet.
+        assert_eq!(t.note(0, 0.0), 0.0);
+        // First real sample seeds the EWMA directly: 4 completions in 1 s.
+        assert!((t.note(4, 1.0) - 4.0).abs() < 1e-12);
+        // A quiet window decays the estimate but cannot zero it.
+        let after_quiet = t.note(4, 1.0);
+        assert!(after_quiet > 3.0 && after_quiet < 4.0);
+        // Sustained higher throughput pulls the estimate up toward it.
+        let mut total = 4;
+        let mut last = after_quiet;
+        for _ in 0..20 {
+            total += 10;
+            last = t.note(total, 1.0);
+        }
+        assert!(last > 8.0 && last <= 10.0, "EWMA should approach 10/s, got {last}");
+        assert!((t.rate() - last).abs() < 1e-12);
     }
 
     #[test]

@@ -61,11 +61,12 @@
 
 pub mod degrade;
 pub mod queue;
+pub mod replica;
 mod task;
 
 use std::cell::Cell;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
@@ -251,6 +252,31 @@ pub enum EventPoll {
     Disconnected,
 }
 
+/// Readiness callback fired after each event lands in a job's stream.
+/// Installed (at most once) by the consumer that owns the receiving end
+/// — the server's connection pump registers one so event arrival wakes
+/// the pump instead of a poll cadence discovering it later.
+type WakerSlot = Arc<Mutex<Option<Box<dyn Fn() + Send + Sync>>>>;
+
+/// The sending half of a job's event stream plus its readiness waker:
+/// every send that lands also fires the installed waker (if any), so a
+/// readiness-driven consumer never waits a poll interval for an event
+/// that already arrived.
+pub(crate) struct EventSink {
+    tx: mpsc::Sender<JobEvent>,
+    waker: WakerSlot,
+}
+
+impl EventSink {
+    pub fn send(&self, ev: JobEvent) -> Result<(), mpsc::SendError<JobEvent>> {
+        self.tx.send(ev)?;
+        if let Some(w) = lock(&self.waker).as_ref() {
+            w();
+        }
+        Ok(())
+    }
+}
+
 /// A submitted job's handle: iterate its event stream, fold it to a
 /// one-shot result, or cancel it.  Dropping the handle before the
 /// terminal event cancels the job — a client that stopped listening must
@@ -260,6 +286,8 @@ pub struct JobHandle {
     cancel: Arc<CancelFlag>,
     shared: Weak<Shared>,
     done: Cell<bool>,
+    /// Waker slot shared with the composer-side [`EventSink`].
+    waker: WakerSlot,
 }
 
 impl JobHandle {
@@ -269,6 +297,22 @@ impl JobHandle {
         self.cancel.request();
         if let Some(shared) = self.shared.upgrade() {
             shared.cv.notify_all();
+        }
+    }
+
+    /// Install a readiness waker: fired by the composer after every
+    /// event it sends into this handle's stream.  Fired once immediately
+    /// on installation so events that arrived *before* registration
+    /// (`Queued`, an early `Admitted`) are discovered without waiting
+    /// for the next send.  At most one waker is live; a re-install
+    /// replaces the previous one.
+    pub fn set_waker(&self, waker: Box<dyn Fn() + Send + Sync>) {
+        {
+            let mut slot = lock(&self.waker);
+            *slot = Some(waker);
+        }
+        if let Some(w) = lock(&self.waker).as_ref() {
+            w();
         }
     }
 
@@ -426,7 +470,9 @@ pub struct JobResult {
 pub(crate) struct Job {
     pub req: JobRequest,
     /// The handle's event stream; the terminal event is the reply.
-    pub events: mpsc::Sender<JobEvent>,
+    /// Every send also fires the handle's readiness waker (if one is
+    /// installed), so readiness-driven consumers wake on arrival.
+    pub events: EventSink,
     /// Client cancellation flag (shared with the [`JobHandle`]).
     pub cancel: Arc<CancelFlag>,
     /// Enforced deadline, if the submit carried one: `(deadline_ms,
@@ -543,6 +589,16 @@ pub struct RouterStats {
     /// GPU seconds of draft work hidden under in-flight verification,
     /// summed over completed requests (the pipelining win).
     pub lookahead_overlap_gpu_s: f64,
+    /// Replica router: submissions placed on the replica whose prefix
+    /// cache already held the prompt's leading blocks (0 with
+    /// `replicas = 1` — the router is bypassed entirely).
+    pub replica_affinity_hits: u64,
+    /// Replica router: submissions placed by consistent hash (no
+    /// replica held any prefix of the prompt).
+    pub replica_hash_placements: u64,
+    /// Replica router: submissions spilled off their chosen replica
+    /// because its queue passed `replica_spill_watermark`.
+    pub replica_spills: u64,
 }
 
 impl RouterStats {
@@ -638,7 +694,68 @@ impl RouterStats {
                     ("overlap_gpu_s", Json::num(self.lookahead_overlap_gpu_s)),
                 ]),
             ),
+            // Additive: replica-router placement accounting (all zero at
+            // `replicas = 1`, where the router is bypassed).
+            (
+                "router",
+                Json::obj(vec![
+                    (
+                        "affinity_hits",
+                        Json::num(self.replica_affinity_hits as f64),
+                    ),
+                    (
+                        "hash_placements",
+                        Json::num(self.replica_hash_placements as f64),
+                    ),
+                    ("spills", Json::num(self.replica_spills as f64)),
+                ]),
+            ),
         ])
+    }
+
+    /// Fold another replica's stats into this one: counters and sums
+    /// add, gauges add (each replica's queue/running/KV ledger is
+    /// disjoint), maxima take the max, and the degrade fields report the
+    /// most-degraded replica (operators care about the worst case).
+    pub fn merge_from(&mut self, other: &RouterStats) {
+        self.admitted += other.admitted;
+        self.rejected_overload += other.rejected_overload;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.preempted += other.preempted;
+        self.queue_depth += other.queue_depth;
+        self.running += other.running;
+        self.queue_wait_samples += other.queue_wait_samples;
+        self.queue_wait_s_sum += other.queue_wait_s_sum;
+        self.queue_wait_s_max = self.queue_wait_s_max.max(other.queue_wait_s_max);
+        self.ttfs_s_sum += other.ttfs_s_sum;
+        self.ttfe_s_sum += other.ttfe_s_sum;
+        self.slo_violations += other.slo_violations;
+        self.cancelled += other.cancelled;
+        self.deadline_evicted += other.deadline_evicted;
+        self.batch_ticks += other.batch_ticks;
+        self.stepped_seqs += other.stepped_seqs;
+        self.kv_reserved_blocks += other.kv_reserved_blocks;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_tokens_reused += other.prefix_tokens_reused;
+        self.prefix_blocks_shared += other.prefix_blocks_shared;
+        self.prefix_cached_blocks += other.prefix_cached_blocks;
+        self.prefix_evictions += other.prefix_evictions;
+        self.step_retries += other.step_retries;
+        self.degraded_admissions += other.degraded_admissions;
+        self.shed_jobs += other.shed_jobs;
+        self.faults_injected += other.faults_injected;
+        self.degrade_transitions += other.degrade_transitions;
+        if other.degrade_mode > self.degrade_mode {
+            self.degrade_mode = other.degrade_mode;
+            self.degrade_last_reason = other.degrade_last_reason.clone();
+        }
+        self.lookahead_drafted_tokens += other.lookahead_drafted_tokens;
+        self.lookahead_discarded_tokens += other.lookahead_discarded_tokens;
+        self.lookahead_overlap_gpu_s += other.lookahead_overlap_gpu_s;
+        self.replica_affinity_hits += other.replica_affinity_hits;
+        self.replica_hash_placements += other.replica_hash_placements;
+        self.replica_spills += other.replica_spills;
     }
 
     /// Fraction of lookahead-drafted tokens that survived to be consumed
@@ -663,8 +780,11 @@ struct Shared {
     /// controller and read lock-free by submitters (always `Normal`
     /// with `degrade` off).
     degrade: AtomicU8,
-    /// Retry-after hint (ms) carried by shed rejections.
-    shed_retry_after_ms: u64,
+    /// Retry-after hint (ms) carried by shed rejections.  Seeded from
+    /// `degrade_retry_after_ms` and re-derived by the composer from the
+    /// observed drain rate × queue depth while degrade is active, so the
+    /// hint tracks how long the backlog actually takes to clear.
+    shed_retry_after_ms: AtomicU64,
     /// Observability: metrics registry + tracer + flight recorder.
     /// Registry and flight are always-on (pure telemetry); the tracer
     /// is inert unless `DeployConfig::obs_trace` armed it.
@@ -715,6 +835,11 @@ impl Drop for WorkerGuard {
 
 pub struct Scheduler {
     shared: Arc<Shared>,
+    /// The composer's engine, shared out read-only so the replica
+    /// router can probe prefix residency (`Engine::prefix_probe` is
+    /// internally synchronized) without a round-trip through the
+    /// composer thread.
+    engine: Arc<Engine>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -729,18 +854,32 @@ impl Scheduler {
             stats: Mutex::new(RouterStats::default()),
             closed: AtomicBool::new(false),
             degrade: AtomicU8::new(DegradeMode::Normal as u8),
-            shed_retry_after_ms: cfg.degrade_retry_after_ms,
+            shed_retry_after_ms: AtomicU64::new(cfg.degrade_retry_after_ms),
             obs: Obs::from_deploy(&cfg),
         });
         let wshared = Arc::clone(&shared);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Arc<Engine>>>();
         let worker = std::thread::Builder::new()
             .name("specreason-sched".into())
             .spawn(move || worker_loop(cfg, wshared, ready_tx))?;
-        ready_rx
+        let engine = ready_rx
             .recv()
             .map_err(|_| anyhow!("scheduler worker died during startup"))??;
-        Ok(Scheduler { shared, worker: Some(worker) })
+        Ok(Scheduler { shared, engine, worker: Some(worker) })
+    }
+
+    /// Read-only handle to this scheduler's engine (prefix-residency
+    /// probes, KV gauges).  The composer thread keeps its own clone; the
+    /// engine outlives neither.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Instantaneous load signal for placement decisions: queued plus
+    /// running jobs on this scheduler.
+    pub fn load(&self) -> usize {
+        let s = lock(&self.shared.stats);
+        s.queue_depth + s.running
     }
 
     /// Try to admit a request into the wait queue; `Err` means
@@ -755,11 +894,14 @@ impl Scheduler {
     pub fn submit_with(&self, req: JobRequest, opts: SubmitOpts) -> Result<JobHandle> {
         let (event_tx, event_rx) = mpsc::channel();
         let cancel = Arc::new(CancelFlag::default());
+        let waker: WakerSlot = Arc::new(Mutex::new(None));
         let prio = req.priority;
         let now = Instant::now();
         // Queued is sent before the job becomes visible to the composer,
         // so it always precedes Admitted in the stream.  On a rejected
-        // submit the receiver is dropped unobserved.
+        // submit the receiver is dropped unobserved.  Sent on the raw
+        // sender: no waker can be installed yet (the handle does not
+        // exist), and `set_waker` fires once on install to cover it.
         let _ = event_tx.send(JobEvent::Queued);
         // With tracing armed the timeline opens at submission (so the
         // `queued` edge anchors queue-wait); `None` otherwise.
@@ -772,7 +914,7 @@ impl Scheduler {
         }
         let job = Job {
             req,
-            events: event_tx,
+            events: EventSink { tx: event_tx, waker: Arc::clone(&waker) },
             cancel: Arc::clone(&cancel),
             deadline: opts
                 .deadline_ms
@@ -799,7 +941,7 @@ impl Scheduler {
                 ErrorCode::Overloaded,
                 format!(
                     "overloaded: shedding load under pressure (retry after ~{} ms)",
-                    self.shared.shed_retry_after_ms
+                    self.shared.shed_retry_after_ms.load(Ordering::Relaxed)
                 ),
             ));
         }
@@ -836,6 +978,7 @@ impl Scheduler {
             cancel,
             shared: Arc::downgrade(&self.shared),
             done: Cell::new(false),
+            waker,
         })
     }
 
@@ -960,14 +1103,21 @@ fn validate_budget(
     Ok(())
 }
 
-fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Result<()>>) {
+fn worker_loop(
+    cfg: DeployConfig,
+    shared: Arc<Shared>,
+    ready_tx: mpsc::Sender<Result<Arc<Engine>>>,
+) {
     // From here on, however this thread exits — clean shutdown, startup
     // failure, or a panic — the guard closes the scheduler and fails
     // whatever is still queued, so clients never hang on a dead worker.
     let _guard = WorkerGuard { shared: Arc::clone(&shared) };
     let engine = match Engine::new(&cfg.engine_config()) {
         Ok(e) => {
-            let _ = ready_tx.send(Ok(()));
+            // The Arc clone handed back lets the replica router probe
+            // prefix residency; the composer keeps this one.
+            let e = Arc::new(e);
+            let _ = ready_tx.send(Ok(Arc::clone(&e)));
             e
         }
         Err(e) => {
@@ -975,6 +1125,7 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
             return;
         }
     };
+    let engine: &Engine = &engine;
     let oracle = Oracle::default();
     let combo = Combo::new(&cfg.base_model, &cfg.small_model);
     let mut running: Vec<SeqTask> = Vec::new();
@@ -991,6 +1142,11 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
     // Injected-fault watermark: a rise between iterations flight-records
     // the fault and snapshots every ring (the post-mortem dump).
     let mut last_faults = 0u64;
+    // Drain-rate estimator behind the shed retry-after hint: completions
+    // per second, smoothed, so the hint scales with how long the backlog
+    // actually takes to clear instead of quoting a constant.
+    let mut drain_track = degrade::DrainTracker::default();
+    let mut last_drain_at = Instant::now();
 
     loop {
         // Cancellations and deadline expiries first, so a dead job can
@@ -1037,10 +1193,21 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
             }
         }
         if cfg.degrade {
-            let (depth, retries) = {
+            let (depth, retries, completed) = {
                 let s = lock(&shared.stats);
-                (s.queue_depth, s.step_retries)
+                (s.queue_depth, s.step_retries, s.completed)
             };
+            let dt_s = last_drain_at.elapsed().as_secs_f64();
+            last_drain_at = Instant::now();
+            let drain_per_s = drain_track.note(completed, dt_s);
+            shared.shed_retry_after_ms.store(
+                degrade::derive_retry_after_ms(
+                    cfg.degrade_retry_after_ms,
+                    depth,
+                    drain_per_s,
+                ),
+                Ordering::Relaxed,
+            );
             let mode = degrade_ctl.observe(depth, retries, admitted.kv_blocked);
             shared.degrade.store(mode as u8, Ordering::SeqCst);
             if let Some(tr) = degrade_ctl.take_transition() {
@@ -1058,25 +1225,26 @@ fn worker_loop(cfg: DeployConfig, shared: Arc<Shared>, ready_tx: mpsc::Sender<Re
 
         if running.is_empty() {
             let q = lock(&shared.queue);
-            if q.is_empty() {
-                if shared.closed.load(Ordering::SeqCst) {
-                    break;
-                }
-                // Idle: wait for a submit (or shutdown) notification.
-                let _unused = shared
-                    .cv
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap_or_else(|poisoned| poisoned.into_inner());
-                continue;
+            if q.is_empty() && shared.closed.load(Ordering::SeqCst) {
+                break;
             }
-            if let Some(at) = admitted.backoff_until {
-                // The queue head is a retry waiting out its backoff and
-                // nothing is running: park until it is due (bounded, so
-                // shutdown and new submits are still observed promptly)
-                // instead of spinning through admit().
-                let wait = at
-                    .saturating_duration_since(Instant::now())
-                    .min(Duration::from_millis(50));
+            if q.is_empty() || admitted.backoff_until.is_some() {
+                // Idle, or every queued job is a retry parked inside its
+                // backoff window: wait for a submit / cancel / shutdown
+                // notification, but never past the nearest pending
+                // wakeup — the earliest parked backoff deadline or
+                // queued `deadline_ms` expiry — so a 5 ms retry (or an
+                // imminent deadline eviction) does not pay the full
+                // 50 ms fallback sleep.
+                let now = Instant::now();
+                let wakeups = admitted.backoff_until.into_iter().chain(
+                    q.iter().flat_map(|job: &Job| {
+                        job.not_before
+                            .into_iter()
+                            .chain(job.deadline.map(|(_, at)| at))
+                    }),
+                );
+                let wait = wait_quantum(now, wakeups);
                 let _unused = shared
                     .cv
                     .wait_timeout(q, wait)
@@ -1198,6 +1366,19 @@ fn requeue_front(shared: &Shared, prio: Priority, job: Job) {
     lock(&shared.stats).queue_depth = q.len();
 }
 
+/// Composer sleep quantum while nothing is running: time until the
+/// nearest pending wakeup deadline, capped at 50 ms so shutdown, lost
+/// notifications, and freshly-armed cancellations are still observed
+/// promptly.  With no pending deadline the cap is the whole wait (the
+/// condvar is notified on submit/cancel/shutdown, so the cap is a
+/// fallback, not a cadence).
+fn wait_quantum(now: Instant, deadlines: impl Iterator<Item = Instant>) -> Duration {
+    let cap = Duration::from_millis(50);
+    deadlines
+        .map(|at| at.saturating_duration_since(now))
+        .fold(cap, Duration::min)
+}
+
 /// What one [`admit`] pass reports back to the composer loop.
 #[derive(Debug, Default)]
 struct AdmitOutcome {
@@ -1225,16 +1406,22 @@ fn admit<'e>(
 ) -> AdmitOutcome {
     let max_batch = cfg.max_batch.max(1);
     let mut out = AdmitOutcome::default();
-    loop {
-        let Some((prio, mut job)) = pop_job(shared) else { return out };
-        // A retried job waits out its backoff at the class front (its
-        // class peers queue behind it — retry-ordering is preserved and
-        // backoffs are milliseconds-scale).
+    // Retries still waiting out their backoff are *skipped*, not
+    // admission blockers: they park here while ready jobs queued behind
+    // them admit, and go back to their class fronts on every exit path
+    // (popped front-first, re-pushed in reverse, so relative order is
+    // preserved and a due retry is still the next candidate).
+    let mut parked: Vec<(Priority, Job)> = Vec::new();
+    'admit: loop {
+        let Some((prio, mut job)) = pop_job(shared) else { break 'admit };
+        // A retried job inside its backoff window parks; the earliest
+        // deadline feeds the idle loop's wait quantum.
         if let Some(at) = job.not_before {
             if Instant::now() < at {
-                out.backoff_until = Some(at);
-                requeue_front(shared, prio, job);
-                return out;
+                out.backoff_until =
+                    Some(out.backoff_until.map_or(at, |cur| cur.min(at)));
+                parked.push((prio, job));
+                continue;
             }
             job.not_before = None;
         }
@@ -1317,7 +1504,7 @@ fn admit<'e>(
             }
             // Blocked behind the current batch: wait at the class front.
             requeue_front(shared, prio, job);
-            return out;
+            break 'admit;
         }
 
         // Degraded (base-only) admission: under sustained pressure the
@@ -1392,6 +1579,12 @@ fn admit<'e>(
             }
         }
     }
+    // Return every parked retry to its class front (reverse pop order
+    // restores each class's original front-to-back order).
+    for (prio, job) in parked.into_iter().rev() {
+        requeue_front(shared, prio, job);
+    }
+    out
 }
 
 /// Is this failed job worth replaying?  Transient error class, retry
@@ -1692,6 +1885,9 @@ mod tests {
         s.lookahead_drafted_tokens = 200;
         s.lookahead_discarded_tokens = 50;
         s.lookahead_overlap_gpu_s = 1.5;
+        s.replica_affinity_hits = 12;
+        s.replica_hash_placements = 4;
+        s.replica_spills = 1;
         let j = s.to_json();
         assert_eq!(j.get("admitted").as_usize(), Some(5));
         assert_eq!(j.get("rejected_overload").as_usize(), Some(1));
@@ -1721,6 +1917,78 @@ mod tests {
         assert_eq!(la.get("discarded_tokens").as_usize(), Some(50));
         assert!((la.get("accepted_ratio").as_f64().unwrap() - 0.75).abs() < 1e-12);
         assert!((la.get("overlap_gpu_s").as_f64().unwrap() - 1.5).abs() < 1e-12);
+        let r = j.get("router");
+        assert_eq!(r.get("affinity_hits").as_usize(), Some(12));
+        assert_eq!(r.get("hash_placements").as_usize(), Some(4));
+        assert_eq!(r.get("spills").as_usize(), Some(1));
+    }
+
+    // Satellite regression (composer sleep quantum): the idle wait must
+    // shrink to the nearest pending wakeup instead of always paying the
+    // 50 ms fallback.
+    #[test]
+    fn wait_quantum_tracks_nearest_deadline() {
+        let now = Instant::now();
+        // No pending deadlines: the 50 ms fallback is the whole wait.
+        assert_eq!(wait_quantum(now, std::iter::empty()), Duration::from_millis(50));
+        // A 5 ms backoff retry waits ~5 ms, not 50.
+        let soon = now + Duration::from_millis(5);
+        assert_eq!(wait_quantum(now, [soon].into_iter()), Duration::from_millis(5));
+        // The minimum over mixed deadlines (backoff + deadline_ms) wins.
+        let later = now + Duration::from_millis(30);
+        assert_eq!(
+            wait_quantum(now, [later, soon].into_iter()),
+            Duration::from_millis(5)
+        );
+        // Deadlines beyond the cap are clamped to it.
+        let far = now + Duration::from_secs(10);
+        assert_eq!(wait_quantum(now, [far].into_iter()), Duration::from_millis(50));
+        // Already-due deadlines yield a zero wait (admit runs now).
+        assert_eq!(wait_quantum(soon, [now].into_iter()), Duration::ZERO);
+    }
+
+    #[test]
+    fn router_stats_merge_is_additive_and_worst_case() {
+        let mut a = RouterStats {
+            admitted: 3,
+            completed: 2,
+            queue_depth: 1,
+            running: 2,
+            queue_wait_s_max: 0.5,
+            kv_reserved_blocks: 4,
+            prefix_hits: 7,
+            degrade_mode: 0,
+            replica_affinity_hits: 2,
+            ..RouterStats::default()
+        };
+        let b = RouterStats {
+            admitted: 5,
+            completed: 4,
+            queue_depth: 2,
+            running: 1,
+            queue_wait_s_max: 0.25,
+            kv_reserved_blocks: 3,
+            prefix_hits: 1,
+            degrade_mode: 2,
+            degrade_last_reason: "queue_severe".to_string(),
+            replica_hash_placements: 3,
+            replica_spills: 1,
+            ..RouterStats::default()
+        };
+        a.merge_from(&b);
+        assert_eq!(a.admitted, 8);
+        assert_eq!(a.completed, 6);
+        assert_eq!(a.queue_depth, 3);
+        assert_eq!(a.running, 3);
+        assert!((a.queue_wait_s_max - 0.5).abs() < 1e-12);
+        assert_eq!(a.kv_reserved_blocks, 7);
+        assert_eq!(a.prefix_hits, 8);
+        // The most-degraded replica's mode and reason win.
+        assert_eq!(a.degrade_mode, 2);
+        assert_eq!(a.degrade_last_reason, "queue_severe");
+        assert_eq!(a.replica_affinity_hits, 2);
+        assert_eq!(a.replica_hash_placements, 3);
+        assert_eq!(a.replica_spills, 1);
     }
 
     #[test]

@@ -123,6 +123,15 @@ impl<T> AdmissionQueue<T> {
         out
     }
 
+    /// Iterate every queued item, highest class first, FIFO within a
+    /// class (the [`pop`](Self::pop) order).  Used by the composer to
+    /// scan pending wakeup deadlines without disturbing the queue.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        [Priority::High, Priority::Normal, Priority::Low]
+            .into_iter()
+            .flat_map(|prio| self.classes[prio.index()].iter())
+    }
+
     /// The item [`pop`](Self::pop) would return, without removing it.
     pub fn peek(&self) -> Option<(Priority, &T)> {
         for prio in [Priority::High, Priority::Normal, Priority::Low] {
@@ -180,6 +189,18 @@ mod tests {
         assert_eq!(q.pop(), Some((Priority::High, 3)));
         assert_eq!(q.pop(), Some((Priority::Normal, 1)));
         assert!(q.drain_where(|_| true).is_empty());
+    }
+
+    #[test]
+    fn iter_matches_pop_order_without_draining() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(Priority::Low, "l1").unwrap();
+        q.push(Priority::Normal, "n1").unwrap();
+        q.push(Priority::High, "h1").unwrap();
+        q.push(Priority::Normal, "n2").unwrap();
+        let seen: Vec<&&str> = q.iter().collect();
+        assert_eq!(seen, vec![&"h1", &"n1", &"n2", &"l1"]);
+        assert_eq!(q.len(), 4);
     }
 
     #[test]

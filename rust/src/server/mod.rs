@@ -16,15 +16,27 @@
 //! At `max_batch = 1` this degenerates to the paper's deployment — a
 //! single engine pass at a time, bit-identical metrics to the old
 //! serial router.
+//!
+//! **Event forwarding is readiness-driven**: one dedicated pump thread
+//! per server parks on a condvar and is woken by the scheduler-side
+//! event waker the moment a streaming job emits an event — v2 frames
+//! hit the wire at event latency instead of at the next
+//! `stream_poll_ms` read-timeout tick.  `stream_poll_ms` survives only
+//! as the pump's *fallback sweep* cadence (a safety net against a lost
+//! wakeup), and `idle_poll_ms` as the handlers' read timeout for
+//! observing shutdown.  The pump is a plain std thread, not an executor
+//! worker: it parks indefinitely, and parked tasks must never occupy
+//! the workers reserved for batched engine passes.
 
 pub mod client;
 pub mod protocol;
 pub mod router;
 
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -62,7 +74,20 @@ pub struct Server {
     /// Per-connection handler context (poll cadences + the `conn_io`
     /// fault site), shared by every handler of this server.
     conn: Arc<ConnContext>,
+    /// Wake-signal state shared between connection handlers, the
+    /// scheduler-side event wakers, and the pump thread.
+    pump: Arc<PumpShared>,
+    /// The event-pump thread; joined in `Drop` after raising
+    /// `PumpState::shutdown`.
+    pump_thread: Option<std::thread::JoinHandle<()>>,
     pub addr: std::net::SocketAddr,
+}
+
+/// Poison-tolerant lock (the scheduler's helper, local to this module):
+/// a panicking handler must not wedge the pump or every sibling
+/// connection behind a poisoned mutex.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Connection-handler configuration: the read-timeout cadences promoted
@@ -72,13 +97,15 @@ pub struct Server {
 /// scheduler's composer thread) but armed from the same
 /// `DeployConfig::fault_plan`; the `stats` op merges both counters.
 struct ConnContext {
-    /// Poll cadence for an idle connection (observes the shutdown flag):
-    /// a handler parked on an *idle* connection must not occupy an
-    /// executor worker past shutdown.
+    /// Handler read-timeout cadence (observes the shutdown flag): a
+    /// handler parked on an *idle* connection must not occupy an
+    /// executor worker past shutdown.  Event forwarding no longer rides
+    /// this tick — the pump thread is woken per event.
     idle_read: Duration,
-    /// Poll cadence while v2 sessions are streaming on the connection:
-    /// the read timeout bounds event-forwarding latency, so it drops
-    /// while any stream is live.
+    /// The pump thread's *fallback sweep* cadence: how long it parks on
+    /// its condvar before sweeping every connection anyway.  Wakeups
+    /// make forwarding event-latency; the sweep only bounds the damage
+    /// of a hypothetical lost wakeup.
     stream_read: Duration,
     faults: FaultInjector,
 }
@@ -101,6 +128,153 @@ impl ConnContext {
 impl Drop for Server {
     fn drop(&mut self) {
         RESERVED_HANDLERS.fetch_sub(self.reservation, Ordering::SeqCst);
+        // Stop the pump after `run` drained the handlers (each handler's
+        // unregister guard has removed its connection by then).
+        {
+            let mut st = lock(&self.pump.state);
+            st.shutdown = true;
+        }
+        self.pump.cv.notify_all();
+        if let Some(t) = self.pump_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Shared between handlers (register/unregister, session tables), the
+/// scheduler-side event wakers (ready-queue pushes), and the pump
+/// thread (condvar waits, frame writes).
+///
+/// Lock order (acyclic): a connection's `ConnEntry::streams` may be
+/// held while installing a waker (scheduler waker-slot lock) or firing
+/// one (`PumpShared::state`); the pump takes `state` *scoped* — released
+/// before any `streams` lock — so no path orders `state` before
+/// `streams` while holding it.
+struct PumpShared {
+    state: Mutex<PumpState>,
+    cv: Condvar,
+}
+
+struct PumpState {
+    /// Registered connections by pump-assigned id.
+    conns: BTreeMap<u64, Arc<ConnEntry>>,
+    /// Connections with (potentially) ready events, in wakeup order.
+    ready: VecDeque<u64>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+/// One registered connection: its live v2 sessions plus the write half.
+/// Every wire write — pump frames *and* handler responses — goes
+/// through the `streams` lock, so concurrently produced NDJSON lines
+/// never interleave mid-line on the socket.
+struct ConnEntry {
+    id: u64,
+    streams: Mutex<ConnStreams>,
+}
+
+struct ConnStreams {
+    sessions: Vec<StreamSession>,
+    writer: TcpStream,
+    /// Set by the pump when a write or injected `conn_io` fault killed
+    /// the connection; the socket is shut down so the handler's blocked
+    /// read returns EOF instead of lingering until its next timeout.
+    dead: bool,
+}
+
+/// Register a new connection with the pump; the returned entry carries
+/// the connection's session table and serialized writer.
+fn register_conn(pump: &PumpShared, writer: TcpStream) -> Arc<ConnEntry> {
+    let mut st = lock(&pump.state);
+    let id = st.next_id;
+    st.next_id += 1;
+    let entry = Arc::new(ConnEntry {
+        id,
+        streams: Mutex::new(ConnStreams { sessions: Vec::new(), writer, dead: false }),
+    });
+    st.conns.insert(id, Arc::clone(&entry));
+    entry
+}
+
+/// Drop guard: unregisters the connection on every handler exit path
+/// (EOF, shutdown, error, panic).  The entry — and with it any
+/// unfinished session handles, whose `Drop` cancels the scheduler-side
+/// jobs — is released *outside* the pump state lock.
+struct ConnUnregister {
+    pump: Arc<PumpShared>,
+    id: u64,
+}
+
+impl Drop for ConnUnregister {
+    fn drop(&mut self) {
+        let entry = {
+            let mut st = lock(&self.pump.state);
+            st.conns.remove(&self.id)
+        };
+        drop(entry);
+    }
+}
+
+/// Write one NDJSON line through the connection's serialized writer.
+fn write_line(entry: &ConnEntry, line: &str) -> Result<()> {
+    let mut s = lock(&entry.streams);
+    anyhow::ensure!(!s.dead, "connection closed by stream pump");
+    s.writer.write_all(line.as_bytes())?;
+    s.writer.write_all(b"\n")?;
+    s.writer.flush()?;
+    Ok(())
+}
+
+/// The pump thread: park on the condvar until an event waker flags a
+/// connection ready (or the fallback sweep tick fires), then forward
+/// that connection's ready events.  The ready batch is collected under
+/// the state lock in a scoped block and pumped after release — the
+/// per-connection work never runs under the global lock.
+fn pump_loop(shared: &PumpShared, conn: &ConnContext) {
+    loop {
+        let batch: Vec<Arc<ConnEntry>>;
+        {
+            let mut st = lock(&shared.state);
+            if st.ready.is_empty() && !st.shutdown {
+                let (guard, _timeout) = shared
+                    .cv
+                    .wait_timeout(st, conn.stream_read)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                st = guard;
+            }
+            if st.shutdown {
+                break;
+            }
+            if st.ready.is_empty() {
+                // Fallback sweep: no wakeup before the tick — service
+                // everything (almost always a no-op per connection).
+                batch = st.conns.values().cloned().collect();
+            } else {
+                let mut ids: Vec<u64> = st.ready.drain(..).collect();
+                ids.dedup();
+                batch = ids.into_iter().filter_map(|id| st.conns.get(&id).cloned()).collect();
+            }
+        }
+        for entry in &batch {
+            pump_conn(entry, conn);
+        }
+    }
+}
+
+/// Forward one connection's ready events; on a write error or injected
+/// `conn_io` fault, kill the connection (mark dead, shut the socket so
+/// the handler's read unblocks, drop the sessions so their jobs cancel).
+fn pump_conn(entry: &ConnEntry, conn: &ConnContext) {
+    let mut s = lock(&entry.streams);
+    if s.dead {
+        return;
+    }
+    let ConnStreams { sessions, writer, dead } = &mut *s;
+    if let Err(e) = pump_sessions(sessions, writer, conn) {
+        *dead = true;
+        writer.shutdown(Shutdown::Both).ok();
+        sessions.clear();
+        eprintln!("[server] stream pump: connection dropped: {e:#}");
     }
 }
 
@@ -138,7 +312,12 @@ impl Server {
         // even when every handler slot is parked on a reply.
         let mut exec_cfg = cfg.exec.clone();
         let handler_cap = cfg.io_threads.max(cfg.max_batch);
-        let floor = handler_cap + cfg.max_batch;
+        // Headroom scales with the replica count: each replica's
+        // composer submits its own batched engine passes (a composer
+        // always helps run its own jobs inline, so this is throughput
+        // headroom, not a liveness requirement).  At `replicas = 1`
+        // this is the historical floor exactly.
+        let floor = handler_cap + cfg.max_batch * cfg.replicas.max(1);
         let resolved = exec_cfg.resolve_workers()?;
         exec_cfg.workers = Some(resolved.max(floor));
         // Log the raise only when this call actually creates the pool —
@@ -188,6 +367,23 @@ impl Server {
         } else {
             (exec, floor)
         };
+        let pump = Arc::new(PumpShared {
+            state: Mutex::new(PumpState {
+                conns: BTreeMap::new(),
+                ready: VecDeque::new(),
+                next_id: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let pump_thread = {
+            let shared = Arc::clone(&pump);
+            let pconn = Arc::clone(&conn);
+            std::thread::Builder::new()
+                .name("server-pump".into())
+                .spawn(move || pump_loop(&shared, &pconn))
+                .context("spawning the event-pump thread")?
+        };
         Ok(Server {
             listener,
             router,
@@ -197,6 +393,8 @@ impl Server {
             handler_cap,
             reservation,
             conn,
+            pump: Arc::clone(&pump),
+            pump_thread: Some(pump_thread),
             addr,
         })
     }
@@ -259,9 +457,11 @@ impl Server {
                     let guard = ConnGuard(Arc::clone(&self.active_conns));
                     let exec = Arc::clone(&self.exec);
                     let conn = Arc::clone(&self.conn);
+                    let pump = Arc::clone(&self.pump);
                     let submitted = self.exec.execute_labeled("server:conn", move || {
                         let _guard = guard;
-                        if let Err(e) = handle_connection(stream, &router, &exec, &shutdown, &conn)
+                        if let Err(e) =
+                            handle_connection(stream, &router, &exec, &shutdown, &conn, &pump)
                         {
                             eprintln!("[server] connection error: {e:#}");
                         }
@@ -378,7 +578,8 @@ struct StreamSession {
 
 /// Forward every ready event of every live session to the wire, retiring
 /// sessions at their terminal frame.  Returns with `Pending` streams
-/// intact; the caller re-pumps on its next loop tick.
+/// intact; the pump re-runs this on the connection's next wakeup (or
+/// fallback sweep).  Caller holds the connection's `streams` lock.
 fn pump_sessions(
     sessions: &mut Vec<StreamSession>,
     writer: &mut TcpStream,
@@ -437,38 +638,35 @@ fn handle_connection(
     exec: &Executor,
     shutdown: &AtomicBool,
     conn: &ConnContext,
+    pump: &Arc<PumpShared>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(conn.idle_read))?;
-    let mut writer = stream.try_clone()?;
+    let writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
-    // v2 sessions in flight on this connection.  Cancellation is scoped
-    // here: a `cancel` op can only target them, and every exit path —
-    // EOF, shutdown, error — drops unfinished handles, whose Drop
+    // Register with the event pump.  This connection's v2 sessions live
+    // in the shared entry — the pump forwards their frames the moment
+    // the scheduler emits an event — and every write (frames *and*
+    // responses) is serialized through it.  Cancellation stays scoped to
+    // this connection: a `cancel` op can only target the entry's own
+    // sessions, and the unregister guard drops unfinished handles on
+    // every exit path — EOF, shutdown, error, panic — whose Drop
     // cancels the scheduler-side job (a vanished client must not keep
     // consuming engine time).
-    let mut sessions: Vec<StreamSession> = Vec::new();
+    let entry = register_conn(pump, writer);
+    let _unregister = ConnUnregister { pump: Arc::clone(pump), id: entry.id };
     // An awaited v1 one-shot query.  While set, no further requests are
     // read (v1 responses stay strictly ordered with their requests, as
-    // the pre-streaming server guaranteed) but live v2 streams keep
-    // pumping — a v1 query must not freeze another stream's frames.
+    // the pre-streaming server guaranteed); live v2 streams keep
+    // flowing regardless — they are the pump thread's job now.
     let mut v1_pending: Option<(i64, JobHandle)> = None;
-    let mut fast_poll = false;
     loop {
-        // Forward any events that landed since the last tick.
-        pump_sessions(&mut sessions, &mut writer, conn)?;
         if let Some((rid, handle)) = v1_pending.take() {
-            // Wake-ups while awaiting the one-shot only matter for two
-            // things: forwarding live v2 streams' frames (tight tick)
-            // and observing shutdown (the idle tick suffices) — pure v1
-            // traffic keeps the old low-churn cadence.
-            let tick = if sessions.is_empty() {
-                conn.idle_read
-            } else {
-                conn.stream_read
-            };
-            let response = match handle.next_event_timeout(tick) {
+            // The channel recv is itself readiness-driven (it wakes on
+            // event arrival); the timeout only bounds how long shutdown
+            // can go unobserved.
+            let response = match handle.next_event_timeout(conn.idle_read) {
                 Ok(JobEvent::Result(result)) => Some(protocol::ok_response(
                     rid,
                     protocol::job_result_to_json(&result),
@@ -489,9 +687,7 @@ fn handle_connection(
             };
             match response {
                 Some(response) => {
-                    writer.write_all(response.as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    writer.flush()?;
+                    write_line(&entry, &response)?;
                     if shutdown.load(Ordering::SeqCst) {
                         break;
                     }
@@ -499,17 +695,6 @@ fn handle_connection(
                 None => v1_pending = Some((rid, handle)),
             }
             continue;
-        }
-        // Live streams tighten the read-timeout tick: the poll cadence
-        // bounds event-forwarding latency.
-        let want_fast = !sessions.is_empty();
-        if want_fast != fast_poll {
-            reader.get_ref().set_read_timeout(Some(if want_fast {
-                conn.stream_read
-            } else {
-                conn.idle_read
-            }))?;
-            fast_poll = want_fast;
         }
         let line = match poll_line(&mut reader, &mut buf)? {
             LinePoll::Eof => break,
@@ -586,12 +771,15 @@ fn handle_connection(
                     // unless the job wins the race by completing in the
                     // scheduler tick already in progress — then it is
                     // `result`.
-                    let found = match sessions.iter().find(|s| s.wire_id == target) {
-                        Some(s) => {
-                            s.handle.cancel();
-                            true
+                    let found = {
+                        let s = lock(&entry.streams);
+                        match s.sessions.iter().find(|x| x.wire_id == target) {
+                            Some(x) => {
+                                x.handle.cancel();
+                                true
+                            }
+                            None => false,
                         }
-                        None => false,
                     };
                     Some(protocol::ok_response(
                         req.id,
@@ -602,7 +790,11 @@ fn handle_connection(
                     ))
                 }
                 Op::Query(q) if req.v >= 2 => {
-                    if sessions.iter().any(|s| s.wire_id == req.id) {
+                    let dup = {
+                        let s = lock(&entry.streams);
+                        s.sessions.iter().any(|x| x.wire_id == req.id)
+                    };
+                    if dup {
                         Some(protocol::error_frame(
                             req.id,
                             ErrorCode::BadRequest,
@@ -616,7 +808,27 @@ fn handle_connection(
                                 &format!("{e:#}"),
                             )),
                             Ok(handle) => {
-                                sessions.push(StreamSession { wire_id: req.id, handle });
+                                // Session enters the table first, *then*
+                                // the waker is installed — set_waker
+                                // fires once on install, so events that
+                                // raced ahead of registration are
+                                // pumped, not stranded until the
+                                // fallback sweep.
+                                let mut s = lock(&entry.streams);
+                                s.sessions.push(StreamSession { wire_id: req.id, handle });
+                                let shared = Arc::clone(pump);
+                                let conn_id = entry.id;
+                                s.sessions
+                                    .last()
+                                    .expect("session just pushed")
+                                    .handle
+                                    .set_waker(Box::new(move || {
+                                        {
+                                            let mut st = lock(&shared.state);
+                                            st.ready.push_back(conn_id);
+                                        }
+                                        shared.cv.notify_one();
+                                    }));
                                 None
                             }
                         }
@@ -637,9 +849,7 @@ fn handle_connection(
             },
         };
         if let Some(response) = response {
-            writer.write_all(response.as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
+            write_line(&entry, &response)?;
         }
         if shutdown.load(Ordering::SeqCst) {
             break;

@@ -1,18 +1,22 @@
-//! Request router: a thin admission shim over the continuous-batching
-//! [`Scheduler`](crate::scheduler::Scheduler).
+//! Request router: a thin admission shim over the replica fleet
+//! ([`ReplicaRouter`] — N continuous-batching
+//! [`Scheduler`](crate::scheduler::Scheduler)s behind prefix-affinity
+//! placement; one replica by default, a transparent delegation).
 //!
 //! The router's job shrank to protocol-level concerns: resolve a wire
 //! [`QueryRequest`] against the deployment defaults into a fully-specified
-//! [`JobRequest`], submit it (the scheduler enforces the `max_queue`
-//! backpressure bound, KV-aware admission, batching and preemption), and
-//! render results/stats as JSON.  Connection handlers only parse and
-//! serialize; the engine lives inside the scheduler's composer thread.
+//! [`JobRequest`], submit it (placement picks the replica; each
+//! scheduler enforces the `max_queue` backpressure bound, KV-aware
+//! admission, batching and preemption), and render results/stats as
+//! JSON.  Connection handlers only parse and serialize; the engines
+//! live inside the schedulers' composer threads.
 
 use anyhow::Result;
 
 use crate::config::DeployConfig;
 use crate::coordinator::AcceptancePolicy;
-use crate::scheduler::{JobHandle, JobRequest, Scheduler, SubmitOpts};
+use crate::scheduler::replica::ReplicaRouter;
+use crate::scheduler::{JobHandle, JobRequest, SubmitOpts};
 use crate::server::protocol::QueryRequest;
 use crate::util::json::Json;
 
@@ -20,13 +24,13 @@ pub use crate::scheduler::RouterStats;
 pub use crate::server::protocol::job_result_to_json;
 
 pub struct Router {
-    sched: Scheduler,
+    fleet: ReplicaRouter,
     cfg: DeployConfig,
 }
 
 impl Router {
-    /// Boot the scheduler (which loads the engine on its composer
-    /// thread); startup errors propagate here.
+    /// Boot the replica fleet (each scheduler loads its engine on its
+    /// composer thread); startup errors propagate here.
     pub fn start(cfg: DeployConfig) -> Result<Router> {
         // Direct embedders reach here without `Server::bind`/`specreason
         // run` having sized the process-wide executor — apply the deploy
@@ -34,21 +38,21 @@ impl Router {
         // silently ignored.  First-config-wins makes this a no-op when
         // the server already configured a (floored) pool.
         crate::exec::configure_global(&cfg.exec)?;
-        let sched = Scheduler::start(cfg.clone())?;
-        Ok(Router { sched, cfg })
+        let fleet = ReplicaRouter::start(cfg.clone())?;
+        Ok(Router { fleet, cfg })
     }
 
     /// Try to admit a query; `Err` means backpressure (`overloaded`).
     /// The returned [`JobHandle`] streams the job's lifecycle events; v1
     /// one-shot callers fold it with [`JobHandle::recv`].
     pub fn submit(&self, req: QueryRequest) -> Result<JobHandle> {
-        self.sched.submit(self.resolve(&req))
+        self.fleet.submit(self.resolve(&req))
     }
 
     /// [`submit`](Self::submit) with per-request options (the v2 path's
     /// enforced `deadline_ms`).
     pub fn submit_with(&self, req: QueryRequest, opts: SubmitOpts) -> Result<JobHandle> {
-        self.sched.submit_with(self.resolve(&req), opts)
+        self.fleet.submit_with(self.resolve(&req), opts)
     }
 
     /// Apply per-request overrides onto the deployment defaults.
@@ -77,7 +81,7 @@ impl Router {
     }
 
     pub fn stats(&self) -> RouterStats {
-        self.sched.stats()
+        self.fleet.stats()
     }
 
     /// Serving counters plus, when the process-wide executor exists, an
@@ -96,7 +100,8 @@ impl Router {
         // Latency quantiles from the always-on registry histograms —
         // additive next to the existing mean fields (`queue_wait_s_mean`
         // / `ttfs_s_mean` / `ttfe_s_mean` keep their exact meaning).
-        let obs = self.sched.obs();
+        // At `replicas > 1` the quantiles come from *merged* buckets
+        // (typed fold), not averaged per-replica summaries.
         let mut latency = Json::obj(vec![]);
         for (key, hist) in [
             ("queue_wait_s", "scheduler.queue_wait_s"),
@@ -104,7 +109,7 @@ impl Router {
             ("ttfe_s", "scheduler.ttfe_s"),
             ("e2e_s", "scheduler.e2e_s"),
         ] {
-            if let Some((p50, p95, p99)) = obs.registry.quantiles(hist) {
+            if let Some((p50, p95, p99)) = self.fleet.quantiles(hist) {
                 latency.set(
                     key,
                     Json::obj(vec![
@@ -116,27 +121,35 @@ impl Router {
             }
         }
         j.set("latency", latency);
+        // Per-replica breakdown, only when there is more than one
+        // replica — the single-replica payload stays byte-identical.
+        if self.fleet.replica_count() > 1 {
+            j.set(
+                "replicas",
+                Json::arr(self.fleet.replica_stats().iter().map(RouterStats::to_json)),
+            );
+        }
         j
     }
 
     /// The `metrics` op payload: full registry dump (counters, gauges,
     /// histograms with p50/p95/p99), flight-recorder state, trace
-    /// counts.
+    /// counts.  Merged bucket-wise across replicas at `replicas > 1`.
     pub fn metrics_json(&self) -> Json {
-        self.sched.obs().metrics_json()
+        self.fleet.metrics_json()
     }
 
     /// The `trace` op payload: one traced timeline (`target`, or the
     /// most recently finished), `null` when tracing is off or nothing
-    /// matches.
+    /// matches.  Looked up on whichever replica served the trace.
     pub fn trace_json(&self, target: Option<u64>) -> Json {
-        self.sched.obs().tracer.export_json(target)
+        self.fleet.trace_json(target)
     }
 
-    /// Stop the scheduler: queued and in-flight requests finish, then the
-    /// composer thread joins.
+    /// Stop the fleet: queued and in-flight requests finish, then the
+    /// composer threads join.
     pub fn shutdown(self) {
-        self.sched.shutdown();
+        self.fleet.shutdown();
     }
 }
 

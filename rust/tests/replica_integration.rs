@@ -1,0 +1,348 @@
+//! Multi-replica serving integration: the [`ReplicaRouter`] fleet
+//! against the real engine.
+//!
+//! * `replicas = 1` bit-identity: results, step streams, and
+//!   deterministic stats counters are indistinguishable from driving a
+//!   lone [`Scheduler`] directly (the router delegates; no probe, no
+//!   placement counters);
+//! * prefix affinity: a repeated prompt routes to the replica whose
+//!   radix index already holds its leading blocks (the warm replica
+//!   serves every repeat; the cold one serves none);
+//! * watermark spill: a flood of identical-prefix requests overflows
+//!   past `replica_spill_watermark` onto the least-loaded replica
+//!   instead of piling onto the hash target;
+//! * chaos: `conn_io` + `engine_op` faults against a 2-replica server
+//!   leave every replica's KV reservation ledger at baseline;
+//! * backoff head-of-line regression: a retry parked in backoff must
+//!   not delay a ready job behind it in the queue.
+//!
+//! All tests skip (with a notice) when `artifacts/` is absent, like the
+//! other engine-dependent suites.
+
+use std::time::{Duration, Instant};
+
+use specreason::config::DeployConfig;
+use specreason::faults::{FaultPlan, FaultSite};
+use specreason::metrics::QueryMetrics;
+use specreason::scheduler::replica::ReplicaRouter;
+use specreason::scheduler::{JobEvent, JobRequest, Priority, Scheduler};
+use specreason::semantics::Dataset;
+use specreason::util::json::Json;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn deploy(max_batch: usize) -> DeployConfig {
+    DeployConfig {
+        addr: "127.0.0.1:0".into(),
+        token_budget: 96,
+        answer_tokens: 8,
+        max_batch,
+        max_queue: 64,
+        ..Default::default()
+    }
+}
+
+fn job(cfg: &DeployConfig, dataset: Dataset, seed: u64, index: usize) -> JobRequest {
+    JobRequest {
+        dataset,
+        query_index: index,
+        sample: 0,
+        seed,
+        spec: cfg.spec_config(),
+        priority: Priority::Normal,
+    }
+}
+
+/// Compare every deterministic field of two `QueryMetrics` (wall-clock
+/// fields are measured and excluded by definition).
+fn assert_deterministic_eq(a: &QueryMetrics, b: &QueryMetrics, ctx: &str) {
+    assert_eq!(a.gpu_secs.to_bits(), b.gpu_secs.to_bits(), "{ctx}: gpu_secs");
+    assert_eq!(a.thinking_tokens, b.thinking_tokens, "{ctx}: thinking_tokens");
+    assert_eq!(a.tokens_small_accepted, b.tokens_small_accepted, "{ctx}");
+    assert_eq!(a.tokens_base, b.tokens_base, "{ctx}");
+    assert_eq!(a.steps_total, b.steps_total, "{ctx}");
+    assert_eq!(a.steps_speculated, b.steps_speculated, "{ctx}");
+    assert_eq!(a.steps_accepted, b.steps_accepted, "{ctx}");
+    assert_eq!(a.verify_scores, b.verify_scores, "{ctx}: verify_scores");
+    assert_eq!(a.answer_correct, b.answer_correct, "{ctx}: answer_correct");
+}
+
+/// Drain a handle to its terminal event, collecting the result and the
+/// final-attempt step stream (restarts clear the slate).
+fn drain(
+    handle: specreason::scheduler::JobHandle,
+    ctx: &str,
+) -> (specreason::scheduler::JobResult, Vec<(String, usize, usize)>) {
+    let mut steps = Vec::new();
+    loop {
+        let ev = handle
+            .next_event_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|e| panic!("{ctx}: event stream died: {e}"));
+        match ev {
+            JobEvent::Queued | JobEvent::Admitted | JobEvent::Degraded => {}
+            JobEvent::Preempted | JobEvent::Retried { .. } => steps.clear(),
+            JobEvent::Step(s) => steps.push((s.kind.name().to_string(), s.step, s.tokens)),
+            JobEvent::Result(r) => return (*r, steps),
+            JobEvent::Error(e) => panic!("{ctx}: job failed: {e:#}"),
+            JobEvent::Cancelled => panic!("{ctx}: unexpected cancellation"),
+        }
+    }
+}
+
+#[test]
+fn replicas1_is_bit_identical_to_single_scheduler() {
+    if !have_artifacts() {
+        eprintln!("skipping replicas1_is_bit_identical_to_single_scheduler: no artifacts/");
+        return;
+    }
+    let cfg = deploy(2); // replicas defaults to 1
+    assert_eq!(cfg.replicas, 1);
+    let n = 3;
+    let seed = 0x0E91;
+
+    // Reference: the lone scheduler, driven directly.
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+    let refs: Vec<_> = (0..n)
+        .map(|i| sched.submit(job(&cfg, Dataset::Math500, seed, i)).expect("submit"))
+        .collect();
+    let refs: Vec<_> = refs
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| drain(h, &format!("ref job {i}")))
+        .collect();
+    let ref_stats = sched.stats();
+    sched.shutdown();
+
+    // Same workload through the fleet at one replica.
+    let fleet = ReplicaRouter::start(cfg.clone()).expect("fleet start");
+    assert_eq!(fleet.replica_count(), 1);
+    let outs: Vec<_> = (0..n)
+        .map(|i| fleet.submit(job(&cfg, Dataset::Math500, seed, i)).expect("submit"))
+        .collect();
+    let outs: Vec<_> = outs
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| drain(h, &format!("fleet job {i}")))
+        .collect();
+    let stats = fleet.stats();
+    let metrics = fleet.metrics_json();
+    fleet.shutdown();
+
+    for (i, ((rr, rsteps), (fr, fsteps))) in refs.iter().zip(outs.iter()).enumerate() {
+        assert_deterministic_eq(&fr.metrics, &rr.metrics, &format!("query {i}"));
+        assert_eq!(fsteps, rsteps, "query {i}: step streams");
+    }
+    assert_eq!(stats.completed, ref_stats.completed);
+    assert_eq!(stats.admitted, ref_stats.admitted);
+    assert_eq!(stats.failed, 0);
+    // The single-replica path bypasses placement entirely.
+    assert_eq!(stats.replica_affinity_hits, 0);
+    assert_eq!(stats.replica_hash_placements, 0);
+    assert_eq!(stats.replica_spills, 0);
+    // And the metrics op keeps the lone scheduler's payload shape (one
+    // flight recorder object, not a per-replica array).
+    assert!(!metrics.get("registry").is_null());
+    assert!(metrics.get("flight").get("events_total").as_usize().is_some());
+}
+
+#[test]
+fn prefix_affinity_routes_repeat_to_the_warm_replica() {
+    if !have_artifacts() {
+        eprintln!("skipping prefix_affinity_routes_repeat_to_the_warm_replica: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(1);
+    cfg.replicas = 2;
+    cfg.prefix_cache = true;
+    let fleet = ReplicaRouter::start(cfg.clone()).expect("fleet start");
+
+    // Cold: no replica holds the prompt — hash placement.
+    let h = fleet.submit(job(&cfg, Dataset::Math500, 0xAF1, 0)).expect("submit");
+    let (first, _) = drain(h, "cold submission");
+    // The prompt's blocks enter the serving replica's radix index when
+    // the sequence is released — poll until published so the repeat's
+    // probe cannot race the retirement tick.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while fleet.stats().prefix_cached_blocks == 0 {
+        assert!(Instant::now() < deadline, "prompt blocks never entered the prefix cache");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Warm: the serving replica's radix index now holds the prompt's
+    // block chain; the probe must route the repeat back to it.
+    let h = fleet.submit(job(&cfg, Dataset::Math500, 0xAF1, 0)).expect("submit");
+    let (second, _) = drain(h, "warm submission");
+    assert_deterministic_eq(&second.metrics, &first.metrics, "repeat");
+
+    let merged = fleet.stats();
+    assert_eq!(merged.completed, 2);
+    assert!(
+        merged.replica_hash_placements >= 1,
+        "cold submission places by hash (got {})",
+        merged.replica_hash_placements
+    );
+    assert!(
+        merged.replica_affinity_hits >= 1,
+        "warm repeat places by prefix affinity (got {})",
+        merged.replica_affinity_hits
+    );
+    assert!(merged.prefix_hits >= 1, "the warm replica reused cached prefix blocks");
+    let served: Vec<u64> = fleet.replica_stats().iter().map(|s| s.completed).collect();
+    assert!(
+        served.contains(&2) && served.contains(&0),
+        "both queries landed on the warm replica: {served:?}"
+    );
+    fleet.shutdown();
+}
+
+#[test]
+fn spill_moves_placements_off_a_watermarked_replica() {
+    if !have_artifacts() {
+        eprintln!("skipping spill_moves_placements_off_a_watermarked_replica: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(1);
+    cfg.replicas = 2;
+    cfg.replica_affinity = false; // isolate the hash + spill path
+    cfg.replica_spill_watermark = 1;
+    cfg.token_budget = 128; // keep the hash target busy during the flood
+    let fleet = ReplicaRouter::start(cfg.clone()).expect("fleet start");
+
+    // A flood of the same query: pure hashing would pile everything
+    // onto one replica; the watermark spills the overflow to the cold
+    // one while the first request still occupies the hash target.
+    let handles: Vec<_> = (0..4)
+        .map(|_| fleet.submit(job(&cfg, Dataset::Math500, 0x5B1, 0)).expect("submit"))
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        drain(h, &format!("flood job {i}"));
+    }
+
+    let merged = fleet.stats();
+    assert_eq!(merged.completed, 4);
+    assert!(
+        merged.replica_spills >= 1,
+        "the watermark must spill at least one placement (got {})",
+        merged.replica_spills
+    );
+    let admitted: Vec<u64> = fleet.replica_stats().iter().map(|s| s.admitted).collect();
+    assert!(
+        admitted.iter().all(|&a| a >= 1),
+        "spill spreads the flood across both replicas: {admitted:?}"
+    );
+    fleet.shutdown();
+}
+
+#[test]
+fn chaos_on_replicas_returns_kv_ledgers_to_baseline() {
+    if !have_artifacts() {
+        eprintln!("skipping chaos_on_replicas_returns_kv_ledgers_to_baseline: no artifacts/");
+        return;
+    }
+    let mut cfg = deploy(2);
+    cfg.replicas = 2;
+    cfg.fault_plan = FaultPlan {
+        seed: 11,
+        rate: 0.05,
+        sites: vec![FaultSite::ConnIo, FaultSite::EngineOp],
+        max_faults: 4,
+        panic_in_batch: false,
+    };
+    cfg.max_step_retries = 12;
+    cfg.retry_backoff_ms = 1;
+    cfg.validate().expect("valid config");
+    let server = specreason::server::Server::bind(cfg).expect("server bind");
+    let addr = server.addr.to_string();
+    let server_thread = std::thread::spawn(move || {
+        server.run().expect("server run");
+    });
+
+    // Fresh connection per query: conn_io faults drop individual
+    // connections (never the server), engine_op faults retry inside the
+    // schedulers.
+    let mut served = 0usize;
+    for i in 0..6 {
+        let ok = specreason::server::Client::connect(&addr).and_then(|mut c| {
+            c.call(Json::obj(vec![
+                ("op", Json::str("query")),
+                ("dataset", Json::str("math500")),
+                ("query_index", Json::num((i % 3) as f64)),
+                ("budget", Json::num(64.0)),
+            ]))
+        });
+        if let Ok(r) = ok {
+            assert!(r.get("thinking_tokens").as_usize().unwrap() > 0);
+            served += 1;
+        }
+    }
+    assert!(served >= 1, "some queries must survive the chaos");
+
+    // The merged stats op must show every replica's reservation ledger
+    // and running set back at baseline (poll briefly: composers retire
+    // tasks on their own tick; stats reads can also hit a conn_io fault
+    // until the budget is spent, so reconnect on error).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let snap = specreason::server::Client::connect(&addr)
+            .and_then(|mut c| c.call(Json::obj(vec![("op", Json::str("stats"))])));
+        if let Ok(s) = snap {
+            if s.get("kv_reserved_blocks").as_usize() == Some(0)
+                && s.get("running").as_usize() == Some(0)
+                && s.get("queue_depth").as_usize() == Some(0)
+            {
+                break;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "KV ledgers never returned to baseline under chaos"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut c = specreason::server::Client::connect(&addr).expect("connect for shutdown");
+    let bye = c.call(Json::obj(vec![("op", Json::str("shutdown"))])).expect("shutdown");
+    assert_eq!(bye.as_str(), Some("bye"));
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn backoff_parked_retry_does_not_block_ready_jobs() {
+    if !have_artifacts() {
+        eprintln!("skipping backoff_parked_retry_does_not_block_ready_jobs: no artifacts/");
+        return;
+    }
+    // Job A faults on its first engine op (rate 1.0, budget 1) and is
+    // re-queued with a 3 s backoff at the front of its class.  Job B,
+    // behind it, is ready immediately — the head-of-line fix admits B
+    // while A is parked, so B's queue wait is far below A's backoff.
+    let mut cfg = deploy(1);
+    cfg.fault_plan = FaultPlan {
+        seed: 3,
+        rate: 1.0,
+        sites: vec![FaultSite::EngineOp],
+        max_faults: 1,
+        panic_in_batch: false,
+    };
+    cfg.max_step_retries = 4;
+    cfg.retry_backoff_ms = 3_000;
+    cfg.validate().expect("valid config");
+    let sched = Scheduler::start(cfg.clone()).expect("scheduler start");
+
+    let ha = sched.submit(job(&cfg, Dataset::Math500, 0xB0, 0)).expect("submit A");
+    let hb = sched.submit(job(&cfg, Dataset::Math500, 0xB0, 1)).expect("submit B");
+
+    let (rb, _) = drain(hb, "ready job B");
+    assert!(
+        rb.queue_wait_s < 1.5,
+        "ready job must admit while the retry is parked (queue wait {:.3}s vs 3s backoff)",
+        rb.queue_wait_s
+    );
+    let (ra, _) = drain(ha, "parked job A");
+    assert!(ra.retries >= 1, "job A must actually have taken the retry path");
+    let s = sched.stats();
+    assert_eq!(s.completed, 2);
+    assert!(s.step_retries >= 1);
+    sched.shutdown();
+}

@@ -31,11 +31,12 @@ use crate::lex::{find_sub, is_ident, word_at, SourceFile};
 use crate::model::{functions, FnDef};
 
 /// Directories on the serving path whose locking we model.
-const DIRS: [&str; 4] = [
+const DIRS: [&str; 5] = [
     "rust/src/scheduler/",
     "rust/src/kvcache/",
     "rust/src/exec/",
     "rust/src/obs/",
+    "rust/src/server/",
 ];
 
 /// Engine execution entry points that must never run under a lock.
